@@ -1,0 +1,67 @@
+//! PCP case study (§6.3): one ICP-style registration iteration with the
+//! four ISAXs (`vdist3.vv`, `mcov.vs`, `vfsmax`, `vmadot`) on the
+//! 128-bit-bus configuration, cross-checked against the Pallas artifacts.
+//!
+//! Run with: `cargo run --example pointcloud_icp`
+
+use aquas::bench_harness::table2;
+use aquas::compiler::{compile, CompileOptions};
+use aquas::ir::interp::{run as interp, Memory};
+use aquas::runtime::{Runtime, Tensor};
+use aquas::workloads::{pcp, Kernel};
+
+fn main() -> aquas::Result<()> {
+    let software = pcp::end_to_end_software();
+    let kernels = pcp::kernels();
+    let isaxes: Vec<_> = kernels.iter().map(|k| k.isax.clone()).collect();
+    let compiled = compile(&software, &isaxes, &CompileOptions::default())?;
+    println!("offloaded: {:?}", compiled.stats.matched);
+
+    let mut mem = Memory::for_func(&software);
+    pcp::init_end_to_end(&software, &mut mem);
+    interp(&software, &[], &mut mem)?;
+    let cov = mem.read_f32(Kernel::buf(&software, "cov"));
+    let mx = mem.read_f32(Kernel::buf(&software, "mx"))[0];
+    let am = mem.read_i32(Kernel::buf(&software, "am"))[0];
+    println!("worst match: d²={mx:.3} at pair {am}");
+    println!("cross-covariance: {:?}", &cov[..3]);
+
+    // Cross-check vdist3 against the Pallas artifact (padded to its 256
+    // pairs with zeros — zero rows produce zero distances).
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let p = mem.read_f32(Kernel::buf(&software, "p"));
+            let q = mem.read_f32(Kernel::buf(&software, "q"));
+            let mut pp = p.clone();
+            let mut qq = q.clone();
+            pp.resize(256 * 3, 0.0);
+            qq.resize(256 * 3, 0.0);
+            let out = rt.execute(
+                "vdist3",
+                &[Tensor::f32(pp, &[256, 3])?, Tensor::f32(qq, &[256, 3])?],
+            )?;
+            let d_hw = out[0].as_f32()?;
+            let d_sw = mem.read_f32(Kernel::buf(&software, "d"));
+            for (i, (hw, sw)) in d_hw.iter().zip(&d_sw).enumerate() {
+                assert!((hw - sw).abs() < 1e-3, "pair {i}: {hw} vs {sw}");
+            }
+            println!("vdist3 datapath matches the Pallas golden model");
+        }
+        Err(e) => println!("(skipping PJRT cross-check: {e})"),
+    }
+
+    let t = table2::run();
+    for row in &t.pcp_rows {
+        println!(
+            "{:>10}: base {:>6} | aps {:>6} ({:.2}x) | aquas {:>6} ({:.2}x) | area +{:.1}%",
+            row.kernel.name,
+            row.base_cycles,
+            row.aps_cycles,
+            row.aps_speedup(),
+            row.aquas_cycles,
+            row.aquas_speedup(),
+            row.area.area_overhead_pct()
+        );
+    }
+    Ok(())
+}

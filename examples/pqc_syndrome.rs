@@ -1,0 +1,62 @@
+//! PQC case study (§6.2): syndrome computation s = H·eᵀ over GF(2),
+//! end-to-end — unpack the packed error bitstream (`vdecomp`), pack
+//! requests, multiply (`mgf2mm`) — with both ISAXs offloaded by the
+//! compiler, validated numerically against the scalar software AND the
+//! AOT Pallas artifacts via PJRT.
+//!
+//! Run with: `cargo run --example pqc_syndrome` (needs `make artifacts`)
+
+use aquas::bench_harness::table2;
+use aquas::compiler::{compile, CompileOptions};
+use aquas::ir::interp::{run as interp, Memory};
+use aquas::runtime::{Runtime, Tensor};
+use aquas::workloads::{pqc, Kernel};
+
+fn main() -> aquas::Result<()> {
+    // 1. Offload both kernels in the end-to-end program.
+    let software = pqc::end_to_end_software();
+    let kernels = pqc::kernels();
+    let isaxes: Vec<_> = kernels.iter().map(|k| k.isax.clone()).collect();
+    let compiled = compile(&software, &isaxes, &CompileOptions::default())?;
+    println!("offloaded: {:?}", compiled.stats.matched);
+
+    // 2. Numeric ground truth from the scalar software.
+    let mut mem = Memory::for_func(&software);
+    pqc::init_end_to_end(&software, &mut mem);
+    interp(&software, &[], &mut mem)?;
+    let syndrome = mem.read_i32(Kernel::buf(&software, "s"));
+    println!("syndrome (first 16 bits): {:?}", &syndrome[..16]);
+
+    // 3. Cross-check the vdecomp datapath against the AOT Pallas artifact.
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let words = mem.read_i32(Kernel::buf(&software, "e"));
+            let out = rt.execute("vdecomp", &[Tensor::i32(words, &[16])?])?;
+            let bits = out[0].as_i32()?;
+            let sw_bits = mem.read_i32(Kernel::buf(&software, "out"));
+            assert_eq!(&bits[..sw_bits.len()], sw_bits.as_slice());
+            println!("vdecomp datapath matches the Pallas golden model ({} bits)", bits.len());
+        }
+        Err(e) => println!("(skipping PJRT cross-check: {e})"),
+    }
+
+    // 4. Cycle-level comparison (the Table 2 PQC rows).
+    let t = table2::run();
+    for row in &t.pqc_rows {
+        println!(
+            "{:>10}: base {:>6} | aps {:>6} ({:.2}x) | aquas {:>6} ({:.2}x)",
+            row.kernel.name,
+            row.base_cycles,
+            row.aps_cycles,
+            row.aps_speedup(),
+            row.aquas_cycles,
+            row.aquas_speedup()
+        );
+    }
+    let e = &t.pqc_e2e;
+    println!(
+        "{:>10}: base {:>6} | aps {:>6} ({:.2}x) | aquas {:>6} ({:.2}x)",
+        "e2e", e.base_cycles, e.aps_cycles, e.aps_speedup(), e.aquas_cycles, e.aquas_speedup()
+    );
+    Ok(())
+}

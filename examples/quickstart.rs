@@ -1,0 +1,75 @@
+//! Quickstart: the full Aquas flow on one kernel in ~60 lines.
+//!
+//! 1. describe an ISAX at the functional Aquas-IR level,
+//! 2. run interface-aware synthesis (§4.3) and look at the schedule,
+//! 3. write the application loop and let the retargetable compiler (§5)
+//!    offload it,
+//! 4. compare cycle counts on the cycle-level core models.
+//!
+//! Run with: `cargo run --example quickstart`
+
+use aquas::bench_harness::fir7;
+use aquas::compiler::{compile, CompileOptions, IsaxDef};
+use aquas::cores::rocket::{CoreConfig, RocketModel};
+use aquas::cores::IsaxEngine;
+use aquas::interface::model::InterfaceSet;
+use aquas::ir::interp::Memory;
+use aquas::synthesis::{hwgen, synthesize};
+use aquas::workloads::pqc;
+
+fn main() -> aquas::Result<()> {
+    // --- hardware side: synthesize the vdecomp ISAX --------------------
+    let itfcs = InterfaceSet::rocket_default();
+    let isax_func = pqc::isax_vdecomp();
+    let synth = synthesize(&isax_func, &itfcs, &Default::default())?;
+    println!("synthesized `vdecomp`:");
+    println!("  elided scratchpads: {:?}", synth.elided);
+    println!("  schedule latency:   {} cycles", synth.schedule.mem_latency());
+    for item in synth.schedule.items.iter().take(4) {
+        println!(
+            "    tag {} -> {} {}B (after {:?})",
+            item.tag,
+            itfcs.get(item.itfc).name,
+            item.size,
+            item.after
+        );
+    }
+    let desc = hwgen::generate(&synth, &itfcs);
+    let engine = IsaxEngine::from_synthesis(&synth, &desc, &itfcs);
+    println!("  engine: {} cycles/invocation\n", engine.cycles_per_invocation());
+
+    // --- software side: offload the application loop -------------------
+    let software = pqc::software_vdecomp();
+    let isax = IsaxDef { name: "vdecomp".into(), func: isax_func };
+    let result = compile(&software, &[isax], &CompileOptions::default())?;
+    println!("compiler matched: {:?}", result.stats.matched);
+    println!(
+        "  {} internal rewrites, {} external, e-nodes {} -> {}\n",
+        result.stats.internal_rewrites,
+        result.stats.external_rewrites,
+        result.stats.initial_enodes,
+        result.stats.saturated_enodes
+    );
+
+    // --- evaluation: base core vs ISAX-augmented core -------------------
+    let base = RocketModel::new(CoreConfig::default());
+    let mut mem = Memory::for_func(&software);
+    let base_report = base.simulate(&software, &[], &mut mem)?;
+    let acc =
+        RocketModel::new(CoreConfig::default()).with_isax("vdecomp", engine.cycles_per_invocation());
+    let mut mem2 = Memory::for_func(&result.func);
+    let acc_report = acc.simulate(&result.func, &[], &mut mem2)?;
+    println!("base core:   {} cycles", base_report.cycles);
+    println!("with ISAX:   {} cycles", acc_report.cycles);
+    println!("speedup:     {:.2}x", base_report.cycles as f64 / acc_report.cycles as f64);
+
+    // --- bonus: the paper's fir7 walkthrough ----------------------------
+    println!("\n(see `aquas synth --demo fir7` for the Figure 4 IR walkthrough)");
+    let (smart, naive, _) = fir7::run();
+    println!(
+        "fir7 stage-in: naive {} cycles vs aquas {} cycles",
+        naive.schedule.mem_latency(),
+        smart.schedule.mem_latency()
+    );
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT bridge: lower every L2/L1 entry point to HLO *text* + a manifest.
+
+Run once at build time (`make artifacts`); Python never appears on the
+request path.  The Rust runtime (`rust/src/runtime/`) loads each
+`artifacts/<name>.hlo.txt` with `HloModuleProto::from_text_file`, compiles
+it on the PJRT CPU client, and executes it.
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly.
+
+Every entry is lowered with `return_tuple=True`, so the Rust side always
+unwraps a tuple (even for single outputs).  `artifacts/manifest.json`
+records arg/output shapes+dtypes so the runtime can typecheck calls.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention, gf2, graphics, pointcloud
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(x) -> str:
+    return jnp.dtype(x.dtype).name
+
+
+def _entry(fn, args) -> tuple[str, list[dict], list[dict]]:
+    """Lower fn(*args) -> (hlo_text, arg_manifest, out_manifest)."""
+    lowered = jax.jit(fn).lower(*args)
+    outs = jax.eval_shape(fn, *args)
+    flat_outs, _ = jax.tree.flatten(outs)
+    arg_m = [{"shape": list(a.shape), "dtype": _dt(a)} for a in args]
+    out_m = [{"shape": list(o.shape), "dtype": _dt(o)} for o in flat_outs]
+    return to_hlo_text(lowered), arg_m, out_m
+
+
+# --------------------------------------------------------------------------
+# Entry-point catalogue.  Shapes here define the serving configuration the
+# Rust coordinator is built against (see rust/src/runtime/manifest.rs).
+# --------------------------------------------------------------------------
+
+CFG = model.TINY_CONFIG
+PREFILL_LEN = 16
+BATCH = 1
+
+
+def build_entries() -> dict[str, tuple]:
+    params = model.init_params(CFG, seed=0)
+    l, b, h = CFG.n_layers, BATCH, CFG.n_heads
+    tmax, dh = CFG.max_seq, CFG.head_dim
+
+    def llm_prefill(ids):
+        return model.prefill_fixed(CFG, params, ids)
+
+    def llm_decode(ids, kc, vc, pos):
+        return model.decode_step_fixed(CFG, params, ids, kc, vc, pos[0])
+
+    cache = _spec((l, b, h, tmax, dh))
+    return {
+        # LLM case study (§6.5): the real serving path.
+        "llm_prefill": (llm_prefill, [_spec((b, PREFILL_LEN), jnp.int32)]),
+        "llm_decode": (
+            llm_decode,
+            [_spec((b, 1), jnp.int32), cache, cache, _spec((1,), jnp.int32)],
+        ),
+        # Standalone ISAX datapath golden models.  The Rust ISAX execution
+        # engine checks its numerics against these artifacts in tests.
+        "attention": (
+            lambda q, k, v: (attention.mha(q, k, v),),
+            [_spec((1, 4, 64, 16))] * 3,
+        ),
+        "gf2mm": (
+            lambda a, bb: (gf2.gf2mm(a, bb),),
+            [_spec((64, 64), jnp.int32)] * 2,
+        ),
+        "vdecomp": (
+            lambda w: (gf2.vdecomp(w, 512),),
+            [_spec((16,), jnp.int32)],
+        ),
+        "vdist3": (
+            lambda p, q: (pointcloud.vdist3(p, q),),
+            [_spec((256, 3))] * 2,
+        ),
+        "mcov": (
+            lambda p, q: (pointcloud.mcov(p, q),),
+            [_spec((256, 3))] * 2,
+        ),
+        "vfsmax": (lambda x: pointcloud.vfsmax(x), [_spec((256,))]),
+        "vmadot": (
+            lambda m, v: (pointcloud.vmadot(m, v),),
+            [_spec((64, 64)), _spec((64,))],
+        ),
+        "phong": (
+            lambda n, li, v: (graphics.phong(n, li, v),),
+            [_spec((256, 3))] * 3,
+        ),
+        "vrgb2yuv": (lambda x: (graphics.vrgb2yuv(x),), [_spec((256, 3))]),
+        "vmvar": (lambda x: graphics.vmvar(x), [_spec((64, 16))]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {
+        "model": {
+            "vocab": CFG.vocab,
+            "dim": CFG.dim,
+            "n_layers": CFG.n_layers,
+            "n_heads": CFG.n_heads,
+            "head_dim": CFG.head_dim,
+            "hidden": CFG.hidden,
+            "max_seq": CFG.max_seq,
+            "prefill_len": PREFILL_LEN,
+            "batch": BATCH,
+            "param_count": CFG.param_count(),
+        },
+        "entries": {},
+    }
+    for name, (fn, specs) in build_entries().items():
+        if args.only and name not in args.only:
+            continue
+        text, arg_m, out_m = _entry(fn, specs)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["entries"][name] = {
+            "file": path.name,
+            "args": arg_m,
+            "outputs": out_m,
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(arg_m)} args, {len(out_m)} outs)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Flash-style blocked multi-head attention as a Pallas kernel (L1).
+
+This is the functional model of the attention ISAX datapath from the paper's
+CPU-LLM-inference case study (§6.5).  The kernel is blocked for VMEM the way
+the paper's ISAX stages tiles through its scratchpad:
+
+- the grid walks (batch, head, q-block); each program owns one q tile
+  resident in VMEM (the "warm" scratchpad in Aquas cache_hint terms);
+- K/V are streamed through the kernel in `block_k`-sized chunks with an
+  online-softmax accumulator, mirroring the "cold" DRAM-resident stream the
+  Aquas synthesis flow routes over the wide system-bus interface;
+- accumulation is f32 regardless of input dtype (MXU-friendly).
+
+`interpret=True` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+    causal: bool,
+    q_offset_blocks: int,
+):
+    """One (batch, head, q-block) program: online-softmax over k chunks."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # [block_q, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    kk = k_ref[0, 0].astype(jnp.float32)  # [seq_k, dh]
+    vv = v_ref[0, 0].astype(jnp.float32)  # [seq_k, dh]
+
+    num_kb = seq_k // block_k
+    q_pos = (qi + q_offset_blocks) * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        acc, m, l = carry
+        kj = jax.lax.dynamic_slice_in_dim(kk, j * block_k, block_k, axis=0)
+        vj = jax.lax.dynamic_slice_in_dim(vv, j * block_k, block_k, axis=0)
+        s = (q @ kj.T) * scale  # [block_q, block_k]
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # Rows that are still fully masked keep m == -inf; exp(-inf - -inf)
+        # would be NaN, so guard the correction factor.
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_new))
+        p = jnp.exp(s - jnp.where(jnp.isneginf(m_new), 0.0, m_new)[:, None])
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ vj
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows produce zeros
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked flash attention. q: [B,H,Tq,Dh]; k,v: [B,H,Tk,Dh] -> [B,H,Tq,Dh].
+
+    Supports Tq != Tk (decode: Tq=1 block with right-aligned causal mask when
+    Tq divides evenly; for KV-cache decode the model calls with causal=False
+    and a pre-truncated cache instead).
+    """
+    b, h, tq, dh = q.shape
+    tk = k.shape[2]
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    if tq % block_q != 0 or tk % block_k != 0:
+        raise ValueError(f"seq lens ({tq},{tk}) must divide blocks ({block_q},{block_k})")
+    if causal and (tk - tq) % block_q != 0:
+        raise ValueError("causal offset must be a multiple of block_q")
+    q_offset_blocks = (tk - tq) // block_q if causal else 0
+
+    grid = (b, h, tq // block_q)
+    kernel = functools.partial(
+        _attention_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=tk,
+        causal=causal,
+        q_offset_blocks=q_offset_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,102 @@
+"""Pallas kernels for the post-quantum-cryptography ISAXs (§6.2).
+
+Two datapaths from the paper's syndrome computation s = H e^T over GF(2):
+
+- ``vdecomp``: bitstream unpacking — packed 32-bit words to a {0,1} vector.
+  The ISAX reads one word from the scratchpad and fans 32 bits out per
+  cycle; here the same fan-out is a vectorized shift/mask over a block.
+- ``gf2mm``: matrix multiply over GF(2) — formulated as an *integer* blocked
+  matmul followed by a parity reduction (``& 1``) so the MXU-style dot path
+  applies; hardware does the same with XOR-popcount trees.
+
+Both run ``interpret=True`` (CPU-PJRT compatible lowering).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vdecomp_kernel(w_ref, o_ref, *, block_bits: int):
+    """Unpack one block of bits: each program owns block_bits/32 words."""
+    words = w_ref[...]  # [block_bits // 32] int32
+    idx = jax.lax.iota(jnp.int32, block_bits)
+    w = words[idx // 32]
+    o_ref[...] = (w >> (idx % 32)) & 1
+
+
+def vdecomp(
+    words: jax.Array, nbits: int, *, block_bits: int = 256, interpret: bool = True
+) -> jax.Array:
+    """Unpack packed little-endian bits. words: [nbits/32] int32 -> [nbits] int32."""
+    if nbits % 32 != 0:
+        raise ValueError("nbits must be a multiple of 32")
+    block_bits = min(block_bits, nbits)
+    if nbits % block_bits != 0 or block_bits % 32 != 0:
+        raise ValueError("block_bits must divide nbits and be a multiple of 32")
+    grid = (nbits // block_bits,)
+    kernel = functools.partial(_vdecomp_kernel, block_bits=block_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_bits // 32,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_bits,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nbits,), jnp.int32),
+        interpret=interpret,
+    )(words)
+
+
+def _gf2mm_kernel(a_ref, b_ref, o_ref, *, nsteps: int, block_k: int):
+    """Blocked integer matmul with parity output."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _finish():
+        o_ref[...] &= 1
+
+
+def gf2mm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """GF(2) matmul. a: [M,K] {0,1} int32, b: [K,N] -> [M,N] {0,1} int32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"dims ({m},{n},{k}) must divide blocks")
+    nsteps = k // block_k
+    grid = (m // block_m, n // block_n, nsteps)
+    kernel = functools.partial(_gf2mm_kernel, nsteps=nsteps, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32))

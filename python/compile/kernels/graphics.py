@@ -1,0 +1,115 @@
+"""Pallas kernels for the graphics-rendering ISAXs (§6.4).
+
+Functional models of the three graphics datapaths the paper pits against the
+Saturn vector unit: ``vmvar`` (1st/2nd vector moments), ``mphong`` (Phong
+lighting) and ``vrgb2yuv`` (color-space conversion).  All are elementwise or
+small-reduction shapes — exactly the class where the paper reports RVV-style
+units pay a large area/frequency tax for little benefit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import RGB2YUV
+
+
+def _phong_kernel(n_ref, l_ref, v_ref, o_ref, *, ka, kd, ks, shininess):
+    n = n_ref[...]  # [block, 4], pad lane zero
+    l = l_ref[...]
+    v = v_ref[...]
+    ndotl = jnp.maximum(jnp.sum(n * l, axis=-1), 0.0)
+    refl = 2.0 * ndotl[:, None] * n - l
+    rdotv = jnp.maximum(jnp.sum(refl * v, axis=-1), 0.0)
+    # Specular is gated on a front-facing normal (standard Phong).
+    spec = jnp.where(ndotl > 0.0, jnp.power(rdotv, shininess), 0.0)
+    o_ref[...] = ka + kd * ndotl + ks * spec
+
+
+def phong(
+    normal: jax.Array,
+    light: jax.Array,
+    view: jax.Array,
+    *,
+    ka: float = 0.1,
+    kd: float = 0.7,
+    ks: float = 0.4,
+    shininess: float = 16.0,
+    block: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Phong lighting per pixel. normal/light/view: [N,3] -> intensity [N]."""
+    n = normal.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} must divide block={block}")
+    pad = lambda a: jnp.pad(a, ((0, 0), (0, 1)))
+    kernel = functools.partial(_phong_kernel, ka=ka, kd=kd, ks=ks, shininess=shininess)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, 4), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), normal.dtype),
+        interpret=interpret,
+    )(pad(normal), pad(light), pad(view))
+
+
+def _rgb2yuv_kernel(x_ref, m_ref, o_ref):
+    o_ref[...] = x_ref[...] @ m_ref[...]
+
+
+def vrgb2yuv(rgb: jax.Array, *, block: int = 64, interpret: bool = True) -> jax.Array:
+    """RGB -> YUV conversion. rgb: [N,3] f32 -> [N,3] f32."""
+    n = rgb.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} must divide block={block}")
+    m = jnp.pad(RGB2YUV.T, ((0, 1), (0, 1)))  # [4,4], pad row/col zero
+    out = pl.pallas_call(
+        _rgb2yuv_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 4), rgb.dtype),
+        interpret=interpret,
+    )(jnp.pad(rgb, ((0, 0), (0, 1))), m)
+    return out[:, :3]
+
+
+def _vmvar_kernel(x_ref, mean_ref, var_ref):
+    x = x_ref[...]  # [block, W]
+    w = x.shape[-1]
+    mean = jnp.sum(x, axis=-1) / w
+    ex2 = jnp.sum(x * x, axis=-1) / w
+    mean_ref[...] = mean
+    var_ref[...] = ex2 - mean * mean
+
+
+def vmvar(x: jax.Array, *, block: int = 32, interpret: bool = True):
+    """Row-wise mean and variance. x: [N,W] f32 -> (mean [N], var [N])."""
+    n, w = x.shape
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} must divide block={block}")
+    return pl.pallas_call(
+        _vmvar_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, w), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x)

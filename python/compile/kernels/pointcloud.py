@@ -1,0 +1,147 @@
+"""Pallas kernels for the point-cloud-processing ISAXs (§6.3).
+
+Functional models of the four ICP datapaths: ``vdist3.vv`` (Euclidean
+distance), ``mcov.vs`` (cross-covariance), ``vfsmax`` (max+argmax) and
+``vmadot`` (matrix-vector multiply).  Point data is laid out [N, 4]
+(xyz + pad) so rows are 16-byte aligned — the same padding the Aquas
+interface canonicalization step introduces to keep bus transactions legal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad4(p: jax.Array) -> jax.Array:
+    """[N,3] -> [N,4] zero-padded (alignment; see module docstring)."""
+    return jnp.pad(p, ((0, 0), (0, 1)))
+
+
+def _vdist3_kernel(p_ref, q_ref, o_ref):
+    d = p_ref[...] - q_ref[...]  # [block, 4]; pad lane is zero
+    o_ref[...] = jnp.sum(d * d, axis=-1)
+
+
+def vdist3(p: jax.Array, q: jax.Array, *, block: int = 64, interpret: bool = True) -> jax.Array:
+    """Squared distances between paired 3-D points. p,q: [N,3] f32 -> [N] f32."""
+    n = p.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} must divide block={block}")
+    return pl.pallas_call(
+        _vdist3_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=interpret,
+    )(_pad4(p), _pad4(q))
+
+
+def _mcov_kernel(p_ref, q_ref, pm_ref, qm_ref, o_ref, *, nsteps: int):
+    """Accumulate centered cross-covariance over point blocks."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pc = p_ref[...] - pm_ref[...]  # [block, 4] minus broadcast mean [1, 4]
+    qc = q_ref[...] - qm_ref[...]
+    o_ref[...] += pc.T @ qc  # [4, 4]; pad row/col stay zero
+
+
+def mcov(p: jax.Array, q: jax.Array, *, block: int = 64, interpret: bool = True) -> jax.Array:
+    """Cross-covariance sum_i (p_i - p̄)(q_i - q̄)^T. p,q: [N,3] -> [3,3]."""
+    n = p.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} must divide block={block}")
+    pm = jnp.mean(_pad4(p), axis=0, keepdims=True)
+    qm = jnp.mean(_pad4(q), axis=0, keepdims=True)
+    nsteps = n // block
+    kernel = functools.partial(_mcov_kernel, nsteps=nsteps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((4, 4), p.dtype),
+        interpret=interpret,
+    )(_pad4(p), _pad4(q), pm, qm)
+    return out[:3, :3]
+
+
+def _vfsmax_kernel(x_ref, mx_ref, am_ref, *, block: int, nsteps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        mx_ref[...] = jnp.full_like(mx_ref, -jnp.inf)
+        am_ref[...] = jnp.zeros_like(am_ref)
+
+    x = x_ref[...]
+    i = pl.program_id(0)
+    local_max = jnp.max(x)
+    local_arg = jnp.argmax(x).astype(jnp.int32) + i * block
+    cur = mx_ref[0]
+    better = local_max > cur
+    mx_ref[0] = jnp.where(better, local_max, cur)
+    am_ref[0] = jnp.where(better, local_arg, am_ref[0])
+
+
+def vfsmax(x: jax.Array, *, block: int = 64, interpret: bool = True):
+    """Max + argmax of a float vector. x: [N] -> (f32[1], i32[1])."""
+    n = x.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} must divide block={block}")
+    nsteps = n // block
+    kernel = functools.partial(_vfsmax_kernel, block=block, nsteps=nsteps)
+    mx, am = pl.pallas_call(
+        kernel,
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    return mx[0], am[0]
+
+
+def _vmadot_kernel(m_ref, v_ref, o_ref):
+    o_ref[...] = m_ref[...] @ v_ref[...]
+
+
+def vmadot(m: jax.Array, v: jax.Array, *, block_r: int = 32, interpret: bool = True) -> jax.Array:
+    """Matrix-vector product. m: [R,C] f32, v: [C] -> [R]."""
+    r, c = m.shape
+    block_r = min(block_r, r)
+    if r % block_r:
+        raise ValueError(f"R={r} must divide block_r={block_r}")
+    return pl.pallas_call(
+        _vmadot_kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), m.dtype),
+        interpret=interpret,
+    )(m, v)

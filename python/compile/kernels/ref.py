@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *golden models*: each ISAX datapath synthesized by the Rust
+side (L3) corresponds to one function here, and each Pallas kernel (L1) is
+checked against these by pytest/hypothesis at build time.  Nothing in this
+file uses Pallas; everything is straight jax.numpy so it can be trusted as
+an independent specification.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# LLM inference (case study §6.5): multi-head attention
+# ---------------------------------------------------------------------------
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Multi-head attention. q,k,v: [B, H, T, Dh] -> [B, H, T, Dh]."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        tq, tk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Post-quantum cryptography (case study §6.2)
+# ---------------------------------------------------------------------------
+
+
+def gf2mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Matrix multiply over GF(2). a: [M, K] int32 of {0,1}, b: [K, N] -> [M, N]."""
+    return (a.astype(jnp.int32) @ b.astype(jnp.int32)) & 1
+
+
+def vdecomp(words: jax.Array, nbits: int) -> jax.Array:
+    """Bitstream unpacking: packed little-endian 32-bit words -> {0,1} vector.
+
+    words: [ceil(nbits/32)] int32; returns [nbits] int32.
+    """
+    idx = jnp.arange(nbits)
+    w = words[idx // 32]
+    return (w >> (idx % 32)) & 1
+
+
+def syndrome(h_rows: jax.Array, e: jax.Array) -> jax.Array:
+    """s = H e^T over GF(2); h_rows: [R, C] {0,1}, e: [C] {0,1} -> [R]."""
+    return (h_rows.astype(jnp.int32) @ e.astype(jnp.int32)) & 1
+
+
+# ---------------------------------------------------------------------------
+# Point-cloud processing (case study §6.3)
+# ---------------------------------------------------------------------------
+
+
+def vdist3(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Squared Euclidean distance between 3-D point pairs. p,q: [N,3] -> [N]."""
+    d = p - q
+    return jnp.sum(d * d, axis=-1)
+
+
+def mcov(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Cross-covariance of two centered point sets. p,q: [N,3] -> [3,3].
+
+    cov = sum_i (p_i - mean(p)) (q_i - mean(q))^T
+    """
+    pc = p - jnp.mean(p, axis=0, keepdims=True)
+    qc = q - jnp.mean(q, axis=0, keepdims=True)
+    return pc.T @ qc
+
+
+def vfsmax(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Max value + argmax of a vector (float). x: [N] -> (max, argmax)."""
+    return jnp.max(x), jnp.argmax(x).astype(jnp.int32)
+
+
+def vmadot(m: jax.Array, v: jax.Array) -> jax.Array:
+    """Matrix-vector multiply. m: [R, C], v: [C] -> [R]."""
+    return m @ v
+
+
+# ---------------------------------------------------------------------------
+# Graphics rendering (case study §6.4)
+# ---------------------------------------------------------------------------
+
+
+def phong(
+    normal: jax.Array,
+    light: jax.Array,
+    view: jax.Array,
+    ka: float,
+    kd: float,
+    ks: float,
+    shininess: float,
+) -> jax.Array:
+    """Phong lighting model per pixel. normal/light/view: [N,3] unit vectors -> [N]."""
+    ndotl = jnp.maximum(jnp.sum(normal * light, axis=-1), 0.0)
+    refl = 2.0 * ndotl[:, None] * normal - light
+    rdotv = jnp.maximum(jnp.sum(refl * view, axis=-1), 0.0)
+    spec = jnp.where(ndotl > 0.0, jnp.power(rdotv, shininess), 0.0)
+    return ka + kd * ndotl + ks * spec
+
+
+RGB2YUV = jnp.array(
+    [
+        [0.299, 0.587, 0.114],
+        [-0.14713, -0.28886, 0.436],
+        [0.615, -0.51499, -0.10001],
+    ],
+    dtype=jnp.float32,
+)
+
+
+def vrgb2yuv(rgb: jax.Array) -> jax.Array:
+    """Color-space conversion. rgb: [N,3] -> yuv [N,3]."""
+    return rgb @ RGB2YUV.T
+
+
+def vmvar(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """First and second moments of row vectors. x: [N, W] -> (mean [N], var [N])."""
+    mean = jnp.mean(x, axis=-1)
+    var = jnp.mean(x * x, axis=-1) - mean * mean
+    return mean, var

@@ -1,0 +1,279 @@
+"""L2: Llama-2-style transformer forward (prefill + KV-cache decode) in JAX.
+
+This is the compute graph for the paper's CPU-LLM-inference case study
+(§6.5).  The attention hot-spot calls the L1 Pallas kernel
+(`kernels.attention.mha`); everything else is plain jnp so XLA fuses it.
+
+The model is deliberately parameterizable: the cycle-level study on the Rust
+side models the paper's Llama-2 110M int8 configuration, while the *real*
+numeric run (AOT artifact executed through PJRT by the Rust coordinator)
+uses a reduced configuration so interpret-mode Pallas stays fast on CPU.
+
+Weights are materialized at AOT time from a fixed PRNG seed and baked into
+the lowered HLO as constants — the Rust side only feeds token ids and the
+KV cache, keeping the request path free of Python and of weight plumbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style architecture hyperparameters."""
+
+    vocab: int = 256
+    dim: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    hidden: int = 160  # SwiGLU inner dim
+    max_seq: int = 64
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def param_count(self) -> int:
+        """Total parameter count (for the cycle model's 110M configuration)."""
+        per_layer = (
+            4 * self.dim * self.dim  # wq wk wv wo
+            + 3 * self.dim * self.hidden  # w1 w2 w3
+            + 2 * self.dim  # norms
+        )
+        return self.vocab * self.dim * 2 + self.n_layers * per_layer + self.dim
+
+
+# Paper configuration: Llama-2 110M-class (dim 768, 12 layers, 12 heads).
+PAPER_CONFIG = ModelConfig(
+    vocab=32000, dim=768, n_layers=12, n_heads=12, hidden=2048, max_seq=1024
+)
+# Reduced configuration for the real PJRT run (interpret-mode friendly).
+TINY_CONFIG = ModelConfig()
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, Any]:
+    """Materialize all weights from a fixed seed (baked into the AOT HLO)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    scale = 0.02
+
+    def dense(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    params: dict[str, Any] = {
+        "embed": dense(ks[0], (cfg.vocab, cfg.dim)),
+        "unembed": dense(ks[1], (cfg.dim, cfg.vocab)),
+        "final_norm": jnp.ones((cfg.dim,), jnp.float32),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[3 + i], 8)
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((cfg.dim,), jnp.float32),
+                "mlp_norm": jnp.ones((cfg.dim,), jnp.float32),
+                "wq": dense(lk[0], (cfg.dim, cfg.dim)),
+                "wk": dense(lk[1], (cfg.dim, cfg.dim)),
+                "wv": dense(lk[2], (cfg.dim, cfg.dim)),
+                "wo": dense(lk[3], (cfg.dim, cfg.dim)),
+                "w1": dense(lk[4], (cfg.dim, cfg.hidden)),
+                "w2": dense(lk[5], (cfg.hidden, cfg.dim)),
+                "w3": dense(lk[6], (cfg.dim, cfg.hidden)),
+            }
+        )
+    return params
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [B,H,T,Dh], positions: [T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _block(
+    cfg: ModelConfig,
+    layer: dict[str, Any],
+    x: jax.Array,
+    positions: jax.Array,
+    kv: tuple[jax.Array, jax.Array] | None,
+    *,
+    use_pallas: bool,
+):
+    """One transformer block. Returns (x, (k_full, v_full))."""
+    h = rmsnorm(x, layer["attn_norm"])
+    q = _split_heads(h @ layer["wq"], cfg.n_heads)
+    k = _split_heads(h @ layer["wk"], cfg.n_heads)
+    v = _split_heads(h @ layer["wv"], cfg.n_heads)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv is not None:
+        k_cache, v_cache = kv  # [B,H,Tpast,Dh]
+        k = jnp.concatenate([k_cache, k], axis=2)
+        v = jnp.concatenate([v_cache, v], axis=2)
+
+    if use_pallas and q.shape[2] > 1:
+        attn = attention.mha(q, k, v, causal=True)
+    else:
+        # Decode step (Tq=1): every cached position is visible, plain path.
+        from .kernels import ref
+
+        attn = ref.mha(q, k, v, causal=q.shape[2] > 1)
+    x = x + _merge_heads(attn) @ layer["wo"]
+
+    h = rmsnorm(x, layer["mlp_norm"])
+    gated = jax.nn.silu(h @ layer["w1"]) * (h @ layer["w3"])
+    return x + gated @ layer["w2"], (k, v)
+
+
+def prefill(
+    cfg: ModelConfig, params: dict[str, Any], ids: jax.Array, *, use_pallas: bool = True
+):
+    """Full-sequence forward. ids: [B,T] int32.
+
+    Returns (logits [B,T,V], k_caches [L,B,H,T,Dh], v_caches [L,B,H,T,Dh]).
+    """
+    b, t = ids.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = params["embed"][ids]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        x, (k, v) = _block(cfg, layer, x, positions, None, use_pallas=use_pallas)
+        ks.append(k)
+        vs.append(v)
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],
+    ids: jax.Array,
+    k_caches: jax.Array,
+    v_caches: jax.Array,
+    pos: jax.Array,
+):
+    """Single-token decode. ids: [B,1] int32; caches: [L,B,H,Tpast,Dh]; pos: [] int32.
+
+    The cache is *exact-sized*: prefill returns length-T caches and each
+    decode step grows them by one, so every cached slot is valid and the
+    attention is unmasked.  `pos` is the absolute position of the new token
+    (used for RoPE).  Returns (logits [B,V], k_caches', v_caches').
+    """
+    positions = pos[None].astype(jnp.int32)
+    x = params["embed"][ids]
+    new_ks, new_vs = [], []
+    for i, layer in enumerate(params["layers"]):
+        x, (k, v) = _block(
+            cfg, layer, x, positions, (k_caches[i], v_caches[i]), use_pallas=False
+        )
+        new_ks.append(k)
+        new_vs.append(v)
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["unembed"])[:, 0]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def prefill_fixed(cfg: ModelConfig, params: dict[str, Any], ids: jax.Array):
+    """Prefill that returns max_seq-sized caches (zero-padded past T).
+
+    This is the AOT entry point: HLO needs static shapes, so the serving
+    runtime works with a fixed-capacity KV cache and a scalar `pos` cursor.
+    Returns (logits [B,T,V], k_caches [L,B,H,max_seq,Dh], v_caches ...).
+    """
+    logits, ks, vs = prefill(cfg, params, ids)
+    pad_t = cfg.max_seq - ks.shape[3]
+    pad = ((0, 0), (0, 0), (0, 0), (0, pad_t), (0, 0))
+    return logits, jnp.pad(ks, pad), jnp.pad(vs, pad)
+
+
+def decode_step_fixed(
+    cfg: ModelConfig,
+    params: dict[str, Any],
+    ids: jax.Array,
+    k_caches: jax.Array,
+    v_caches: jax.Array,
+    pos: jax.Array,
+):
+    """Single-token decode against a fixed-capacity cache.
+
+    ids: [B,1] int32; caches: [L,B,H,max_seq,Dh] f32 with entries < pos
+    valid; pos: [] int32 = absolute position of the new token.  The new
+    token's K/V are written at slot `pos`; attention masks slots > pos.
+    Returns (logits [B,V], k_caches', v_caches').
+    """
+    positions = pos[None].astype(jnp.int32)
+    x = params["embed"][ids]
+    tmax = k_caches.shape[3]
+    slot_ids = jnp.arange(tmax)
+    new_ks, new_vs = [], []
+    for i, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q = _split_heads(h @ layer["wq"], cfg.n_heads)
+        k = _split_heads(h @ layer["wk"], cfg.n_heads)
+        v = _split_heads(h @ layer["wv"], cfg.n_heads)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            k_caches[i], k, (0, 0, pos.astype(jnp.int32), 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            v_caches[i], v, (0, 0, pos.astype(jnp.int32), 0)
+        )
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kc) * scale
+        mask = slot_ids[None, None, None, :] <= pos
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", probs, vc)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h = rmsnorm(x, layer["mlp_norm"])
+        x = x + (jax.nn.silu(h @ layer["w1"]) * (h @ layer["w3"])) @ layer["w2"]
+        new_ks.append(kc)
+        new_vs.append(vc)
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["unembed"])[:, 0]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def build(cfg: ModelConfig = TINY_CONFIG, seed: int = 0):
+    """Convenience: params + jitted prefill/decode closures over baked weights."""
+    params = init_params(cfg, seed)
+
+    @jax.jit
+    def run_prefill(ids):
+        return prefill(cfg, params, ids)
+
+    @jax.jit
+    def run_decode(ids, k_caches, v_caches, pos):
+        return decode_step(cfg, params, ids, k_caches, v_caches, pos)
+
+    return params, run_prefill, run_decode

@@ -1,0 +1,274 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py.
+
+This is the CORE correctness signal for L1: the Rust ISAX engine's numerics
+are validated against the AOT artifacts, and the artifacts are validated
+here against the pure-jnp golden models.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, gf2, graphics, pointcloud, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+class TestAttention:
+    @pytest.mark.parametrize("t", [32, 64, 128])
+    def test_causal_matches_ref(self, t):
+        q, k, v = (_rand(i, (1, 2, t, 16)) for i in range(3))
+        out = attention.mha(q, k, v, causal=True)
+        want = ref.mha(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_non_causal(self):
+        q, k, v = (_rand(i, (2, 2, 32, 8)) for i in range(3))
+        out = attention.mha(q, k, v, causal=False)
+        want = ref.mha(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_batch_heads(self):
+        q, k, v = (_rand(i, (3, 4, 32, 16)) for i in range(3))
+        out = attention.mha(q, k, v)
+        want = ref.mha(q, k, v)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bq,bk", [(16, 16), (16, 32), (32, 16), (64, 64)])
+    def test_block_shape_invariance(self, bq, bk):
+        """Output must not depend on the VMEM tiling choice."""
+        q, k, v = (_rand(i, (1, 2, 64, 16)) for i in range(3))
+        out = attention.mha(q, k, v, block_q=bq, block_k=bk)
+        want = ref.mha(q, k, v)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_cross_attention_longer_k(self):
+        q = _rand(0, (1, 2, 32, 16))
+        k = _rand(1, (1, 2, 64, 16))
+        v = _rand(2, (1, 2, 64, 16))
+        out = attention.mha(q, k, v, causal=True)
+        want = ref.mha(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_rejects_nondividing_blocks(self):
+        q, k, v = (_rand(i, (1, 1, 48, 8)) for i in range(3))
+        with pytest.raises(ValueError):
+            attention.mha(q, k, v, block_q=32, block_k=32)
+
+    def test_scale_invariance_softmax(self):
+        """Adding a constant to all logits (via huge v) must stay finite."""
+        q = _rand(0, (1, 1, 32, 8)) * 100.0
+        k = _rand(1, (1, 1, 32, 8)) * 100.0
+        v = _rand(2, (1, 1, 32, 8))
+        out = attention.mha(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        t=st.sampled_from([16, 32, 64]),
+        h=st.integers(1, 4),
+        dh=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, t, h, dh, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (jax.random.normal(kk, (1, h, t, dh)) for kk in keys)
+        out = attention.mha(q, k, v, block_q=16, block_k=16)
+        want = ref.mha(q, k, v)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# PQC: gf2mm / vdecomp
+# ---------------------------------------------------------------------------
+
+
+class TestGf2:
+    def test_gf2mm_matches_ref(self):
+        key = jax.random.PRNGKey(0)
+        a = jax.random.bernoulli(key, 0.5, (64, 64)).astype(jnp.int32)
+        b = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (64, 64)).astype(jnp.int32)
+        np.testing.assert_array_equal(gf2.gf2mm(a, b), ref.gf2mm(a, b))
+
+    def test_gf2mm_identity(self):
+        eye = jnp.eye(32, dtype=jnp.int32)
+        a = jax.random.bernoulli(jax.random.PRNGKey(2), 0.5, (32, 32)).astype(jnp.int32)
+        np.testing.assert_array_equal(gf2.gf2mm(a, eye), a)
+
+    def test_gf2mm_output_is_binary(self):
+        a = jnp.ones((32, 32), jnp.int32)
+        out = gf2.gf2mm(a, a)
+        assert set(np.unique(np.asarray(out))).issubset({0, 1})
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([16, 32, 64]),
+        k=st.sampled_from([16, 32, 64]),
+        n=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_gf2mm_hypothesis(self, m, k, n, seed):
+        ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.bernoulli(ka, 0.5, (m, k)).astype(jnp.int32)
+        b = jax.random.bernoulli(kb, 0.5, (k, n)).astype(jnp.int32)
+        np.testing.assert_array_equal(
+            gf2.gf2mm(a, b, block_m=16, block_n=16, block_k=16), ref.gf2mm(a, b)
+        )
+
+    def test_vdecomp_matches_ref(self):
+        words = jax.random.randint(jax.random.PRNGKey(3), (16,), 0, 2**31 - 1, jnp.int32)
+        np.testing.assert_array_equal(gf2.vdecomp(words, 512), ref.vdecomp(words, 512))
+
+    def test_vdecomp_roundtrip(self):
+        """unpack(pack(bits)) == bits."""
+        bits = jax.random.bernoulli(jax.random.PRNGKey(4), 0.5, (256,)).astype(jnp.int32)
+        weights = (1 << jnp.arange(32)).astype(jnp.int32)
+        words = jnp.sum(bits.reshape(-1, 32) * weights[None, :], axis=1, dtype=jnp.int32)
+        np.testing.assert_array_equal(gf2.vdecomp(words, 256), bits)
+
+    def test_vdecomp_rejects_bad_nbits(self):
+        with pytest.raises(ValueError):
+            gf2.vdecomp(jnp.zeros((4,), jnp.int32), 100)
+
+    def test_syndrome_composition(self):
+        """s = H · vdecomp(e_packed) end-to-end matches the oracle."""
+        hkey, ekey = jax.random.split(jax.random.PRNGKey(5))
+        h = jax.random.bernoulli(hkey, 0.3, (32, 128)).astype(jnp.int32)
+        words = jax.random.randint(ekey, (4,), 0, 2**31 - 1, jnp.int32)
+        e = gf2.vdecomp(words, 128)
+        s = gf2.gf2mm(h, e[:, None], block_m=32, block_n=1, block_k=32)[:, 0]
+        np.testing.assert_array_equal(s, ref.syndrome(h, ref.vdecomp(words, 128)))
+
+
+# ---------------------------------------------------------------------------
+# Point cloud: vdist3 / mcov / vfsmax / vmadot
+# ---------------------------------------------------------------------------
+
+
+class TestPointcloud:
+    def test_vdist3(self):
+        p, q = _rand(0, (256, 3)), _rand(1, (256, 3))
+        np.testing.assert_allclose(
+            pointcloud.vdist3(p, q), ref.vdist3(p, q), rtol=RTOL, atol=ATOL
+        )
+
+    def test_vdist3_zero_for_identical(self):
+        p = _rand(0, (64, 3))
+        np.testing.assert_allclose(pointcloud.vdist3(p, p), jnp.zeros(64), atol=ATOL)
+
+    def test_mcov(self):
+        p, q = _rand(2, (256, 3)), _rand(3, (256, 3))
+        np.testing.assert_allclose(
+            pointcloud.mcov(p, q), ref.mcov(p, q), rtol=1e-4, atol=1e-4
+        )
+
+    def test_mcov_translation_invariant(self):
+        p, q = _rand(4, (128, 3)), _rand(5, (128, 3))
+        shifted = pointcloud.mcov(p + 10.0, q - 5.0)
+        np.testing.assert_allclose(shifted, pointcloud.mcov(p, q), rtol=1e-3, atol=1e-3)
+
+    def test_vfsmax(self):
+        x = _rand(6, (256,))
+        mx, am = pointcloud.vfsmax(x)
+        wmx, wam = ref.vfsmax(x)
+        np.testing.assert_allclose(mx, wmx, rtol=RTOL)
+        assert int(am) == int(wam)
+
+    def test_vfsmax_finds_planted_max(self):
+        x = _rand(7, (128,))
+        x = x.at[77].set(1e9)
+        mx, am = pointcloud.vfsmax(x)
+        assert int(am) == 77 and float(mx) == pytest.approx(1e9)
+
+    def test_vmadot(self):
+        m, v = _rand(8, (64, 64)), _rand(9, (64,))
+        np.testing.assert_allclose(
+            pointcloud.vmadot(m, v), ref.vmadot(m, v), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([64, 128, 256]), seed=st.integers(0, 2**16))
+    def test_vdist3_hypothesis(self, n, seed):
+        kp, kq = jax.random.split(jax.random.PRNGKey(seed))
+        p = jax.random.normal(kp, (n, 3))
+        q = jax.random.normal(kq, (n, 3))
+        np.testing.assert_allclose(
+            pointcloud.vdist3(p, q), ref.vdist3(p, q), rtol=1e-4, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# Graphics: phong / vrgb2yuv / vmvar
+# ---------------------------------------------------------------------------
+
+
+class TestGraphics:
+    @staticmethod
+    def _unit(key, n):
+        v = _rand(key, (n, 3))
+        return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+    def test_phong(self):
+        n, l, v = (self._unit(i, 256) for i in range(3))
+        out = graphics.phong(n, l, v)
+        want = ref.phong(n, l, v, 0.1, 0.7, 0.4, 16.0)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+    def test_phong_ambient_floor(self):
+        """Facing-away normals still receive ambient light."""
+        n = jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (64, 1))
+        l = jnp.tile(jnp.array([[0.0, 0.0, -1.0]]), (64, 1))
+        v = jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (64, 1))
+        out = graphics.phong(n, l, v, ka=0.25)
+        np.testing.assert_allclose(out, jnp.full(64, 0.25), atol=1e-5)
+
+    def test_vrgb2yuv(self):
+        rgb = jnp.abs(_rand(0, (256, 3)))
+        np.testing.assert_allclose(
+            graphics.vrgb2yuv(rgb), ref.vrgb2yuv(rgb), rtol=1e-4, atol=1e-4
+        )
+
+    def test_vrgb2yuv_grey_has_zero_chroma(self):
+        grey = jnp.tile(jnp.array([[0.5, 0.5, 0.5]]), (64, 1))
+        yuv = graphics.vrgb2yuv(grey)
+        np.testing.assert_allclose(yuv[:, 1:], jnp.zeros((64, 2)), atol=1e-4)
+
+    def test_vmvar(self):
+        x = _rand(1, (64, 16))
+        mean, var = graphics.vmvar(x)
+        wm, wv = ref.vmvar(x)
+        np.testing.assert_allclose(mean, wm, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(var, wv, rtol=1e-3, atol=1e-4)
+
+    def test_vmvar_constant_rows(self):
+        x = jnp.full((32, 8), 3.5)
+        mean, var = graphics.vmvar(x)
+        np.testing.assert_allclose(mean, jnp.full(32, 3.5), atol=1e-5)
+        np.testing.assert_allclose(var, jnp.zeros(32), atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.sampled_from([64, 128]), w=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_vmvar_hypothesis(self, n, w, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, w))
+        mean, var = graphics.vmvar(x)
+        wm, wv = ref.vmvar(x)
+        np.testing.assert_allclose(mean, wm, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(var, wv, rtol=1e-3, atol=1e-3)

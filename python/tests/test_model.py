@@ -1,0 +1,135 @@
+"""L2 model tests: shapes, prefill/decode consistency, AOT entry sanity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.ModelConfig(vocab=64, dim=32, n_layers=2, n_heads=2, hidden=64, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+class TestShapes:
+    def test_prefill_shapes(self, params):
+        ids = jnp.zeros((1, 8), jnp.int32)
+        logits, ks, vs = model.prefill(CFG, params, ids)
+        assert logits.shape == (1, 8, CFG.vocab)
+        assert ks.shape == (CFG.n_layers, 1, CFG.n_heads, 8, CFG.head_dim)
+        assert vs.shape == ks.shape
+
+    def test_prefill_fixed_pads_to_max_seq(self, params):
+        ids = jnp.zeros((1, 8), jnp.int32)
+        _, ks, vs = model.prefill_fixed(CFG, params, ids)
+        assert ks.shape[3] == CFG.max_seq
+        # padding region must be zeros
+        np.testing.assert_allclose(ks[:, :, :, 8:], 0.0)
+
+    def test_param_count_formula(self):
+        params = model.init_params(CFG)
+        total = sum(x.size for x in jax.tree.leaves(params))
+        assert total == CFG.param_count()
+
+    def test_paper_config_is_110m_class(self):
+        # Paper §6.5: "Llama 2 model with 110M parameters"
+        assert 80e6 < model.PAPER_CONFIG.param_count() < 140e6
+
+
+class TestDecodeConsistency:
+    def test_decode_matches_prefill_logits(self, params):
+        """Greedy decode via fixed cache must equal a full re-prefill."""
+        key = jax.random.PRNGKey(1)
+        t = 8
+        ids = jax.random.randint(key, (1, t), 0, CFG.vocab, jnp.int32)
+        logits_full, _, _ = model.prefill(CFG, params, ids)
+
+        # Prefill on the first t-1 tokens, decode token t-1 at position t-1.
+        _, ks, vs = model.prefill_fixed(CFG, params, ids[:, : t - 1])
+        logits_step, _, _ = model.decode_step_fixed(
+            CFG, params, ids[:, t - 1 :], ks, vs, jnp.asarray(t - 1)
+        )
+        np.testing.assert_allclose(
+            logits_step, logits_full[:, -1], rtol=2e-4, atol=2e-4
+        )
+
+    def test_multi_step_decode_matches_prefill(self, params):
+        ids = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, CFG.vocab, jnp.int32)
+        logits_full, _, _ = model.prefill(CFG, params, ids)
+
+        _, ks, vs = model.prefill_fixed(CFG, params, ids[:, :3])
+        for step in range(3, 6):
+            logits_step, ks, vs = model.decode_step_fixed(
+                CFG, params, ids[:, step : step + 1], ks, vs, jnp.asarray(step)
+            )
+        np.testing.assert_allclose(logits_step, logits_full[:, -1], rtol=5e-4, atol=5e-4)
+
+    def test_cache_slots_written_in_place(self, params):
+        ids = jnp.zeros((1, 4), jnp.int32)
+        _, ks, vs = model.prefill_fixed(CFG, params, ids)
+        _, ks2, _ = model.decode_step_fixed(
+            CFG, params, jnp.zeros((1, 1), jnp.int32), ks, vs, jnp.asarray(4)
+        )
+        # old entries unchanged, new slot filled
+        np.testing.assert_allclose(ks2[:, :, :, :4], ks[:, :, :, :4])
+        assert float(jnp.abs(ks2[:, :, :, 4]).sum()) > 0.0
+
+
+class TestPallasPath:
+    def test_pallas_vs_ref_prefill(self, params):
+        """Prefill through the Pallas attention equals the pure-jnp path."""
+        cfg = model.ModelConfig(
+            vocab=64, dim=32, n_layers=1, n_heads=2, hidden=64, max_seq=32
+        )
+        p = model.init_params(cfg, seed=3)
+        ids = jax.random.randint(jax.random.PRNGKey(4), (1, 32), 0, cfg.vocab, jnp.int32)
+        with_pallas, _, _ = model.prefill(cfg, p, ids, use_pallas=True)
+        without, _, _ = model.prefill(cfg, p, ids, use_pallas=False)
+        np.testing.assert_allclose(with_pallas, without, rtol=2e-4, atol=2e-4)
+
+    def test_build_closures_jit(self):
+        params, run_prefill, run_decode = model.build(CFG, seed=0)
+        ids = jnp.zeros((1, 8), jnp.int32)
+        logits, ks, vs = run_prefill(ids)
+        assert logits.shape == (1, 8, CFG.vocab)
+        out, ks2, vs2 = run_decode(ids[:, :1], ks, vs, jnp.asarray(8))
+        assert out.shape == (1, CFG.vocab)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 8, 16))
+        pos = jnp.arange(8, dtype=jnp.int32)
+        rotated = model.rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(rotated, axis=-1),
+            jnp.linalg.norm(x, axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 8))
+        out = model.rope(x, jnp.zeros((1,), jnp.int32), 10000.0)
+        np.testing.assert_allclose(out, x, rtol=1e-6)
+
+    def test_rope_relative_shift(self):
+        """Dot products depend only on relative positions."""
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 16))
+        d01 = jnp.sum(
+            model.rope(q, jnp.array([5], jnp.int32), 1e4)
+            * model.rope(k, jnp.array([3], jnp.int32), 1e4)
+        )
+        d02 = jnp.sum(
+            model.rope(q, jnp.array([9], jnp.int32), 1e4)
+            * model.rope(k, jnp.array([7], jnp.int32), 1e4)
+        )
+        np.testing.assert_allclose(d01, d02, rtol=1e-4)

@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig2_interfaces` — regenerates Figure 2(b) (interface selection penalties)
+//! and reports harness runtime statistics (criterion is unavailable in
+//! the offline vendor set; see DESIGN.md).
+
+use std::time::Instant;
+
+fn main() {
+    // Warm-up + timed repetitions of the full harness.
+    let mut samples = Vec::new();
+    let mut last = None;
+    for _ in 0..20 {
+        let t0 = Instant::now();
+        let r = aquas::bench_harness::fig2();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        last = Some(r);
+    }
+    println!("{}", last.unwrap().render());
+    let s = aquas::util::stats::summarize(samples);
+    println!(
+        "harness runtime: mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  (n={})",
+        s.mean, s.p50, s.p95, s.n
+    );
+}

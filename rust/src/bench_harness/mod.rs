@@ -1,0 +1,202 @@
+//! Regenerates every table and figure of the paper's evaluation (§6).
+//!
+//! Each `table*`/`fig*` function returns the formatted rows *and* the raw
+//! numbers, so `cargo bench` targets, the `aquas bench` CLI, and
+//! EXPERIMENTS.md all draw from one source of truth.
+
+pub mod fir7;
+pub mod report;
+pub mod table2;
+pub mod table3;
+
+pub use report::Report;
+
+use crate::area::AreaModel;
+use crate::cores::boom::{BoomConfig, BoomModel};
+use crate::cores::saturn::{SaturnConfig, SaturnModel};
+use crate::interface::latency::{sequence_latency, TransactionKind};
+use crate::interface::model::MemInterface;
+
+/// Figure 2(b): the cost of suboptimal interface selection/ordering on the
+/// two-interface example.
+pub fn fig2() -> Report {
+    let itfc1 = MemInterface::cpu_port();
+    let itfc2 = MemInterface::system_bus();
+    let mut r = Report::new(
+        "Figure 2(b) — suboptimal interface choices on the @itfc1/@itfc2 example",
+        vec!["design choice", "cycles", "penalty"],
+    );
+    // A 32-byte load + an 8-byte load, as in the figure.
+    let big = 32usize;
+    let small = 8usize;
+
+    // Optimal: big burst over itfc2, small word(s) over itfc1 in parallel.
+    let opt = sequence_latency(&itfc2, TransactionKind::Load, &[big]).max(sequence_latency(
+        &itfc1,
+        TransactionKind::Load,
+        &itfc1.decompose(0, small),
+    ));
+    // Suboptimal A: everything word-by-word over itfc1.
+    let sub_a = sequence_latency(
+        &itfc1,
+        TransactionKind::Load,
+        &itfc1.decompose(0, big + small),
+    );
+    // Suboptimal B: both over itfc2 but issuing the small transfer first
+    // (serializes the burst behind the lead-off of the small one).
+    let sub_b = sequence_latency(
+        &itfc2,
+        TransactionKind::Load,
+        &[small, big].map(|m| m).to_vec(),
+    );
+
+    r.row(vec!["optimal (burst on @itfc2, word on @itfc1)".into(), opt.to_string(), "—".into()]);
+    r.row(vec![
+        "all word-by-word on @itfc1".into(),
+        sub_a.to_string(),
+        format!("+{}", sub_a - opt),
+    ]);
+    r.row(vec![
+        "small-first ordering on @itfc2".into(),
+        sub_b.to_string(),
+        format!("+{}", sub_b.saturating_sub(opt)),
+    ]);
+    r.metric("penalty_word_by_word", (sub_a - opt) as f64);
+    r.metric("penalty_bad_order", sub_b.saturating_sub(opt) as f64);
+    r
+}
+
+/// Figure 6: BOOMv3 vs Aquas on the PCP workloads (performance + area).
+pub fn fig6() -> Report {
+    let mut r = Report::new(
+        "Figure 6 — BOOMv3 vs Aquas on point-cloud workloads",
+        vec!["case", "boom cyc", "aquas cyc", "boom t(µs)", "aquas t(µs)", "aquas/boom speed", "area ratio"],
+    );
+    let area = AreaModel::default();
+    let boom_rep = area.boom();
+    let t2 = table2::run();
+    let boom = BoomModel::new(BoomConfig::default());
+
+    for row in &t2.pcp_rows {
+        let k = &row.kernel;
+        // BOOM runs the plain software.
+        let mut mem = crate::ir::interp::Memory::for_func(&k.software);
+        (k.init)(&k.software, &mut mem);
+        let br = boom.simulate(&k.software, &[], &mut mem).expect("boom sim");
+        // Times at each design's achievable frequency.
+        let boom_us = br.cycles as f64 / boom_rep.freq_mhz;
+        let aquas_rep = row.area;
+        let aquas_us = row.aquas_cycles as f64 / aquas_rep.freq_mhz;
+        let ratio = boom_us / aquas_us;
+        r.row(vec![
+            k.name.into(),
+            br.cycles.to_string(),
+            row.aquas_cycles.to_string(),
+            format!("{boom_us:.2}"),
+            format!("{aquas_us:.2}"),
+            format!("{ratio:.2}x"),
+            format!("{:.2}x", boom_rep.area_mm2 / aquas_rep.area_mm2),
+        ]);
+        r.metric(&format!("{}_aquas_vs_boom", k.name), ratio);
+    }
+    r.metric("boom_area_mm2", boom_rep.area_mm2);
+    r
+}
+
+/// Figure 7: Saturn (VLEN=128) vs Aquas on the graphics workloads.
+pub fn fig7() -> Report {
+    let mut r = Report::new(
+        "Figure 7 — Saturn (RVV, VLEN=128) vs Aquas on graphics workloads",
+        vec!["case", "base cyc", "saturn cyc", "aquas cyc", "saturn speed*", "aquas speed*", "saturn area", "aquas area"],
+    );
+    let area = AreaModel::default();
+    let saturn_rep = area.saturn();
+    let saturn = SaturnModel::new(SaturnConfig::default());
+    let rows = table2::run_kernels(crate::workloads::graphics_kernels());
+
+    for row in &rows {
+        let k = &row.kernel;
+        let profile = k.vector_profile.as_ref().expect("graphics kernels have profiles");
+        let sat = saturn.simulate(profile);
+        // Speedups vs the base core *in time*, accounting for frequency:
+        // Saturn's integration costs 35% clock, Aquas costs none.
+        let base_t = row.base_cycles as f64 / crate::area::ROCKET_FREQ_MHZ;
+        let sat_t = sat.cycles as f64 / saturn_rep.freq_mhz;
+        let aquas_t = row.aquas_cycles as f64 / row.area.freq_mhz;
+        let sat_x = base_t / sat_t;
+        let aquas_x = base_t / aquas_t;
+        r.row(vec![
+            k.name.into(),
+            row.base_cycles.to_string(),
+            sat.cycles.to_string(),
+            row.aquas_cycles.to_string(),
+            format!("{sat_x:.2}x"),
+            format!("{aquas_x:.2}x"),
+            format!("+{:.0}%", saturn_rep.area_overhead_pct()),
+            format!("+{:.1}%", row.area.area_overhead_pct()),
+        ]);
+        r.metric(&format!("{}_saturn_x", k.name), sat_x);
+        r.metric(&format!("{}_aquas_x", k.name), aquas_x);
+    }
+    r
+}
+
+/// Figure 8: the FPGA LLM-inference study.
+pub fn fig8() -> Report {
+    use crate::workloads::llm;
+    let mut r = Report::new(
+        "Figure 8 — CPU LLM inference (Llama-2-110M-class, int8, 80 MHz SoC)",
+        vec!["metric", "base", "aquas", "speedup"],
+    );
+    let cfg = llm::LlmConfig::default();
+    let (base, aquas, ttft_x, itl_x) = llm::figure8_latency(&cfg);
+    r.row(vec![
+        "TTFT (ms)".into(),
+        format!("{:.0}", base.ttft_ms),
+        format!("{:.0}", aquas.ttft_ms),
+        format!("{ttft_x:.2}x"),
+    ]);
+    r.row(vec![
+        "ITL (ms)".into(),
+        format!("{:.0}", base.itl_ms),
+        format!("{:.0}", aquas.itl_ms),
+        format!("{itl_x:.2}x"),
+    ]);
+    let (usage, (lut, ff, bram, dsp)) = llm::figure8_resources();
+    r.row(vec![
+        "resources".into(),
+        "—".into(),
+        format!(
+            "LUT {:.0}% ({}) | FF {:.0}% ({}) | BRAM {:.0}% ({} KB) | DSP {:.0}% ({})",
+            lut, usage.luts, ff, usage.ffs, bram, usage.bram_kb, dsp, usage.dsps
+        ),
+        "—".into(),
+    ]);
+    r.metric("ttft_speedup", ttft_x);
+    r.metric("itl_speedup", itl_x);
+    r.metric("lut_pct", lut);
+    r.metric("ff_pct", ff);
+    r.metric("bram_pct", bram);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig2_reports_meaningful_penalties() {
+        let r = super::fig2();
+        // Paper: "a notable 7- to 9-cycle latency penalty".
+        let p = r.metrics["penalty_word_by_word"];
+        assert!(p >= 7.0, "penalty {p}");
+    }
+
+    #[test]
+    fn fig8_reproduces_headline_speedups() {
+        let r = super::fig8();
+        let ttft = r.metrics["ttft_speedup"];
+        let itl = r.metrics["itl_speedup"];
+        assert!(ttft > 6.0 && ttft < 14.0);
+        assert!(itl > 6.0 && itl < 14.0);
+        assert!(r.metrics["bram_pct"] > r.metrics["lut_pct"]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Tabular report container shared by all bench targets.
+
+use std::collections::BTreeMap;
+
+/// A titled table plus named raw metrics.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: Vec<&str>) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.into_iter().map(String::from).collect(),
+            rows: Vec::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.into(), value);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Metrics as JSON (for EXPERIMENTS.md tooling).
+    pub fn metrics_json(&self) -> String {
+        use crate::util::json::Json;
+        let obj: BTreeMap<String, Json> =
+            self.metrics.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        Json::Obj(obj).to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut r = Report::new("T", vec!["a", "long-header"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let text = r.render();
+        assert!(text.contains("== T =="));
+        assert!(text.contains("long-header"));
+        assert!(text.contains('1'));
+    }
+
+    #[test]
+    fn metrics_json_roundtrips() {
+        let mut r = Report::new("T", vec!["a"]);
+        r.metric("x", 1.5);
+        let j = crate::util::json::Json::parse(&r.metrics_json()).unwrap();
+        assert_eq!(j.get("x").unwrap().as_f64().unwrap(), 1.5);
+    }
+}

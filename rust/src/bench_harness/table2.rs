@@ -1,0 +1,341 @@
+//! Table 2: cycle counts, speedups, clock and area overheads for the PQC
+//! and PCP case studies under three designs: base Rocket, the APS-like
+//! naive flow ("ICCAD'25"), and Aquas.
+
+use crate::area::{AreaModel, AreaReport};
+use crate::bench_harness::report::Report;
+use crate::compiler::{compile, CompileOptions};
+use crate::cores::rocket::{CoreConfig, RocketModel};
+use crate::cores::IsaxEngine;
+use crate::ir::interp::Memory;
+use crate::synthesis::{hwgen, naive, synthesize};
+use crate::workloads::{pcp, pqc, Kernel};
+
+/// Per-kernel measurements.
+pub struct KernelRow {
+    pub kernel: Kernel,
+    pub base_cycles: u64,
+    pub aps_cycles: u64,
+    pub aquas_cycles: u64,
+    /// Rocket + the Aquas-generated unit.
+    pub area: AreaReport,
+    pub aps_area: AreaReport,
+    /// Engine cycles per invocation (diagnostics).
+    pub aquas_engine: u64,
+    pub aps_engine: u64,
+}
+
+impl KernelRow {
+    pub fn aps_speedup(&self) -> f64 {
+        self.base_cycles as f64 / self.aps_cycles as f64
+    }
+
+    pub fn aquas_speedup(&self) -> f64 {
+        self.base_cycles as f64 / self.aquas_cycles as f64
+    }
+}
+
+/// Whole-table result.
+pub struct Table2 {
+    pub pqc_rows: Vec<KernelRow>,
+    pub pcp_rows: Vec<KernelRow>,
+    pub pqc_e2e: E2eRow,
+    pub pcp_e2e: E2eRow,
+}
+
+/// End-to-end measurements.
+pub struct E2eRow {
+    pub name: &'static str,
+    pub base_cycles: u64,
+    pub aps_cycles: u64,
+    pub aquas_cycles: u64,
+    pub area: AreaReport,
+    pub aps_area: AreaReport,
+}
+
+impl E2eRow {
+    pub fn aps_speedup(&self) -> f64 {
+        self.base_cycles as f64 / self.aps_cycles as f64
+    }
+
+    pub fn aquas_speedup(&self) -> f64 {
+        self.base_cycles as f64 / self.aquas_cycles as f64
+    }
+}
+
+/// Measure one kernel under all three designs.
+pub fn measure(k: &Kernel) -> KernelRow {
+    let area_model = AreaModel::default();
+    let base_model = RocketModel::new(CoreConfig::default());
+
+    // Base: the plain software on the scalar core.
+    let mut mem = Memory::for_func(&k.software);
+    (k.init)(&k.software, &mut mem);
+    let base = base_model.simulate(&k.software, &[], &mut mem).expect("base sim");
+
+    // Synthesize the ISAX under both flows.
+    let smart = synthesize(&k.isax.func, &k.itfcs, &k.synth_opts).expect("aquas synth");
+    let naive_r = naive::synthesize_naive(&k.isax.func, &k.itfcs).expect("naive synth");
+    let smart_desc = hwgen::generate(&smart, &k.itfcs);
+    let naive_desc = hwgen::generate(&naive_r, &k.itfcs);
+    let smart_engine = IsaxEngine::from_synthesis(&smart, &smart_desc, &k.itfcs);
+    let naive_engine = IsaxEngine::from_synthesis_naive(&naive_r, &naive_desc, &k.itfcs);
+
+    // Offload via the compiler, then re-time the lowered program.
+    let lowered = compile(&k.software, &[k.isax.clone()], &CompileOptions::default())
+        .expect("compile")
+        .func;
+    let mut mem2 = Memory::for_func(&lowered);
+    (k.init)(&lowered, &mut mem2);
+    let aquas_model = RocketModel::new(CoreConfig::default())
+        .with_isax(&k.isax.name, smart_engine.cycles_per_invocation());
+    let aquas = aquas_model.simulate(&lowered, &[], &mut mem2).expect("aquas sim");
+
+    let mut mem3 = Memory::for_func(&lowered);
+    (k.init)(&lowered, &mut mem3);
+    let aps_model = RocketModel::new(CoreConfig::default())
+        .with_isax(&k.isax.name, naive_engine.cycles_per_invocation());
+    let aps = aps_model.simulate(&lowered, &[], &mut mem3).expect("aps sim");
+
+    KernelRow {
+        base_cycles: base.cycles,
+        aps_cycles: aps.cycles,
+        aquas_cycles: aquas.cycles,
+        area: area_model.rocket_with_isaxes(&[&smart_desc]),
+        aps_area: area_model.rocket_with_isaxes(&[&naive_desc]),
+        aquas_engine: smart_engine.cycles_per_invocation(),
+        aps_engine: naive_engine.cycles_per_invocation(),
+        kernel: clone_kernel(k),
+    }
+}
+
+// Kernel holds fn pointers + IR, all cloneable by hand.
+fn clone_kernel(k: &Kernel) -> Kernel {
+    Kernel {
+        name: k.name,
+        software: k.software.clone(),
+        variants: k.variants.clone(),
+        isax: k.isax.clone(),
+        init: k.init,
+        outputs: k.outputs.clone(),
+        vector_profile: k.vector_profile,
+        synth_opts: k.synth_opts.clone(),
+        itfcs: k.itfcs.clone(),
+    }
+}
+
+/// Measure a list of kernels.
+pub fn run_kernels(ks: Vec<Kernel>) -> Vec<KernelRow> {
+    ks.iter().map(measure).collect()
+}
+
+fn measure_e2e(
+    name: &'static str,
+    software: &crate::ir::Func,
+    init: fn(&crate::ir::Func, &mut Memory),
+    kernels: &[Kernel],
+) -> E2eRow {
+    let area_model = AreaModel::default();
+    let base_model = RocketModel::new(CoreConfig::default());
+    let mut mem = Memory::for_func(software);
+    init(software, &mut mem);
+    let base = base_model.simulate(software, &[], &mut mem).expect("base e2e");
+
+    let isaxes: Vec<_> = kernels.iter().map(|k| k.isax.clone()).collect();
+    let lowered = compile(software, &isaxes, &CompileOptions::default()).expect("compile e2e").func;
+
+    let mut aquas_model = RocketModel::new(CoreConfig::default());
+    let mut aps_model = RocketModel::new(CoreConfig::default());
+    let mut smart_descs = Vec::new();
+    let mut naive_descs = Vec::new();
+    for k in kernels {
+        let smart = synthesize(&k.isax.func, &k.itfcs, &k.synth_opts).expect("synth");
+        let nai = naive::synthesize_naive(&k.isax.func, &k.itfcs).expect("naive");
+        let sd = hwgen::generate(&smart, &k.itfcs);
+        let nd = hwgen::generate(&nai, &k.itfcs);
+        let se = IsaxEngine::from_synthesis(&smart, &sd, &k.itfcs);
+        let ne = IsaxEngine::from_synthesis_naive(&nai, &nd, &k.itfcs);
+        aquas_model = aquas_model.with_isax(&k.isax.name, se.cycles_per_invocation());
+        aps_model = aps_model.with_isax(&k.isax.name, ne.cycles_per_invocation());
+        smart_descs.push(sd);
+        naive_descs.push(nd);
+    }
+    let mut m2 = Memory::for_func(&lowered);
+    init(&lowered, &mut m2);
+    let aquas = aquas_model.simulate(&lowered, &[], &mut m2).expect("aquas e2e");
+    let mut m3 = Memory::for_func(&lowered);
+    init(&lowered, &mut m3);
+    let aps = aps_model.simulate(&lowered, &[], &mut m3).expect("aps e2e");
+
+    E2eRow {
+        name,
+        base_cycles: base.cycles,
+        aps_cycles: aps.cycles,
+        aquas_cycles: aquas.cycles,
+        area: area_model.rocket_with_isaxes(&smart_descs.iter().collect::<Vec<_>>()),
+        aps_area: area_model.rocket_with_isaxes(&naive_descs.iter().collect::<Vec<_>>()),
+    }
+}
+
+/// Run the full Table 2.
+pub fn run() -> Table2 {
+    let pqc_kernels = pqc::kernels();
+    let pcp_kernels = pcp::kernels();
+    let pqc_rows = run_kernels(pqc::kernels());
+    let pcp_rows = run_kernels(pcp::kernels());
+    let pqc_e2e = measure_e2e(
+        "PQC end-to-end",
+        &pqc::end_to_end_software(),
+        pqc::init_end_to_end,
+        &pqc_kernels,
+    );
+    let pcp_e2e = measure_e2e(
+        "PCP end-to-end",
+        &pcp::end_to_end_software(),
+        pcp::init_end_to_end,
+        &pcp_kernels,
+    );
+    Table2 { pqc_rows, pcp_rows, pqc_e2e, pcp_e2e }
+}
+
+/// Format as the paper's table.
+pub fn report() -> Report {
+    let t = run();
+    let mut r = Report::new(
+        "Table 2 — PQC + PCP cycle counts / speedups / overheads (Base | APS-like | Aquas)",
+        vec![
+            "case", "base cyc", "aps cyc", "aquas cyc", "aps x", "aquas x", "aps clk",
+            "aquas clk", "aps area", "aquas area",
+        ],
+    );
+    let push = |name: String,
+                    base: u64,
+                    aps: u64,
+                    aquas: u64,
+                    aps_area: &AreaReport,
+                    area: &AreaReport,
+                    r: &mut Report| {
+        r.row(vec![
+            name.clone(),
+            base.to_string(),
+            aps.to_string(),
+            aquas.to_string(),
+            format!("{:.2}x", base as f64 / aps as f64),
+            format!("{:.2}x", base as f64 / aquas as f64),
+            format!("{:+.1}%", aps_area.period_delta_pct()),
+            format!("{:+.1}%", area.period_delta_pct()),
+            format!("+{:.1}%", aps_area.area_overhead_pct()),
+            format!("+{:.1}%", area.area_overhead_pct()),
+        ]);
+        r.metric(&format!("{name}_aquas_speedup"), base as f64 / aquas as f64);
+        r.metric(&format!("{name}_aps_speedup"), base as f64 / aps as f64);
+        r.metric(&format!("{name}_area_pct"), area.area_overhead_pct());
+    };
+    for row in t.pqc_rows.iter().chain(&t.pcp_rows) {
+        push(
+            row.kernel.name.to_string(),
+            row.base_cycles,
+            row.aps_cycles,
+            row.aquas_cycles,
+            &row.aps_area,
+            &row.area,
+            &mut r,
+        );
+    }
+    for e in [&t.pqc_e2e, &t.pcp_e2e] {
+        push(
+            e.name.to_string(),
+            e.base_cycles,
+            e.aps_cycles,
+            e.aquas_cycles,
+            &e.aps_area,
+            &e.area,
+            &mut r,
+        );
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aquas_beats_base_on_every_kernel() {
+        let t = run();
+        for row in t.pqc_rows.iter().chain(&t.pcp_rows) {
+            assert!(
+                row.aquas_speedup() > 1.0,
+                "{}: aquas {} !< base {}",
+                row.kernel.name,
+                row.aquas_cycles,
+                row.base_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn aquas_beats_aps_everywhere() {
+        let t = run();
+        for row in t.pqc_rows.iter().chain(&t.pcp_rows) {
+            assert!(
+                row.aquas_cycles < row.aps_cycles,
+                "{}: aquas {} !< aps {}",
+                row.kernel.name,
+                row.aquas_cycles,
+                row.aps_cycles
+            );
+        }
+        assert!(t.pqc_e2e.aquas_cycles < t.pqc_e2e.aps_cycles);
+        assert!(t.pcp_e2e.aquas_cycles < t.pcp_e2e.aps_cycles);
+    }
+
+    #[test]
+    fn e2e_speedups_have_paper_shape() {
+        // Paper: Aquas 1.42×/1.96× on e2e; APS < 1× on both e2e cases.
+        let t = run();
+        assert!(t.pqc_e2e.aquas_speedup() > 1.1, "pqc {}", t.pqc_e2e.aquas_speedup());
+        assert!(t.pcp_e2e.aquas_speedup() > 1.1, "pcp {}", t.pcp_e2e.aquas_speedup());
+    }
+
+    #[test]
+    fn aps_shows_paper_slowdowns() {
+        // Paper Table 2: the APS-like flow *loses to the base core* on
+        // mgf2mm (0.21×), vfsmax (0.79×) and vmadot (0.63×) — the blind-
+        // elision / narrow-port failure mode.
+        let t = run();
+        for name in ["mgf2mm", "vfsmax"] {
+            let row = t
+                .pqc_rows
+                .iter()
+                .chain(&t.pcp_rows)
+                .find(|r| r.kernel.name == name)
+                .unwrap();
+            assert!(
+                row.aps_speedup() < 1.0,
+                "{name}: aps speedup {:.2} should be < 1",
+                row.aps_speedup()
+            );
+        }
+        // vmadot lands near break-even in our model (paper: 0.63×; see
+        // EXPERIMENTS.md for the delta discussion).
+        let vmadot =
+            t.pcp_rows.iter().find(|r| r.kernel.name == "vmadot").unwrap();
+        assert!(vmadot.aps_speedup() < 1.5, "vmadot aps {:.2}", vmadot.aps_speedup());
+        // And the PQC end-to-end APS result is a slowdown (paper: 0.48×;
+        // our model: ~0.5×). PCP e2e lands near break-even (paper 0.82×).
+        assert!(t.pqc_e2e.aps_speedup() < 1.0, "pqc e2e {:.2}", t.pqc_e2e.aps_speedup());
+        assert!(t.pcp_e2e.aps_speedup() < 1.3, "pcp e2e {:.2}", t.pcp_e2e.aps_speedup());
+    }
+
+    #[test]
+    fn area_overheads_modest_and_clock_clean() {
+        let t = run();
+        for row in t.pqc_rows.iter().chain(&t.pcp_rows) {
+            let pct = row.area.area_overhead_pct();
+            assert!(pct > 0.0 && pct < 25.0, "{}: {pct}%", row.kernel.name);
+            assert_eq!(row.area.period_delta_pct(), 0.0, "{}", row.kernel.name);
+        }
+        assert!(t.pcp_e2e.area.area_overhead_pct() < 35.0);
+    }
+}

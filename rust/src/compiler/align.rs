@@ -1,0 +1,286 @@
+//! §5.1 — semantic alignment.
+//!
+//! ISAX hardware descriptions carry microarchitectural detail (scratchpad
+//! staging, register-file plumbing) that application code never shows. To
+//! make the two comparable, the ISAX side is normalized down to the
+//! software level:
+//!
+//! - `read_irf x<n>` → the n-th scalar parameter (explicit register
+//!   references become data dependencies);
+//! - `transfer`s disappear and `read_smem`/`write_smem` on staged
+//!   scratchpads retarget to the global buffers they staged — only
+//!   software-visible control flow and memory effects remain.
+//!
+//! The software side is canonicalized the way MLIR's canonicalizer would:
+//! dead code and dead stores are removed (this also neutralizes the
+//! "redundant statements" robustness attack of §6.2).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::error::{Error, Result};
+use crate::ir::func::{BufferId, BufferKind, Func, OpRef, Region, Value};
+use crate::ir::ops::OpKind;
+use crate::ir::types::Type;
+
+/// Normalize an ISAX functional description to the software level.
+pub fn align_isax(isax: &Func) -> Result<Func> {
+    let mut out = isax.clone();
+
+    // Map each scratchpad to the global it stages (single zero-offset
+    // top-level transfer), then erase the transfer.
+    let defs = out.def_map();
+    let mut stage_of: HashMap<BufferId, BufferId> = HashMap::new();
+    let mut kill: Vec<OpRef> = Vec::new();
+    for &opref in &out.entry.ops {
+        let op = out.op(opref);
+        if let OpKind::Transfer { dst, src, .. } = op.kind {
+            let zero = |v: Value| {
+                defs[v.0 as usize]
+                    .map(|d| matches!(out.op(d).kind, OpKind::ConstI(0)))
+                    .unwrap_or(false)
+            };
+            if !(zero(op.operands[0]) && zero(op.operands[1])) {
+                return Err(Error::Compiler(
+                    "align: non-zero-offset transfer staging is not supported".into(),
+                ));
+            }
+            let dst_smem = matches!(out.buffer(dst).kind, BufferKind::Scratchpad { .. });
+            let src_smem = matches!(out.buffer(src).kind, BufferKind::Scratchpad { .. });
+            match (dst_smem, src_smem) {
+                (true, false) => {
+                    stage_of.insert(dst, src);
+                }
+                (false, true) => {
+                    stage_of.insert(src, dst);
+                }
+                _ => {}
+            }
+            kill.push(opref);
+        }
+    }
+    out.entry.ops.retain(|o| !kill.contains(o));
+
+    // Retarget scratchpad accesses to their staged globals; fetch → load.
+    for i in 0..out.num_ops() {
+        let opref = OpRef(i as u32);
+        let op = out.op_mut(opref);
+        match op.kind.clone() {
+            OpKind::ReadSmem(b) => {
+                let g = *stage_of.get(&b).ok_or_else(|| {
+                    Error::Compiler(format!("align: scratchpad {} never staged", b.0))
+                })?;
+                op.kind = OpKind::Load(g);
+            }
+            OpKind::WriteSmem(b) => {
+                if let Some(&g) = stage_of.get(&b) {
+                    op.kind = OpKind::Store(g);
+                }
+                // Un-staged written scratchpads are ISAX-private temps; they
+                // stay (the software equivalent is a local array).
+            }
+            OpKind::Fetch(b) => op.kind = OpKind::Load(b),
+            OpKind::ReadIrf(_) | OpKind::WriteIrf(_) => {
+                return Err(Error::Compiler(
+                    "align: register plumbing should be converted by the builder \
+                     (model rs1/rs2 as function params)"
+                        .into(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+/// Canonicalize application code: dead-code + dead-store elimination.
+pub fn canonicalize_software(func: &Func) -> Func {
+    let mut out = func.clone();
+    dse(&mut out);
+    dce(&mut out);
+    out
+}
+
+/// Dead-store elimination: a store overwritten by a later store to the
+/// same buffer+index class within the same region, with no intervening
+/// read of that buffer, is dead. (Conservative same-value-id check.)
+fn dse(func: &mut Func) {
+    let mut kill: Vec<OpRef> = Vec::new();
+    collect_dead_stores(func, &func.entry.clone(), &mut kill);
+    if kill.is_empty() {
+        return;
+    }
+    retain_ops(func, &kill);
+}
+
+fn collect_dead_stores(func: &Func, region: &Region, kill: &mut Vec<OpRef>) {
+    // last_store[(buf, index value)] -> opref of previous store
+    let mut last: HashMap<(u32, Value), OpRef> = HashMap::new();
+    for &opref in &region.ops {
+        let op = func.op(opref);
+        match &op.kind {
+            OpKind::Store(b) | OpKind::WriteSmem(b) => {
+                let key = (b.0, op.operands[0]);
+                if let Some(prev) = last.insert(key, opref) {
+                    kill.push(prev);
+                }
+            }
+            OpKind::Load(b) | OpKind::ReadSmem(b) | OpKind::Fetch(b) => {
+                // Any read kills tracking for that buffer.
+                last.retain(|(bb, _), _| *bb != b.0);
+            }
+            OpKind::For | OpKind::If => {
+                // Control flow may read anything: reset, then recurse.
+                last.clear();
+                for r in &op.regions {
+                    collect_dead_stores(func, r, kill);
+                }
+            }
+            OpKind::Transfer { .. } | OpKind::Copy { .. } | OpKind::CopyIssue { .. } => {
+                last.clear();
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Dead-code elimination: drop pure ops whose results are never used.
+fn dce(func: &mut Func) {
+    loop {
+        let mut used: HashSet<Value> = HashSet::new();
+        func.walk(|_, op| {
+            for &v in &op.operands {
+                used.insert(v);
+            }
+        });
+        let mut kill: Vec<OpRef> = Vec::new();
+        func.walk(|opref, op| {
+            let pure = !op.kind.is_anchor() && !op.kind.touches_memory();
+            let read_only_mem = matches!(
+                op.kind,
+                OpKind::Load(_) | OpKind::ReadSmem(_) | OpKind::Fetch(_) | OpKind::LoadItfc { .. }
+            );
+            if (pure || read_only_mem)
+                && !op.results.is_empty()
+                && op.results.iter().all(|r| !used.contains(r))
+            {
+                kill.push(opref);
+            }
+        });
+        if kill.is_empty() {
+            break;
+        }
+        retain_ops(func, &kill);
+    }
+}
+
+/// Remove the given oprefs from every region.
+fn retain_ops(func: &mut Func, kill: &[OpRef]) {
+    func.entry.ops.retain(|o| !kill.contains(o));
+    for i in 0..func.num_ops() {
+        let opref = OpRef(i as u32);
+        let op = func.op_mut(opref);
+        for region in op.regions.iter_mut() {
+            region.ops.retain(|o| !kill.contains(o));
+        }
+    }
+}
+
+/// A scalar ISAX parameter helper for descriptions that would use
+/// `read_irf`: model rs1/rs2 as function params of Int type.
+pub fn param_like_irf(builder: &mut crate::ir::FuncBuilder) -> Value {
+    builder.param(Type::Int)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    #[test]
+    fn align_retargets_staged_scratchpad() {
+        let mut b = FuncBuilder::new("isax");
+        let g = b.global("h", DType::I32, 64, CacheHint::Cold);
+        let o = b.global("s", DType::I32, 8, CacheHint::Warm);
+        let sp = b.scratchpad("sp", DType::I32, 64, 1);
+        let zero = b.const_i(0);
+        b.transfer(sp, zero, g, zero, 256);
+        b.for_range(0, 8, 1, |b, iv| {
+            let v = b.read_smem(sp, iv);
+            b.store(o, iv, v);
+        });
+        let f = b.finish(&[]);
+        let a = align_isax(&f).unwrap();
+        assert_eq!(a.count_ops(|k| matches!(k, OpKind::Transfer { .. })), 0);
+        assert_eq!(a.count_ops(|k| matches!(k, OpKind::ReadSmem(_))), 0);
+        assert_eq!(a.count_ops(|k| matches!(k, OpKind::Load(b) if *b == BufferId(0))), 1);
+    }
+
+    #[test]
+    fn dse_removes_overwritten_store() {
+        let mut b = FuncBuilder::new("sw");
+        let g = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let a = b.const_i(1);
+        let c = b.const_i(2);
+        b.store(g, zero, a); // dead: overwritten below, no read between
+        b.store(g, zero, c);
+        let f = b.finish(&[]);
+        let canon = canonicalize_software(&f);
+        assert_eq!(canon.count_ops(|k| matches!(k, OpKind::Store(_))), 1);
+    }
+
+    #[test]
+    fn dse_keeps_store_with_intervening_read() {
+        let mut b = FuncBuilder::new("sw");
+        let g = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let a = b.const_i(1);
+        b.store(g, zero, a);
+        let v = b.load(g, zero);
+        b.store(g, zero, v);
+        let f = b.finish(&[]);
+        let canon = canonicalize_software(&f);
+        assert_eq!(canon.count_ops(|k| matches!(k, OpKind::Store(_))), 2);
+    }
+
+    #[test]
+    fn dce_removes_unused_chains() {
+        let mut b = FuncBuilder::new("sw");
+        let g = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let v = b.load(g, zero);
+        let two = b.const_i(2);
+        let dead = b.mul(v, two); // never used
+        let _ = dead;
+        b.store(g, zero, v);
+        let f = b.finish(&[]);
+        let canon = canonicalize_software(&f);
+        assert_eq!(canon.count_ops(|k| matches!(k, OpKind::Mul)), 0);
+    }
+
+    #[test]
+    fn dce_preserves_semantics() {
+        use crate::ir::interp::{run as interp, Memory};
+        let mut b = FuncBuilder::new("sw");
+        let g = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        b.for_range(0, 8, 1, |b, iv| {
+            let v = b.load(g, iv);
+            let one = b.const_i(1);
+            let w = b.add(v, one);
+            let dead = b.mul(w, w);
+            let _ = dead;
+            b.store(g, iv, w);
+        });
+        let f = b.finish(&[]);
+        let canon = canonicalize_software(&f);
+        let mut m1 = Memory::for_func(&f);
+        m1.write_i32(BufferId(0), &[5; 8]);
+        interp(&f, &[], &mut m1).unwrap();
+        let mut m2 = Memory::for_func(&canon);
+        m2.write_i32(BufferId(0), &[5; 8]);
+        interp(&canon, &[], &mut m2).unwrap();
+        assert_eq!(m1.read_i32(BufferId(0)), m2.read_i32(BufferId(0)));
+    }
+}

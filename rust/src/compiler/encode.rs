@@ -1,0 +1,353 @@
+//! §5.2 — encoding IR programs into the e-graph.
+//!
+//! Each operation maps to an e-node whose children are the e-classes of
+//! its operands. Block structure is preserved by *anchors*: side-effecting
+//! ops, terminators and structured control flow are collected — in exact
+//! program order — as the children of a `tuple` e-node, while pure
+//! dataflow hangs beneath the anchors as order-independent subtrees.
+//!
+//! Symbol canonicalization is what makes cross-program matching work:
+//! - induction variables encode by loop depth (`iv:0`, `iv:1`, …);
+//! - loop-carried values by depth + position (`carry:0:0`);
+//! - function parameters positionally (`param:0`);
+//! - buffers by order of first memory access (`m0`, `m1`, …), so an ISAX
+//!   reading `H` then `e` aligns with software reading `mat` then `vec`.
+//!
+//! Two structurally identical fragments therefore hashcons to the *same
+//! e-class*, and fragments that become equal under rewriting are unioned
+//! by saturation — the matcher then just compares class ids.
+
+use std::collections::HashMap;
+
+use crate::egraph::{ClassId, EGraph};
+use crate::ir::func::{BufferId, Func, OpRef, Region, Value};
+use crate::ir::ops::{CmpPred, OpKind};
+
+/// Artifacts of encoding one function.
+#[derive(Debug, Clone, Default)]
+pub struct EncodeMap {
+    /// Class of each encoded op that produces one (anchors + dataflow).
+    pub op_class: HashMap<OpRef, ClassId>,
+    /// Class of each SSA value.
+    pub value_class: HashMap<Value, ClassId>,
+    /// Root class of the entry region's tuple.
+    pub root: Option<ClassId>,
+    /// Buffer slot numbering used (buffer -> m<slot>).
+    pub buf_slot: HashMap<BufferId, usize>,
+    /// Classes of every `for` op, with nesting depth.
+    pub loops: Vec<(OpRef, ClassId, usize)>,
+}
+
+/// Encode a function into `g`. Repeated calls share symbols and classes.
+pub fn encode_func(g: &mut EGraph, func: &Func) -> EncodeMap {
+    let mut ctx = Ctx {
+        g,
+        func,
+        map: EncodeMap::default(),
+        depth: 0,
+    };
+    for (i, &p) in func.params.iter().enumerate() {
+        let c = ctx.g.add_named(&format!("param:{i}"), vec![]);
+        ctx.map.value_class.insert(p, c);
+    }
+    // Buffer slots are scoped per *top-level anchor*: each top-level loop
+    // numbers the buffers it touches from zero. This lets one ISAX match
+    // any loop of a multi-kernel program regardless of how many buffers
+    // earlier kernels used. (Dataflow classes still flow across loops via
+    // value_class; only the load/store symbol naming is scoped.)
+    let mut anchors = Vec::new();
+    let entry = func.entry.clone();
+    for &opref in &entry.ops {
+        ctx.map.buf_slot.clear();
+        if let Some(c) = ctx.op(opref) {
+            if func.op(opref).kind.is_anchor() {
+                anchors.push(c);
+            }
+        }
+    }
+    let root = ctx.g.add_named("tuple", anchors);
+    let mut map = ctx.map;
+    map.root = Some(root);
+    map
+}
+
+struct Ctx<'a> {
+    g: &'a mut EGraph,
+    func: &'a Func,
+    map: EncodeMap,
+    depth: usize,
+}
+
+impl<'a> Ctx<'a> {
+    fn slot(&mut self, b: BufferId) -> usize {
+        let next = self.map.buf_slot.len();
+        *self.map.buf_slot.entry(b).or_insert(next)
+    }
+
+    fn value(&self, v: Value) -> ClassId {
+        *self
+            .map
+            .value_class
+            .get(&v)
+            .unwrap_or_else(|| panic!("value {v} encoded out of order"))
+    }
+
+    /// Encode a region; returns its tuple class (anchors in order).
+    fn region(&mut self, region: &Region) -> ClassId {
+        let mut anchors = Vec::new();
+        for &opref in &region.ops {
+            if let Some(c) = self.op(opref) {
+                let op = self.func.op(opref);
+                if op.kind.is_anchor() {
+                    anchors.push(c);
+                }
+            }
+        }
+        self.g.add_named("tuple", anchors)
+    }
+
+    /// Encode one op; returns its class if it has a representation.
+    fn op(&mut self, opref: OpRef) -> Option<ClassId> {
+        let op = self.func.op(opref).clone();
+        let class = match &op.kind {
+            OpKind::ConstI(v) => self.g.add_named(&format!("const:{v}"), vec![]),
+            OpKind::ConstF(v) => self.g.add_named(&format!("constf:{v}"), vec![]),
+            OpKind::Add
+            | OpKind::Sub
+            | OpKind::Mul
+            | OpKind::Div
+            | OpKind::Rem
+            | OpKind::Shl
+            | OpKind::Shr
+            | OpKind::And
+            | OpKind::Or
+            | OpKind::Xor
+            | OpKind::Min
+            | OpKind::Max
+            | OpKind::Neg
+            | OpKind::Select
+            | OpKind::Sqrt
+            | OpKind::ToFloat
+            | OpKind::ToInt => {
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                self.g.add_named(op.kind.mnemonic(), kids)
+            }
+            OpKind::Powi(e) => {
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                self.g.add_named(&format!("powi:{e}"), kids)
+            }
+            OpKind::Cmp(pred) => {
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                let name = match pred {
+                    CmpPred::Eq => "cmp:eq",
+                    CmpPred::Ne => "cmp:ne",
+                    CmpPred::Lt => "cmp:lt",
+                    CmpPred::Le => "cmp:le",
+                    CmpPred::Gt => "cmp:gt",
+                    CmpPred::Ge => "cmp:ge",
+                };
+                self.g.add_named(name, kids)
+            }
+            OpKind::Load(b) | OpKind::ReadSmem(b) | OpKind::Fetch(b) => {
+                let slot = self.slot(*b);
+                let idx = self.value(op.operands[0]);
+                self.g.add_named(&format!("load:m{slot}"), vec![idx])
+            }
+            OpKind::LoadItfc { buf, .. } => {
+                let slot = self.slot(*buf);
+                let idx = self.value(op.operands[0]);
+                self.g.add_named(&format!("load:m{slot}"), vec![idx])
+            }
+            OpKind::Store(b) | OpKind::WriteSmem(b) => {
+                let slot = self.slot(*b);
+                let idx = self.value(op.operands[0]);
+                let val = self.value(op.operands[1]);
+                self.g.add_named(&format!("store:m{slot}"), vec![idx, val])
+            }
+            OpKind::StoreItfc { buf, .. } => {
+                let slot = self.slot(*buf);
+                let idx = self.value(op.operands[0]);
+                let val = self.value(op.operands[1]);
+                self.g.add_named(&format!("store:m{slot}"), vec![idx, val])
+            }
+            OpKind::ReadIrf(r) => self.g.add_named(&format!("irf:{r}"), vec![]),
+            OpKind::WriteIrf(r) => {
+                let val = self.value(op.operands[0]);
+                self.g.add_named(&format!("wirf:{r}"), vec![val])
+            }
+            OpKind::Transfer { dst, src, size } => {
+                let ds = self.slot(*dst);
+                let ss = self.slot(*src);
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                self.g.add_named(&format!("transfer:m{ds}:m{ss}:{size}"), kids)
+            }
+            OpKind::Copy { .. } | OpKind::CopyIssue { .. } | OpKind::CopyWait { .. } => {
+                // Post-binding ops never reach the compiler path.
+                self.g.add_named("hw-op", vec![])
+            }
+            OpKind::For => {
+                // children: [lb, ub, step, init..., body-tuple]
+                let mut kids: Vec<ClassId> =
+                    op.operands.iter().map(|&v| self.value(v)).collect();
+                let region = &op.regions[0];
+                let iv = region.params[0];
+                let ivc = self.g.add_named(&format!("iv:{}", self.depth), vec![]);
+                self.map.value_class.insert(iv, ivc);
+                for (i, &c) in region.params[1..].iter().enumerate() {
+                    let cc = self.g.add_named(&format!("carry:{}:{i}", self.depth), vec![]);
+                    self.map.value_class.insert(c, cc);
+                }
+                self.depth += 1;
+                let body = self.region(region);
+                self.depth -= 1;
+                kids.push(body);
+                let c = self.g.add_named("for", kids);
+                // Loop results: represent as projections of the loop.
+                for (i, &r) in op.results.iter().enumerate() {
+                    let proj = self.g.add_named(&format!("for-out:{i}"), vec![c]);
+                    self.map.value_class.insert(r, proj);
+                }
+                self.map.loops.push((opref, c, self.depth));
+                c
+            }
+            OpKind::If => {
+                let cond = self.value(op.operands[0]);
+                let then_t = self.region(&op.regions[0]);
+                let else_t = self.region(&op.regions[1]);
+                let c = self.g.add_named("if", vec![cond, then_t, else_t]);
+                for (i, &r) in op.results.iter().enumerate() {
+                    let proj = self.g.add_named(&format!("if-out:{i}"), vec![c]);
+                    self.map.value_class.insert(r, proj);
+                }
+                c
+            }
+            OpKind::Yield => {
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                self.g.add_named("yield", kids)
+            }
+            OpKind::Return => {
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                self.g.add_named("return", kids)
+            }
+            OpKind::Intrinsic(name) => {
+                let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
+                self.g.add_named(&format!("isax:{name}"), kids)
+            }
+        };
+        for &r in &op.results {
+            self.map.value_class.entry(r).or_insert(class);
+        }
+        self.map.op_class.insert(opref, class);
+        Some(class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    fn simple_loop(name: &str, mul_by: i64) -> Func {
+        let mut b = FuncBuilder::new(name);
+        let x = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        let y = b.global("y", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let v = b.load(x, iv);
+            let k = b.const_i(mul_by);
+            let w = b.mul(v, k);
+            b.store(y, iv, w);
+        });
+        b.finish(&[])
+    }
+
+    #[test]
+    fn identical_programs_share_classes() {
+        let f1 = simple_loop("a", 3);
+        let f2 = simple_loop("b", 3);
+        let mut g = EGraph::new();
+        let m1 = encode_func(&mut g, &f1);
+        let m2 = encode_func(&mut g, &f2);
+        // Hashcons: structurally identical functions collapse entirely.
+        assert_eq!(g.find(m1.root.unwrap()), g.find(m2.root.unwrap()));
+    }
+
+    #[test]
+    fn different_constants_differ() {
+        let f1 = simple_loop("a", 3);
+        let f2 = simple_loop("b", 5);
+        let mut g = EGraph::new();
+        let m1 = encode_func(&mut g, &f1);
+        let m2 = encode_func(&mut g, &f2);
+        assert_ne!(g.find(m1.root.unwrap()), g.find(m2.root.unwrap()));
+    }
+
+    #[test]
+    fn anchors_keep_program_order() {
+        // store A then store B != store B then store A
+        let build = |flip: bool| {
+            let mut b = FuncBuilder::new("o");
+            let x = b.global("x", DType::I32, 4, CacheHint::Unknown);
+            let i0 = b.const_i(0);
+            let i1 = b.const_i(1);
+            let va = b.const_i(10);
+            let vb = b.const_i(20);
+            if flip {
+                b.store(x, i1, vb);
+                b.store(x, i0, va);
+            } else {
+                b.store(x, i0, va);
+                b.store(x, i1, vb);
+            }
+            b.finish(&[])
+        };
+        let mut g = EGraph::new();
+        let m1 = encode_func(&mut g, &build(false));
+        let m2 = encode_func(&mut g, &build(true));
+        assert_ne!(g.find(m1.root.unwrap()), g.find(m2.root.unwrap()));
+    }
+
+    #[test]
+    fn buffer_slots_align_by_first_use() {
+        // Same structure, different buffer declaration order: slots are
+        // assigned by first *use*, so the programs still collapse.
+        let f1 = simple_loop("a", 3);
+        let f2 = {
+            let mut b = FuncBuilder::new("b");
+            let y = b.global("unrelated_name", DType::I32, 16, CacheHint::Cold);
+            let x = b.global("other", DType::I32, 16, CacheHint::Warm);
+            let _ = (x, y);
+            // use y first in the load position like f1 uses x
+            b.for_range(0, 16, 1, |b, iv| {
+                let v = b.load(y, iv);
+                let k = b.const_i(3);
+                let w = b.mul(v, k);
+                b.store(x, iv, w);
+            });
+            b.finish(&[])
+        };
+        let mut g = EGraph::new();
+        let m1 = encode_func(&mut g, &f1);
+        let m2 = encode_func(&mut g, &f2);
+        assert_eq!(g.find(m1.root.unwrap()), g.find(m2.root.unwrap()));
+    }
+
+    #[test]
+    fn loops_recorded_with_depth() {
+        let mut b = FuncBuilder::new("nest");
+        let x = b.global("x", DType::I32, 64, CacheHint::Unknown);
+        b.for_range(0, 4, 1, |b, i| {
+            b.for_range(0, 16, 1, |b, j| {
+                let v = b.load(x, j);
+                b.store(x, i, v);
+            });
+        });
+        let f = b.finish(&[]);
+        let mut g = EGraph::new();
+        let m = encode_func(&mut g, &f);
+        assert_eq!(m.loops.len(), 2);
+        let depths: Vec<usize> = m.loops.iter().map(|&(_, _, d)| d).collect();
+        assert!(depths.contains(&0) && depths.contains(&1));
+    }
+}

@@ -1,0 +1,561 @@
+//! §5.2/§5.3 — external rewrites: loop transformations as IR passes.
+//!
+//! External rewrites restructure control flow (tiling, unrolling,
+//! coalescing). They are hard to express as fixed e-graph rules — they
+//! need dependence/dominance reasoning — so, like the paper, we run them
+//! as ordinary IR passes on an extracted program variant and union the
+//! result back into the e-graph ([`crate::compiler::matcher`]).
+//!
+//! All passes take the *target loop* by [`OpRef`] and return a fresh
+//! transformed function (the input is never mutated — non-destructive
+//! accumulation is the whole point).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::ops::{Op, OpKind};
+use crate::synthesis::memprobe::static_trips;
+
+/// Which transformation to apply (with its factor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopPass {
+    /// Replicate the body `factor` times, multiplying the step.
+    Unroll(u64),
+    /// Split into an outer loop stepping `factor` and an inner 0..factor.
+    Tile(u64),
+    /// Collapse a perfect 2-deep nest into one loop (inverse of tile).
+    Coalesce,
+}
+
+impl std::fmt::Display for LoopPass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoopPass::Unroll(k) => write!(f, "unroll({k})"),
+            LoopPass::Tile(k) => write!(f, "tile({k})"),
+            LoopPass::Coalesce => write!(f, "coalesce"),
+        }
+    }
+}
+
+/// Apply `pass` to the loop at `target` in `func`.
+pub fn apply(func: &Func, target: OpRef, pass: LoopPass) -> Result<Func> {
+    let op = func.op(target);
+    if !matches!(op.kind, OpKind::For) {
+        return Err(Error::Compiler(format!("loop pass target {target:?} is not a for")));
+    }
+    let mut rb = Rebuilder::new(func);
+    let entry = func.entry.clone();
+    let mut out = Func::new(func.name.clone());
+    out.buffers = func.buffers.clone();
+    rb.out = out;
+    for &p in &func.params {
+        let ty = func.value_type(p);
+        let np = rb.out.new_value(ty);
+        rb.out.params.push(np);
+        rb.map.insert(p, np);
+    }
+    let new_entry = rb.rebuild_region(&entry, Some((target, pass)))?;
+    rb.out.entry = new_entry;
+    Ok(rb.out)
+}
+
+/// Recursive IR cloner with one loop interception.
+struct Rebuilder<'f> {
+    src: &'f Func,
+    out: Func,
+    map: HashMap<Value, Value>,
+}
+
+impl<'f> Rebuilder<'f> {
+    fn new(src: &'f Func) -> Self {
+        Self { src, out: Func::new(src.name.clone()), map: HashMap::new() }
+    }
+
+    fn v(&self, old: Value) -> Result<Value> {
+        self.map
+            .get(&old)
+            .copied()
+            .ok_or_else(|| Error::Compiler(format!("rebuild: unmapped value {old}")))
+    }
+
+    fn fresh_like(&mut self, old: Value) -> Value {
+        let ty = self.src.value_type(old);
+        let nv = self.out.new_value(ty);
+        self.map.insert(old, nv);
+        nv
+    }
+
+    /// Clone a region, transforming `intercept` if encountered.
+    fn rebuild_region(
+        &mut self,
+        region: &Region,
+        intercept: Option<(OpRef, LoopPass)>,
+    ) -> Result<Region> {
+        let mut out = Region::default();
+        for &p in &region.params {
+            out.params.push(self.fresh_like(p));
+        }
+        for &opref in &region.ops {
+            let refs = match intercept {
+                Some((target, pass)) if opref == target => self.transform_loop(opref, pass)?,
+                _ => self.clone_op(opref, intercept)?,
+            };
+            out.ops.extend(refs);
+        }
+        Ok(out)
+    }
+
+    fn clone_op(&mut self, opref: OpRef, intercept: Option<(OpRef, LoopPass)>) -> Result<Vec<OpRef>> {
+        let op = self.src.op(opref).clone();
+        let operands: Vec<Value> = op.operands.iter().map(|&v| self.v(v)).collect::<Result<_>>()?;
+        let mut regions = Vec::new();
+        for r in &op.regions {
+            regions.push(self.rebuild_region(r, intercept)?);
+        }
+        let results: Vec<Value> = op.results.iter().map(|&r| self.fresh_like(r)).collect();
+        let mut new_op = Op::new(op.kind.clone(), operands, results);
+        new_op.regions = regions;
+        Ok(vec![self.out.add_op(new_op)])
+    }
+
+    /// Emit the body of `loop_op`'s region with `iv` bound to `iv_val` and
+    /// carried params bound to `carried`; returns yielded values.
+    fn inline_body(
+        &mut self,
+        region: &Region,
+        iv_val: Value,
+        carried: &[Value],
+        into: &mut Vec<OpRef>,
+    ) -> Result<Vec<Value>> {
+        // Bind region params.
+        let saved: Vec<(Value, Option<Value>)> = region
+            .params
+            .iter()
+            .map(|&p| (p, self.map.get(&p).copied()))
+            .collect();
+        self.map.insert(region.params[0], iv_val);
+        for (&p, &c) in region.params[1..].iter().zip(carried) {
+            self.map.insert(p, c);
+        }
+        let mut yielded = Vec::new();
+        for &opref in &region.ops {
+            let op = self.src.op(opref).clone();
+            if matches!(op.kind, OpKind::Yield) {
+                yielded = op.operands.iter().map(|&v| self.v(v)).collect::<Result<_>>()?;
+                continue;
+            }
+            let refs = self.clone_op(opref, None)?;
+            into.extend(refs);
+        }
+        // Restore shadowed bindings.
+        for (p, old) in saved {
+            match old {
+                Some(v) => {
+                    self.map.insert(p, v);
+                }
+                None => {
+                    self.map.remove(&p);
+                }
+            }
+        }
+        Ok(yielded)
+    }
+
+    fn transform_loop(&mut self, opref: OpRef, pass: LoopPass) -> Result<Vec<OpRef>> {
+        match pass {
+            LoopPass::Unroll(f) => self.unroll(opref, f),
+            LoopPass::Tile(t) => self.tile(opref, t),
+            LoopPass::Coalesce => self.coalesce(opref),
+        }
+    }
+
+    fn loop_parts(&self, opref: OpRef) -> (Op, Region, i64, i64, i64) {
+        let op = self.src.op(opref).clone();
+        let region = op.regions[0].clone();
+        let cval = |v: Value| {
+            let defs = self.src.def_map();
+            defs[v.0 as usize]
+                .and_then(|d| match self.src.op(d).kind {
+                    OpKind::ConstI(c) => Some(c),
+                    _ => None,
+                })
+                .unwrap_or(i64::MIN)
+        };
+        let lb = cval(op.operands[0]);
+        let ub = cval(op.operands[1]);
+        let step = cval(op.operands[2]);
+        (op, region, lb, ub, step)
+    }
+
+    fn unroll(&mut self, opref: OpRef, f: u64) -> Result<Vec<OpRef>> {
+        let (op, region, lb, ub, step) = self.loop_parts(opref);
+        let trips = static_trips(self.src, opref)
+            .ok_or_else(|| Error::Compiler("unroll: non-static loop bounds".into()))?;
+        if f == 0 || trips % f != 0 || step == i64::MIN {
+            return Err(Error::Compiler(format!("unroll: factor {f} does not divide {trips}")));
+        }
+        let mut ops = Vec::new();
+        // New bounds: same lb/ub, step * f.
+        let lbv = self.push_const(lb, &mut ops);
+        let ubv = self.push_const(ub, &mut ops);
+        let stepv = self.push_const(step * f as i64, &mut ops);
+        let inits: Vec<Value> =
+            op.operands[3..].iter().map(|&v| self.v(v)).collect::<Result<_>>()?;
+
+        // Build the unrolled body region.
+        let mut body = Region::default();
+        let iv = self.out.new_value(crate::ir::types::Type::Int);
+        body.params.push(iv);
+        let mut carried: Vec<Value> = Vec::new();
+        for &init in &inits {
+            let ty = self.out.value_type(init);
+            let p = self.out.new_value(ty);
+            body.params.push(p);
+            carried.push(p);
+        }
+        let mut body_ops: Vec<OpRef> = Vec::new();
+        let mut cur: Vec<Value> = carried.clone();
+        for k in 0..f {
+            let iv_k = if k == 0 {
+                iv
+            } else {
+                let c = self.push_const(step * k as i64, &mut body_ops);
+                let nv = self.out.new_value(crate::ir::types::Type::Int);
+                let add = self.out.add_op(Op::new(OpKind::Add, vec![iv, c], vec![nv]));
+                body_ops.push(add);
+                nv
+            };
+            cur = self.inline_body(&region, iv_k, &cur, &mut body_ops)?;
+        }
+        let yld = self.out.add_op(Op::new(OpKind::Yield, cur, vec![]));
+        body_ops.push(yld);
+        body.ops = body_ops;
+
+        let results: Vec<Value> = op.results.iter().map(|&r| self.fresh_like(r)).collect();
+        let mut operands = vec![lbv, ubv, stepv];
+        operands.extend(&inits);
+        let mut for_op = Op::new(OpKind::For, operands, results);
+        for_op.regions.push(body);
+        ops.push(self.out.add_op(for_op));
+        Ok(ops)
+    }
+
+    fn tile(&mut self, opref: OpRef, t: u64) -> Result<Vec<OpRef>> {
+        let (op, region, lb, ub, step) = self.loop_parts(opref);
+        let trips = static_trips(self.src, opref)
+            .ok_or_else(|| Error::Compiler("tile: non-static loop bounds".into()))?;
+        if t == 0 || trips % t != 0 || step == i64::MIN {
+            return Err(Error::Compiler(format!("tile: factor {t} does not divide {trips}")));
+        }
+        let mut ops = Vec::new();
+        let lbv = self.push_const(lb, &mut ops);
+        let ubv = self.push_const(ub, &mut ops);
+        let ostepv = self.push_const(step * t as i64, &mut ops);
+        let inits: Vec<Value> =
+            op.operands[3..].iter().map(|&v| self.v(v)).collect::<Result<_>>()?;
+
+        // outer region
+        let mut outer = Region::default();
+        let ii = self.out.new_value(crate::ir::types::Type::Int);
+        outer.params.push(ii);
+        let mut outer_carried = Vec::new();
+        for &init in &inits {
+            let ty = self.out.value_type(init);
+            let p = self.out.new_value(ty);
+            outer.params.push(p);
+            outer_carried.push(p);
+        }
+        let mut outer_ops: Vec<OpRef> = Vec::new();
+        let ilb = self.push_const(0, &mut outer_ops);
+        let iub = self.push_const(t as i64, &mut outer_ops);
+        let istep = self.push_const(1, &mut outer_ops);
+
+        // inner region
+        let mut inner = Region::default();
+        let i2 = self.out.new_value(crate::ir::types::Type::Int);
+        inner.params.push(i2);
+        let mut inner_carried = Vec::new();
+        for &init in &inits {
+            let ty = self.out.value_type(init);
+            let p = self.out.new_value(ty);
+            inner.params.push(p);
+            inner_carried.push(p);
+        }
+        let mut inner_ops: Vec<OpRef> = Vec::new();
+        // iv = ii + i2 * step
+        let iv_val = if step == 1 {
+            let nv = self.out.new_value(crate::ir::types::Type::Int);
+            let add = self.out.add_op(Op::new(OpKind::Add, vec![ii, i2], vec![nv]));
+            inner_ops.push(add);
+            nv
+        } else {
+            let sc = self.push_const(step, &mut inner_ops);
+            let mv = self.out.new_value(crate::ir::types::Type::Int);
+            let mul = self.out.add_op(Op::new(OpKind::Mul, vec![i2, sc], vec![mv]));
+            inner_ops.push(mul);
+            let nv = self.out.new_value(crate::ir::types::Type::Int);
+            let add = self.out.add_op(Op::new(OpKind::Add, vec![ii, mv], vec![nv]));
+            inner_ops.push(add);
+            nv
+        };
+        let yielded = self.inline_body(&region, iv_val, &inner_carried, &mut inner_ops)?;
+        let yld = self.out.add_op(Op::new(OpKind::Yield, yielded, vec![]));
+        inner_ops.push(yld);
+        inner.ops = inner_ops;
+
+        let inner_results: Vec<Value> = inits
+            .iter()
+            .map(|&v| {
+                let ty = self.out.value_type(v);
+                self.out.new_value(ty)
+            })
+            .collect();
+        let mut inner_operands = vec![ilb, iub, istep];
+        inner_operands.extend(&outer_carried);
+        let mut inner_for = Op::new(OpKind::For, inner_operands, inner_results.clone());
+        inner_for.regions.push(inner);
+        outer_ops.push(self.out.add_op(inner_for));
+        let oyld = self.out.add_op(Op::new(OpKind::Yield, inner_results, vec![]));
+        outer_ops.push(oyld);
+        outer.ops = outer_ops;
+
+        let results: Vec<Value> = op.results.iter().map(|&r| self.fresh_like(r)).collect();
+        let mut operands = vec![lbv, ubv, ostepv];
+        operands.extend(&inits);
+        let mut for_op = Op::new(OpKind::For, operands, results);
+        for_op.regions.push(outer);
+        ops.push(self.out.add_op(for_op));
+        Ok(ops)
+    }
+
+    /// Collapse `for ii in 0..A·s step s { for j in 0..B { body(ii, j) } }`
+    /// into `for k in 0..A*B { body((k / B)·s, k % B) }`. Requires lb=0 on
+    /// both loops, inner step 1, and a perfect nest (outer body = inner
+    /// loop + yield). With `s == B` (a tiled nest) the reconstructed index
+    /// `(k/B)·B + k%B` collapses to `k` under the `div-mul-rem` rule.
+    fn coalesce(&mut self, opref: OpRef) -> Result<Vec<OpRef>> {
+        let (op, outer_region, olb, _oub, ostep) = self.loop_parts(opref);
+        let a = static_trips(self.src, opref)
+            .ok_or_else(|| Error::Compiler("coalesce: non-static outer bounds".into()))?;
+        if olb != 0 || ostep < 1 {
+            return Err(Error::Compiler("coalesce: outer loop must be 0..N with step >= 1".into()));
+        }
+        // Find the single inner for (perfect nest).
+        let inner_refs: Vec<OpRef> = outer_region
+            .ops
+            .iter()
+            .copied()
+            .filter(|&o| matches!(self.src.op(o).kind, OpKind::For))
+            .collect();
+        let non_yield_anchors = outer_region
+            .ops
+            .iter()
+            .filter(|&&o| {
+                let k = &self.src.op(o).kind;
+                k.is_anchor() && !matches!(k, OpKind::Yield)
+            })
+            .count();
+        if inner_refs.len() != 1 || non_yield_anchors != 1 {
+            return Err(Error::Compiler("coalesce: not a perfect 2-deep nest".into()));
+        }
+        let inner_ref = inner_refs[0];
+        let (inner_op, inner_region, ilb, _iub, istep) = self.loop_parts(inner_ref);
+        let b_trips = static_trips(self.src, inner_ref)
+            .ok_or_else(|| Error::Compiler("coalesce: non-static inner bounds".into()))?;
+        if ilb != 0 || istep != 1 {
+            return Err(Error::Compiler("coalesce: inner loop must be 0..B step 1".into()));
+        }
+        // Carried chain check: inner inits must be exactly the outer's
+        // carried params (in order) and outer yields the inner results.
+        let outer_carried = &outer_region.params[1..];
+        let inner_inits = &inner_op.operands[3..];
+        if inner_inits.len() != outer_carried.len()
+            || inner_inits.iter().zip(outer_carried).any(|(a, b)| a != b)
+        {
+            return Err(Error::Compiler("coalesce: carried-value chain mismatch".into()));
+        }
+
+        let mut ops = Vec::new();
+        let lbv = self.push_const(0, &mut ops);
+        let ubv = self.push_const((a * b_trips) as i64, &mut ops);
+        let stepv = self.push_const(1, &mut ops);
+        let inits: Vec<Value> =
+            op.operands[3..].iter().map(|&v| self.v(v)).collect::<Result<_>>()?;
+
+        let mut body = Region::default();
+        let k = self.out.new_value(crate::ir::types::Type::Int);
+        body.params.push(k);
+        let mut carried = Vec::new();
+        for &init in &inits {
+            let ty = self.out.value_type(init);
+            let p = self.out.new_value(ty);
+            body.params.push(p);
+            carried.push(p);
+        }
+        let mut body_ops: Vec<OpRef> = Vec::new();
+        let bconst = self.push_const(b_trips as i64, &mut body_ops);
+        let iv_outer = {
+            let nv = self.out.new_value(crate::ir::types::Type::Int);
+            let d = self.out.add_op(Op::new(OpKind::Div, vec![k, bconst], vec![nv]));
+            body_ops.push(d);
+            if ostep == 1 {
+                nv
+            } else {
+                // outer iv advances by `ostep` per outer trip.
+                let sc = self.push_const(ostep, &mut body_ops);
+                let mv = self.out.new_value(crate::ir::types::Type::Int);
+                let m = self.out.add_op(Op::new(OpKind::Mul, vec![nv, sc], vec![mv]));
+                body_ops.push(m);
+                mv
+            }
+        };
+        let iv_inner = {
+            let nv = self.out.new_value(crate::ir::types::Type::Int);
+            let r = self.out.add_op(Op::new(OpKind::Rem, vec![k, bconst], vec![nv]));
+            body_ops.push(r);
+            nv
+        };
+        // Bind outer iv, then inline the inner body with inner iv.
+        self.map.insert(outer_region.params[0], iv_outer);
+        let yielded = self.inline_body(&inner_region, iv_inner, &carried, &mut body_ops)?;
+        let yld = self.out.add_op(Op::new(OpKind::Yield, yielded, vec![]));
+        body_ops.push(yld);
+        body.ops = body_ops;
+
+        let results: Vec<Value> = op.results.iter().map(|&r| self.fresh_like(r)).collect();
+        let mut operands = vec![lbv, ubv, stepv];
+        operands.extend(&inits);
+        let mut for_op = Op::new(OpKind::For, operands, results);
+        for_op.regions.push(body);
+        ops.push(self.out.add_op(for_op));
+        Ok(ops)
+    }
+
+    fn push_const(&mut self, c: i64, into: &mut Vec<OpRef>) -> Value {
+        let v = self.out.new_value(crate::ir::types::Type::Int);
+        let op = self.out.add_op(Op::new(OpKind::ConstI(c), vec![], vec![v]));
+        into.push(op);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::ir::interp::{run as interp, Memory, Val};
+    use crate::runtime::DType;
+
+    fn sum_loop() -> (Func, OpRef) {
+        let mut b = FuncBuilder::new("sum");
+        let x = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let lb = b.const_i(0);
+        let ub = b.const_i(16);
+        let one = b.const_i(1);
+        let s = b.for_loop(lb, ub, one, &[zero], |b, iv, c| {
+            let v = b.load(x, iv);
+            vec![b.add(c[0], v)]
+        });
+        let f = b.finish(&s);
+        let mut target = None;
+        f.walk(|r, op| {
+            if matches!(op.kind, OpKind::For) {
+                target = Some(r);
+            }
+        });
+        (f, target.unwrap())
+    }
+
+    fn run_sum(f: &Func) -> i64 {
+        let mut mem = Memory::for_func(f);
+        let data: Vec<i32> = (1..=16).collect();
+        mem.write_i32(crate::ir::func::BufferId(0), &data);
+        match interp(f, &[], &mut mem).unwrap()[0] {
+            Val::I(v) => v,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unroll_preserves_reduction() {
+        let (f, target) = sum_loop();
+        for factor in [2u64, 4, 8] {
+            let g = apply(&f, target, LoopPass::Unroll(factor)).unwrap();
+            crate::ir::verifier::verify(&g).unwrap();
+            assert_eq!(run_sum(&g), 136, "factor {factor}");
+            // body got replicated
+            assert_eq!(
+                g.count_ops(|k| matches!(k, OpKind::Load(_))) as u64,
+                factor,
+                "factor {factor}"
+            );
+        }
+    }
+
+    #[test]
+    fn tile_preserves_reduction() {
+        let (f, target) = sum_loop();
+        for factor in [2u64, 4] {
+            let g = apply(&f, target, LoopPass::Tile(factor)).unwrap();
+            crate::ir::verifier::verify(&g).unwrap();
+            assert_eq!(run_sum(&g), 136, "factor {factor}");
+            assert_eq!(g.count_ops(|k| matches!(k, OpKind::For)), 2);
+        }
+    }
+
+    #[test]
+    fn coalesce_inverts_tile() {
+        let (f, target) = sum_loop();
+        let tiled = apply(&f, target, LoopPass::Tile(4)).unwrap();
+        // Find outer loop of the tiled version.
+        let mut outer = None;
+        let mut depth0 = Vec::new();
+        for &o in &tiled.entry.ops {
+            if matches!(tiled.op(o).kind, OpKind::For) {
+                depth0.push(o);
+            }
+        }
+        outer = depth0.first().copied();
+        let coalesced = apply(&tiled, outer.unwrap(), LoopPass::Coalesce).unwrap();
+        crate::ir::verifier::verify(&coalesced).unwrap();
+        assert_eq!(run_sum(&coalesced), 136);
+        assert_eq!(coalesced.count_ops(|k| matches!(k, OpKind::For)), 1);
+    }
+
+    #[test]
+    fn unroll_rejects_non_dividing_factor() {
+        let (f, target) = sum_loop();
+        assert!(apply(&f, target, LoopPass::Unroll(3)).is_err());
+    }
+
+    #[test]
+    fn unroll_without_carried_values() {
+        let mut b = FuncBuilder::new("scale");
+        let x = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        b.for_range(0, 8, 1, |b, iv| {
+            let v = b.load(x, iv);
+            let two = b.const_i(2);
+            let w = b.mul(v, two);
+            b.store(x, iv, w);
+        });
+        let f = b.finish(&[]);
+        let mut target = None;
+        f.walk(|r, op| {
+            if matches!(op.kind, OpKind::For) {
+                target = Some(r);
+            }
+        });
+        let g = apply(&f, target.unwrap(), LoopPass::Unroll(2)).unwrap();
+        crate::ir::verifier::verify(&g).unwrap();
+        let mut mem = Memory::for_func(&g);
+        mem.write_i32(crate::ir::func::BufferId(0), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        interp(&g, &[], &mut mem).unwrap();
+        assert_eq!(
+            mem.read_i32(crate::ir::func::BufferId(0)),
+            vec![2, 4, 6, 8, 10, 12, 14, 16]
+        );
+    }
+}

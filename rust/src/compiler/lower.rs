@@ -1,0 +1,88 @@
+//! §5.4 final step — lowering matched loops to ISAX intrinsics.
+//!
+//! After extraction selects the ISAX-marked variant, the marker becomes an
+//! intrinsic call to the custom instruction: the matched `for` is replaced
+//! by an `isax.<name>` op. Everything else is untouched, and the result
+//! feeds the standard backend (here: the cycle-level core models, which
+//! execute intrinsics on the synthesized ISAX engine).
+
+use crate::error::{Error, Result};
+use crate::ir::func::{Func, OpRef};
+use crate::ir::ops::{Op, OpKind};
+
+/// Replace the loop at `target` with an `Intrinsic(name)` op.
+///
+/// The intrinsic's operands are the loop bounds' defining values are not
+/// needed — ISAX invocations carry their configuration in the instruction
+/// encoding (rs1/rs2 hold base pointers, set up by the surrounding code) —
+/// so the op takes no SSA operands and produces no results. Loops whose
+/// results feed later code cannot be offloaded wholesale and are rejected.
+pub fn replace_loop_with_intrinsic(func: &Func, target: OpRef, name: &str) -> Result<Func> {
+    let mut out = func.clone();
+    let op = out.op(target).clone();
+    if !matches!(op.kind, OpKind::For) {
+        return Err(Error::Compiler(format!("lower: {target:?} is not a loop")));
+    }
+    if !op.results.is_empty() {
+        // Loop-carried results that escape: the ISAX writes its outputs
+        // through memory, so a value-producing loop needs a store-based
+        // rewrite first. Our ISAX definitions are all memory-to-memory.
+        return Err(Error::Compiler(
+            "lower: cannot offload a loop whose results are used as SSA values".into(),
+        ));
+    }
+    let intr = out.add_op(Op::new(OpKind::Intrinsic(name.to_string()), vec![], vec![]));
+    let pos = out
+        .entry
+        .ops
+        .iter()
+        .position(|&o| o == target)
+        .ok_or_else(|| Error::Compiler("lower: loop is not at the top level".into()))?;
+    out.entry.ops[pos] = intr;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::matcher::top_loops;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    #[test]
+    fn replaces_loop_with_intrinsic() {
+        let mut b = FuncBuilder::new("app");
+        let x = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        b.for_range(0, 8, 1, |b, iv| {
+            let v = b.load(x, iv);
+            b.store(x, iv, v);
+        });
+        let f = b.finish(&[]);
+        let target = top_loops(&f)[0];
+        let g = replace_loop_with_intrinsic(&f, target, "vcopy").unwrap();
+        assert_eq!(g.count_ops(|k| matches!(k, OpKind::For)), 0);
+        assert_eq!(
+            g.count_ops(|k| matches!(k, OpKind::Intrinsic(n) if n == "vcopy")),
+            1
+        );
+        crate::ir::verifier::verify(&g).unwrap();
+    }
+
+    #[test]
+    fn rejects_value_producing_loop() {
+        let mut b = FuncBuilder::new("app");
+        let x = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let lb = b.const_i(0);
+        let ub = b.const_i(8);
+        let one = b.const_i(1);
+        let s = b.for_loop(lb, ub, one, &[zero], |b, iv, c| {
+            let v = b.load(x, iv);
+            vec![b.add(c[0], v)]
+        });
+        let f = b.finish(&s);
+        let target = top_loops(&f)[0];
+        assert!(replace_loop_with_intrinsic(&f, target, "vsum").is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! §5.3 hybrid rewriting + §5.4 skeleton-components matching.
+//!
+//! The matching engine works on one shared e-graph holding the software
+//! program *and* the aligned ISAX description (plus every variant produced
+//! by external rewrites). Because the encoder canonicalizes symbols and
+//! saturation unions equivalent dataflow, "the software loop implements
+//! the ISAX" reduces to *e-class equality* of the two `for` nodes — the
+//! "direct equivalence with the target ISAX" of Figure 5(3).
+//!
+//! Skeleton-components mechanics: the ISAX's loop nest (trip counts,
+//! nesting, anchor counts) is the *skeleton*; the dataflow subtrees under
+//! its anchors are the *components*. Component matches tag the software
+//! e-classes with `comp:` markers; the skeleton engine checks structure,
+//! ordering (tuple child order), loop-carried dependencies (carry symbol
+//! equality), and effects (anchor counts), then tags the loop class with
+//! an `isax:` marker used by extraction and lowering.
+//!
+//! External rewrites are *ISAX-guided* (§5.3): loop characteristics of the
+//! target decide which of unroll/tile/coalesce to attempt, on which side,
+//! with which factor — blind saturation of structural rewrites would blow
+//! the e-graph up.
+
+use crate::compiler::encode::{encode_func, EncodeMap};
+use crate::compiler::loop_passes::{apply, LoopPass};
+use crate::compiler::rules::internal_rules;
+use crate::compiler::{CompileOptions, CompileStats};
+use crate::egraph::{ClassId, EGraph, Runner};
+use crate::error::Result;
+use crate::ir::func::{Func, OpRef};
+use crate::ir::ops::OpKind;
+use crate::synthesis::memprobe::static_trips;
+
+/// Outcome of matching one ISAX against one software function.
+#[derive(Debug, Clone)]
+pub struct MatchRound {
+    /// The matched loop in the *original* software function, if any.
+    pub matched_loop: Option<OpRef>,
+    pub stats: CompileStats,
+}
+
+/// The loop-nest skeleton of a function or loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopShape {
+    pub trips: u64,
+    pub stores: usize,
+    pub inner: Vec<LoopShape>,
+}
+
+impl LoopShape {
+    pub fn depth(&self) -> usize {
+        1 + self.inner.iter().map(LoopShape::depth).max().unwrap_or(0)
+    }
+
+    /// Total elements processed (product of trips down the first spine).
+    pub fn total_trips(&self) -> u64 {
+        self.trips * self.inner.first().map(LoopShape::total_trips).unwrap_or(1)
+    }
+}
+
+/// Shape of the loop at `opref`.
+pub fn loop_shape(func: &Func, opref: OpRef) -> Option<LoopShape> {
+    let op = func.op(opref);
+    if !matches!(op.kind, OpKind::For) {
+        return None;
+    }
+    let trips = static_trips(func, opref)?;
+    let region = &op.regions[0];
+    let mut inner = Vec::new();
+    let mut stores = 0;
+    for &child in &region.ops {
+        match &func.op(child).kind {
+            OpKind::For => inner.extend(loop_shape(func, child)),
+            OpKind::Store(_) | OpKind::WriteSmem(_) => stores += 1,
+            _ => {}
+        }
+    }
+    Some(LoopShape { trips, stores, inner })
+}
+
+/// Top-level loops of a function.
+pub fn top_loops(func: &Func) -> Vec<OpRef> {
+    func.entry
+        .ops
+        .iter()
+        .copied()
+        .filter(|&o| matches!(func.op(o).kind, OpKind::For))
+        .collect()
+}
+
+/// One software variant under consideration (the transformed function
+/// itself is not retained: matching works on the shared e-graph via the
+/// encode map, and lowering targets the *origin* loop in the original).
+struct Variant {
+    /// The loop in the *original* function this variant's transformed
+    /// loop descends from.
+    origin: OpRef,
+    map: EncodeMap,
+}
+
+/// Match one ISAX against the software function, applying hybrid rewrites.
+pub fn match_isax(
+    software: &Func,
+    isax_aligned: &Func,
+    name: &str,
+    opts: &CompileOptions,
+) -> Result<MatchRound> {
+    let mut stats = CompileStats::default();
+    let mut g = EGraph::new();
+    let sw_map = encode_func(&mut g, software);
+    let isax_map = encode_func(&mut g, isax_aligned);
+    stats.initial_enodes = g.node_count();
+
+    // The ISAX skeleton: its unique top-level loop.
+    let isax_tops = top_loops(isax_aligned);
+    let [isax_top] = isax_tops.as_slice() else {
+        return Ok(MatchRound { matched_loop: None, stats });
+    };
+    let isax_shape = loop_shape(isax_aligned, *isax_top)
+        .ok_or_else(|| crate::error::Error::Compiler("isax loop has dynamic bounds".into()))?;
+    let mut isax_classes: Vec<ClassId> = isax_map
+        .loops
+        .iter()
+        .filter(|&&(_, _, d)| d == 0)
+        .map(|&(_, c, _)| c)
+        .collect();
+
+    // Component tagging (§5.4): mark every store-anchor class of the ISAX
+    // body so skeleton matching can report component hits.
+    tag_components(&mut g, isax_aligned, &isax_map, name);
+
+    let runner = Runner {
+        iter_limit: opts.iter_limit,
+        node_limit: opts.node_limit,
+        ..Default::default()
+    };
+    let rules = internal_rules();
+
+    // Variant pool: the original + everything external rewrites produce.
+    let mut variants: Vec<Variant> = top_loops(software)
+        .into_iter()
+        .map(|origin| Variant { origin, map: sw_map.clone() })
+        .collect();
+    if variants.is_empty() {
+        return Ok(MatchRound { matched_loop: None, stats });
+    }
+    // All variants of the same func share one encode map; dedupe.
+    variants.truncate(1);
+    let origins = top_loops(software);
+
+    // Skeleton matching closure: any software depth-0 loop class equal to
+    // any ISAX class?
+    let try_match = |g: &mut EGraph,
+                     variants: &[Variant],
+                     isax_classes: &[ClassId]|
+     -> Option<(OpRef, bool)> {
+        for (vi, v) in variants.iter().enumerate() {
+            for &(opref, cls, depth) in &v.map.loops {
+                if depth != 0 {
+                    continue;
+                }
+                for &ic in isax_classes {
+                    if g.find(cls) == g.find(ic) {
+                        let matched = if vi == 0 { opref } else { v.origin };
+                        return Some((matched, vi == 0));
+                    }
+                }
+            }
+        }
+        None
+    };
+
+    for round in 0..=opts.external_budget {
+        // Interleave: match first (canonical programs need zero rewrites),
+        // then saturate one iteration at a time, re-checking after each.
+        let mut report = crate::egraph::RunReport::default();
+        loop {
+            if let Some((matched, _)) = try_match(&mut g, &variants, &isax_classes) {
+                // Tag the matched class with the ISAX marker (§5.4).
+                let marker = g.add_named(&format!("isax:{name}"), vec![]);
+                let cls = variants
+                    .iter()
+                    .flat_map(|v| v.map.loops.iter())
+                    .find(|&&(o, _, d)| d == 0 && o == matched)
+                    .map(|&(_, c, _)| c);
+                if let Some(cls) = cls {
+                    g.union(cls, marker);
+                    g.rebuild();
+                }
+                stats.internal_rewrites += report.applied;
+                stats.iterations += report.iterations;
+                stats.saturated_enodes = g.node_count();
+                stats.matched.push(name.to_string());
+                return Ok(MatchRound { matched_loop: Some(matched), stats });
+            }
+            if report.iterations >= opts.iter_limit || report.node_limit_hit {
+                break;
+            }
+            report.iterations += 1;
+            let changed = runner.run_one(&mut g, &rules, &mut report);
+            if !changed {
+                break;
+            }
+        }
+        stats.internal_rewrites += report.applied;
+        stats.iterations += report.iterations;
+        stats.saturated_enodes = g.node_count();
+
+        if round == opts.external_budget {
+            break;
+        }
+
+        // ISAX-guided external rewrites (§5.3): pick transformations from
+        // the shape difference. Returns false when no transformation
+        // applies — then we're done failing.
+        let mut progressed = false;
+        for &origin in &origins {
+            let Some(sw_shape) = loop_shape(software, origin) else { continue };
+            for pass in guided_passes(&sw_shape, &isax_shape) {
+                let side_isax = matches!(pass, GuidedPass::UnrollIsax(_));
+                match pass {
+                    GuidedPass::Sw(p) => {
+                        if let Ok(newf) = apply(software, origin, p) {
+                            let map = encode_func(&mut g, &newf);
+                            // Union the transformed loop with its origin:
+                            // they are equivalent programs.
+                            if let (Some(&(_, nc, _)), Some(&oc)) = (
+                                map.loops.iter().find(|&&(_, _, d)| d == 0),
+                                sw_map.op_class.get(&origin),
+                            ) {
+                                g.union(nc, oc);
+                                g.rebuild();
+                            }
+                            variants.push(Variant { origin, map });
+                            stats.external_rewrites += 1;
+                            progressed = true;
+                        }
+                    }
+                    GuidedPass::UnrollIsax(f) => {
+                        if let Ok(newf) = apply(isax_aligned, *isax_top, LoopPass::Unroll(f)) {
+                            let map = encode_func(&mut g, &newf);
+                            if let Some(&(_, nc, _)) =
+                                map.loops.iter().find(|&&(_, _, d)| d == 0)
+                            {
+                                if let Some(&ic) = isax_classes.first() {
+                                    g.union(nc, ic);
+                                    g.rebuild();
+                                }
+                                isax_classes.push(nc);
+                            }
+                            stats.external_rewrites += 1;
+                            progressed = true;
+                        }
+                    }
+                }
+                let _ = side_isax;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    Ok(MatchRound { matched_loop: None, stats })
+}
+
+/// A guided transformation: on the software loop or the ISAX pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GuidedPass {
+    Sw(LoopPass),
+    UnrollIsax(u64),
+}
+
+/// §5.3: decide which external rewrites the shape difference justifies.
+/// "The decision here only depends on the loop structure, not the
+/// specific operations within the loop body."
+fn guided_passes(sw: &LoopShape, isax: &LoopShape) -> Vec<GuidedPass> {
+    let mut out = Vec::new();
+    let sd = sw.depth();
+    let id = isax.depth();
+    if sd > id {
+        // Software is tiled relative to the ISAX: flatten.
+        out.push(GuidedPass::Sw(LoopPass::Coalesce));
+    } else if sd < id {
+        // ISAX has a deeper nest: tile software by the ISAX's inner trips.
+        if let Some(inner) = isax.inner.first() {
+            if inner.trips > 0 && sw.trips % inner.trips == 0 {
+                out.push(GuidedPass::Sw(LoopPass::Tile(inner.trips)));
+            }
+        }
+    } else {
+        // Same depth: align trip counts by unrolling whichever side
+        // iterates more.
+        if sw.trips > isax.trips && isax.trips > 0 && sw.trips % isax.trips == 0 {
+            out.push(GuidedPass::Sw(LoopPass::Unroll(sw.trips / isax.trips)));
+        } else if isax.trips > sw.trips && sw.trips > 0 && isax.trips % sw.trips == 0 {
+            out.push(GuidedPass::UnrollIsax(isax.trips / sw.trips));
+        }
+    }
+    out
+}
+
+/// Insert `comp:<isax>:<i>` markers on every store-anchor class of the
+/// ISAX body (§5.4 component tagging).
+fn tag_components(g: &mut EGraph, isax: &Func, map: &EncodeMap, name: &str) {
+    let mut i = 0;
+    isax.walk(|opref, op| {
+        if matches!(op.kind, OpKind::Store(_) | OpKind::WriteSmem(_)) {
+            if let Some(&cls) = map.op_class.get(&opref) {
+                let marker = g.add_named(&format!("comp:{name}:{i}"), vec![]);
+                g.union(cls, marker);
+                i += 1;
+            }
+        }
+    });
+    g.rebuild();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    /// ISAX: out[i] = a[i] * 4 for 16 elements (written with mul).
+    fn isax_scale() -> Func {
+        let mut b = FuncBuilder::new("vscale");
+        let a = b.global("a", DType::I32, 16, CacheHint::Unknown);
+        let o = b.global("o", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let v = b.load(a, iv);
+            let four = b.const_i(4);
+            let w = b.mul(v, four);
+            b.store(o, iv, w);
+        });
+        b.finish(&[])
+    }
+
+    /// Software spelled with a shift instead of the multiply.
+    fn software_shift() -> Func {
+        let mut b = FuncBuilder::new("app");
+        let x = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        let y = b.global("y", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let v = b.load(x, iv);
+            let two = b.const_i(2);
+            let w = b.shl(v, two); // v << 2 == v * 4
+            b.store(y, iv, w);
+        });
+        b.finish(&[])
+    }
+
+    #[test]
+    fn matches_through_internal_rewrites() {
+        let r = match_isax(
+            &software_shift(),
+            &isax_scale(),
+            "vscale",
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        assert!(r.matched_loop.is_some(), "stats: {:?}", r.stats);
+        assert!(r.stats.internal_rewrites > 0);
+        assert_eq!(r.stats.external_rewrites, 0);
+        // Note: saturation can *shrink* the node count when classes merge,
+        // so only positivity is guaranteed here.
+        assert!(r.stats.saturated_enodes > 0 && r.stats.initial_enodes > 0);
+    }
+
+    #[test]
+    fn matches_tiled_software_via_coalesce() {
+        // Software tiled by 4 (depth 2) against the flat ISAX.
+        let f = software_shift();
+        let target = top_loops(&f)[0];
+        let tiled = apply(&f, target, LoopPass::Tile(4)).unwrap();
+        let r =
+            match_isax(&tiled, &isax_scale(), "vscale", &CompileOptions::default()).unwrap();
+        assert!(r.matched_loop.is_some(), "stats: {:?}", r.stats);
+        assert!(r.stats.external_rewrites >= 1);
+    }
+
+    #[test]
+    fn matches_unrolled_software() {
+        // Software unrolled by 2 (8 trips, 2 stores/iter) against the
+        // rolled ISAX: the engine unrolls the ISAX pattern by 2.
+        let f = software_shift();
+        let target = top_loops(&f)[0];
+        let unrolled = apply(&f, target, LoopPass::Unroll(2)).unwrap();
+        let r =
+            match_isax(&unrolled, &isax_scale(), "vscale", &CompileOptions::default()).unwrap();
+        assert!(r.matched_loop.is_some(), "stats: {:?}", r.stats);
+        assert!(r.stats.external_rewrites >= 1);
+    }
+
+    #[test]
+    fn rejects_semantically_different_loop() {
+        // Software adds instead of multiplying: must NOT match.
+        let mut b = FuncBuilder::new("app");
+        let x = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        let y = b.global("y", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let v = b.load(x, iv);
+            let four = b.const_i(4);
+            let w = b.add(v, four);
+            b.store(y, iv, w);
+        });
+        let f = b.finish(&[]);
+        let r = match_isax(&f, &isax_scale(), "vscale", &CompileOptions::default()).unwrap();
+        assert!(r.matched_loop.is_none());
+    }
+
+    #[test]
+    fn rejects_extra_side_effects() {
+        // Same compute but an extra store the ISAX does not perform.
+        let mut b = FuncBuilder::new("app");
+        let x = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        let y = b.global("y", DType::I32, 16, CacheHint::Unknown);
+        let z = b.global("z", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let v = b.load(x, iv);
+            let two = b.const_i(2);
+            let w = b.shl(v, two);
+            b.store(y, iv, w);
+            b.store(z, iv, v); // extra effect
+        });
+        let f = b.finish(&[]);
+        let r = match_isax(&f, &isax_scale(), "vscale", &CompileOptions::default()).unwrap();
+        assert!(r.matched_loop.is_none());
+    }
+
+    #[test]
+    fn loop_shape_reports_structure() {
+        let f = software_shift();
+        let target = top_loops(&f)[0];
+        let s = loop_shape(&f, target).unwrap();
+        assert_eq!(s.trips, 16);
+        assert_eq!(s.depth(), 1);
+        assert_eq!(s.stores, 1);
+        let tiled = apply(&f, target, LoopPass::Tile(4)).unwrap();
+        let t = loop_shape(&tiled, top_loops(&tiled)[0]).unwrap();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.total_trips(), 16);
+    }
+}

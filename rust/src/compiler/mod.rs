@@ -1,0 +1,115 @@
+//! §5 — the retargetable compiler.
+//!
+//! Pipeline (Figure 5):
+//! 1. **Semantic alignment** ([`align`]): ISAX descriptions are normalized
+//!    from functional Aquas-IR down to the software abstraction level —
+//!    register-file reads become parameters, transfers/scratchpads become
+//!    direct global accesses. Software code is canonicalized (DCE/DSE)
+//!    the way Polygeist + MLIR canonicalization would.
+//! 2. **Fusing IR and e-graph** ([`encode`]): blocks become `tuple`
+//!    e-nodes whose children are the *anchors* (side-effecting ops,
+//!    terminators, control flow) in program order; pure dataflow forms
+//!    subtrees beneath. Identical structures hashcons to identical
+//!    classes, so ISAX and software fragments that become equivalent
+//!    *collapse into the same e-class*.
+//! 3. **Hybrid rewriting** ([`rules`] internal / [`loop_passes`] external):
+//!    algebraic egglog-style rules saturate the dataflow space, while
+//!    loop transformations (unroll/tile/coalesce) run as IR passes on
+//!    extracted variants whose results are unioned back — triggered
+//!    selectively by ISAX loop analysis to suppress blowup.
+//! 4. **Skeleton-components matching** ([`matcher`]): each ISAX splits
+//!    into a loop-nest skeleton + dataflow components; components tag
+//!    matching e-classes with marker e-nodes, then the skeleton engine
+//!    validates structure/order/effects and tags the loop class with an
+//!    ISAX marker.
+//! 5. **Lowering** ([`lower`]): tagged loops are replaced by `isax.<name>`
+//!    intrinsics; the rest of the program is untouched.
+
+pub mod align;
+pub mod encode;
+pub mod loop_passes;
+pub mod lower;
+pub mod matcher;
+pub mod rules;
+
+use crate::egraph::{EGraph, Runner};
+use crate::error::Result;
+use crate::ir::Func;
+
+/// An ISAX available for offloading: its name plus the *functional-level*
+/// description (the same IR the synthesis flow consumes).
+#[derive(Debug, Clone)]
+pub struct IsaxDef {
+    pub name: String,
+    pub func: Func,
+}
+
+/// Compilation statistics (Table 3).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompileStats {
+    pub internal_rewrites: usize,
+    pub external_rewrites: usize,
+    pub initial_enodes: usize,
+    pub saturated_enodes: usize,
+    pub iterations: usize,
+    pub matched: Vec<String>,
+}
+
+/// Result of compiling one software function against an ISAX library.
+#[derive(Debug, Clone)]
+pub struct CompileResult {
+    /// The lowered program (matched loops replaced by intrinsics).
+    pub func: Func,
+    pub stats: CompileStats,
+}
+
+/// Compiler configuration.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// Saturation iteration limit per round.
+    pub iter_limit: usize,
+    /// E-graph node budget (§5.3: "suppressing e-graph blowup").
+    pub node_limit: usize,
+    /// Maximum external (loop-pass) rewrites to attempt per ISAX.
+    pub external_budget: usize,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { iter_limit: 12, node_limit: 100_000, external_budget: 6 }
+    }
+}
+
+/// Compile: offload every matching loop of `software` onto the ISAXs.
+pub fn compile(software: &Func, isaxes: &[IsaxDef], opts: &CompileOptions) -> Result<CompileResult> {
+    let mut stats = CompileStats::default();
+    let mut current = align::canonicalize_software(software);
+
+    for isax in isaxes {
+        let aligned = align::align_isax(&isax.func)?;
+        let round = matcher::match_isax(&current, &aligned, &isax.name, opts)?;
+        stats.internal_rewrites += round.stats.internal_rewrites;
+        stats.external_rewrites += round.stats.external_rewrites;
+        stats.iterations += round.stats.iterations;
+        if stats.initial_enodes == 0 {
+            stats.initial_enodes = round.stats.initial_enodes;
+        }
+        stats.saturated_enodes = stats.saturated_enodes.max(round.stats.saturated_enodes);
+        if let Some(loop_ref) = round.matched_loop {
+            current = lower::replace_loop_with_intrinsic(&current, loop_ref, &isax.name)?;
+            stats.matched.push(isax.name.clone());
+        }
+    }
+    Ok(CompileResult { func: current, stats })
+}
+
+/// Convenience used by tests/benches: a fresh e-graph with the standard
+/// internal rule set pre-saturated over one function.
+pub fn saturate_func(func: &Func, opts: &CompileOptions) -> (EGraph, encode::EncodeMap) {
+    let mut g = EGraph::new();
+    let map = encode::encode_func(&mut g, func);
+    let runner = Runner { iter_limit: opts.iter_limit, node_limit: opts.node_limit, ..Default::default() };
+    let rs = rules::internal_rules();
+    runner.run(&mut g, &rs);
+    (g, map)
+}

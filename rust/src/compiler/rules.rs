@@ -1,0 +1,217 @@
+//! §5.3 — the internal (algebraic / dataflow) rewrite rule set.
+//!
+//! These are the fixed egglog-style rules: they rewrite dataflow subtrees
+//! beneath anchors without touching control flow, so program order and
+//! side effects are preserved by construction. The set covers the variant
+//! classes the paper's case studies inject (Table 3):
+//!
+//! - **AF** (algebraic form): commutativity/associativity/identities;
+//! - **RF** (representation form): shift↔multiply, overflow-safe average,
+//!   masking idioms;
+//! - **RE** (common-subexpression split/reuse): handled structurally by
+//!   hashconsing — two syntactically different spellings of the same
+//!   subterm collapse into one e-class once rules align them.
+
+use crate::egraph::rewrite::Rewrite;
+use crate::egraph::EGraph;
+
+/// Parse a `const:<v>` symbol on any node of a class.
+fn const_of(g: &mut EGraph, c: crate::egraph::ClassId) -> Option<i64> {
+    for n in g.nodes(c) {
+        let name = g.sym_name(n.sym);
+        if let Some(v) = name.strip_prefix("const:") {
+            if let Ok(k) = v.parse::<i64>() {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// The standard internal rule set.
+pub fn internal_rules() -> Vec<Rewrite> {
+    let mut rules = vec![
+        // -- AF: commutativity ------------------------------------------------
+        Rewrite::simple("comm-add", "(add ?a ?b)", "(add ?b ?a)"),
+        Rewrite::simple("comm-mul", "(mul ?a ?b)", "(mul ?b ?a)"),
+        Rewrite::simple("comm-and", "(and ?a ?b)", "(and ?b ?a)"),
+        Rewrite::simple("comm-or", "(or ?a ?b)", "(or ?b ?a)"),
+        Rewrite::simple("comm-xor", "(xor ?a ?b)", "(xor ?b ?a)"),
+        Rewrite::simple("comm-min", "(min ?a ?b)", "(min ?b ?a)"),
+        Rewrite::simple("comm-max", "(max ?a ?b)", "(max ?b ?a)"),
+        // -- AF: associativity (one direction; comm gives the rest).
+        //    NOTE: assoc-mul and distributivity are deliberately absent
+        //    from the default set — on loop-index polynomials they explode
+        //    the graph combinatorially, which is exactly the §5.3 "blindly
+        //    saturating would cause the e-graph to grow explosively"
+        //    failure. The ISAX-guided strategy keeps the rule set lean and
+        //    lets loop passes handle structural change.
+        Rewrite::simple("assoc-add", "(add (add ?a ?b) ?c)", "(add ?a (add ?b ?c))"),
+        // -- AF: identities ----------------------------------------------------
+        Rewrite::simple("add-zero", "(add ?x const:0)", "?x"),
+        Rewrite::simple("mul-one", "(mul ?x const:1)", "?x"),
+        Rewrite::simple("mul-zero", "(mul ?x const:0)", "const:0"),
+        Rewrite::simple("sub-zero", "(sub ?x const:0)", "?x"),
+        Rewrite::simple("sub-self", "(sub ?x ?x)", "const:0"),
+        Rewrite::simple("and-self", "(and ?x ?x)", "?x"),
+        Rewrite::simple("or-self", "(or ?x ?x)", "?x"),
+        Rewrite::simple("xor-self", "(xor ?x ?x)", "const:0"),
+        Rewrite::simple("shl-zero", "(shl ?x const:0)", "?x"),
+        // -- RF: overflow-safe average (the §6.2 robustness attack):
+        //    (a + b) / 2  ==  (a & b) + ((a ^ b) >> 1)
+        Rewrite::simple(
+            "avg-overflow-safe",
+            "(div (add ?a ?b) const:2)",
+            "(add (and ?a ?b) (shr (xor ?a ?b) const:1))",
+        ),
+        Rewrite::simple(
+            "avg-plain",
+            "(add (and ?a ?b) (shr (xor ?a ?b) const:1))",
+            "(div (add ?a ?b) const:2)",
+        ),
+        // -- Index reconstruction after coalescing:
+        //    (k / B) * B + (k % B)  ==  k   (B constant, non-negative k)
+        Rewrite::simple(
+            "div-mul-rem",
+            "(add (mul (div ?x ?c) ?c) (rem ?x ?c))",
+            "?x",
+        ),
+        // -- RF: select(cmp) as min/max ----------------------------------------
+        Rewrite::simple("select-max", "(select (cmp:gt ?a ?b) ?a ?b)", "(max ?a ?b)"),
+        Rewrite::simple("select-min", "(select (cmp:lt ?a ?b) ?a ?b)", "(min ?a ?b)"),
+        Rewrite::simple("max-select", "(max ?a ?b)", "(select (cmp:gt ?a ?b) ?a ?b)"),
+    ];
+
+    // -- RF: shift <-> multiply/divide with constant folding (dynamic) -----
+    rules.push(Rewrite::dynamic("shl-to-mul", "(shl ?x ?c)", |g, binds| {
+        let k = const_of(g, binds["c"])?;
+        if !(0..=32).contains(&k) {
+            return None;
+        }
+        let x = binds["x"];
+        let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
+        Some(g.add_named("mul", vec![x, cm]))
+    }));
+    rules.push(Rewrite::dynamic("shr-to-div", "(shr ?x ?c)", |g, binds| {
+        let k = const_of(g, binds["c"])?;
+        if !(1..=32).contains(&k) {
+            return None;
+        }
+        let x = binds["x"];
+        let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
+        Some(g.add_named("div", vec![x, cm]))
+    }));
+    // Constant folding for add/mul of two consts (keeps index math tidy).
+    rules.push(Rewrite::dynamic("fold-add", "(add ?a ?b)", |g, binds| {
+        let x = const_of(g, binds["a"])?;
+        let y = const_of(g, binds["b"])?;
+        Some(g.add_named(&format!("const:{}", x.wrapping_add(y)), vec![]))
+    }));
+    rules.push(Rewrite::dynamic("fold-mul", "(mul ?a ?b)", |g, binds| {
+        let x = const_of(g, binds["a"])?;
+        let y = const_of(g, binds["b"])?;
+        Some(g.add_named(&format!("const:{}", x.wrapping_mul(y)), vec![]))
+    }));
+    // -- RF: and-mask as rem for powers of two: x & (2^k - 1) == x % 2^k
+    rules.push(Rewrite::dynamic("mask-to-rem", "(and ?x ?c)", |g, binds| {
+        let k = const_of(g, binds["c"])?;
+        if k <= 0 || (k + 1) & k != 0 {
+            return None; // not 2^t - 1
+        }
+        let x = binds["x"];
+        let cm = g.add_named(&format!("const:{}", k + 1), vec![]);
+        Some(g.add_named("rem", vec![x, cm]))
+    }));
+    rules.push(Rewrite::dynamic("rem-to-mask", "(rem ?x ?c)", |g, binds| {
+        let k = const_of(g, binds["c"])?;
+        if k <= 1 || k & (k - 1) != 0 {
+            return None; // not a power of two
+        }
+        let x = binds["x"];
+        let cm = g.add_named(&format!("const:{}", k - 1), vec![]);
+        Some(g.add_named("and", vec![x, cm]))
+    }));
+    rules
+}
+
+/// The §5.3 heuristic extraction cost: penalize non-affine operations so
+/// the extracted program orients toward affine-friendly forms (`i*4`
+/// preferred over `i<<2`), and reward ISAX markers strongly so matched
+/// loops extract as intrinsics.
+pub fn affine_cost(sym: &str, kids: &[f64]) -> f64 {
+    let own = if sym.starts_with("isax:") {
+        // Strongly prefer offloaded forms.
+        0.1
+    } else {
+        match sym {
+            "shl" | "shr" => 10.0, // non-affine index forms
+            "div" | "rem" => 8.0,
+            "mul" => 1.0,
+            "for" => 2.0,
+            _ => 1.0,
+        }
+    };
+    own + kids.iter().sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{extract_best, EGraph, Runner};
+
+    #[test]
+    fn shift_rewrites_to_affine_mul() {
+        let mut g = EGraph::new();
+        let iv = g.add_named("iv:0", vec![]);
+        let c2 = g.add_named("const:2", vec![]);
+        let shl = g.add_named("shl", vec![iv, c2]);
+        Runner::default().run(&mut g, &internal_rules());
+        let out = extract_best(&mut g, shl, &affine_cost).unwrap();
+        assert_eq!(out.to_sexp(), "(mul iv:0 const:4)");
+    }
+
+    #[test]
+    fn overflow_safe_average_recognized() {
+        // (a & b) + ((a ^ b) >> 1) must collapse with (a + b) / 2.
+        let mut g = EGraph::new();
+        let a = g.add_named("param:0", vec![]);
+        let b = g.add_named("param:1", vec![]);
+        let c1 = g.add_named("const:1", vec![]);
+        let c2 = g.add_named("const:2", vec![]);
+        let and = g.add_named("and", vec![a, b]);
+        let xor = g.add_named("xor", vec![a, b]);
+        let shr = g.add_named("shr", vec![xor, c1]);
+        let safe = g.add_named("add", vec![and, shr]);
+        let sum = g.add_named("add", vec![a, b]);
+        let plain = g.add_named("div", vec![sum, c2]);
+        Runner::default().run(&mut g, &internal_rules());
+        assert_eq!(g.find(safe), g.find(plain));
+    }
+
+    #[test]
+    fn assoc_comm_collapse_reassociated_sums() {
+        // (a + b) + c == a + (c + b)
+        let mut g = EGraph::new();
+        let a = g.add_named("param:0", vec![]);
+        let b = g.add_named("param:1", vec![]);
+        let c = g.add_named("param:2", vec![]);
+        let ab = g.add_named("add", vec![a, b]);
+        let abc = g.add_named("add", vec![ab, c]);
+        let cb = g.add_named("add", vec![c, b]);
+        let acb = g.add_named("add", vec![a, cb]);
+        Runner::default().run(&mut g, &internal_rules());
+        assert_eq!(g.find(abc), g.find(acb));
+    }
+
+    #[test]
+    fn mask_and_rem_collapse() {
+        let mut g = EGraph::new();
+        let x = g.add_named("param:0", vec![]);
+        let c31 = g.add_named("const:31", vec![]);
+        let c32 = g.add_named("const:32", vec![]);
+        let mask = g.add_named("and", vec![x, c31]);
+        let rem = g.add_named("rem", vec![x, c32]);
+        Runner::default().run(&mut g, &internal_rules());
+        assert_eq!(g.find(mask), g.find(rem));
+    }
+}

@@ -1,0 +1,44 @@
+//! KV-cache state for one active sequence.
+//!
+//! The artifacts use fixed-capacity caches (`[L, B, H, max_seq, Dh]`) with
+//! a scalar cursor: slots `< len` are valid; `llm_decode` writes slot
+//! `len` and the attention masks everything beyond. This is the
+//! paged-attention-without-paging layout appropriate for a batch-1 edge
+//! SoC (one contiguous region per sequence).
+
+use crate::runtime::Tensor;
+
+/// KV tensors + cursor for one sequence.
+#[derive(Debug, Clone)]
+pub struct KvState {
+    pub k: Tensor,
+    pub v: Tensor,
+    len: usize,
+}
+
+impl KvState {
+    pub fn new(k: Tensor, v: Tensor, len: usize) -> Self {
+        debug_assert_eq!(k.shape(), v.shape());
+        Self { k, v, len }
+    }
+
+    /// Number of valid positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total capacity (max_seq dimension).
+    pub fn capacity(&self) -> usize {
+        // [L, B, H, max_seq, Dh]
+        self.k.shape()[3]
+    }
+
+    /// Remaining slots.
+    pub fn remaining(&self) -> usize {
+        self.capacity().saturating_sub(self.len)
+    }
+}

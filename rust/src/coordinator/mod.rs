@@ -1,0 +1,291 @@
+//! L3 serving coordinator for the LLM case study (§6.5).
+//!
+//! A request router + batcher + KV-cache manager in the style of a
+//! (single-node) vLLM router, driving the AOT artifacts through the PJRT
+//! [`crate::runtime::Runtime`]. Python never appears here: prefill and
+//! decode are compiled HLO executables.
+//!
+//! Scheduling: a continuous-batching-style loop over single-sequence
+//! executables (the artifact batch is 1, matching the paper's single-core
+//! edge SoC): each [`Coordinator::step`] either admits a waiting request
+//! (prefill) or advances an active one (decode), under a configurable
+//! decode-first / prefill-first policy. Every step also advances the
+//! *modelled* SoC clock (base core vs Aquas ISAX cycle models from
+//! [`crate::workloads::llm`]), so the example can report TTFT/ITL both in
+//! host wall-clock and in simulated-silicon milliseconds.
+
+mod kv;
+
+pub use kv::KvState;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::{Runtime, Tensor};
+use crate::workloads::llm::{BaseCpuModel, IsaxLlmModel, LlmConfig};
+
+/// Scheduling policy for mixed prefill/decode load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Favor inter-token latency of running requests.
+    DecodeFirst,
+    /// Favor time-to-first-token of queued requests.
+    PrefillFirst,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub policy: SchedulePolicy,
+    /// Hard cap on concurrently active sequences (KV memory budget).
+    pub max_active: usize,
+    /// Cycle models for the simulated-SoC clock.
+    pub llm: LlmConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { policy: SchedulePolicy::DecodeFirst, max_active: 4, llm: LlmConfig::default() }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Per-request lifecycle metrics.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    /// Host wall-clock µs from submit to first generated token.
+    pub ttft_us: u128,
+    /// Host wall-clock µs between subsequent tokens.
+    pub itl_us: Vec<u128>,
+    /// Simulated base-core cycles attributable to this request.
+    pub sim_base_cycles: f64,
+    /// Simulated Aquas-ISAX cycles attributable to this request.
+    pub sim_isax_cycles: f64,
+}
+
+struct Active {
+    req: Request,
+    kv: KvState,
+    generated: Vec<i32>,
+    submitted: Instant,
+    first_token: Option<Instant>,
+    last_token: Option<Instant>,
+    itl_us: Vec<u128>,
+    sim_base_cycles: f64,
+    sim_isax_cycles: f64,
+}
+
+/// The serving coordinator.
+pub struct Coordinator<'rt> {
+    rt: &'rt Runtime,
+    cfg: CoordinatorConfig,
+    next_id: u64,
+    waiting: VecDeque<(Request, Instant)>,
+    active: Vec<Active>,
+    done: Vec<RequestMetrics>,
+    base_model: BaseCpuModel,
+    isax_model: IsaxLlmModel,
+    bus: crate::interface::model::MemInterface,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: CoordinatorConfig) -> Self {
+        Self {
+            rt,
+            cfg,
+            next_id: 0,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            base_model: BaseCpuModel::default(),
+            isax_model: IsaxLlmModel::default(),
+            bus: crate::interface::model::MemInterface::system_bus(),
+        }
+    }
+
+    /// Enqueue a prompt; returns the request id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<u64> {
+        let m = &self.rt.manifest().model;
+        if prompt.is_empty() {
+            return Err(Error::Coordinator("empty prompt".into()));
+        }
+        if prompt.len() > m.prefill_len {
+            return Err(Error::Coordinator(format!(
+                "prompt len {} exceeds compiled prefill window {}",
+                prompt.len(),
+                m.prefill_len
+            )));
+        }
+        if prompt.len() + max_new_tokens > m.max_seq {
+            return Err(Error::Coordinator(format!(
+                "prompt {} + new {} exceeds KV capacity {}",
+                prompt.len(),
+                max_new_tokens,
+                m.max_seq
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.waiting.push_back((Request { id, prompt, max_new_tokens }, Instant::now()));
+        Ok(id)
+    }
+
+    /// Is there outstanding work?
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.active.is_empty()
+    }
+
+    /// One scheduling step per policy (continuous batching). Returns
+    /// whether anything ran.
+    ///
+    /// - `PrefillFirst`: admit a waiting request whenever capacity allows
+    ///   (minimizes TTFT at the cost of ITL jitter for running requests);
+    /// - `DecodeFirst`: advance all running requests, then backfill one
+    ///   admission with leftover capacity (steadier ITL).
+    pub fn step(&mut self) -> Result<bool> {
+        let can_admit = !self.waiting.is_empty() && self.active.len() < self.cfg.max_active;
+        let can_decode = !self.active.is_empty();
+        match self.cfg.policy {
+            SchedulePolicy::PrefillFirst => {
+                if can_admit {
+                    self.do_prefill()?;
+                    return Ok(true);
+                }
+                if can_decode {
+                    self.do_decode_round()?;
+                    return Ok(true);
+                }
+                Ok(false)
+            }
+            SchedulePolicy::DecodeFirst => {
+                let mut ran = false;
+                if can_decode {
+                    self.do_decode_round()?;
+                    ran = true;
+                }
+                if !self.waiting.is_empty() && self.active.len() < self.cfg.max_active {
+                    self.do_prefill()?;
+                    ran = true;
+                }
+                Ok(ran)
+            }
+        }
+    }
+
+    /// Drive to completion; returns all request metrics.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestMetrics>> {
+        while self.has_work() {
+            self.step()?;
+        }
+        let mut out = std::mem::take(&mut self.done);
+        out.sort_by_key(|m| m.id);
+        Ok(out)
+    }
+
+    fn do_prefill(&mut self) -> Result<()> {
+        let (req, submitted) = self.waiting.pop_front().expect("checked non-empty");
+        let m = self.rt.manifest().model.clone();
+        // Right-pad the prompt to the compiled prefill window; the KV
+        // cursor only advances by the true prompt length, so padded
+        // positions are never attended.
+        let mut ids = req.prompt.clone();
+        ids.resize(m.prefill_len, 0);
+        let t = Tensor::i32(ids, &[1, m.prefill_len])?;
+        let outs = self.rt.execute("llm_prefill", &[t])?;
+        let logits = &outs[0];
+        // Next token = argmax over the last *real* prompt position.
+        let next = argmax_at(logits, req.prompt.len() - 1, m.vocab)?;
+        let kv = KvState::new(outs[1].clone(), outs[2].clone(), req.prompt.len());
+
+        let now = Instant::now();
+        let mut act = Active {
+            sim_base_cycles: 0.0,
+            sim_isax_cycles: 0.0,
+            kv,
+            generated: vec![next],
+            submitted,
+            first_token: Some(now),
+            last_token: Some(now),
+            itl_us: Vec::new(),
+            req,
+        };
+        // Simulated cycles for the whole prefill.
+        for t in 0..act.req.prompt.len() {
+            act.sim_base_cycles += self.base_model.token_cycles(&self.cfg.llm, t + 1);
+            act.sim_isax_cycles += self.isax_model.token_cycles(&self.cfg.llm, t + 1, &self.bus);
+        }
+        self.active.push(act);
+        Ok(())
+    }
+
+    fn do_decode_round(&mut self) -> Result<()> {
+        let m = self.rt.manifest().model.clone();
+        let mut finished = Vec::new();
+        for (i, act) in self.active.iter_mut().enumerate() {
+            let last = *act.generated.last().expect("at least the prefill token");
+            let ids = Tensor::i32(vec![last], &[1, 1])?;
+            let pos = Tensor::i32(vec![act.kv.len() as i32], &[1])?;
+            let outs =
+                self.rt.execute("llm_decode", &[ids, act.kv.k.clone(), act.kv.v.clone(), pos])?;
+            let next = argmax_flat(&outs[0])? as i32;
+            act.kv = KvState::new(outs[1].clone(), outs[2].clone(), act.kv.len() + 1);
+            act.generated.push(next);
+            let now = Instant::now();
+            if let Some(prev) = act.last_token.replace(now) {
+                act.itl_us.push(now.duration_since(prev).as_micros());
+            }
+            act.sim_base_cycles += self.base_model.token_cycles(&self.cfg.llm, act.kv.len());
+            act.sim_isax_cycles +=
+                self.isax_model.token_cycles(&self.cfg.llm, act.kv.len(), &self.bus);
+
+            let full = act.kv.len() >= m.max_seq;
+            if act.generated.len() >= act.req.max_new_tokens || full {
+                finished.push(i);
+            }
+        }
+        // Retire back-to-front so indices stay valid.
+        for i in finished.into_iter().rev() {
+            let act = self.active.remove(i);
+            let first = act.first_token.expect("prefill produced a token");
+            self.done.push(RequestMetrics {
+                id: act.req.id,
+                prompt_len: act.req.prompt.len(),
+                generated: act.generated,
+                ttft_us: first.duration_since(act.submitted).as_micros(),
+                itl_us: act.itl_us,
+                sim_base_cycles: act.sim_base_cycles,
+                sim_isax_cycles: act.sim_isax_cycles,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Argmax over logits[0, pos, :] of a [1, T, V] tensor.
+fn argmax_at(logits: &Tensor, pos: usize, vocab: usize) -> Result<i32> {
+    let data = logits.as_f32()?;
+    let row = &data[pos * vocab..(pos + 1) * vocab];
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    Ok(best as i32)
+}
+
+/// Argmax over a flat [1, V] tensor.
+fn argmax_flat(logits: &Tensor) -> Result<usize> {
+    logits.argmax_f32()
+}

@@ -1,0 +1,44 @@
+//! Cycle-level core models (the evaluation substrate of §6).
+//!
+//! The paper measures cycle counts by Verilator RTL simulation of a Rocket
+//! SoC; this crate substitutes calibrated analytical/cycle-approximate
+//! models (see DESIGN.md's substitution ledger):
+//!
+//! - [`rocket`] — the in-order scalar base core: interprets software IR
+//!   with per-op costs and a real cache model ([`memsys`]);
+//! - [`isax`] — the Aquas/naive ISAX execution engine: consumes the
+//!   synthesis [`crate::synthesis::Schedule`] + pipeline description, so
+//!   interface selection and transaction ordering decisions flow straight
+//!   into cycles;
+//! - [`boom`] — a BOOMv3-like 4-wide out-of-order model (Figure 6);
+//! - [`saturn`] — a Saturn-like VLEN=128 vector unit model (Figure 7).
+
+pub mod boom;
+pub mod isax;
+pub mod memsys;
+pub mod rocket;
+pub mod saturn;
+
+pub use isax::IsaxEngine;
+pub use memsys::{Cache, CacheConfig};
+pub use rocket::{CoreConfig, RocketModel};
+
+/// A cycle-count result for one kernel execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CycleReport {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub cache_misses: u64,
+    pub isax_invocations: u64,
+}
+
+impl CycleReport {
+    /// Cycles-per-instruction (guarded).
+    pub fn cpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.instructions as f64
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Saturn-like RISC-V vector unit model (Figure 7's comparison point).
+//!
+//! Saturn is a VLEN-configurable in-order vector unit attached to Rocket.
+//! The model executes a *vector profile* of each kernel: element-wise ops
+//! stream through the lanes at `elements / lanes` cycles per op, while
+//! reductions pay a log-tree + pipeline-drain penalty per occurrence —
+//! exactly the effect the paper blames for Saturn's poor `vmvar` showing
+//! ("reduction operations … are inefficient for such instruction sets").
+//!
+//! Per §6.4, Saturn's integration costs a 35% frequency drop and +75%
+//! RocketTile area (−26% if the FP half is stripped); those factors live
+//! in [`crate::area`].
+
+use crate::cores::CycleReport;
+
+/// How a kernel maps onto vector hardware.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VectorProfile {
+    /// Total elements processed.
+    pub elements: u64,
+    /// Element-wise vector ops per element (map-type work).
+    pub vector_ops_per_element: u64,
+    /// Reduction operations over the whole stream (sum/max trees).
+    pub reductions: u64,
+    /// Scalar (non-vectorizable) ops, run on the host core.
+    pub scalar_ops: u64,
+    /// Vector loads/stores per element.
+    pub mem_ops_per_element: u64,
+}
+
+/// Saturn model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SaturnConfig {
+    /// VLEN in bits (paper configuration: 128).
+    pub vlen: u64,
+    /// Element width in bits (f32/i32 workloads).
+    pub sew: u64,
+    /// Pipeline drain + tree latency per reduction.
+    pub reduction_cost: u64,
+    /// Cycles per vector memory op per occupied lane-group.
+    pub mem_throughput: u64,
+    /// Vector instruction issue overhead (vsetvl + dispatch).
+    pub issue_overhead: u64,
+}
+
+impl Default for SaturnConfig {
+    fn default() -> Self {
+        Self { vlen: 128, sew: 32, reduction_cost: 24, mem_throughput: 1, issue_overhead: 2 }
+    }
+}
+
+/// The vector-unit model.
+pub struct SaturnModel {
+    pub cfg: SaturnConfig,
+}
+
+impl SaturnModel {
+    pub fn new(cfg: SaturnConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Lanes available for the element width.
+    pub fn lanes(&self) -> u64 {
+        (self.cfg.vlen / self.cfg.sew).max(1)
+    }
+
+    /// Cycles for a kernel described by `profile`.
+    pub fn simulate(&self, profile: &VectorProfile) -> CycleReport {
+        let lanes = self.lanes();
+        let groups = profile.elements.div_ceil(lanes).max(1);
+        let compute = groups
+            * profile.vector_ops_per_element
+            * 1
+            + groups * profile.mem_ops_per_element * self.cfg.mem_throughput;
+        let issue = (profile.vector_ops_per_element + profile.mem_ops_per_element)
+            * self.cfg.issue_overhead;
+        let reductions = profile.reductions * self.cfg.reduction_cost;
+        let scalar = profile.scalar_ops;
+        let cycles = compute + issue + reductions + scalar;
+        CycleReport {
+            cycles,
+            instructions: profile.vector_ops_per_element * groups
+                + profile.scalar_ops
+                + profile.reductions,
+            cache_misses: 0,
+            isax_invocations: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_lanes_at_vlen128_sew32() {
+        assert_eq!(SaturnModel::new(SaturnConfig::default()).lanes(), 4);
+    }
+
+    #[test]
+    fn elementwise_work_scales_down_by_lanes() {
+        let m = SaturnModel::new(SaturnConfig::default());
+        let small = m.simulate(&VectorProfile {
+            elements: 64,
+            vector_ops_per_element: 4,
+            mem_ops_per_element: 2,
+            ..Default::default()
+        });
+        let large = m.simulate(&VectorProfile {
+            elements: 256,
+            vector_ops_per_element: 4,
+            mem_ops_per_element: 2,
+            ..Default::default()
+        });
+        assert!(large.cycles >= 3 * small.cycles);
+    }
+
+    #[test]
+    fn reductions_dominate_small_kernels() {
+        // The vmvar effect: heavy reduction content erases the lane win.
+        let m = SaturnModel::new(SaturnConfig::default());
+        let maponly = m.simulate(&VectorProfile {
+            elements: 64,
+            vector_ops_per_element: 2,
+            mem_ops_per_element: 1,
+            ..Default::default()
+        });
+        let reduction_heavy = m.simulate(&VectorProfile {
+            elements: 64,
+            vector_ops_per_element: 2,
+            mem_ops_per_element: 1,
+            reductions: 8,
+            ..Default::default()
+        });
+        assert!(reduction_heavy.cycles > 2 * maponly.cycles);
+    }
+}

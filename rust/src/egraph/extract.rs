@@ -1,0 +1,177 @@
+//! Cost-based extraction: pick one e-node per class minimizing a
+//! user-defined cost, bottom-up to a fixpoint (handles cycles introduced
+//! by unions). Used by the compiler's §5.3 heuristic cost model
+//! (penalize non-affine ops, prefer ISAX markers) and by the
+//! extract-to-run-MLIR-pass path of §5.2.
+
+use std::collections::HashMap;
+
+use crate::egraph::graph::{ClassId, EGraph, ENode};
+
+/// Cost of applying `sym` to children with the given costs. Return
+/// `f64::INFINITY` to forbid a node.
+pub type CostFn<'a> = &'a dyn Fn(&str, &[f64]) -> f64;
+
+/// An extracted term (tree of symbols).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Extracted {
+    pub sym: String,
+    pub children: Vec<Extracted>,
+    pub cost: f64,
+}
+
+impl Extracted {
+    /// Render as an s-expression (tests + debugging).
+    pub fn to_sexp(&self) -> String {
+        if self.children.is_empty() {
+            self.sym.clone()
+        } else {
+            let kids: Vec<String> = self.children.iter().map(Extracted::to_sexp).collect();
+            format!("({} {})", self.sym, kids.join(" "))
+        }
+    }
+}
+
+/// Extract the minimum-cost term for `root`.
+/// Returns `None` if every node in the class is forbidden or unreachable.
+pub fn extract_best(g: &mut EGraph, root: ClassId, cost: CostFn<'_>) -> Option<Extracted> {
+    let root = g.find(root);
+    // Fixpoint: best known cost + node per class.
+    let mut best: HashMap<ClassId, (f64, ENode)> = HashMap::new();
+    let classes = g.class_ids();
+    loop {
+        let mut changed = false;
+        for &c in &classes {
+            let nodes = g.nodes(c);
+            for node in nodes {
+                let mut child_costs = Vec::with_capacity(node.children.len());
+                let mut ok = true;
+                for &ch in &node.children {
+                    let ch = g.find(ch);
+                    match best.get(&ch) {
+                        Some(&(cc, _)) => child_costs.push(cc),
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                let name = g.sym_name(node.sym).to_string();
+                let c_total = cost(&name, &child_costs);
+                if !c_total.is_finite() {
+                    continue;
+                }
+                let cur = best.get(&c).map(|&(x, _)| x).unwrap_or(f64::INFINITY);
+                if c_total < cur {
+                    best.insert(c, (c_total, node.clone()));
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    build(g, root, &best)
+}
+
+fn build(
+    g: &mut EGraph,
+    c: ClassId,
+    best: &HashMap<ClassId, (f64, ENode)>,
+) -> Option<Extracted> {
+    let c = g.find(c);
+    let (cost, node) = best.get(&c)?.clone();
+    let mut children = Vec::with_capacity(node.children.len());
+    for &ch in &node.children {
+        children.push(build(g, ch, best)?);
+    }
+    Some(Extracted { sym: g.sym_name(node.sym).to_string(), children, cost })
+}
+
+/// A simple additive cost: every node costs its table weight (default 1)
+/// plus its children. Useful default for tests and the §5.3 model.
+pub fn weighted_cost<'a>(
+    weights: &'a HashMap<String, f64>,
+) -> impl Fn(&str, &[f64]) -> f64 + 'a {
+    move |sym, kids| {
+        let own = weights.get(sym).copied().unwrap_or(1.0);
+        own + kids.iter().sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::rewrite::{Rewrite, Runner};
+
+    #[test]
+    fn picks_cheaper_variant() {
+        let mut g = EGraph::new();
+        let x = g.add_named("x", vec![]);
+        let c2 = g.add_named("const:2", vec![]);
+        let shl = g.add_named("shl", vec![x, c2]);
+        let c4 = g.add_named("const:4", vec![]);
+        let mul = g.add_named("mul", vec![x, c4]);
+        g.union(shl, mul);
+        g.rebuild();
+
+        // Affine-friendly cost: shl is penalized (§5.3).
+        let mut w = HashMap::new();
+        w.insert("shl".to_string(), 10.0);
+        w.insert("mul".to_string(), 1.0);
+        let cost_fn = weighted_cost(&w);
+        let out = extract_best(&mut g, shl, &cost_fn).unwrap();
+        assert_eq!(out.sym, "mul");
+    }
+
+    #[test]
+    fn handles_cycles_from_unions() {
+        // x unioned with (id x): extraction must not loop forever.
+        let mut g = EGraph::new();
+        let x = g.add_named("x", vec![]);
+        let idx = g.add_named("id", vec![x]);
+        g.union(x, idx);
+        g.rebuild();
+        let w = HashMap::new();
+        let cost_fn = weighted_cost(&w);
+        let out = extract_best(&mut g, x, &cost_fn).unwrap();
+        assert_eq!(out.sym, "x"); // the non-cyclic representative
+    }
+
+    #[test]
+    fn forbidden_nodes_skipped() {
+        let mut g = EGraph::new();
+        let a = g.add_named("bad", vec![]);
+        let b = g.add_named("good", vec![]);
+        g.union(a, b);
+        g.rebuild();
+        let cost_fn = |sym: &str, kids: &[f64]| {
+            if sym == "bad" {
+                f64::INFINITY
+            } else {
+                1.0 + kids.iter().sum::<f64>()
+            }
+        };
+        let out = extract_best(&mut g, a, &cost_fn).unwrap();
+        assert_eq!(out.sym, "good");
+    }
+
+    #[test]
+    fn extraction_after_saturation() {
+        let mut g = EGraph::new();
+        let x = g.add_named("x", vec![]);
+        let zero = g.add_named("const:0", vec![]);
+        let add = g.add_named("add", vec![x, zero]);
+        let rules = vec![Rewrite::simple("add-zero", "(add ?x const:0)", "?x")];
+        Runner::default().run(&mut g, &rules);
+        let w = HashMap::new();
+        let cost_fn = weighted_cost(&w);
+        let out = extract_best(&mut g, add, &cost_fn).unwrap();
+        assert_eq!(out.sym, "x");
+        assert_eq!(out.cost, 1.0);
+    }
+}

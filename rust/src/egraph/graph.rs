@@ -1,0 +1,294 @@
+//! Core e-graph: interned symbols, union-find, hashcons, congruence.
+
+use std::collections::HashMap;
+
+/// Interned symbol id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SymId(pub u32);
+
+/// E-class id (canonical after `find`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u32);
+
+/// An e-node: a function symbol applied to child e-classes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ENode {
+    pub sym: SymId,
+    pub children: Vec<ClassId>,
+}
+
+impl ENode {
+    pub fn leaf(sym: SymId) -> Self {
+        Self { sym, children: vec![] }
+    }
+
+    fn canonicalize(&self, uf: &mut UnionFind) -> ENode {
+        ENode { sym: self.sym, children: self.children.iter().map(|&c| uf.find(c)).collect() }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn make(&mut self) -> ClassId {
+        let id = self.parent.len() as u32;
+        self.parent.push(id);
+        ClassId(id)
+    }
+
+    fn find(&mut self, c: ClassId) -> ClassId {
+        let mut root = c.0;
+        while self.parent[root as usize] != root {
+            root = self.parent[root as usize];
+        }
+        // path compression
+        let mut cur = c.0;
+        while self.parent[cur as usize] != root {
+            let next = self.parent[cur as usize];
+            self.parent[cur as usize] = root;
+            cur = next;
+        }
+        ClassId(root)
+    }
+
+    fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            // Union toward the smaller id keeps canonical ids stable-ish.
+            let (keep, drop) = if ra.0 < rb.0 { (ra, rb) } else { (rb, ra) };
+            self.parent[drop.0 as usize] = keep.0;
+            keep
+        } else {
+            ra
+        }
+    }
+}
+
+/// The e-graph.
+#[derive(Debug, Default, Clone)]
+pub struct EGraph {
+    syms: Vec<String>,
+    sym_ids: HashMap<String, SymId>,
+    uf: UnionFind,
+    /// Hashcons: canonical node -> class.
+    memo: HashMap<ENode, ClassId>,
+    /// Nodes per canonical class.
+    classes: HashMap<ClassId, Vec<ENode>>,
+    /// Classes touched since the last rebuild.
+    dirty: Vec<ClassId>,
+}
+
+impl EGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a symbol name.
+    pub fn sym(&mut self, name: &str) -> SymId {
+        if let Some(&id) = self.sym_ids.get(name) {
+            return id;
+        }
+        let id = SymId(self.syms.len() as u32);
+        self.syms.push(name.to_string());
+        self.sym_ids.insert(name.to_string(), id);
+        id
+    }
+
+    /// Look up a symbol without interning.
+    pub fn find_sym(&self, name: &str) -> Option<SymId> {
+        self.sym_ids.get(name).copied()
+    }
+
+    /// Symbol name.
+    pub fn sym_name(&self, s: SymId) -> &str {
+        &self.syms[s.0 as usize]
+    }
+
+    /// Canonical class id.
+    pub fn find(&mut self, c: ClassId) -> ClassId {
+        self.uf.find(c)
+    }
+
+    /// Add an e-node, returning its class (hashconsed).
+    pub fn add(&mut self, node: ENode) -> ClassId {
+        let node = node.canonicalize(&mut self.uf);
+        if let Some(&c) = self.memo.get(&node) {
+            return self.uf.find(c);
+        }
+        let id = self.uf.make();
+        self.memo.insert(node.clone(), id);
+        self.classes.entry(id).or_default().push(node);
+        id
+    }
+
+    /// Convenience: add by symbol name + children.
+    pub fn add_named(&mut self, name: &str, children: Vec<ClassId>) -> ClassId {
+        let sym = self.sym(name);
+        self.add(ENode { sym, children })
+    }
+
+    /// Merge two classes; returns the canonical survivor.
+    pub fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
+        let ra = self.uf.find(a);
+        let rb = self.uf.find(b);
+        if ra == rb {
+            return ra;
+        }
+        let keep = self.uf.union(ra, rb);
+        let drop = if keep == ra { rb } else { ra };
+        let moved = self.classes.remove(&drop).unwrap_or_default();
+        self.classes.entry(keep).or_default().extend(moved);
+        self.dirty.push(keep);
+        keep
+    }
+
+    /// Restore congruence: nodes whose children were unioned may now be
+    /// duplicates; re-canonicalize until fixpoint.
+    pub fn rebuild(&mut self) {
+        while !self.dirty.is_empty() {
+            self.dirty.clear();
+            let old_memo = std::mem::take(&mut self.memo);
+            let mut new_memo: HashMap<ENode, ClassId> = HashMap::with_capacity(old_memo.len());
+            let mut unions: Vec<(ClassId, ClassId)> = Vec::new();
+            for (node, cls) in old_memo {
+                let canon = node.canonicalize(&mut self.uf);
+                let ccls = self.uf.find(cls);
+                match new_memo.get(&canon) {
+                    Some(&existing) if existing != ccls => unions.push((existing, ccls)),
+                    Some(_) => {}
+                    None => {
+                        new_memo.insert(canon, ccls);
+                    }
+                }
+            }
+            self.memo = new_memo;
+            for (a, b) in unions {
+                self.union(a, b);
+            }
+            // Re-bucket class nodes canonically (hash-set dedup per bucket).
+            let mut new_classes: HashMap<ClassId, Vec<ENode>> = HashMap::new();
+            let mut seen: std::collections::HashSet<(ClassId, ENode)> =
+                std::collections::HashSet::new();
+            let old = std::mem::take(&mut self.classes);
+            for (cls, nodes) in old {
+                let ccls = self.uf.find(cls);
+                for n in nodes {
+                    let canon = n.canonicalize(&mut self.uf);
+                    if seen.insert((ccls, canon.clone())) {
+                        new_classes.entry(ccls).or_default().push(canon);
+                    }
+                }
+            }
+            self.classes = new_classes;
+        }
+    }
+
+    /// Nodes of a class (canonical).
+    pub fn nodes(&mut self, c: ClassId) -> Vec<ENode> {
+        let c = self.uf.find(c);
+        self.classes.get(&c).cloned().unwrap_or_default()
+    }
+
+    /// Nodes of a class restricted to one symbol + arity — the e-matching
+    /// hot path (avoids cloning whole classes that can't match anyway).
+    pub fn nodes_with_sym(&mut self, c: ClassId, sym: SymId, arity: usize) -> Vec<ENode> {
+        let c = self.uf.find(c);
+        match self.classes.get(&c) {
+            Some(ns) => ns
+                .iter()
+                .filter(|n| n.sym == sym && n.children.len() == arity)
+                .cloned()
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// All canonical class ids.
+    pub fn class_ids(&mut self) -> Vec<ClassId> {
+        let ids: Vec<ClassId> = self.classes.keys().copied().collect();
+        ids.into_iter().map(|c| self.uf.find(c)).collect()
+    }
+
+    /// Total e-node count (Table 3's "e-nodes" statistic).
+    pub fn node_count(&self) -> usize {
+        self.classes.values().map(|v| v.len()).sum()
+    }
+
+    /// Class count.
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Does class `c` contain a node with symbol `sym` (marker test)?
+    pub fn class_has_sym(&mut self, c: ClassId, sym: SymId) -> bool {
+        let c = self.uf.find(c);
+        self.classes.get(&c).map(|ns| ns.iter().any(|n| n.sym == sym)).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hashcons_dedupes() {
+        let mut g = EGraph::new();
+        let a = g.add_named("x", vec![]);
+        let b = g.add_named("x", vec![]);
+        assert_eq!(a, b);
+        assert_eq!(g.node_count(), 1);
+    }
+
+    #[test]
+    fn union_merges_classes() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        assert_ne!(g.find(a), g.find(b));
+        g.union(a, b);
+        assert_eq!(g.find(a), g.find(b));
+    }
+
+    #[test]
+    fn congruence_closure() {
+        // f(a), f(b): union(a, b) must make f(a) == f(b) after rebuild.
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let fa = g.add_named("f", vec![a]);
+        let fb = g.add_named("f", vec![b]);
+        assert_ne!(g.find(fa), g.find(fb));
+        g.union(a, b);
+        g.rebuild();
+        assert_eq!(g.find(fa), g.find(fb));
+    }
+
+    #[test]
+    fn nested_congruence() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let fa = g.add_named("f", vec![a]);
+        let fb = g.add_named("f", vec![b]);
+        let gfa = g.add_named("g", vec![fa]);
+        let gfb = g.add_named("g", vec![fb]);
+        g.union(a, b);
+        g.rebuild();
+        assert_eq!(g.find(gfa), g.find(gfb));
+    }
+
+    #[test]
+    fn class_has_marker() {
+        let mut g = EGraph::new();
+        let a = g.add_named("expr", vec![]);
+        let m = g.add_named("marker", vec![]);
+        g.union(a, m);
+        g.rebuild();
+        let ms = g.sym("marker");
+        assert!(g.class_has_sym(a, ms));
+    }
+}

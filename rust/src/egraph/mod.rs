@@ -1,0 +1,20 @@
+//! §2.3 / §5.2 — an e-graph engine (egg/egglog-style, Willsey et al.).
+//!
+//! An *e-graph* compactly represents a large space of equivalent programs:
+//! *e-classes* group equivalent *e-nodes*; an e-node is a function symbol
+//! applied to child e-class ids. Rewrites match patterns over e-nodes and
+//! `union` their results into the matched class, non-destructively
+//! accumulating every variant. Extraction selects one representative per
+//! class minimizing a user-defined cost.
+//!
+//! Submodules: [`graph`] (union-find + hashcons + congruence closure),
+//! [`rewrite`] (pattern language + saturation engine with iteration/node
+//! limits), [`extract`] (cost-based extraction).
+
+pub mod extract;
+pub mod graph;
+pub mod rewrite;
+
+pub use extract::{extract_best, CostFn, Extracted};
+pub use graph::{ClassId, EGraph, ENode, SymId};
+pub use rewrite::{Pattern, Rewrite, RunReport, Runner};

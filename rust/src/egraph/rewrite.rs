@@ -1,0 +1,368 @@
+//! Pattern language + saturation engine (the "internal rewrites" of §5.3).
+//!
+//! Patterns are small s-expression trees over symbols and variables.
+//! A [`Rewrite`] either instantiates a RHS pattern or runs a dynamic
+//! callback (needed e.g. for constant arithmetic: `x << c → x * 2^c`).
+//! The [`Runner`] applies all rules to saturation under iteration and
+//! node-count limits — the paper's antidote to e-graph blowup.
+
+use std::collections::HashMap;
+
+use crate::egraph::graph::{ClassId, EGraph, ENode};
+
+/// A pattern: variable or symbol application.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Pattern {
+    /// Binds any e-class.
+    Var(String),
+    /// Symbol with sub-patterns.
+    App(String, Vec<Pattern>),
+}
+
+impl Pattern {
+    /// Parse a tiny s-expression: `(mul ?x (const:4))`, `?x`, `iv:0`.
+    pub fn parse(text: &str) -> Pattern {
+        let tokens = tokenize(text);
+        let (p, rest) = parse_tokens(&tokens);
+        assert!(rest.is_empty(), "trailing tokens in pattern {text:?}");
+        p
+    }
+
+    /// Variables bound by this pattern.
+    pub fn vars(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_vars(&mut out);
+        out
+    }
+
+    fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Pattern::Var(v) => {
+                if !out.contains(v) {
+                    out.push(v.clone());
+                }
+            }
+            Pattern::App(_, kids) => kids.iter().for_each(|k| k.collect_vars(out)),
+        }
+    }
+}
+
+fn tokenize(text: &str) -> Vec<String> {
+    text.replace('(', " ( ")
+        .replace(')', " ) ")
+        .split_whitespace()
+        .map(str::to_string)
+        .collect()
+}
+
+fn parse_tokens(tokens: &[String]) -> (Pattern, &[String]) {
+    match tokens.first().map(String::as_str) {
+        Some("(") => {
+            let head = tokens[1].clone();
+            let mut rest = &tokens[2..];
+            let mut kids = Vec::new();
+            while rest.first().map(String::as_str) != Some(")") {
+                let (p, r) = parse_tokens(rest);
+                kids.push(p);
+                rest = r;
+            }
+            (Pattern::App(head, kids), &rest[1..])
+        }
+        Some(tok) if tok.starts_with('?') => {
+            (Pattern::Var(tok[1..].to_string()), &tokens[1..])
+        }
+        Some(tok) => (Pattern::App(tok.to_string(), vec![]), &tokens[1..]),
+        None => panic!("empty pattern"),
+    }
+}
+
+/// Variable bindings from a successful match.
+pub type Bindings = HashMap<String, ClassId>;
+
+/// RHS action of a rule.
+pub enum Action {
+    /// Instantiate a pattern.
+    Template(Pattern),
+    /// Dynamic: given the e-graph + bindings, produce the replacement
+    /// class (or None to skip this match).
+    Dynamic(Box<dyn Fn(&mut EGraph, &Bindings) -> Option<ClassId> + Send + Sync>),
+}
+
+/// A named rewrite rule.
+pub struct Rewrite {
+    pub name: String,
+    pub lhs: Pattern,
+    pub action: Action,
+}
+
+impl Rewrite {
+    /// `lhs => rhs` with both sides as pattern text.
+    pub fn simple(name: &str, lhs: &str, rhs: &str) -> Self {
+        Self {
+            name: name.into(),
+            lhs: Pattern::parse(lhs),
+            action: Action::Template(Pattern::parse(rhs)),
+        }
+    }
+
+    /// Dynamic rule.
+    pub fn dynamic<F>(name: &str, lhs: &str, f: F) -> Self
+    where
+        F: Fn(&mut EGraph, &Bindings) -> Option<ClassId> + Send + Sync + 'static,
+    {
+        Self { name: name.into(), lhs: Pattern::parse(lhs), action: Action::Dynamic(Box::new(f)) }
+    }
+}
+
+/// Match `pattern` against class `c`: extend `binds`, calling `sink` per
+/// complete match.
+pub fn match_pattern(
+    g: &mut EGraph,
+    pattern: &Pattern,
+    c: ClassId,
+    binds: &Bindings,
+    sink: &mut Vec<Bindings>,
+) {
+    match pattern {
+        Pattern::Var(v) => {
+            let c = g.find(c);
+            match binds.get(v) {
+                Some(&bound) if g.find(bound) != c => {}
+                _ => {
+                    let mut b = binds.clone();
+                    b.insert(v.clone(), c);
+                    sink.push(b);
+                }
+            }
+        }
+        Pattern::App(name, kids) => {
+            let Some(sym) = g.find_sym(name) else { return };
+            let nodes = g.nodes_with_sym(c, sym, kids.len());
+            for node in nodes {
+                // Match children left-to-right, threading bindings.
+                let mut states = vec![binds.clone()];
+                for (kid_pat, &kid_cls) in kids.iter().zip(&node.children) {
+                    let mut next = Vec::new();
+                    for s in &states {
+                        match_pattern(g, kid_pat, kid_cls, s, &mut next);
+                    }
+                    states = next;
+                    if states.is_empty() {
+                        break;
+                    }
+                }
+                sink.extend(states);
+            }
+        }
+    }
+}
+
+/// Instantiate a pattern under bindings.
+pub fn instantiate(g: &mut EGraph, pattern: &Pattern, binds: &Bindings) -> ClassId {
+    match pattern {
+        Pattern::Var(v) => *binds.get(v).unwrap_or_else(|| panic!("unbound var ?{v}")),
+        Pattern::App(name, kids) => {
+            let children: Vec<ClassId> = kids.iter().map(|k| instantiate(g, k, binds)).collect();
+            let sym = g.sym(name);
+            g.add(ENode { sym, children })
+        }
+    }
+}
+
+/// Saturation report (feeds Table 3).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RunReport {
+    pub iterations: usize,
+    pub applied: usize,
+    /// Applications per rule name.
+    pub per_rule: Vec<(String, usize)>,
+    pub saturated: bool,
+    pub node_limit_hit: bool,
+}
+
+/// The saturation engine.
+pub struct Runner {
+    pub iter_limit: usize,
+    pub node_limit: usize,
+    /// Cap on matches applied per rule per iteration (backstop against a
+    /// single combinatorial pattern flooding the graph).
+    pub match_limit: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self { iter_limit: 16, node_limit: 50_000, match_limit: 10_000 }
+    }
+}
+
+impl Runner {
+    /// Apply `rules` to saturation (or limits). Returns the report.
+    pub fn run(&self, g: &mut EGraph, rules: &[Rewrite]) -> RunReport {
+        let mut report = RunReport {
+            per_rule: rules.iter().map(|r| (r.name.clone(), 0)).collect(),
+            ..Default::default()
+        };
+        for _ in 0..self.iter_limit {
+            report.iterations += 1;
+            if !self.run_one(g, rules, &mut report) {
+                report.saturated = true;
+                break;
+            }
+            if report.node_limit_hit {
+                break;
+            }
+        }
+        report
+    }
+
+    /// One iteration over all rules; returns true if anything changed.
+    /// Exposed so callers (the matcher) can interleave match attempts with
+    /// saturation rounds instead of paying for full saturation up front.
+    pub fn run_one(&self, g: &mut EGraph, rules: &[Rewrite], report: &mut RunReport) -> bool {
+        if report.per_rule.len() != rules.len() {
+            report.per_rule = rules.iter().map(|r| (r.name.clone(), 0)).collect();
+        }
+        let mut any_change = false;
+        for (ri, rule) in rules.iter().enumerate() {
+            // Gather matches first (immutable phase), apply after.
+            let classes = g.class_ids();
+            let mut matches: Vec<(ClassId, Bindings)> = Vec::new();
+            'collect: for c in classes {
+                let mut sink = Vec::new();
+                match_pattern(g, &rule.lhs, c, &HashMap::new(), &mut sink);
+                for b in sink {
+                    matches.push((c, b));
+                    if matches.len() >= self.match_limit {
+                        break 'collect;
+                    }
+                }
+            }
+            let mut rule_changed = false;
+            for (c, binds) in matches {
+                let replacement = match &rule.action {
+                    Action::Template(rhs) => Some(instantiate(g, rhs, &binds)),
+                    Action::Dynamic(f) => f(g, &binds),
+                };
+                if let Some(r) = replacement {
+                    let before = g.find(c);
+                    let after = g.find(r);
+                    if before != after {
+                        g.union(c, r);
+                        any_change = true;
+                        rule_changed = true;
+                        report.applied += 1;
+                        report.per_rule[ri].1 += 1;
+                    }
+                }
+                // Node budget enforced *inside* the application loop: one
+                // combinatorial rule must not flood the graph unchecked.
+                if g.node_count() > self.node_limit {
+                    report.node_limit_hit = true;
+                    g.rebuild();
+                    return any_change;
+                }
+            }
+            if rule_changed {
+                g.rebuild();
+            }
+        }
+        any_change
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = Pattern::parse("(mul ?x (add ?y const:1))");
+        assert_eq!(
+            p,
+            Pattern::App(
+                "mul".into(),
+                vec![
+                    Pattern::Var("x".into()),
+                    Pattern::App(
+                        "add".into(),
+                        vec![Pattern::Var("y".into()), Pattern::App("const:1".into(), vec![])]
+                    )
+                ]
+            )
+        );
+    }
+
+    #[test]
+    fn commutativity_saturates() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let ab = g.add_named("mul", vec![a, b]);
+        let ba = g.add_named("mul", vec![b, a]);
+        assert_ne!(g.find(ab), g.find(ba));
+        let rules = vec![Rewrite::simple("comm-mul", "(mul ?x ?y)", "(mul ?y ?x)")];
+        let report = Runner::default().run(&mut g, &rules);
+        assert!(report.saturated);
+        assert_eq!(g.find(ab), g.find(ba));
+    }
+
+    #[test]
+    fn shl_to_mul_dynamic() {
+        let mut g = EGraph::new();
+        let x = g.add_named("x", vec![]);
+        let c2 = g.add_named("const:2", vec![]);
+        let shl = g.add_named("shl", vec![x, c2]);
+        // x << 2 => x * 4 (the §5.3 example)
+        let rule = Rewrite::dynamic("shl-to-mul", "(shl ?x ?c)", |g, binds| {
+            let c = binds["c"];
+            let nodes = g.nodes(c);
+            for n in nodes {
+                let name = g.sym_name(n.sym).to_string();
+                if let Some(v) = name.strip_prefix("const:") {
+                    if let Ok(k) = v.parse::<i64>() {
+                        if (0..=62).contains(&k) {
+                            let x = binds["x"];
+                            let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
+                            return Some(g.add_named("mul", vec![x, cm]));
+                        }
+                    }
+                }
+            }
+            None
+        });
+        let report = Runner::default().run(&mut g, &[rule]);
+        assert_eq!(report.applied, 1);
+        let c4 = g.add_named("const:4", vec![]);
+        let mul = g.add_named("mul", vec![x, c4]);
+        assert_eq!(g.find(shl), g.find(mul));
+    }
+
+    #[test]
+    fn node_limit_stops_explosion() {
+        let mut g = EGraph::new();
+        let x = g.add_named("x", vec![]);
+        g.add_named("f", vec![x]);
+        // Genuinely generative rule: each application mints a fresh `g`
+        // wrapper, so the graph grows without bound.
+        let rule = Rewrite::simple("grow", "(f ?x)", "(f (g ?x))");
+        let runner = Runner { iter_limit: 1000, node_limit: 50, ..Default::default() };
+        let report = runner.run(&mut g, &[rule]);
+        assert!(report.node_limit_hit);
+        assert!(g.node_count() > 50);
+    }
+
+    #[test]
+    fn nonlinear_pattern_requires_same_class() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let aa = g.add_named("sub", vec![a, a]);
+        let ab = g.add_named("sub", vec![b, a]);
+        // x - x => zero
+        let rules = vec![Rewrite::simple("sub-self", "(sub ?x ?x)", "zero")];
+        Runner::default().run(&mut g, &rules);
+        let zero = g.add_named("zero", vec![]);
+        assert_eq!(g.find(aa), g.find(zero));
+        assert_ne!(g.find(ab), g.find(zero));
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced anywhere in the Aquas stack.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// IR construction or verification failure.
+    #[error("ir error: {0}")]
+    Ir(String),
+
+    /// A memory transaction violates the microarchitectural constraints of
+    /// its bound interface (§4.1: beat count, alignment, in-flight limit).
+    #[error("interface constraint violated: {0}")]
+    Interface(String),
+
+    /// Synthesis-time optimization failure (§4.3).
+    #[error("synthesis error: {0}")]
+    Synthesis(String),
+
+    /// E-graph or rewrite failure (§5.2–5.3).
+    #[error("egraph error: {0}")]
+    Egraph(String),
+
+    /// Compiler matching/lowering failure (§5.4).
+    #[error("compiler error: {0}")]
+    Compiler(String),
+
+    /// Cycle-level simulation failure.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// PJRT runtime failure (artifact loading / execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Serving-coordinator failure.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Artifact manifest problems.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

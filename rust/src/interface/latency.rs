@@ -1,0 +1,236 @@
+//! §4.1 latency recurrences and the §4.3 closed-form `T_k` approximation.
+//!
+//! For a sequence of `N` same-kind transactions on interface `k`, with
+//! `m_j` the size of the `j`-th transaction, the paper defines issue cycle
+//! `a_j` and completion cycle `b_j` (`a_j = b_j = -1` for `j ≤ 0`):
+//!
+//! ```text
+//! a_j      = 1 + max(a_{j-1}, b_{j-I_k})
+//! b_j(ld)  = m_j/W_k + max(b_{j-1}, a_j + L_k - 1)
+//! b_j(st)  = m_j/W_k + E_k + max(b_{j-1}, a_j - 1)
+//! ```
+//!
+//! These serialize transactions waiting for structural (in-flight) slots
+//! while overlapping data beats; `b_N` is the sequence latency.
+
+use crate::interface::model::MemInterface;
+
+/// Load or store; the paper's model treats the two directions separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransactionKind {
+    Load,
+    Store,
+}
+
+/// Exact sequence latency `b_N` (in cycles) for same-kind transactions of
+/// `sizes` bytes issued back-to-back on `itfc`, per the §4.1 recurrences.
+///
+/// Panics in debug builds if any size is not a legal transaction; release
+/// builds round beats up (the hardware's runtime fallback path).
+pub fn sequence_latency(itfc: &MemInterface, kind: TransactionKind, sizes: &[usize]) -> u64 {
+    if sizes.is_empty() {
+        return 0;
+    }
+    let n = sizes.len();
+    let i_k = itfc.in_flight.max(1);
+    // a/b indexed 1..=n with the -1 initial condition for j <= 0.
+    let mut a = vec![-1i64; n + 1];
+    let mut b = vec![-1i64; n + 1];
+    for j in 1..=n {
+        let beats = sizes[j - 1].div_ceil(itfc.width) as i64;
+        let b_blocked = if j > i_k { b[j - i_k] } else { -1 };
+        a[j] = 1 + a[j - 1].max(b_blocked);
+        b[j] = match kind {
+            TransactionKind::Load => beats + b[j - 1].max(a[j] + itfc.read_lead as i64 - 1),
+            TransactionKind::Store => {
+                beats + itfc.write_cost as i64 + b[j - 1].max(a[j] - 1)
+            }
+        };
+    }
+    b[n].max(0) as u64
+}
+
+/// Completion cycles of every transaction in the sequence (`b_1..=b_N`).
+/// Used by the timing-diagram reproduction (Figure 3) and the ISAX engine.
+pub fn completion_cycles(
+    itfc: &MemInterface,
+    kind: TransactionKind,
+    sizes: &[usize],
+) -> Vec<u64> {
+    let n = sizes.len();
+    let i_k = itfc.in_flight.max(1);
+    let mut a = vec![-1i64; n + 1];
+    let mut b = vec![-1i64; n + 1];
+    let mut out = Vec::with_capacity(n);
+    for j in 1..=n {
+        let beats = sizes[j - 1].div_ceil(itfc.width) as i64;
+        let b_blocked = if j > i_k { b[j - i_k] } else { -1 };
+        a[j] = 1 + a[j - 1].max(b_blocked);
+        b[j] = match kind {
+            TransactionKind::Load => beats + b[j - 1].max(a[j] + itfc.read_lead as i64 - 1),
+            TransactionKind::Store => {
+                beats + itfc.write_cost as i64 + b[j - 1].max(a[j] - 1)
+            }
+        };
+        out.push(b[j].max(0) as u64);
+    }
+    out
+}
+
+/// The §4.3 closed-form approximation of the transfer latency on interface
+/// `k`, given the decomposed segment sizes of every operation assigned to
+/// it (`segments[q][p]` = bytes of segment `p` of operation `q`):
+///
+/// ```text
+/// T_k(ld) = L_k - 1 + Σ_q Σ_p max(L_k / I_k, m_qp / W_k)
+/// T_k(st) = Σ_q Σ_p (m_qp / W_k + E_k) - 1
+/// ```
+///
+/// The `L_k / I_k` term simulates the bubbles introduced by the limited
+/// in-flight window. Returns 0 when nothing is assigned.
+pub fn tk_estimate(itfc: &MemInterface, kind: TransactionKind, segments: &[Vec<usize>]) -> f64 {
+    if segments.iter().all(|s| s.is_empty()) {
+        return 0.0;
+    }
+    let w = itfc.width as f64;
+    match kind {
+        TransactionKind::Load => {
+            let bubble = itfc.read_lead as f64 / itfc.in_flight.max(1) as f64;
+            let sum: f64 = segments
+                .iter()
+                .flat_map(|segs| segs.iter())
+                .map(|&m| (m as f64 / w).max(bubble))
+                .sum();
+            itfc.read_lead as f64 - 1.0 + sum
+        }
+        TransactionKind::Store => {
+            let sum: f64 = segments
+                .iter()
+                .flat_map(|segs| segs.iter())
+                .map(|&m| m as f64 / w + itfc.write_cost as f64)
+                .sum();
+            sum - 1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::model::MemInterface;
+
+    fn itfc1() -> MemInterface {
+        // Figure 2(a) @itfc1: 32-bit, no burst, 1 in-flight, low latency.
+        MemInterface { read_lead: 2, ..MemInterface::cpu_port() }
+    }
+
+    fn itfc2() -> MemInterface {
+        // Figure 2(a) @itfc2: 64-bit, burst, 2 in-flight, higher latency.
+        MemInterface { read_lead: 6, ..MemInterface::system_bus() }
+    }
+
+    #[test]
+    fn empty_sequence_is_zero() {
+        assert_eq!(sequence_latency(&itfc1(), TransactionKind::Load, &[]), 0);
+    }
+
+    #[test]
+    fn single_load_lead_plus_beats() {
+        // j=1: a=1+max(-1,-1)= 0? -> a_1 = 1 + max(a_0,b_{1-I}) = 1 + (-1) = 0
+        // b_1 = m/W + max(b_0, a_1 + L - 1) = 1 + max(-1, 0+2-1=1) = 2
+        assert_eq!(sequence_latency(&itfc1(), TransactionKind::Load, &[4]), 2);
+    }
+
+    #[test]
+    fn single_store_cost() {
+        // b_1 = m/W + E + max(b_0, a_1 - 1) = 1 + 1 + max(-1, -1) = 1
+        assert_eq!(sequence_latency(&itfc1(), TransactionKind::Store, &[4]), 1);
+    }
+
+    #[test]
+    fn loads_serialize_on_single_inflight() {
+        // I=1: each load waits for the previous completion.
+        let one = sequence_latency(&itfc1(), TransactionKind::Load, &[4]);
+        let two = sequence_latency(&itfc1(), TransactionKind::Load, &[4, 4]);
+        // second issues only after first completes: a_2 = 1 + b_1
+        assert!(two >= one + 3, "two={two}, one={one}");
+    }
+
+    #[test]
+    fn pipelining_with_two_inflight_overlaps() {
+        // On itfc2 (I=2) consecutive loads overlap their lead-off latency.
+        let k = itfc2();
+        let solo = sequence_latency(&k, TransactionKind::Load, &[8]);
+        let pair = sequence_latency(&k, TransactionKind::Load, &[8, 8]);
+        assert!(pair < 2 * solo, "pair={pair} solo={solo}");
+    }
+
+    #[test]
+    fn burst_beats_word_by_word() {
+        // 64B over itfc2 as one burst vs 16 word loads over itfc1.
+        let burst = sequence_latency(&itfc2(), TransactionKind::Load, &[64]);
+        let words = sequence_latency(&itfc1(), TransactionKind::Load, &vec![4; 16]);
+        assert!(burst < words, "burst={burst} words={words}");
+    }
+
+    #[test]
+    fn completion_cycles_monotone() {
+        let cs = completion_cycles(&itfc2(), TransactionKind::Load, &[64, 32, 8, 4]);
+        assert_eq!(cs.len(), 4);
+        assert!(cs.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(
+            *cs.last().unwrap(),
+            sequence_latency(&itfc2(), TransactionKind::Load, &[64, 32, 8, 4])
+        );
+    }
+
+    #[test]
+    fn figure2_suboptimal_choice_costs_cycles() {
+        // Figure 2(b): moving a large transfer from the narrow port to the
+        // burst-capable bus wins despite higher lead-off latency.
+        let large = 32; // bytes
+        let cpu = sequence_latency(&itfc1(), TransactionKind::Load, &vec![4; large / 4]);
+        let bus = sequence_latency(&itfc2(), TransactionKind::Load, &[large]);
+        assert!(
+            cpu >= bus + 7,
+            "expected ≥7-cycle penalty for the narrow port: cpu={cpu} bus={bus}"
+        );
+    }
+
+    #[test]
+    fn tk_load_includes_bubbles() {
+        let k = itfc2(); // L=6, I=2 -> bubble = 3
+        // One op, one 8B segment: T = 6 - 1 + max(3, 1) = 8
+        let t = tk_estimate(&k, TransactionKind::Load, &[vec![8]]);
+        assert!((t - 8.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn tk_store_linear() {
+        let k = itfc1(); // W=4, E=1
+        // Two 4B segments: (1+1)+(1+1) - 1 = 3
+        let t = tk_estimate(&k, TransactionKind::Store, &[vec![4, 4]]);
+        assert!((t - 3.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn tk_empty_is_zero() {
+        assert_eq!(tk_estimate(&itfc1(), TransactionKind::Load, &[]), 0.0);
+        assert_eq!(tk_estimate(&itfc1(), TransactionKind::Load, &[vec![]]), 0.0);
+    }
+
+    #[test]
+    fn tk_tracks_exact_model_shape() {
+        // The approximation should rank interfaces the same way the exact
+        // recurrence does for bulk transfers.
+        let cpu = itfc1();
+        let bus = itfc2();
+        let segs_cpu: Vec<Vec<usize>> = vec![vec![4; 27]]; // 108B word-by-word
+        let segs_bus: Vec<Vec<usize>> = vec![vec![64, 32, 8, 4]];
+        let t_cpu = tk_estimate(&cpu, TransactionKind::Load, &segs_cpu);
+        let t_bus = tk_estimate(&bus, TransactionKind::Load, &segs_bus);
+        let e_cpu = sequence_latency(&cpu, TransactionKind::Load, &vec![4; 27]) as f64;
+        let e_bus = sequence_latency(&bus, TransactionKind::Load, &[64, 32, 8, 4]) as f64;
+        assert_eq!(t_cpu > t_bus, e_cpu > e_bus);
+    }
+}

@@ -1,0 +1,21 @@
+//! §4.1 — the core-ISAX memory-interface model.
+//!
+//! Each memory interface `k` visible to an ISAX is a 6-tuple
+//! `(W_k, M_k, I_k, L_k, E_k, C_k)`: width in bytes, max beats per
+//! transaction, max in-flight transactions, read lead-off latency, write
+//! completion cost, and the cache-line size visible to that interface.
+//!
+//! [`model`] defines the tuple plus the *microarchitectural constraints*
+//! (legal transaction sizes are `m = W·2^t ≤ W·M`, aligned to `m`);
+//! [`latency`] implements the paper's issue/completion recurrences and the
+//! closed-form `T_k` approximation used by interface selection;
+//! [`cache`] models hierarchy levels, `cache_hint` labels and the
+//! line-synchronization penalty term.
+
+pub mod cache;
+pub mod latency;
+pub mod model;
+
+pub use cache::{CacheHint, HierarchyLevel};
+pub use latency::{sequence_latency, tk_estimate, TransactionKind};
+pub use model::{InterfaceId, InterfaceSet, MemInterface};

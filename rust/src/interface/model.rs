@@ -1,0 +1,261 @@
+//! The 6-tuple interface model and its microarchitectural constraints.
+
+use crate::error::{Error, Result};
+use crate::interface::cache::HierarchyLevel;
+
+/// Index of an interface within an [`InterfaceSet`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InterfaceId(pub usize);
+
+impl std::fmt::Display for InterfaceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "@itfc{}", self.0)
+    }
+}
+
+/// One memory interface `k = (W, M, I, L, E, C)` (§4.1) plus the cache
+/// hierarchy level it attaches to (used by transaction ordering, §4.3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemInterface {
+    /// Symbolic name (e.g. `@cpuitfc`, `@busitfc`).
+    pub name: String,
+    /// `W_k`: width in bytes per beat.
+    pub width: usize,
+    /// `M_k`: maximum beat count of one transaction.
+    pub max_beats: usize,
+    /// `I_k`: maximum in-flight transactions.
+    pub in_flight: usize,
+    /// `L_k`: read lead-off latency in cycles.
+    pub read_lead: u64,
+    /// `E_k`: write completion cost in cycles.
+    pub write_cost: u64,
+    /// `C_k`: cache-line size in bytes visible to this interface.
+    pub line: usize,
+    /// Which level of the memory hierarchy this interface reaches.
+    pub level: HierarchyLevel,
+}
+
+impl MemInterface {
+    /// The paper's Figure 2 `@itfc1`: a RoCC/CV-X-IF-style core port —
+    /// 32-bit, no burst, one in-flight transaction, low latency, L1-coupled.
+    pub fn cpu_port() -> Self {
+        Self {
+            name: "@cpuitfc".into(),
+            width: 4,
+            max_beats: 1,
+            in_flight: 1,
+            read_lead: 2,
+            write_cost: 1,
+            line: 64,
+            level: HierarchyLevel::L1,
+        }
+    }
+
+    /// The paper's Figure 2 `@itfc2`: a system-bus port — 64-bit, burst up
+    /// to 8 beats, two in-flight transactions, higher lead-off latency.
+    pub fn system_bus() -> Self {
+        Self {
+            name: "@busitfc".into(),
+            width: 8,
+            max_beats: 8,
+            in_flight: 2,
+            read_lead: 6,
+            write_cost: 2,
+            line: 64,
+            level: HierarchyLevel::L2,
+        }
+    }
+
+    /// §6.3 variant: the PCP study widens the system bus to 128 bits.
+    pub fn system_bus_128() -> Self {
+        Self { name: "@busitfc128".into(), width: 16, ..Self::system_bus() }
+    }
+
+    /// Maximum legal transaction size in bytes (`W · M`).
+    pub fn max_transaction(&self) -> usize {
+        self.width * self.max_beats
+    }
+
+    /// Is `m` bytes a legal single transaction? Legal iff the beat count
+    /// `m / W = 2^t ≤ M` for some integer `t ≥ 0` (§4.1).
+    pub fn is_legal_size(&self, m: usize) -> bool {
+        if m == 0 || m % self.width != 0 {
+            return false;
+        }
+        let beats = m / self.width;
+        beats.is_power_of_two() && beats <= self.max_beats
+    }
+
+    /// Is a transaction of `m` bytes at `addr` legal? The start address must
+    /// be aligned to `m` (§4.1).
+    pub fn is_legal(&self, addr: u64, m: usize) -> bool {
+        self.is_legal_size(m) && addr % (m as u64) == 0
+    }
+
+    /// Beat count of a legal transaction.
+    pub fn beats(&self, m: usize) -> Result<u64> {
+        if !self.is_legal_size(m) {
+            return Err(Error::Interface(format!(
+                "{}: {m} bytes is not a legal transaction (W={}, M={})",
+                self.name, self.width, self.max_beats
+            )));
+        }
+        Ok((m / self.width) as u64)
+    }
+
+    /// Greedily split `size` bytes starting at `addr` into legal, naturally
+    /// aligned transfers in decreasing size order (§4.3 canonicalization).
+    ///
+    /// For a properly aligned base this yields the paper's ordered sequence
+    /// `{m_{q,p}}`; misaligned prefixes are peeled off with the largest
+    /// legal size the current alignment allows.
+    pub fn decompose(&self, addr: u64, size: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut a = addr;
+        let mut remaining = size;
+        let min = self.width;
+        while remaining > 0 {
+            if remaining < min {
+                // Runt smaller than one beat: hardware handles it as a
+                // single (padded) beat — the runtime fallback path.
+                out.push(remaining);
+                break;
+            }
+            // Largest legal size that fits the remaining bytes and the
+            // current alignment.
+            let mut m = self.max_transaction();
+            while m > min && (m > remaining || a % (m as u64) != 0) {
+                m /= 2;
+            }
+            out.push(m);
+            a += m as u64;
+            remaining -= m;
+        }
+        out
+    }
+}
+
+/// The set of interfaces visible to one ISAX (module-level `!memitfc<>`
+/// symbols in Aquas-IR terms).
+#[derive(Debug, Clone, Default)]
+pub struct InterfaceSet {
+    pub interfaces: Vec<MemInterface>,
+}
+
+impl InterfaceSet {
+    pub fn new(interfaces: Vec<MemInterface>) -> Self {
+        Self { interfaces }
+    }
+
+    /// The default ASIP configuration from §6.1: one RoCC-style core port
+    /// and one system-bus port.
+    pub fn rocket_default() -> Self {
+        Self::new(vec![MemInterface::cpu_port(), MemInterface::system_bus()])
+    }
+
+    /// §6.3 configuration with the 128-bit system bus.
+    pub fn rocket_wide_bus() -> Self {
+        Self::new(vec![MemInterface::cpu_port(), MemInterface::system_bus_128()])
+    }
+
+    pub fn get(&self, id: InterfaceId) -> &MemInterface {
+        &self.interfaces[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.interfaces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.interfaces.is_empty()
+    }
+
+    /// Iterate (id, interface).
+    pub fn iter(&self) -> impl Iterator<Item = (InterfaceId, &MemInterface)> {
+        self.interfaces.iter().enumerate().map(|(i, m)| (InterfaceId(i), m))
+    }
+
+    /// Find an interface by symbolic name.
+    pub fn by_name(&self, name: &str) -> Option<InterfaceId> {
+        self.interfaces.iter().position(|m| m.name == name).map(InterfaceId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legality_power_of_two_beats() {
+        let bus = MemInterface::system_bus(); // W=8, M=8
+        assert!(bus.is_legal_size(8)); // 1 beat
+        assert!(bus.is_legal_size(16)); // 2 beats
+        assert!(bus.is_legal_size(32)); // 4
+        assert!(bus.is_legal_size(64)); // 8
+        assert!(!bus.is_legal_size(24)); // 3 beats: not 2^t
+        assert!(!bus.is_legal_size(128)); // 16 beats > M
+        assert!(!bus.is_legal_size(4)); // below width
+        assert!(!bus.is_legal_size(0));
+    }
+
+    #[test]
+    fn alignment_constraint() {
+        let bus = MemInterface::system_bus();
+        assert!(bus.is_legal(64, 64));
+        assert!(!bus.is_legal(32, 64)); // 64B transfer must be 64B-aligned
+        assert!(bus.is_legal(32, 32));
+    }
+
+    #[test]
+    fn decompose_108_bytes_matches_paper() {
+        // §4.3: "the 108-byte transaction is canonicalized into 64-, 32-,
+        // 8-, and 4-byte legal transfers" on @busitfc.
+        let bus = MemInterface::system_bus();
+        assert_eq!(bus.decompose(0, 108), vec![64, 32, 8, 4]);
+    }
+
+    #[test]
+    fn decompose_aligned_power_of_two() {
+        let bus = MemInterface::system_bus();
+        assert_eq!(bus.decompose(0, 64), vec![64]);
+        assert_eq!(bus.decompose(0, 128), vec![64, 64]);
+    }
+
+    #[test]
+    fn decompose_respects_alignment() {
+        let bus = MemInterface::system_bus();
+        // Starting at 8 mod 64: cannot open with a 64B burst.
+        let parts = bus.decompose(8, 72);
+        assert_eq!(parts.iter().sum::<usize>(), 72);
+        let mut a = 8u64;
+        for &m in &parts {
+            assert!(bus.is_legal(a, m), "illegal {m}B at {a}");
+            a += m as u64;
+        }
+    }
+
+    #[test]
+    fn decompose_cpu_port_splits_to_words() {
+        let cpu = MemInterface::cpu_port();
+        assert_eq!(cpu.decompose(0, 16), vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn decompose_total_always_matches() {
+        let bus = MemInterface::system_bus();
+        for size in 1..300 {
+            for addr in [0u64, 4, 8, 12, 20, 52] {
+                let parts = bus.decompose(addr, size);
+                assert_eq!(parts.iter().sum::<usize>(), size, "size={size} addr={addr}");
+            }
+        }
+    }
+
+    #[test]
+    fn interface_set_lookup() {
+        let set = InterfaceSet::rocket_default();
+        assert_eq!(set.by_name("@busitfc"), Some(InterfaceId(1)));
+        assert_eq!(set.by_name("@nope"), None);
+        assert_eq!(set.get(InterfaceId(0)).width, 4);
+    }
+}

@@ -1,0 +1,287 @@
+//! Affine index analysis.
+//!
+//! Used by two parts of the paper's flow:
+//! - **synthesis** (§4.3): scratchpad-elision legality needs to know the
+//!   access pattern of each buffer index (affine ⇒ predictable stride ⇒
+//!   no cache thrashing after elision);
+//! - **compiler** (§5.3): the e-graph cost model "penalizes non-affine
+//!   operations" so extraction steers toward affine-friendly variants
+//!   (e.g. `i*4` over `i<<2`) that MLIR-style loop passes can transform.
+//!
+//! An expression is affine in a set of loop induction variables if it is
+//! built from constants, ivs, addition/subtraction, and multiplication by
+//! a constant. `Shl` is deliberately classified non-affine, mirroring the
+//! paper's example where `i << 2` blocks loop analysis until rewritten.
+
+use std::collections::HashMap;
+
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::ops::OpKind;
+
+/// A linear form `c0 + Σ ci·iv_i` over loop induction variables.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AffineExpr {
+    /// Constant term.
+    pub constant: i64,
+    /// Coefficient per induction variable.
+    pub coeffs: HashMap<Value, i64>,
+}
+
+impl AffineExpr {
+    pub fn constant(c: i64) -> Self {
+        Self { constant: c, coeffs: HashMap::new() }
+    }
+
+    pub fn var(v: Value) -> Self {
+        let mut coeffs = HashMap::new();
+        coeffs.insert(v, 1);
+        Self { constant: 0, coeffs }
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.coeffs.values().all(|&c| c == 0)
+    }
+
+    /// Stride with respect to one induction variable.
+    pub fn stride_of(&self, iv: Value) -> i64 {
+        self.coeffs.get(&iv).copied().unwrap_or(0)
+    }
+
+    fn add(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        out.constant += other.constant;
+        for (v, c) in &other.coeffs {
+            *out.coeffs.entry(*v).or_insert(0) += c;
+        }
+        out
+    }
+
+    fn sub(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        out.constant -= other.constant;
+        for (v, c) in &other.coeffs {
+            *out.coeffs.entry(*v).or_insert(0) -= c;
+        }
+        out
+    }
+
+    fn scale(&self, k: i64) -> Self {
+        let mut out = self.clone();
+        out.constant *= k;
+        for c in out.coeffs.values_mut() {
+            *c *= k;
+        }
+        out
+    }
+}
+
+/// Affine analysis over one function. Induction variables are the region
+/// params of `for` ops; everything derived affinely from them is tracked.
+pub struct AffineAnalysis<'f> {
+    func: &'f Func,
+    exprs: HashMap<Value, AffineExpr>,
+}
+
+impl<'f> AffineAnalysis<'f> {
+    /// Run the analysis (single forward pass; the IR is structured so defs
+    /// dominate uses lexically).
+    pub fn run(func: &'f Func) -> Self {
+        let mut a = Self { func, exprs: HashMap::new() };
+        a.visit_region(&func.entry);
+        a
+    }
+
+    /// The affine form of a value, if it has one.
+    pub fn expr(&self, v: Value) -> Option<&AffineExpr> {
+        self.exprs.get(&v)
+    }
+
+    /// Is this value affine in the enclosing induction variables?
+    pub fn is_affine(&self, v: Value) -> bool {
+        self.exprs.contains_key(&v)
+    }
+
+    fn visit_region(&mut self, region: &Region) {
+        for &opref in &region.ops {
+            self.visit_op(opref);
+        }
+    }
+
+    fn visit_op(&mut self, opref: OpRef) {
+        let op = self.func.op(opref).clone();
+        match &op.kind {
+            OpKind::ConstI(c) => {
+                self.exprs.insert(op.results[0], AffineExpr::constant(*c));
+            }
+            OpKind::For => {
+                // iv is affine (a fresh variable); carried values are not
+                // tracked (they may be arbitrary reductions).
+                let iv = op.regions[0].params[0];
+                self.exprs.insert(iv, AffineExpr::var(iv));
+                self.visit_region(&op.regions[0]);
+            }
+            OpKind::If => {
+                self.visit_region(&op.regions[0]);
+                self.visit_region(&op.regions[1]);
+            }
+            OpKind::Add => self.binary(&op, |a, b| Some(a.add(b))),
+            OpKind::Sub => self.binary(&op, |a, b| Some(a.sub(b))),
+            OpKind::Mul => self.binary(&op, |a, b| {
+                if a.is_constant() {
+                    Some(b.scale(a.constant))
+                } else if b.is_constant() {
+                    Some(a.scale(b.constant))
+                } else {
+                    None
+                }
+            }),
+            // Shl/Shr/Div/Rem etc. are conservatively non-affine (§5.3).
+            _ => {
+                for r in &op.regions {
+                    self.visit_region(r);
+                }
+            }
+        }
+    }
+
+    fn binary<F>(&mut self, op: &crate::ir::ops::Op, f: F)
+    where
+        F: FnOnce(&AffineExpr, &AffineExpr) -> Option<AffineExpr>,
+    {
+        let (a, b) = (op.operands[0], op.operands[1]);
+        if let (Some(ea), Some(eb)) = (self.exprs.get(&a), self.exprs.get(&b)) {
+            if let Some(e) = f(ea, eb) {
+                self.exprs.insert(op.results[0], e);
+            }
+        }
+    }
+}
+
+/// Summary of how a buffer is accessed inside a function: used by elision.
+#[derive(Debug, Clone, Default)]
+pub struct AccessPattern {
+    /// Number of read sites (load/read_smem/fetch).
+    pub reads: usize,
+    /// Number of write sites.
+    pub writes: usize,
+    /// All access indices were affine in the loop ivs.
+    pub all_affine: bool,
+    /// Minimum absolute iv stride over affine accesses (0 = loop-invariant).
+    pub min_stride: i64,
+    /// Max absolute stride.
+    pub max_stride: i64,
+}
+
+/// Analyze how `buf` is accessed within `func`.
+pub fn access_pattern(func: &Func, buf: crate::ir::func::BufferId) -> AccessPattern {
+    let analysis = AffineAnalysis::run(func);
+    let mut pat = AccessPattern { all_affine: true, min_stride: i64::MAX, ..Default::default() };
+    func.walk(|_, op| {
+        let (is_read, is_write, index) = match &op.kind {
+            OpKind::Load(b) | OpKind::Fetch(b) | OpKind::ReadSmem(b) if *b == buf => {
+                (true, false, Some(op.operands[0]))
+            }
+            OpKind::Store(b) | OpKind::WriteSmem(b) if *b == buf => {
+                (false, true, Some(op.operands[0]))
+            }
+            _ => (false, false, None),
+        };
+        if let Some(idx) = index {
+            if is_read {
+                pat.reads += 1;
+            }
+            if is_write {
+                pat.writes += 1;
+            }
+            match analysis.expr(idx) {
+                Some(e) => {
+                    let strides: Vec<i64> =
+                        e.coeffs.values().map(|c| c.abs()).filter(|&c| c != 0).collect();
+                    let s = strides.into_iter().max().unwrap_or(0);
+                    pat.min_stride = pat.min_stride.min(s);
+                    pat.max_stride = pat.max_stride.max(s);
+                }
+                None => pat.all_affine = false,
+            }
+        }
+    });
+    if pat.min_stride == i64::MAX {
+        pat.min_stride = 0;
+    }
+    pat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    #[test]
+    fn iv_times_constant_is_affine() {
+        let mut b = FuncBuilder::new("t");
+        let buf = b.global("x", DType::I32, 64, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let four = b.const_i(4);
+            let idx = b.mul(iv, four);
+            let v = b.load(buf, idx);
+            b.store(buf, idx, v);
+        });
+        let f = b.finish(&[]);
+        let pat = access_pattern(&f, crate::ir::func::BufferId(0));
+        assert!(pat.all_affine);
+        assert_eq!(pat.max_stride, 4);
+        assert_eq!(pat.reads, 1);
+        assert_eq!(pat.writes, 1);
+    }
+
+    #[test]
+    fn shl_is_non_affine() {
+        let mut b = FuncBuilder::new("t");
+        let buf = b.global("x", DType::I32, 64, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, iv| {
+            let two = b.const_i(2);
+            let idx = b.shl(iv, two); // i << 2 — the §5.3 example
+            let v = b.load(buf, idx);
+            b.store(buf, idx, v);
+        });
+        let f = b.finish(&[]);
+        let pat = access_pattern(&f, crate::ir::func::BufferId(0));
+        assert!(!pat.all_affine);
+    }
+
+    #[test]
+    fn nested_ivs_compose() {
+        let mut b = FuncBuilder::new("t");
+        let buf = b.global("x", DType::I32, 256, CacheHint::Unknown);
+        b.for_range(0, 4, 1, |b, i| {
+            b.for_range(0, 8, 1, |b, j| {
+                let eight = b.const_i(8);
+                let row = b.mul(i, eight);
+                let idx = b.add(row, j);
+                let v = b.load(buf, idx);
+                b.store(buf, idx, v);
+            });
+        });
+        let f = b.finish(&[]);
+        let pat = access_pattern(&f, crate::ir::func::BufferId(0));
+        assert!(pat.all_affine);
+        assert_eq!(pat.max_stride, 8);
+    }
+
+    #[test]
+    fn loop_invariant_access_has_zero_stride() {
+        let mut b = FuncBuilder::new("t");
+        let buf = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 16, 1, |b, _iv| {
+            let zero = b.const_i(0);
+            let v = b.load(buf, zero);
+            b.store(buf, zero, v);
+        });
+        let f = b.finish(&[]);
+        let pat = access_pattern(&f, crate::ir::func::BufferId(0));
+        assert!(pat.all_affine);
+        assert_eq!(pat.max_stride, 0);
+    }
+}

@@ -1,0 +1,385 @@
+//! Ergonomic construction API for Aquas-IR functions.
+//!
+//! The builder keeps a stack of open regions; `for_loop`/`if_else` take
+//! closures that build the nested body. All workload programs
+//! (`crate::workloads`) and ISAX descriptions are written against this.
+
+use crate::interface::cache::CacheHint;
+use crate::interface::model::InterfaceId;
+use crate::interface::TransactionKind;
+use crate::ir::func::{BufferDecl, BufferId, BufferKind, Func, Region, Value};
+use crate::ir::ops::{CmpPred, Op, OpKind};
+use crate::ir::types::Type;
+use crate::runtime::DType;
+
+/// Builder over a [`Func`] under construction.
+pub struct FuncBuilder {
+    func: Func,
+    /// Stack of open regions; ops append to the top.
+    stack: Vec<Region>,
+}
+
+impl FuncBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { func: Func::new(name), stack: vec![Region::default()] }
+    }
+
+    /// Add a scalar function parameter.
+    pub fn param(&mut self, ty: Type) -> Value {
+        let v = self.func.new_value(ty);
+        self.func.params.push(v);
+        v
+    }
+
+    /// Declare a global-memory symbol.
+    pub fn global(&mut self, name: &str, elem: DType, len: usize, hint: CacheHint) -> BufferId {
+        self.global_at(name, elem, len, hint, self.next_base_addr())
+    }
+
+    /// Declare a global-memory symbol at an explicit base address.
+    pub fn global_at(
+        &mut self,
+        name: &str,
+        elem: DType,
+        len: usize,
+        hint: CacheHint,
+        base_addr: u64,
+    ) -> BufferId {
+        self.func.add_buffer(BufferDecl {
+            name: name.into(),
+            kind: BufferKind::Global,
+            elem,
+            len,
+            hint,
+            base_addr,
+        })
+    }
+
+    /// Declare an ISAX scratchpad.
+    pub fn scratchpad(&mut self, name: &str, elem: DType, len: usize, banks: usize) -> BufferId {
+        self.func.add_buffer(BufferDecl {
+            name: name.into(),
+            kind: BufferKind::Scratchpad { banks },
+            elem,
+            len,
+            hint: CacheHint::Unknown,
+            base_addr: 0,
+        })
+    }
+
+    fn next_base_addr(&self) -> u64 {
+        // Pack globals contiguously, 64B-aligned, starting at 0x1000.
+        let mut addr = 0x1000u64;
+        for b in &self.func.buffers {
+            if matches!(b.kind, BufferKind::Global) {
+                addr = addr.max(b.base_addr + b.size_bytes() as u64);
+            }
+        }
+        addr.next_multiple_of(64)
+    }
+
+    // ----- op emission helpers -------------------------------------------
+
+    fn emit(&mut self, kind: OpKind, operands: Vec<Value>, result_ty: Option<Type>) -> Option<Value> {
+        let results = result_ty.map(|ty| vec![self.func.new_value(ty)]).unwrap_or_default();
+        let out = results.first().copied();
+        let op = Op::new(kind, operands, results);
+        let opref = self.func.add_op(op);
+        self.stack.last_mut().expect("no open region").ops.push(opref);
+        out
+    }
+
+    pub fn const_i(&mut self, v: i64) -> Value {
+        self.emit(OpKind::ConstI(v), vec![], Some(Type::Int)).unwrap()
+    }
+
+    pub fn const_f(&mut self, v: f64) -> Value {
+        self.emit(OpKind::ConstF(v), vec![], Some(Type::Float)).unwrap()
+    }
+
+    fn binop(&mut self, kind: OpKind, a: Value, b: Value) -> Value {
+        let ty = self.func.value_type(a);
+        self.emit(kind, vec![a, b], Some(ty)).unwrap()
+    }
+
+    pub fn add(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Add, a, b)
+    }
+    pub fn sub(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Sub, a, b)
+    }
+    pub fn mul(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Mul, a, b)
+    }
+    pub fn div(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Div, a, b)
+    }
+    pub fn rem(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Rem, a, b)
+    }
+    pub fn shl(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Shl, a, b)
+    }
+    pub fn shr(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Shr, a, b)
+    }
+    pub fn and(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::And, a, b)
+    }
+    pub fn or(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Or, a, b)
+    }
+    pub fn xor(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Xor, a, b)
+    }
+    pub fn min(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Min, a, b)
+    }
+    pub fn max(&mut self, a: Value, b: Value) -> Value {
+        self.binop(OpKind::Max, a, b)
+    }
+
+    pub fn neg(&mut self, a: Value) -> Value {
+        let ty = self.func.value_type(a);
+        self.emit(OpKind::Neg, vec![a], Some(ty)).unwrap()
+    }
+
+    pub fn sqrt(&mut self, a: Value) -> Value {
+        self.emit(OpKind::Sqrt, vec![a], Some(Type::Float)).unwrap()
+    }
+
+    pub fn powi(&mut self, a: Value, e: u32) -> Value {
+        self.emit(OpKind::Powi(e), vec![a], Some(Type::Float)).unwrap()
+    }
+
+    pub fn to_float(&mut self, a: Value) -> Value {
+        self.emit(OpKind::ToFloat, vec![a], Some(Type::Float)).unwrap()
+    }
+
+    pub fn to_int(&mut self, a: Value) -> Value {
+        self.emit(OpKind::ToInt, vec![a], Some(Type::Int)).unwrap()
+    }
+
+    pub fn cmp(&mut self, pred: CmpPred, a: Value, b: Value) -> Value {
+        self.emit(OpKind::Cmp(pred), vec![a, b], Some(Type::Int)).unwrap()
+    }
+
+    pub fn select(&mut self, cond: Value, a: Value, b: Value) -> Value {
+        let ty = self.func.value_type(a);
+        self.emit(OpKind::Select, vec![cond, a, b], Some(ty)).unwrap()
+    }
+
+    // ----- memory ----------------------------------------------------------
+
+    fn elem_ty(&self, buf: BufferId) -> Type {
+        match self.func.buffer(buf).elem {
+            DType::F32 => Type::Float,
+            DType::I32 => Type::Int,
+        }
+    }
+
+    pub fn load(&mut self, buf: BufferId, index: Value) -> Value {
+        let ty = self.elem_ty(buf);
+        self.emit(OpKind::Load(buf), vec![index], Some(ty)).unwrap()
+    }
+
+    pub fn store(&mut self, buf: BufferId, index: Value, value: Value) {
+        self.emit(OpKind::Store(buf), vec![index, value], None);
+    }
+
+    pub fn transfer(&mut self, dst: BufferId, dst_off: Value, src: BufferId, src_off: Value, size: usize) {
+        self.emit(OpKind::Transfer { dst, src, size }, vec![dst_off, src_off], None);
+    }
+
+    pub fn fetch(&mut self, buf: BufferId, index: Value) -> Value {
+        let ty = self.elem_ty(buf);
+        self.emit(OpKind::Fetch(buf), vec![index], Some(ty)).unwrap()
+    }
+
+    pub fn read_smem(&mut self, buf: BufferId, index: Value) -> Value {
+        let ty = self.elem_ty(buf);
+        self.emit(OpKind::ReadSmem(buf), vec![index], Some(ty)).unwrap()
+    }
+
+    pub fn write_smem(&mut self, buf: BufferId, index: Value, value: Value) {
+        self.emit(OpKind::WriteSmem(buf), vec![index, value], None);
+    }
+
+    pub fn read_irf(&mut self, reg: u8) -> Value {
+        self.emit(OpKind::ReadIrf(reg), vec![], Some(Type::Int)).unwrap()
+    }
+
+    pub fn write_irf(&mut self, reg: u8, value: Value) {
+        self.emit(OpKind::WriteIrf(reg), vec![value], None);
+    }
+
+    pub fn copy(
+        &mut self,
+        itfc: InterfaceId,
+        dst: BufferId,
+        dst_off: Value,
+        src: BufferId,
+        src_off: Value,
+        size: usize,
+        kind: TransactionKind,
+    ) {
+        self.emit(OpKind::Copy { itfc, dst, src, size, kind }, vec![dst_off, src_off], None);
+    }
+
+    pub fn intrinsic(&mut self, name: &str, operands: Vec<Value>, has_result: bool) -> Option<Value> {
+        self.emit(
+            OpKind::Intrinsic(name.into()),
+            operands,
+            has_result.then_some(Type::Int),
+        )
+    }
+
+    // ----- control flow ------------------------------------------------------
+
+    /// Build `for iv in (lb..ub).step_by(step)` with loop-carried values.
+    /// `body` receives (builder, iv, carried) and returns the yielded
+    /// values; the loop op's results (final carried values) are returned.
+    pub fn for_loop<F>(
+        &mut self,
+        lb: Value,
+        ub: Value,
+        step: Value,
+        init: &[Value],
+        body: F,
+    ) -> Vec<Value>
+    where
+        F: FnOnce(&mut Self, Value, &[Value]) -> Vec<Value>,
+    {
+        let iv = self.func.new_value(Type::Int);
+        let carried: Vec<Value> = init
+            .iter()
+            .map(|&v| {
+                let ty = self.func.value_type(v);
+                self.func.new_value(ty)
+            })
+            .collect();
+        let mut params = vec![iv];
+        params.extend(&carried);
+        self.stack.push(Region { params, ops: Vec::new() });
+
+        let yields = body(self, iv, &carried);
+        assert_eq!(yields.len(), init.len(), "for: yield arity != iter_args arity");
+        self.emit(OpKind::Yield, yields, None);
+
+        let region = self.stack.pop().expect("region stack underflow");
+        let results: Vec<Value> = init
+            .iter()
+            .map(|&v| {
+                let ty = self.func.value_type(v);
+                self.func.new_value(ty)
+            })
+            .collect();
+        let mut operands = vec![lb, ub, step];
+        operands.extend_from_slice(init);
+        let mut op = Op::new(OpKind::For, operands, results.clone());
+        op.regions.push(region);
+        let opref = self.func.add_op(op);
+        self.stack.last_mut().expect("no open region").ops.push(opref);
+        results
+    }
+
+    /// Convenience: constant-bound loop without carried values.
+    pub fn for_range<F>(&mut self, lb: i64, ub: i64, step: i64, body: F)
+    where
+        F: FnOnce(&mut Self, Value),
+    {
+        let lbv = self.const_i(lb);
+        let ubv = self.const_i(ub);
+        let stepv = self.const_i(step);
+        self.for_loop(lbv, ubv, stepv, &[], |b, iv, _| {
+            body(b, iv);
+            vec![]
+        });
+    }
+
+    /// Build `if cond { then } else { els }`; arm closures return yielded
+    /// values (same arity/types); returns the if results.
+    pub fn if_else<FT, FE>(&mut self, cond: Value, then: FT, els: FE) -> Vec<Value>
+    where
+        FT: FnOnce(&mut Self) -> Vec<Value>,
+        FE: FnOnce(&mut Self) -> Vec<Value>,
+    {
+        self.stack.push(Region::default());
+        let tvals = then(self);
+        self.emit(OpKind::Yield, tvals.clone(), None);
+        let then_region = self.stack.pop().unwrap();
+
+        self.stack.push(Region::default());
+        let evals = els(self);
+        assert_eq!(tvals.len(), evals.len(), "if: arm yield arity mismatch");
+        self.emit(OpKind::Yield, evals, None);
+        let else_region = self.stack.pop().unwrap();
+
+        let results: Vec<Value> = tvals
+            .iter()
+            .map(|&v| {
+                let ty = self.func.value_type(v);
+                self.func.new_value(ty)
+            })
+            .collect();
+        let mut op = Op::new(OpKind::If, vec![cond], results.clone());
+        op.regions.push(then_region);
+        op.regions.push(else_region);
+        let opref = self.func.add_op(op);
+        self.stack.last_mut().expect("no open region").ops.push(opref);
+        results
+    }
+
+    /// Finish with `return values` and produce the function.
+    pub fn finish(mut self, values: &[Value]) -> Func {
+        self.emit(OpKind::Return, values.to_vec(), None);
+        assert_eq!(self.stack.len(), 1, "unclosed regions at finish()");
+        self.func.entry = self.stack.pop().unwrap();
+        self.func
+    }
+
+    /// Access the function under construction (e.g. for type queries).
+    pub fn func(&self) -> &Func {
+        &self.func
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_nested_loop_with_carried_sum() {
+        let mut b = FuncBuilder::new("sum");
+        let buf = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let lb = b.const_i(0);
+        let ub = b.const_i(16);
+        let one = b.const_i(1);
+        let sums = b.for_loop(lb, ub, one, &[zero], |b, iv, carried| {
+            let x = b.load(buf, iv);
+            let s = b.add(carried[0], x);
+            vec![s]
+        });
+        let f = b.finish(&sums);
+        assert_eq!(f.entry.ops.len(), 6); // consts + for + return
+        assert_eq!(f.count_ops(|k| matches!(k, OpKind::For)), 1);
+        assert_eq!(f.count_ops(|k| matches!(k, OpKind::Load(_))), 1);
+    }
+
+    #[test]
+    fn if_else_results_typed() {
+        let mut b = FuncBuilder::new("sel");
+        let p = b.param(Type::Int);
+        let zero = b.const_i(0);
+        let c = b.cmp(CmpPred::Gt, p, zero);
+        let r = b.if_else(
+            c,
+            |b| vec![b.const_f(1.0)],
+            |b| vec![b.const_f(2.0)],
+        );
+        let f = b.finish(&r);
+        assert_eq!(f.value_type(r[0]), Type::Float);
+        assert_eq!(f.count_ops(|k| matches!(k, OpKind::If)), 1);
+    }
+}

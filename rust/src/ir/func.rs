@@ -1,0 +1,191 @@
+//! Function/module containers: op arena, regions, buffers, SSA values.
+
+use crate::interface::cache::CacheHint;
+use crate::ir::ops::{Op, OpKind};
+use crate::ir::types::Type;
+use crate::runtime::DType;
+
+/// SSA value id (index into the function's value-type table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Value(pub u32);
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// Op id (index into the function's op arena).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpRef(pub u32);
+
+/// Buffer id (index into the function's buffer table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BufferId(pub u32);
+
+/// What backs a buffer symbol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferKind {
+    /// Global (main) memory visible to the CPU and the ISAX.
+    Global,
+    /// An explicit ISAX-local scratchpad (SRAM); `banks` is the banking
+    /// factor hwgen will synthesize.
+    Scratchpad { banks: usize },
+}
+
+/// A module-level memory symbol: global region or local scratchpad.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferDecl {
+    pub name: String,
+    pub kind: BufferKind,
+    /// Element type (drives byte sizing: f32/i32 are 4 bytes each).
+    pub elem: DType,
+    /// Element count.
+    pub len: usize,
+    /// §4.1 cache_hint label.
+    pub hint: CacheHint,
+    /// Byte address of the buffer base in the flat global address space
+    /// used by alignment-aware canonicalization (scratchpads ignore it).
+    pub base_addr: u64,
+}
+
+impl BufferDecl {
+    pub fn size_bytes(&self) -> usize {
+        self.len * 4
+    }
+}
+
+/// A single-block region: an ordered list of ops plus region parameters
+/// (loop induction variable + iter_args for `for`; empty for `if` arms).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Region {
+    pub params: Vec<Value>,
+    pub ops: Vec<OpRef>,
+}
+
+/// A function: op arena + entry region + buffers + value types.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Func {
+    pub name: String,
+    /// Function parameters (scalar arguments, e.g. sizes or rs1/rs2).
+    pub params: Vec<Value>,
+    pub entry: Region,
+    ops: Vec<Op>,
+    value_types: Vec<Type>,
+    pub buffers: Vec<BufferDecl>,
+}
+
+impl Func {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Vec::new(),
+            entry: Region::default(),
+            ops: Vec::new(),
+            value_types: Vec::new(),
+            buffers: Vec::new(),
+        }
+    }
+
+    /// Allocate a fresh SSA value of `ty`.
+    pub fn new_value(&mut self, ty: Type) -> Value {
+        let v = Value(self.value_types.len() as u32);
+        self.value_types.push(ty);
+        v
+    }
+
+    /// Append an op to the arena (not yet inserted in any region).
+    pub fn add_op(&mut self, op: Op) -> OpRef {
+        let r = OpRef(self.ops.len() as u32);
+        self.ops.push(op);
+        r
+    }
+
+    pub fn op(&self, r: OpRef) -> &Op {
+        &self.ops[r.0 as usize]
+    }
+
+    pub fn op_mut(&mut self, r: OpRef) -> &mut Op {
+        &mut self.ops[r.0 as usize]
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn value_type(&self, v: Value) -> Type {
+        self.value_types[v.0 as usize]
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.value_types.len()
+    }
+
+    pub fn buffer(&self, b: BufferId) -> &BufferDecl {
+        &self.buffers[b.0 as usize]
+    }
+
+    pub fn buffer_mut(&mut self, b: BufferId) -> &mut BufferDecl {
+        &mut self.buffers[b.0 as usize]
+    }
+
+    /// Declare a buffer symbol; returns its id.
+    pub fn add_buffer(&mut self, decl: BufferDecl) -> BufferId {
+        let id = BufferId(self.buffers.len() as u32);
+        self.buffers.push(decl);
+        id
+    }
+
+    /// Find a buffer by name.
+    pub fn buffer_by_name(&self, name: &str) -> Option<BufferId> {
+        self.buffers
+            .iter()
+            .position(|b| b.name == name)
+            .map(|i| BufferId(i as u32))
+    }
+
+    /// Walk all ops of a region recursively (pre-order), calling `f`.
+    pub fn walk_region<F: FnMut(OpRef, &Op)>(&self, region: &Region, f: &mut F) {
+        for &opref in &region.ops {
+            let op = self.op(opref);
+            f(opref, op);
+            for r in &op.regions {
+                self.walk_region(r, f);
+            }
+        }
+    }
+
+    /// Walk the whole function.
+    pub fn walk<F: FnMut(OpRef, &Op)>(&self, mut f: F) {
+        let entry = self.entry.clone();
+        self.walk_region(&entry, &mut f);
+    }
+
+    /// Count ops of a given predicate in the whole function.
+    pub fn count_ops<F: Fn(&OpKind) -> bool>(&self, pred: F) -> usize {
+        let mut n = 0;
+        self.walk(|_, op| {
+            if pred(&op.kind) {
+                n += 1;
+            }
+        });
+        n
+    }
+
+    /// Producer map: which op defines each value (region params map to the
+    /// op owning the region; function params map to None).
+    pub fn def_map(&self) -> Vec<Option<OpRef>> {
+        let mut defs: Vec<Option<OpRef>> = vec![None; self.value_types.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            for &r in &op.results {
+                defs[r.0 as usize] = Some(OpRef(i as u32));
+            }
+            for region in &op.regions {
+                for &p in &region.params {
+                    defs[p.0 as usize] = Some(OpRef(i as u32));
+                }
+            }
+        }
+        defs
+    }
+}

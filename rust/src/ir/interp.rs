@@ -1,0 +1,599 @@
+//! Reference interpreter for Aquas-IR.
+//!
+//! Executes a function at *any* level (functional transfers, architectural
+//! copies, temporal issue/wait pairs all move the same bytes) against a
+//! memory image. This gives the semantic ground truth used to prove that
+//! synthesis transformations (§4.3) and compiler rewrites (§5.3) preserve
+//! behaviour, and to check the ISAX datapaths against the AOT Pallas
+//! artifacts (see `rust/tests/`).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::ir::func::{BufferId, Func, Region, Value};
+use crate::ir::ops::{CmpPred, Op, OpKind};
+use crate::runtime::DType;
+
+/// A runtime scalar.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Val {
+    I(i64),
+    F(f64),
+}
+
+impl Val {
+    pub fn as_i(&self) -> Result<i64> {
+        match self {
+            Val::I(v) => Ok(*v),
+            Val::F(v) => Err(Error::Ir(format!("expected int, got float {v}"))),
+        }
+    }
+
+    pub fn as_f(&self) -> Result<f64> {
+        match self {
+            Val::F(v) => Ok(*v),
+            Val::I(v) => Err(Error::Ir(format!("expected float, got int {v}"))),
+        }
+    }
+}
+
+/// Memory image: one typed vector per buffer, plus an integer register file
+/// for `read_irf`/`write_irf`.
+#[derive(Debug, Clone, Default)]
+pub struct Memory {
+    bufs: HashMap<BufferId, Vec<Val>>,
+    pub irf: [i64; 32],
+}
+
+impl Memory {
+    /// Allocate every buffer declared by `func`, zero-initialized.
+    pub fn for_func(func: &Func) -> Self {
+        let mut mem = Memory::default();
+        for (i, decl) in func.buffers.iter().enumerate() {
+            let zero = match decl.elem {
+                DType::F32 => Val::F(0.0),
+                DType::I32 => Val::I(0),
+            };
+            mem.bufs.insert(BufferId(i as u32), vec![zero; decl.len]);
+        }
+        mem
+    }
+
+    pub fn write_f32(&mut self, buf: BufferId, data: &[f32]) {
+        let v = self.bufs.get_mut(&buf).expect("unknown buffer");
+        for (slot, &x) in v.iter_mut().zip(data) {
+            *slot = Val::F(x as f64);
+        }
+    }
+
+    pub fn write_i32(&mut self, buf: BufferId, data: &[i32]) {
+        let v = self.bufs.get_mut(&buf).expect("unknown buffer");
+        for (slot, &x) in v.iter_mut().zip(data) {
+            *slot = Val::I(x as i64);
+        }
+    }
+
+    pub fn read_f32(&self, buf: BufferId) -> Vec<f32> {
+        self.bufs[&buf].iter().map(|v| match v {
+            Val::F(x) => *x as f32,
+            Val::I(x) => *x as f32,
+        }).collect()
+    }
+
+    pub fn read_i32(&self, buf: BufferId) -> Vec<i32> {
+        self.bufs[&buf].iter().map(|v| match v {
+            Val::I(x) => *x as i32,
+            Val::F(x) => *x as i32,
+        }).collect()
+    }
+
+    fn get(&self, buf: BufferId, idx: i64, len: usize) -> Result<Val> {
+        if idx < 0 || idx as usize >= len {
+            return Err(Error::Ir(format!("index {idx} out of bounds (len {len})")));
+        }
+        Ok(self.bufs[&buf][idx as usize])
+    }
+
+    fn set(&mut self, buf: BufferId, idx: i64, len: usize, val: Val) -> Result<()> {
+        if idx < 0 || idx as usize >= len {
+            return Err(Error::Ir(format!("index {idx} out of bounds (len {len})")));
+        }
+        self.bufs.get_mut(&buf).unwrap()[idx as usize] = val;
+        Ok(())
+    }
+}
+
+/// Execution statistics (also consumed by the Rocket-like cost model).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    pub arith_ops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub loop_iterations: u64,
+    pub branches: u64,
+    pub transfers: u64,
+    pub transfer_bytes: u64,
+    pub intrinsic_calls: u64,
+}
+
+/// One memory access in a trace (consumed by the cache model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemAccess {
+    pub buf: BufferId,
+    /// Element index.
+    pub index: i64,
+    pub is_store: bool,
+}
+
+/// Interpret `func` with scalar `args` against `mem`.
+/// Returns the function's `return` values.
+pub fn run(func: &Func, args: &[Val], mem: &mut Memory) -> Result<Vec<Val>> {
+    let mut stats = ExecStats::default();
+    run_with_stats(func, args, mem, &mut stats)
+}
+
+/// Interpret and collect [`ExecStats`].
+pub fn run_with_stats(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+) -> Result<Vec<Val>> {
+    run_traced(func, args, mem, stats, &mut None)
+}
+
+/// Interpret, collect [`ExecStats`], and (optionally) a full memory trace.
+pub fn run_traced(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    trace: &mut Option<Vec<MemAccess>>,
+) -> Result<Vec<Val>> {
+    if args.len() != func.params.len() {
+        return Err(Error::Ir(format!(
+            "expected {} args, got {}",
+            func.params.len(),
+            args.len()
+        )));
+    }
+    let mut env: HashMap<Value, Val> = HashMap::new();
+    for (&p, &a) in func.params.iter().zip(args) {
+        env.insert(p, a);
+    }
+    // Temporal level: issued-but-not-awaited transactions.
+    let mut pending: HashMap<u32, PendingCopy> = HashMap::new();
+    let out = exec_region(func, &func.entry, &mut env, mem, stats, &mut pending, trace)?;
+    Ok(out.unwrap_or_default())
+}
+
+#[derive(Debug, Clone)]
+struct PendingCopy {
+    dst: BufferId,
+    src: BufferId,
+    dst_off: i64,
+    src_off: i64,
+    size: usize,
+}
+
+/// Execute a region; `Some(values)` when a Yield/Return fired.
+fn exec_region(
+    func: &Func,
+    region: &Region,
+    env: &mut HashMap<Value, Val>,
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    pending: &mut HashMap<u32, PendingCopy>,
+    trace: &mut Option<Vec<MemAccess>>,
+) -> Result<Option<Vec<Val>>> {
+    for &opref in &region.ops {
+        let op = func.op(opref);
+        if let Some(vals) = exec_op(func, op, env, mem, stats, pending, trace)? {
+            return Ok(Some(vals));
+        }
+    }
+    Ok(None)
+}
+
+fn exec_op(
+    func: &Func,
+    op: &Op,
+    env: &mut HashMap<Value, Val>,
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    pending: &mut HashMap<u32, PendingCopy>,
+    trace: &mut Option<Vec<MemAccess>>,
+) -> Result<Option<Vec<Val>>> {
+    let get = |env: &HashMap<Value, Val>, v: Value| -> Result<Val> {
+        env.get(&v).copied().ok_or_else(|| Error::Ir(format!("undefined value {v}")))
+    };
+    macro_rules! set1 {
+        ($val:expr) => {{
+            env.insert(op.results[0], $val);
+        }};
+    }
+
+    match &op.kind {
+        OpKind::ConstI(c) => set1!(Val::I(*c)),
+        OpKind::ConstF(c) => set1!(Val::F(*c)),
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Min | OpKind::Max => {
+            stats.arith_ops += 1;
+            let a = get(env, op.operands[0])?;
+            let b = get(env, op.operands[1])?;
+            let r = match (a, b) {
+                (Val::I(x), Val::I(y)) => Val::I(int_bin(&op.kind, x, y)?),
+                (Val::F(x), Val::F(y)) => Val::F(float_bin(&op.kind, x, y)),
+                _ => return Err(Error::Ir(format!("{}: mixed types", op.kind.mnemonic()))),
+            };
+            set1!(r)
+        }
+        OpKind::Rem | OpKind::Shl | OpKind::Shr | OpKind::And | OpKind::Or | OpKind::Xor => {
+            stats.arith_ops += 1;
+            let x = get(env, op.operands[0])?.as_i()?;
+            let y = get(env, op.operands[1])?.as_i()?;
+            let r = match op.kind {
+                OpKind::Rem => {
+                    if y == 0 {
+                        return Err(Error::Ir("remainder by zero".into()));
+                    }
+                    x % y
+                }
+                OpKind::Shl => x.wrapping_shl(y as u32),
+                OpKind::Shr => x.wrapping_shr(y as u32),
+                OpKind::And => x & y,
+                OpKind::Or => x | y,
+                OpKind::Xor => x ^ y,
+                _ => unreachable!(),
+            };
+            set1!(Val::I(r))
+        }
+        OpKind::Neg => {
+            stats.arith_ops += 1;
+            let r = match get(env, op.operands[0])? {
+                Val::I(x) => Val::I(-x),
+                Val::F(x) => Val::F(-x),
+            };
+            set1!(r)
+        }
+        OpKind::Sqrt => {
+            stats.arith_ops += 1;
+            set1!(Val::F(get(env, op.operands[0])?.as_f()?.sqrt()))
+        }
+        OpKind::Powi(e) => {
+            stats.arith_ops += *e as u64;
+            set1!(Val::F(get(env, op.operands[0])?.as_f()?.powi(*e as i32)))
+        }
+        OpKind::ToFloat => set1!(Val::F(get(env, op.operands[0])?.as_i()? as f64)),
+        OpKind::ToInt => set1!(Val::I(get(env, op.operands[0])?.as_f()? as i64)),
+        OpKind::Cmp(pred) => {
+            stats.arith_ops += 1;
+            let a = get(env, op.operands[0])?;
+            let b = get(env, op.operands[1])?;
+            let ord = match (a, b) {
+                (Val::I(x), Val::I(y)) => x.partial_cmp(&y),
+                (Val::F(x), Val::F(y)) => x.partial_cmp(&y),
+                _ => return Err(Error::Ir("cmp: mixed types".into())),
+            }
+            .ok_or_else(|| Error::Ir("cmp: unordered (NaN)".into()))?;
+            let r = match pred {
+                CmpPred::Eq => ord.is_eq(),
+                CmpPred::Ne => ord.is_ne(),
+                CmpPred::Lt => ord.is_lt(),
+                CmpPred::Le => ord.is_le(),
+                CmpPred::Gt => ord.is_gt(),
+                CmpPred::Ge => ord.is_ge(),
+            };
+            set1!(Val::I(r as i64))
+        }
+        OpKind::Select => {
+            stats.arith_ops += 1;
+            let c = get(env, op.operands[0])?.as_i()?;
+            let r = if c != 0 { get(env, op.operands[1])? } else { get(env, op.operands[2])? };
+            set1!(r)
+        }
+        OpKind::Load(b) | OpKind::Fetch(b) | OpKind::ReadSmem(b) => {
+            stats.loads += 1;
+            let idx = get(env, op.operands[0])?.as_i()?;
+            if let Some(t) = trace.as_mut() {
+                t.push(MemAccess { buf: *b, index: idx, is_store: false });
+            }
+            set1!(mem.get(*b, idx, func.buffer(*b).len)?)
+        }
+        OpKind::LoadItfc { buf, .. } => {
+            stats.loads += 1;
+            let idx = get(env, op.operands[0])?.as_i()?;
+            if let Some(t) = trace.as_mut() {
+                t.push(MemAccess { buf: *buf, index: idx, is_store: false });
+            }
+            set1!(mem.get(*buf, idx, func.buffer(*buf).len)?)
+        }
+        OpKind::Store(b) | OpKind::WriteSmem(b) => {
+            stats.stores += 1;
+            let idx = get(env, op.operands[0])?.as_i()?;
+            if let Some(t) = trace.as_mut() {
+                t.push(MemAccess { buf: *b, index: idx, is_store: true });
+            }
+            let v = get(env, op.operands[1])?;
+            mem.set(*b, idx, func.buffer(*b).len, v)?;
+        }
+        OpKind::StoreItfc { buf, .. } => {
+            stats.stores += 1;
+            let idx = get(env, op.operands[0])?.as_i()?;
+            if let Some(t) = trace.as_mut() {
+                t.push(MemAccess { buf: *buf, index: idx, is_store: true });
+            }
+            let v = get(env, op.operands[1])?;
+            mem.set(*buf, idx, func.buffer(*buf).len, v)?;
+        }
+        OpKind::ReadIrf(r) => set1!(Val::I(mem.irf[*r as usize])),
+        OpKind::WriteIrf(r) => {
+            mem.irf[*r as usize] = get(env, op.operands[0])?.as_i()?;
+        }
+        OpKind::Transfer { dst, src, size } | OpKind::Copy { dst, src, size, .. } => {
+            stats.transfers += 1;
+            stats.transfer_bytes += *size as u64;
+            let dst_off = get(env, op.operands[0])?.as_i()?;
+            let src_off = get(env, op.operands[1])?.as_i()?;
+            do_copy(func, mem, *dst, dst_off, *src, src_off, *size)?;
+        }
+        OpKind::CopyIssue { dst, src, size, tag, .. } => {
+            stats.transfers += 1;
+            stats.transfer_bytes += *size as u64;
+            let dst_off = get(env, op.operands[0])?.as_i()?;
+            let src_off = get(env, op.operands[1])?.as_i()?;
+            pending.insert(
+                *tag,
+                PendingCopy { dst: *dst, src: *src, dst_off, src_off, size: *size },
+            );
+        }
+        OpKind::CopyWait { tag } => {
+            let p = pending
+                .remove(tag)
+                .ok_or_else(|| Error::Ir(format!("copy_wait: unknown tag {tag}")))?;
+            do_copy(func, mem, p.dst, p.dst_off, p.src, p.src_off, p.size)?;
+        }
+        OpKind::For => {
+            let lb = get(env, op.operands[0])?.as_i()?;
+            let ub = get(env, op.operands[1])?.as_i()?;
+            let step = get(env, op.operands[2])?.as_i()?;
+            if step <= 0 {
+                return Err(Error::Ir(format!("for: non-positive step {step}")));
+            }
+            let region = &op.regions[0];
+            let iv = region.params[0];
+            let carried: Vec<Value> = region.params[1..].to_vec();
+            let mut vals: Vec<Val> = op.operands[3..]
+                .iter()
+                .map(|&v| get(env, v))
+                .collect::<Result<_>>()?;
+            let mut i = lb;
+            while i < ub {
+                stats.loop_iterations += 1;
+                stats.branches += 1;
+                env.insert(iv, Val::I(i));
+                for (&cv, &val) in carried.iter().zip(&vals) {
+                    env.insert(cv, val);
+                }
+                match exec_region(func, region, env, mem, stats, pending, trace)? {
+                    Some(y) => vals = y,
+                    None => return Err(Error::Ir("for body missing yield".into())),
+                }
+                i += step;
+            }
+            for (&res, &val) in op.results.iter().zip(&vals) {
+                env.insert(res, val);
+            }
+        }
+        OpKind::If => {
+            stats.branches += 1;
+            let c = get(env, op.operands[0])?.as_i()?;
+            let region = if c != 0 { &op.regions[0] } else { &op.regions[1] };
+            match exec_region(func, region, env, mem, stats, pending, trace)? {
+                Some(vals) => {
+                    for (&res, &val) in op.results.iter().zip(&vals) {
+                        env.insert(res, val);
+                    }
+                }
+                None => return Err(Error::Ir("if arm missing yield".into())),
+            }
+        }
+        OpKind::Yield | OpKind::Return => {
+            let vals: Vec<Val> =
+                op.operands.iter().map(|&v| get(env, v)).collect::<Result<_>>()?;
+            return Ok(Some(vals));
+        }
+        OpKind::Intrinsic(name) => {
+            stats.intrinsic_calls += 1;
+            return Err(Error::Ir(format!(
+                "intrinsic `{name}` reached the reference interpreter; lower it or \
+                 execute through the ISAX engine"
+            )));
+        }
+    }
+    Ok(None)
+}
+
+fn do_copy(
+    func: &Func,
+    mem: &mut Memory,
+    dst: BufferId,
+    dst_off: i64,
+    src: BufferId,
+    src_off: i64,
+    size: usize,
+) -> Result<()> {
+    // Offsets/sizes are in bytes; elements are 4 bytes.
+    if size % 4 != 0 || dst_off % 4 != 0 || src_off % 4 != 0 {
+        return Err(Error::Ir("transfer offsets/size must be 4B-aligned".into()));
+    }
+    let n = size / 4;
+    let d0 = (dst_off / 4) as usize;
+    let s0 = (src_off / 4) as usize;
+    let dlen = func.buffer(dst).len;
+    let slen = func.buffer(src).len;
+    if d0 + n > dlen || s0 + n > slen {
+        return Err(Error::Ir(format!(
+            "transfer out of bounds: dst {d0}+{n}>{dlen} or src {s0}+{n}>{slen}"
+        )));
+    }
+    for i in 0..n {
+        let v = mem.get(src, (s0 + i) as i64, slen)?;
+        mem.set(dst, (d0 + i) as i64, dlen, v)?;
+    }
+    Ok(())
+}
+
+fn int_bin(kind: &OpKind, x: i64, y: i64) -> Result<i64> {
+    Ok(match kind {
+        OpKind::Add => x.wrapping_add(y),
+        OpKind::Sub => x.wrapping_sub(y),
+        OpKind::Mul => x.wrapping_mul(y),
+        OpKind::Div => {
+            if y == 0 {
+                return Err(Error::Ir("division by zero".into()));
+            }
+            x / y
+        }
+        OpKind::Min => x.min(y),
+        OpKind::Max => x.max(y),
+        _ => unreachable!(),
+    })
+}
+
+fn float_bin(kind: &OpKind, x: f64, y: f64) -> f64 {
+    match kind {
+        OpKind::Add => x + y,
+        OpKind::Sub => x - y,
+        OpKind::Mul => x * y,
+        OpKind::Div => x / y,
+        OpKind::Min => x.min(y),
+        OpKind::Max => x.max(y),
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::ir::types::Type;
+
+    #[test]
+    fn sum_loop() {
+        let mut b = FuncBuilder::new("sum");
+        let buf = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let lb = b.const_i(0);
+        let ub = b.const_i(8);
+        let one = b.const_i(1);
+        let sums = b.for_loop(lb, ub, one, &[zero], |b, iv, carried| {
+            let x = b.load(buf, iv);
+            vec![b.add(carried[0], x)]
+        });
+        let f = b.finish(&sums);
+        let mut mem = Memory::for_func(&f);
+        mem.write_i32(crate::ir::func::BufferId(0), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let out = run(&f, &[], &mut mem).unwrap();
+        assert_eq!(out, vec![Val::I(36)]);
+    }
+
+    #[test]
+    fn transfer_moves_bytes() {
+        let mut b = FuncBuilder::new("t");
+        let g = b.global("g", DType::F32, 16, CacheHint::Cold);
+        let s = b.scratchpad("s", DType::F32, 16, 1);
+        let zero = b.const_i(0);
+        b.transfer(s, zero, g, zero, 16 * 4);
+        let f = b.finish(&[]);
+        let mut mem = Memory::for_func(&f);
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        mem.write_f32(crate::ir::func::BufferId(0), &data);
+        run(&f, &[], &mut mem).unwrap();
+        assert_eq!(mem.read_f32(crate::ir::func::BufferId(1)), data);
+    }
+
+    #[test]
+    fn issue_wait_pairs_complete_at_wait() {
+        use crate::interface::model::InterfaceId;
+        use crate::interface::TransactionKind;
+        let mut b = FuncBuilder::new("t");
+        let g = b.global("g", DType::I32, 4, CacheHint::Unknown);
+        let s = b.scratchpad("s", DType::I32, 4, 1);
+        let zero = b.const_i(0);
+        // hand-emit issue/wait
+        let mut f = {
+            b.transfer(s, zero, g, zero, 0); // placeholder replaced below
+            b.finish(&[])
+        };
+        // Replace the placeholder transfer with issue+wait ops.
+        let issue = f.add_op(Op::new(
+            OpKind::CopyIssue {
+                itfc: InterfaceId(0),
+                dst: crate::ir::func::BufferId(1),
+                src: crate::ir::func::BufferId(0),
+                size: 16,
+                kind: TransactionKind::Load,
+                tag: 7,
+                after: vec![],
+            },
+            vec![Value(0), Value(0)],
+            vec![],
+        ));
+        let wait = f.add_op(Op::new(OpKind::CopyWait { tag: 7 }, vec![], vec![]));
+        let ret = f.entry.ops.pop().unwrap(); // return
+        f.entry.ops.pop(); // placeholder transfer
+        f.entry.ops.push(issue);
+        f.entry.ops.push(wait);
+        f.entry.ops.push(ret);
+
+        let mut mem = Memory::for_func(&f);
+        mem.write_i32(crate::ir::func::BufferId(0), &[9, 8, 7, 6]);
+        run(&f, &[], &mut mem).unwrap();
+        assert_eq!(mem.read_i32(crate::ir::func::BufferId(1)), vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn if_else_selects_arm() {
+        let mut b = FuncBuilder::new("t");
+        let p = b.param(Type::Int);
+        let zero = b.const_i(0);
+        let c = b.cmp(CmpPred::Gt, p, zero);
+        let r = b.if_else(c, |b| vec![b.const_i(10)], |b| vec![b.const_i(20)]);
+        let f = b.finish(&r);
+        let mut mem = Memory::for_func(&f);
+        assert_eq!(run(&f, &[Val::I(5)], &mut mem).unwrap(), vec![Val::I(10)]);
+        assert_eq!(run(&f, &[Val::I(-5)], &mut mem).unwrap(), vec![Val::I(20)]);
+    }
+
+    #[test]
+    fn stats_count_work() {
+        let mut b = FuncBuilder::new("t");
+        let buf = b.global("x", DType::I32, 4, CacheHint::Unknown);
+        b.for_range(0, 4, 1, |b, iv| {
+            let v = b.load(buf, iv);
+            let one = b.const_i(1);
+            let w = b.add(v, one);
+            b.store(buf, iv, w);
+        });
+        let f = b.finish(&[]);
+        let mut mem = Memory::for_func(&f);
+        let mut stats = ExecStats::default();
+        run_with_stats(&f, &[], &mut mem, &mut stats).unwrap();
+        assert_eq!(stats.loads, 4);
+        assert_eq!(stats.stores, 4);
+        assert_eq!(stats.loop_iterations, 4);
+        assert_eq!(stats.arith_ops, 4);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut b = FuncBuilder::new("t");
+        let buf = b.global("x", DType::I32, 2, CacheHint::Unknown);
+        let idx = b.const_i(5);
+        let v = b.load(buf, idx);
+        let f = b.finish(&[v]);
+        let mut mem = Memory::for_func(&f);
+        assert!(run(&f, &[], &mut mem).is_err());
+    }
+}

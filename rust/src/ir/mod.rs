@@ -1,0 +1,33 @@
+//! Aquas-IR (§4.2): a multi-level SSA IR with regions.
+//!
+//! The paper implements Aquas-IR as an MLIR dialect; this crate implements
+//! the same three refinement levels as a purpose-built IR (see DESIGN.md's
+//! substitution ledger):
+//!
+//! | Level         | Representative ops                         | exposed µ-arch features |
+//! |---------------|--------------------------------------------|-------------------------|
+//! | Functional    | `transfer`, `fetch`, `read_smem`, `read_irf` | `m`: transfer size    |
+//! | Architectural | `copy`/`load` bound to a `!memitfc<>`      | `W, M` legality; `I, L, E` latency; `C` cache penalty |
+//! | Temporal      | `copy_issue`/`copy_wait` with `after` deps | `I`-aware order; hierarchy phase order |
+//!
+//! The same IR also hosts *software* programs (plain loops + load/store),
+//! so the retargetable compiler (§5) can align ISAX descriptions and
+//! application code at one abstraction level.
+//!
+//! Submodules: [`types`], [`ops`], [`func`] (module/function/arena),
+//! [`builder`], [`printer`], [`verifier`], [`affine`] (index analysis),
+//! [`interp`] (reference interpreter used for HW/SW equivalence checks).
+
+pub mod affine;
+pub mod builder;
+pub mod func;
+pub mod interp;
+pub mod ops;
+pub mod printer;
+pub mod types;
+pub mod verifier;
+
+pub use builder::FuncBuilder;
+pub use func::{BufferDecl, BufferId, BufferKind, Func, OpRef, Region, Value};
+pub use ops::{CmpPred, Op, OpKind};
+pub use types::Type;

@@ -1,0 +1,233 @@
+//! Operation kinds across all Aquas-IR levels plus the software dialect.
+
+use crate::interface::model::InterfaceId;
+use crate::interface::TransactionKind;
+use crate::ir::func::{BufferId, Region, Value};
+
+/// Comparison predicates for `Cmp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpPred {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Every operation kind. Operand/result arity conventions are documented
+/// per variant; the verifier enforces them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    // ----- dataflow (software + all hardware levels) ---------------------
+    /// Integer constant. `() -> int`
+    ConstI(i64),
+    /// Float constant. `() -> float`
+    ConstF(f64),
+    /// `(a, b) -> r`; polymorphic over Int/Float (operands must agree).
+    Add,
+    Sub,
+    Mul,
+    /// Signed division (Int) / fp division (Float).
+    Div,
+    /// Remainder (Int only).
+    Rem,
+    /// Shift left (Int only) — note: deliberately *not* affine-friendly;
+    /// the §5.3 example rewrites `i << 2` into `i * 4`.
+    Shl,
+    /// Arithmetic shift right (Int only).
+    Shr,
+    And,
+    Or,
+    Xor,
+    Min,
+    Max,
+    /// `(a) -> r` negate.
+    Neg,
+    /// Comparison. `(a, b) -> int(0|1)`
+    Cmp(CmpPred),
+    /// `(cond, a, b) -> r`
+    Select,
+    /// Square root (Float).
+    Sqrt,
+    /// Power with constant integer exponent (graphics: shininess).
+    Powi(u32),
+    /// Int -> Float.
+    ToFloat,
+    /// Float -> Int (truncating).
+    ToInt,
+
+    // ----- software-level memory ----------------------------------------
+    /// Load one element. `(index) -> value`; buffer's elem type decides.
+    Load(BufferId),
+    /// Store one element. `(index, value) -> ()`
+    Store(BufferId),
+
+    // ----- Aquas-IR functional level (§4.2) ------------------------------
+    /// Mechanism-agnostic bulk transfer of `size` bytes:
+    /// `(dst_off, src_off) -> ()` with `dst`/`src` buffers as attributes.
+    Transfer { dst: BufferId, src: BufferId, size: usize },
+    /// Mechanism-agnostic single-element fetch from global memory:
+    /// `(index) -> value`.
+    Fetch(BufferId),
+    /// Scratchpad read/write. `(index) -> value` / `(index, value) -> ()`
+    ReadSmem(BufferId),
+    WriteSmem(BufferId),
+    /// Integer register-file access (ISAX operand plumbing).
+    /// `() -> value` / `(value) -> ()`
+    ReadIrf(u8),
+    WriteIrf(u8),
+
+    // ----- Aquas-IR architectural level ----------------------------------
+    /// Interface-bound bulk copy (one legal transaction of `size` bytes):
+    /// `(dst_off, src_off) -> ()`.
+    Copy {
+        itfc: InterfaceId,
+        dst: BufferId,
+        src: BufferId,
+        size: usize,
+        kind: TransactionKind,
+    },
+    /// Interface-bound scalar access: `(index) -> value`.
+    LoadItfc { itfc: InterfaceId, buf: BufferId },
+    /// `(index, value) -> ()`.
+    StoreItfc { itfc: InterfaceId, buf: BufferId },
+
+    // ----- Aquas-IR temporal level ----------------------------------------
+    /// Asynchronous issue of a decomposed transaction. `tag` names the
+    /// transaction; `after` lists tags that must issue before this one
+    /// (the paper's `after` attribute). `(dst_off, src_off) -> ()`
+    CopyIssue {
+        itfc: InterfaceId,
+        dst: BufferId,
+        src: BufferId,
+        size: usize,
+        kind: TransactionKind,
+        tag: u32,
+        after: Vec<u32>,
+    },
+    /// Wait for a tagged transaction to complete. `() -> ()`
+    CopyWait { tag: u32 },
+
+    // ----- control flow ----------------------------------------------------
+    /// `for iv = lb to ub step s iter_args(init...)`:
+    /// operands `[lb, ub, step, init...]`, one body region whose params are
+    /// `[iv, carried...]`, results = carried-out values.
+    For,
+    /// `(cond) -> results`; regions `[then, else]`, each ending in Yield.
+    If,
+    /// Region terminator carrying loop-carried / if results.
+    Yield,
+    /// Function return.
+    Return,
+    /// A matched ISAX invocation (§5.4 lowering): `name` identifies the
+    /// custom instruction; operands are its software-visible inputs.
+    Intrinsic(String),
+}
+
+impl OpKind {
+    /// Does this op have side effects / impose ordering (an *anchor* in the
+    /// §5.2 e-graph encoding)?
+    pub fn is_anchor(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Store(_)
+                | OpKind::WriteSmem(_)
+                | OpKind::WriteIrf(_)
+                | OpKind::Transfer { .. }
+                | OpKind::Copy { .. }
+                | OpKind::StoreItfc { .. }
+                | OpKind::CopyIssue { .. }
+                | OpKind::CopyWait { .. }
+                | OpKind::For
+                | OpKind::If
+                | OpKind::Yield
+                | OpKind::Return
+                | OpKind::Intrinsic(_)
+        )
+    }
+
+    /// Does this op read or write memory at all (used by elision analysis
+    /// and the matcher's effect checks)?
+    pub fn touches_memory(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Load(_)
+                | OpKind::Store(_)
+                | OpKind::Fetch(_)
+                | OpKind::ReadSmem(_)
+                | OpKind::WriteSmem(_)
+                | OpKind::Transfer { .. }
+                | OpKind::Copy { .. }
+                | OpKind::LoadItfc { .. }
+                | OpKind::StoreItfc { .. }
+                | OpKind::CopyIssue { .. }
+        )
+    }
+
+    /// Mnemonic used by the printer and the e-graph symbol table.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::ConstI(_) => "const.i",
+            OpKind::ConstF(_) => "const.f",
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Rem => "rem",
+            OpKind::Shl => "shl",
+            OpKind::Shr => "shr",
+            OpKind::And => "and",
+            OpKind::Or => "or",
+            OpKind::Xor => "xor",
+            OpKind::Min => "min",
+            OpKind::Max => "max",
+            OpKind::Neg => "neg",
+            OpKind::Cmp(_) => "cmp",
+            OpKind::Select => "select",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Powi(_) => "powi",
+            OpKind::ToFloat => "to_float",
+            OpKind::ToInt => "to_int",
+            OpKind::Load(_) => "load",
+            OpKind::Store(_) => "store",
+            OpKind::Transfer { .. } => "transfer",
+            OpKind::Fetch(_) => "fetch",
+            OpKind::ReadSmem(_) => "read_smem",
+            OpKind::WriteSmem(_) => "write_smem",
+            OpKind::ReadIrf(_) => "read_irf",
+            OpKind::WriteIrf(_) => "write_irf",
+            OpKind::Copy { .. } => "copy",
+            OpKind::LoadItfc { .. } => "load_itfc",
+            OpKind::StoreItfc { .. } => "store_itfc",
+            OpKind::CopyIssue { .. } => "copy_issue",
+            OpKind::CopyWait { .. } => "copy_wait",
+            OpKind::For => "for",
+            OpKind::If => "if",
+            OpKind::Yield => "yield",
+            OpKind::Return => "return",
+            OpKind::Intrinsic(_) => "isax",
+        }
+    }
+}
+
+/// One operation: kind + operands + results + nested regions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    pub operands: Vec<Value>,
+    pub results: Vec<Value>,
+    pub regions: Vec<Region>,
+}
+
+impl Op {
+    pub fn new(kind: OpKind, operands: Vec<Value>, results: Vec<Value>) -> Self {
+        Self { kind, operands, results, regions: Vec::new() }
+    }
+
+    /// Single result helper; panics if the op has != 1 results.
+    pub fn result(&self) -> Value {
+        assert_eq!(self.results.len(), 1, "{:?} has {} results", self.kind, self.results.len());
+        self.results[0]
+    }
+}

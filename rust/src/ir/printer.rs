@@ -1,0 +1,152 @@
+//! Textual form of Aquas-IR (MLIR-flavoured). Used by `aquas synth --demo`
+//! to show the Figure 4 IR refinements and by debugging/tests.
+
+use std::fmt::Write;
+
+use crate::ir::func::{Func, Region};
+use crate::ir::ops::{CmpPred, Op, OpKind};
+
+/// Render a function to text.
+pub fn print_func(f: &Func) -> String {
+    let mut out = String::new();
+    for b in &f.buffers {
+        let kind = match b.kind {
+            crate::ir::func::BufferKind::Global => "global".to_string(),
+            crate::ir::func::BufferKind::Scratchpad { banks } => format!("smem<banks={banks}>"),
+        };
+        let _ = writeln!(
+            out,
+            "  {} : {} {}[{}] hint={:?} @0x{:x}",
+            b.name,
+            kind,
+            b.elem.name(),
+            b.len,
+            b.hint,
+            b.base_addr
+        );
+    }
+    let params: Vec<String> = f.params.iter().map(|p| format!("{p}")).collect();
+    let _ = writeln!(out, "func @{}({}) {{", f.name, params.join(", "));
+    print_region(f, &f.entry, 1, &mut out);
+    out.push_str("}\n");
+    out
+}
+
+fn print_region(f: &Func, region: &Region, depth: usize, out: &mut String) {
+    for &opref in &region.ops {
+        print_op(f, f.op(opref), depth, out);
+    }
+}
+
+fn print_op(f: &Func, op: &Op, depth: usize, out: &mut String) {
+    let pad = "  ".repeat(depth);
+    let results: Vec<String> = op.results.iter().map(|r| format!("{r}")).collect();
+    let operands: Vec<String> = op.operands.iter().map(|o| format!("{o}")).collect();
+    let lhs = if results.is_empty() { String::new() } else { format!("{} = ", results.join(", ")) };
+
+    match &op.kind {
+        OpKind::For => {
+            let iv = op.regions[0].params[0];
+            let carried: Vec<String> =
+                op.regions[0].params[1..].iter().map(|p| format!("{p}")).collect();
+            let _ = write!(
+                out,
+                "{pad}{lhs}for {iv} = {} to {} step {}",
+                operands[0], operands[1], operands[2]
+            );
+            if !carried.is_empty() {
+                let inits: Vec<String> = operands[3..].to_vec();
+                let _ = write!(out, " iter_args({} = {})", carried.join(", "), inits.join(", "));
+            }
+            out.push_str(" {\n");
+            print_region(f, &op.regions[0], depth + 1, out);
+            let _ = writeln!(out, "{pad}}}");
+        }
+        OpKind::If => {
+            let _ = writeln!(out, "{pad}{lhs}if {} {{", operands[0]);
+            print_region(f, &op.regions[0], depth + 1, out);
+            let _ = writeln!(out, "{pad}}} else {{");
+            print_region(f, &op.regions[1], depth + 1, out);
+            let _ = writeln!(out, "{pad}}}");
+        }
+        kind => {
+            let attr = attr_string(f, kind);
+            let _ = writeln!(out, "{pad}{lhs}{}{attr} {}", kind.mnemonic(), operands.join(", "));
+        }
+    }
+}
+
+fn attr_string(f: &Func, kind: &OpKind) -> String {
+    match kind {
+        OpKind::ConstI(v) => format!(" {v}"),
+        OpKind::ConstF(v) => format!(" {v}"),
+        OpKind::Cmp(p) => format!(
+            ".{}",
+            match p {
+                CmpPred::Eq => "eq",
+                CmpPred::Ne => "ne",
+                CmpPred::Lt => "lt",
+                CmpPred::Le => "le",
+                CmpPred::Gt => "gt",
+                CmpPred::Ge => "ge",
+            }
+        ),
+        OpKind::Powi(e) => format!("<{e}>"),
+        OpKind::Load(b) | OpKind::Store(b) | OpKind::Fetch(b) | OpKind::ReadSmem(b)
+        | OpKind::WriteSmem(b) => format!(" {}", f.buffer(*b).name),
+        OpKind::ReadIrf(r) | OpKind::WriteIrf(r) => format!(" x{r}"),
+        OpKind::Transfer { dst, src, size } => {
+            format!(" {}<-{} #{}B", f.buffer(*dst).name, f.buffer(*src).name, size)
+        }
+        OpKind::Copy { itfc, dst, src, size, kind } => format!(
+            " {}<-{} #{}B via @itfc{} ({:?})",
+            f.buffer(*dst).name,
+            f.buffer(*src).name,
+            size,
+            itfc.0,
+            kind
+        ),
+        OpKind::LoadItfc { itfc, buf } | OpKind::StoreItfc { itfc, buf } => {
+            format!(" {} via @itfc{}", f.buffer(*buf).name, itfc.0)
+        }
+        OpKind::CopyIssue { itfc, dst, src, size, tag, after, .. } => format!(
+            " {}<-{} #{}B via @itfc{} tag={} after={:?}",
+            f.buffer(*dst).name,
+            f.buffer(*src).name,
+            size,
+            itfc.0,
+            tag,
+            after
+        ),
+        OpKind::CopyWait { tag } => format!(" tag={tag}"),
+        OpKind::Intrinsic(name) => format!(".{name}"),
+        _ => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FuncBuilder;
+    use crate::interface::cache::CacheHint;
+    use crate::runtime::DType;
+
+    #[test]
+    fn prints_loop_structure() {
+        let mut b = FuncBuilder::new("demo");
+        let buf = b.global("x", DType::F32, 8, CacheHint::Warm);
+        b.for_range(0, 8, 1, |b, iv| {
+            let v = b.load(buf, iv);
+            let two = b.const_f(2.0);
+            let d = b.mul(v, two);
+            b.store(buf, iv, d);
+        });
+        let f = b.finish(&[]);
+        let text = print_func(&f);
+        assert!(text.contains("func @demo"));
+        assert!(text.contains("for"));
+        assert!(text.contains("load x"));
+        assert!(text.contains("store x"));
+        assert!(text.contains("hint=Warm"));
+    }
+}

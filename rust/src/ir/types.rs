@@ -1,0 +1,29 @@
+//! Value types. The IR keeps the type lattice deliberately small: scalar
+//! integers and floats (64-bit in the interpreter; hardware width is a
+//! synthesis attribute, not a type property), plus `None` for ops without
+//! results. Buffers are declared at function scope (see
+//! [`crate::ir::func::BufferDecl`]) rather than passed as memref values —
+//! this mirrors how ISAX descriptions name scratchpads and interfaces as
+//! module-level symbols.
+
+/// Scalar type of an SSA value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Type {
+    /// Integer scalar (modelled as i64; hardware width is an attribute).
+    #[default]
+    Int,
+    /// Floating-point scalar (modelled as f64).
+    Float,
+    /// No value (results of side-effect-only ops).
+    None,
+}
+
+impl std::fmt::Display for Type {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Type::Int => write!(f, "i64"),
+            Type::Float => write!(f, "f64"),
+            Type::None => write!(f, "none"),
+        }
+    }
+}

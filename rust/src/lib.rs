@@ -1,0 +1,38 @@
+//! # Aquas — holistic hardware–software co-optimization for ASIPs
+//!
+//! Reproduction of *"Aquas: Enhancing Domain Specialization through Holistic
+//! Hardware-Software Co-Optimization based on MLIR"* (CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the Aquas framework: the multi-level
+//!   [`ir`](crate::ir) (Aquas-IR), the [`interface`](crate::interface)
+//!   memory-interface model (§4.1), the [`synthesis`](crate::synthesis)
+//!   flow (§4.3), the [`egraph`](crate::egraph)-based
+//!   [`compiler`](crate::compiler) (§5), cycle-level [`cores`](crate::cores)
+//!   simulators, the [`area`](crate::area) model, the four case-study
+//!   [`workloads`](crate::workloads) (§6), and the LLM serving
+//!   [`coordinator`](crate::coordinator) that drives AOT artifacts through
+//!   the PJRT [`runtime`](crate::runtime).
+//! - **Layer 2 (build-time)** — `python/compile/model.py`: a Llama-style
+//!   transformer in JAX, lowered once to HLO text.
+//! - **Layer 1 (build-time)** — `python/compile/kernels/`: Pallas kernels
+//!   modelling each ISAX datapath, verified against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt`, and the Rust binary is self-contained after that.
+
+pub mod area;
+pub mod bench_harness;
+pub mod compiler;
+pub mod coordinator;
+pub mod cores;
+pub mod egraph;
+pub mod error;
+pub mod interface;
+pub mod ir;
+pub mod runtime;
+pub mod synthesis;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};

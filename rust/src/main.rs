@@ -1,0 +1,189 @@
+//! `aquas` CLI — synth / compile / sim / serve / bench.
+//!
+//! Hand-rolled argument parsing (clap is not in the offline vendor set;
+//! see DESIGN.md).
+
+use aquas::bench_harness as bh;
+use aquas::coordinator::{Coordinator, CoordinatorConfig, SchedulePolicy};
+use aquas::runtime::Runtime;
+
+const USAGE: &str = "\
+aquas — holistic hardware-software co-optimization for ASIPs (paper repro)
+
+USAGE:
+    aquas <COMMAND> [ARGS]
+
+COMMANDS:
+    synth --demo fir7         show the fir7 IR after each synthesis stage
+                              (Figure 4) + generated structural Verilog
+    compile <kernel>          compile one case-study kernel against its
+                              ISAX and print the Table-3 statistics
+                              (kernels: vdecomp mgf2mm vdist3.vv mcov.vs
+                               vfsmax vmadot vmvar mphong vrgb2yuv)
+    bench <what>              regenerate a table/figure:
+                              table2 | table3 | fig2 | fig3 | fig6 | fig7 | fig8 | all
+    serve [--policy p] [-n N] run the LLM serving demo over the AOT
+                              artifacts (policy: decode-first | prefill-first)
+    ir-levels                 print the Aquas-IR level summary (Table 1)
+    help                      this text
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> aquas::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("synth") => cmd_synth(&args[1..]),
+        Some("compile") => cmd_compile(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("ir-levels") => {
+            println!("{}", ir_levels());
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            Err(aquas::Error::Coordinator("bad usage".into()))
+        }
+    }
+}
+
+fn cmd_synth(args: &[String]) -> aquas::Result<()> {
+    if args.iter().any(|a| a == "--demo") {
+        println!("{}", bh::fir7::fig4());
+        return Ok(());
+    }
+    eprintln!("synth currently supports: aquas synth --demo fir7");
+    Ok(())
+}
+
+fn all_kernels() -> Vec<aquas::workloads::Kernel> {
+    let mut ks = aquas::workloads::table2_kernels();
+    ks.extend(aquas::workloads::graphics_kernels());
+    ks
+}
+
+fn cmd_compile(args: &[String]) -> aquas::Result<()> {
+    let name = args.first().ok_or_else(|| {
+        aquas::Error::Compiler("usage: aquas compile <kernel> [--variant]".into())
+    })?;
+    let use_variant = args.iter().any(|a| a == "--variant");
+    let ks = all_kernels();
+    let k = ks
+        .iter()
+        .find(|k| k.name == name)
+        .ok_or_else(|| aquas::Error::Compiler(format!("unknown kernel `{name}`")))?;
+    let func = if use_variant {
+        k.variants.first().map(|(_, f)| f.clone()).unwrap_or_else(|| k.software.clone())
+    } else {
+        k.software.clone()
+    };
+    let r = aquas::compiler::compile(&func, &[k.isax.clone()], &Default::default())?;
+    println!("kernel: {}", k.name);
+    println!("matched: {:?}", r.stats.matched);
+    println!(
+        "rewrites: {} internal / {} external",
+        r.stats.internal_rewrites, r.stats.external_rewrites
+    );
+    println!(
+        "e-nodes: {} initial / {} saturated",
+        r.stats.initial_enodes, r.stats.saturated_enodes
+    );
+    println!("\nlowered program:\n{}", aquas::ir::printer::print_func(&r.func));
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> aquas::Result<()> {
+    let what = args.first().map(String::as_str).unwrap_or("all");
+    let run_one = |name: &str| {
+        match name {
+            "table2" => println!("{}", bh::table2::report().render()),
+            "table3" => println!("{}", bh::table3::report().render()),
+            "fig2" => println!("{}", bh::fig2().render()),
+            "fig3" => println!("{}", bh::fir7::fig3().render()),
+            "fig6" => println!("{}", bh::fig6().render()),
+            "fig7" => println!("{}", bh::fig7().render()),
+            "fig8" => println!("{}", bh::fig8().render()),
+            other => eprintln!("unknown bench `{other}`"),
+        };
+    };
+    if what == "all" {
+        for name in ["fig2", "fig3", "table2", "table3", "fig6", "fig7", "fig8"] {
+            run_one(name);
+        }
+    } else {
+        run_one(what);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> aquas::Result<()> {
+    let mut policy = SchedulePolicy::DecodeFirst;
+    let mut n_requests = 4usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--policy" => {
+                i += 1;
+                policy = match args.get(i).map(String::as_str) {
+                    Some("prefill-first") => SchedulePolicy::PrefillFirst,
+                    _ => SchedulePolicy::DecodeFirst,
+                };
+            }
+            "-n" => {
+                i += 1;
+                n_requests = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(4);
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let rt = Runtime::load("artifacts")?;
+    println!("platform: {} | entries: {:?}", rt.platform(), rt.entry_names());
+    let mut coord = Coordinator::new(&rt, CoordinatorConfig { policy, ..Default::default() });
+    let mut rng = aquas::util::rng::Rng::new(7);
+    let vocab = rt.manifest().model.vocab;
+    for _ in 0..n_requests {
+        let len = rng.range(4, rt.manifest().model.prefill_len);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(vocab as u64) as i32).collect();
+        coord.submit(prompt, 8)?;
+    }
+    let metrics = coord.run_to_completion()?;
+    for m in &metrics {
+        println!(
+            "req {}: prompt {} -> {} tokens | ttft {} us | mean itl {} us | sim speedup {:.2}x",
+            m.id,
+            m.prompt_len,
+            m.generated.len(),
+            m.ttft_us,
+            if m.itl_us.is_empty() {
+                0
+            } else {
+                m.itl_us.iter().sum::<u128>() / m.itl_us.len() as u128
+            },
+            m.sim_base_cycles / m.sim_isax_cycles.max(1.0),
+        );
+    }
+    Ok(())
+}
+
+fn ir_levels() -> &'static str {
+    "\
+Table 1 — Aquas-IR abstraction levels
+  Functional    | transfer, fetch, read_smem, read_irf | m: transfer size
+  Architectural | !memitfc<>, copy #bulk, load #scalar | W,M legality; I,L,E latency; C cache penalty
+  Temporal      | copy_issue/copy_wait (after=...)     | I-aware order; hierarchy phase order"
+}

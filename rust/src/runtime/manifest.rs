@@ -1,0 +1,198 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Records every AOT entry's argument/output shapes and the
+//! serving model configuration so calls are typechecked before PJRT.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor argument or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn new(shape: Vec<usize>, dtype: DType) -> Self {
+        Self { shape, dtype }
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(Json::as_usize)
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get("dtype")?.as_str()?)?;
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    /// File name within the artifact directory (e.g. `llm_decode.hlo.txt`).
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntrySpec {
+    /// Validate a call's tensors against this entry's signature.
+    pub fn check_args(&self, name: &str, args: &[Tensor]) -> Result<()> {
+        if args.len() != self.args.len() {
+            return Err(Error::Runtime(format!(
+                "entry `{name}`: expected {} args, got {}",
+                self.args.len(),
+                args.len()
+            )));
+        }
+        for (i, (arg, spec)) in args.iter().zip(&self.args).enumerate() {
+            if arg.dtype() != spec.dtype {
+                return Err(Error::Runtime(format!(
+                    "entry `{name}` arg {i}: dtype {:?} != manifest {:?}",
+                    arg.dtype(),
+                    spec.dtype
+                )));
+            }
+            if arg.shape() != spec.shape.as_slice() {
+                return Err(Error::Runtime(format!(
+                    "entry `{name}` arg {i}: shape {:?} != manifest {:?}",
+                    arg.shape(),
+                    spec.shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            file: j.get("file")?.as_str()?.to_string(),
+            args: j.get("args")?.as_arr()?.iter().map(TensorSpec::from_json).collect::<Result<_>>()?,
+            outputs: j
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Serving model configuration recorded by aot.py (tiny config for the
+/// real PJRT run; the paper's 110M config is modelled by the cycle study).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub hidden: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub batch: usize,
+    pub param_count: u64,
+}
+
+impl ModelSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab: j.get("vocab")?.as_usize()?,
+            dim: j.get("dim")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            hidden: j.get("hidden")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            prefill_len: j.get("prefill_len")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            param_count: j.get("param_count")?.as_u64()?,
+        })
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelSpec,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    /// Load + parse the manifest file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Manifest(format!("cannot read {path:?}: {e}. Run `make artifacts` first."))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let model = ModelSpec::from_json(j.get("model")?)?;
+        let mut entries = BTreeMap::new();
+        for (name, spec) in j.get("entries")?.as_obj()? {
+            entries.insert(name.clone(), EntrySpec::from_json(spec)?);
+        }
+        Ok(Self { model, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 256, "dim": 64, "n_layers": 2, "n_heads": 4,
+                "head_dim": 16, "hidden": 160, "max_seq": 64,
+                "prefill_len": 16, "batch": 1, "param_count": 123456},
+      "entries": {
+        "gf2mm": {"file": "gf2mm.hlo.txt",
+                   "args": [{"shape": [64, 64], "dtype": "int32"},
+                            {"shape": [64, 64], "dtype": "int32"}],
+                   "outputs": [{"shape": [64, 64], "dtype": "int32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.dim, 64);
+        let e = &m.entries["gf2mm"];
+        assert_eq!(e.args.len(), 2);
+        assert_eq!(e.outputs[0].shape, vec![64, 64]);
+        assert_eq!(e.outputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn check_args_rejects_wrong_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = &m.entries["gf2mm"];
+        let bad = Tensor::i32(vec![0; 16], &[4, 4]).unwrap();
+        let good = Tensor::i32(vec![0; 64 * 64], &[64, 64]).unwrap();
+        assert!(e.check_args("gf2mm", &[bad, good.clone()]).is_err());
+        assert!(e.check_args("gf2mm", &[good.clone(), good]).is_ok());
+    }
+
+    #[test]
+    fn check_args_rejects_wrong_dtype() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = &m.entries["gf2mm"];
+        let f = Tensor::f32(vec![0.0; 64 * 64], &[64, 64]).unwrap();
+        let i = Tensor::i32(vec![0; 64 * 64], &[64, 64]).unwrap();
+        assert!(e.check_args("gf2mm", &[f, i]).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute them.
+//!
+//! This is the only place the crate touches XLA. The interchange format is
+//! HLO **text** (see `python/compile/aot.py`): jax ≥ 0.5 serializes
+//! `HloModuleProto` with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids and round-trips cleanly.
+//!
+//! Everything is compiled once at startup ([`Runtime::load`]) or on first
+//! use ([`Runtime::execute`] lazily compiles); the request path is pure
+//! Rust + PJRT with no Python anywhere.
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{EntrySpec, Manifest, ModelSpec, TensorSpec};
+pub use tensor::{DType, Tensor};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// A PJRT-backed executor for the AOT artifact bundle.
+///
+/// Thread-safety: the executable cache is guarded by a mutex; `execute`
+/// takes `&self` and is safe to call from the coordinator's event loop.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory: parse `manifest.json`, create the PJRT
+    /// CPU client. Executables compile lazily on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, dir, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// The artifact manifest (entry names, shapes, model config).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (always "cpu" on this image).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Eagerly compile one entry (otherwise compiled on first `execute`).
+    pub fn compile_entry(&self, name: &str) -> Result<()> {
+        let mut exes = self.exes.lock().expect("runtime mutex poisoned");
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown entry `{name}`")))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Manifest(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry with typed tensors; validates shapes/dtypes against
+    /// the manifest and unwraps the output tuple.
+    pub fn execute(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown entry `{name}`")))?;
+        spec.check_args(name, args)?;
+        self.compile_entry(name)?;
+
+        let literals: Vec<xla::Literal> =
+            args.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let exes = self.exes.lock().expect("runtime mutex poisoned");
+        let exe = exes.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        drop(exes);
+        // aot.py lowers everything with return_tuple=True.
+        let parts = lit.to_tuple().map_err(|e| Error::Xla(e.to_string()))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "entry `{name}`: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s))
+            .collect()
+    }
+
+    /// Names of all available entries, sorted.
+    pub fn entry_names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.manifest.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("entries", &self.manifest.entries.len())
+            .finish()
+    }
+}

@@ -1,0 +1,160 @@
+//! Typed host tensors: the runtime's argument/result currency.
+//!
+//! Only the dtypes the artifact bundle actually uses are supported (f32 and
+//! i32); extending to more is mechanical.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::TensorSpec;
+
+/// Element dtype. Parsed from numpy names to match `aot.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    /// Parse the numpy dtype name used in the manifest.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unsupported dtype `{other}`"))),
+        }
+    }
+
+    /// The numpy dtype name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+/// Raw storage for a [`Tensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    /// Build an f32 tensor; checks element count against the shape.
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::Runtime(format!(
+                "tensor data len {} != shape {:?} ({n})",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(Self { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    /// Build an i32 tensor; checks element count against the shape.
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::Runtime(format!(
+                "tensor data len {} != shape {:?} ({n})",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(Self { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    /// All-zeros tensor of the given spec.
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        let n = spec.numel();
+        let data = match spec.dtype {
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+        };
+        Self { shape: spec.shape.clone(), data }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Borrow as f32 slice (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not f32".into())),
+        }
+    }
+
+    /// Borrow as i32 slice (errors on dtype mismatch).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not i32".into())),
+        }
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read an XLA literal back into a typed tensor, shaped per `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        match spec.dtype {
+            DType::F32 => Tensor::f32(lit.to_vec::<f32>()?, &spec.shape),
+            DType::I32 => Tensor::i32(lit.to_vec::<i32>()?, &spec.shape),
+        }
+    }
+
+    /// Row-major linear index of a multi-dim coordinate.
+    pub fn index(&self, coord: &[usize]) -> usize {
+        debug_assert_eq!(coord.len(), self.shape.len());
+        let mut idx = 0;
+        for (c, d) in coord.iter().zip(&self.shape) {
+            debug_assert!(c < d);
+            idx = idx * d + c;
+        }
+        idx
+    }
+
+    /// Argmax over a flat f32 tensor (used for greedy decoding).
+    pub fn argmax_f32(&self) -> Result<usize> {
+        let v = self.as_f32()?;
+        if v.is_empty() {
+            return Err(Error::Runtime("argmax of empty tensor".into()));
+        }
+        let mut best = 0;
+        for (i, &x) in v.iter().enumerate() {
+            if x > v[best] {
+                best = i;
+            }
+        }
+        Ok(best)
+    }
+}

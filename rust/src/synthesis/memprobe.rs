@@ -1,0 +1,222 @@
+//! Memory-operation extraction: the shared "what does this ISAX move"
+//! view consumed by selection, scheduling, and both synthesis flows.
+//!
+//! An ISAX description at the functional level stages data with `transfer`
+//! ops (bulk) and touches globals with `fetch`/per-element ops inside its
+//! compute loops. The probe flattens these into a list of [`MemOp`]s with
+//! direction, size, base address, cache hint, and loop-trip multiplicity.
+
+use crate::error::{Error, Result};
+use crate::interface::cache::CacheHint;
+use crate::interface::TransactionKind;
+use crate::ir::func::{BufferId, BufferKind, Func, OpRef, Region};
+use crate::ir::ops::OpKind;
+
+/// One memory operation visible to interface selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemOp {
+    /// Dense id used by [`crate::synthesis::selection::Assignment`].
+    pub id: usize,
+    /// Load = global → ISAX, Store = ISAX → global.
+    pub kind: TransactionKind,
+    /// Total bytes moved by one execution of this op.
+    pub bytes: usize,
+    /// Base byte address in the global address space.
+    pub base_addr: u64,
+    /// cache_hint of the global buffer touched.
+    pub hint: CacheHint,
+    /// The global buffer.
+    pub buf: BufferId,
+    /// Where the op lives in the IR.
+    pub opref: OpRef,
+    /// How many times the op executes per ISAX invocation (loop trip
+    /// product for per-element ops; 1 for top-level bulk transfers).
+    pub trips: u64,
+    /// True for bulk `transfer`, false for per-element `fetch`-style ops.
+    pub bulk: bool,
+}
+
+/// Extraction result: ops plus loop statistics used by elision and the
+/// compute model.
+#[derive(Debug, Clone, Default)]
+pub struct MemProbe {
+    pub ops: Vec<MemOp>,
+    /// Total loop iterations across the (possibly nested) compute loops.
+    pub total_iterations: u64,
+    /// Arithmetic op count inside loop bodies (single iteration).
+    pub body_arith_ops: u64,
+}
+
+/// Static trip count of a `for` op when lb/ub/step are constants.
+pub fn static_trips(func: &Func, opref: OpRef) -> Option<u64> {
+    let op = func.op(opref);
+    if !matches!(op.kind, OpKind::For) {
+        return None;
+    }
+    let cval = |v| {
+        let defs = func.def_map();
+        defs[v as usize].and_then(|d| match func.op(d).kind {
+            OpKind::ConstI(c) => Some(c),
+            _ => None,
+        })
+    };
+    let lb = cval(op.operands[0].0)?;
+    let ub = cval(op.operands[1].0)?;
+    let step = cval(op.operands[2].0)?;
+    if step <= 0 || ub <= lb {
+        return Some(0);
+    }
+    Some(((ub - lb + step - 1) / step) as u64)
+}
+
+/// Extract all memory operations from a functional-level ISAX description.
+pub fn extract(func: &Func) -> Result<MemProbe> {
+    let mut probe = MemProbe::default();
+    walk(func, &func.entry, 1, &mut probe)?;
+    Ok(probe)
+}
+
+fn walk(func: &Func, region: &Region, trips: u64, probe: &mut MemProbe) -> Result<()> {
+    for &opref in &region.ops {
+        let op = func.op(opref);
+        match &op.kind {
+            OpKind::Transfer { dst, src, size } => {
+                // Direction: global -> scratchpad is a load; scratchpad ->
+                // global (or global -> global writes) is a store.
+                let (global, kind) = classify_transfer(func, *dst, *src)?;
+                let decl = func.buffer(global);
+                probe.ops.push(MemOp {
+                    id: probe.ops.len(),
+                    kind,
+                    bytes: *size,
+                    base_addr: decl.base_addr,
+                    hint: decl.hint,
+                    buf: global,
+                    opref,
+                    trips,
+                    bulk: true,
+                });
+            }
+            OpKind::Fetch(b) => {
+                let decl = func.buffer(*b);
+                probe.ops.push(MemOp {
+                    id: probe.ops.len(),
+                    kind: TransactionKind::Load,
+                    bytes: 4,
+                    base_addr: decl.base_addr,
+                    hint: decl.hint,
+                    buf: *b,
+                    opref,
+                    trips,
+                    bulk: false,
+                });
+            }
+            OpKind::Load(b) | OpKind::Store(b)
+                if matches!(func.buffer(*b).kind, BufferKind::Global) =>
+            {
+                let decl = func.buffer(*b);
+                let kind = if matches!(op.kind, OpKind::Load(_)) {
+                    TransactionKind::Load
+                } else {
+                    TransactionKind::Store
+                };
+                probe.ops.push(MemOp {
+                    id: probe.ops.len(),
+                    kind,
+                    bytes: 4,
+                    base_addr: decl.base_addr,
+                    hint: decl.hint,
+                    buf: *b,
+                    opref,
+                    trips,
+                    bulk: false,
+                });
+            }
+            OpKind::For => {
+                let t = static_trips(func, opref).unwrap_or(1);
+                if trips == 1 {
+                    probe.total_iterations += t;
+                }
+                // Count body arith once.
+                let mut arith = 0u64;
+                func.walk_region(&op.regions[0], &mut |_, o| {
+                    if !o.kind.is_anchor() && !o.kind.touches_memory() {
+                        arith += 1;
+                    }
+                });
+                probe.body_arith_ops = probe.body_arith_ops.max(arith);
+                walk(func, &op.regions[0], trips.saturating_mul(t.max(1)), probe)?;
+            }
+            OpKind::If => {
+                walk(func, &op.regions[0], trips, probe)?;
+                walk(func, &op.regions[1], trips, probe)?;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn classify_transfer(
+    func: &Func,
+    dst: BufferId,
+    src: BufferId,
+) -> Result<(BufferId, TransactionKind)> {
+    let dst_global = matches!(func.buffer(dst).kind, BufferKind::Global);
+    let src_global = matches!(func.buffer(src).kind, BufferKind::Global);
+    match (dst_global, src_global) {
+        (false, true) => Ok((src, TransactionKind::Load)),
+        (true, false) => Ok((dst, TransactionKind::Store)),
+        (true, true) => Ok((dst, TransactionKind::Store)), // mem-to-mem: count the write side
+        (false, false) => Err(Error::Synthesis(
+            "transfer between two scratchpads needs no interface".into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    #[test]
+    fn extracts_bulk_and_element_ops() {
+        let mut b = FuncBuilder::new("fir7");
+        let src = b.global("src", DType::F32, 27, CacheHint::Cold);
+        let out = b.global("out", DType::F32, 21, CacheHint::Warm);
+        let s_src = b.scratchpad("s_src", DType::F32, 27, 1);
+        let zero = b.const_i(0);
+        b.transfer(s_src, zero, src, zero, 108);
+        b.for_range(0, 21, 1, |b, iv| {
+            let v = b.read_smem(s_src, iv);
+            b.store(out, iv, v);
+        });
+        let f = b.finish(&[]);
+        let probe = extract(&f).unwrap();
+        assert_eq!(probe.ops.len(), 2);
+        assert_eq!(probe.ops[0].kind, TransactionKind::Load);
+        assert_eq!(probe.ops[0].bytes, 108);
+        assert!(probe.ops[0].bulk);
+        assert_eq!(probe.ops[1].kind, TransactionKind::Store);
+        assert_eq!(probe.ops[1].trips, 21);
+        assert!(!probe.ops[1].bulk);
+        assert_eq!(probe.total_iterations, 21);
+    }
+
+    #[test]
+    fn trip_counts_multiply_in_nests() {
+        let mut b = FuncBuilder::new("nest");
+        let g = b.global("g", DType::F32, 64, CacheHint::Unknown);
+        b.for_range(0, 4, 1, |b, _| {
+            b.for_range(0, 8, 1, |b, j| {
+                let v = b.fetch(g, j);
+                let _ = v;
+            });
+        });
+        let f = b.finish(&[]);
+        let probe = extract(&f).unwrap();
+        assert_eq!(probe.ops.len(), 1);
+        assert_eq!(probe.ops[0].trips, 32);
+    }
+}

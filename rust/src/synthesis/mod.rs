@@ -1,0 +1,88 @@
+//! §4.3 — interface-aware synthesis-time optimization.
+//!
+//! The pipeline progressively optimizes and lowers an ISAX description
+//! through the Aquas-IR levels:
+//!
+//! 1. [`elision`] — scratchpad buffer elision (functional level);
+//! 2. [`selection`] — interface selection + transaction canonicalization
+//!    (functional → architectural);
+//! 3. [`scheduling`] — transaction ordering under in-flight and hierarchy
+//!    constraints via a memoized search (architectural → temporal);
+//! 4. [`hwgen`] — dynamic-pipeline hardware generation (temporal → RTL-ish
+//!    datapath description + structural Verilog subset).
+//!
+//! [`naive`] implements the APS-like baseline flow the paper compares
+//! against (blind elision, everything on the core port, FIFO order).
+//! [`memprobe`] extracts the memory-operation view both flows share.
+
+pub mod elision;
+pub mod hwgen;
+pub mod memprobe;
+pub mod naive;
+pub mod scheduling;
+pub mod selection;
+
+use crate::error::Result;
+use crate::interface::model::InterfaceSet;
+use crate::ir::Func;
+
+pub use memprobe::{MemOp, MemProbe};
+pub use scheduling::{SchedItem, Schedule};
+pub use selection::Assignment;
+
+/// Knobs for the synthesis pipeline.
+#[derive(Debug, Clone)]
+pub struct SynthOptions {
+    /// Enable scratchpad elision analysis (§4.3 step 1).
+    pub elide_scratchpads: bool,
+    /// Exhaustive interface assignment below this op count, greedy above.
+    pub exhaustive_limit: usize,
+    /// Body-cycle estimate per loop iteration used in elision's tentative
+    /// rescheduling (the compute that hides per-element fetch latency).
+    pub body_cycles_per_iter: u64,
+}
+
+impl Default for SynthOptions {
+    fn default() -> Self {
+        Self { elide_scratchpads: true, exhaustive_limit: 10, body_cycles_per_iter: 1 }
+    }
+}
+
+/// Everything the pipeline produces: the IR after each stage plus the
+/// final schedule (consumed by the ISAX cycle engine and hwgen).
+#[derive(Debug, Clone)]
+pub struct SynthResult {
+    /// Functional level after elision.
+    pub functional: Func,
+    /// Architectural level (interface-bound, canonicalized copies).
+    pub architectural: Func,
+    /// Temporal level (ordered issue/wait pairs).
+    pub temporal: Func,
+    /// Interface assignment per memory op.
+    pub assignments: Vec<Assignment>,
+    /// The final transaction schedule with its modelled latency.
+    pub schedule: Schedule,
+    /// Buffers elided by step 1 (by name).
+    pub elided: Vec<String>,
+}
+
+/// Run the full interface-aware pipeline on an ISAX description.
+pub fn synthesize(func: &Func, itfcs: &InterfaceSet, opts: &SynthOptions) -> Result<SynthResult> {
+    // Step 1: scratchpad buffer elision (functional level).
+    let (functional, elided) = if opts.elide_scratchpads {
+        elision::run(func, itfcs, opts)?
+    } else {
+        (func.clone(), Vec::new())
+    };
+
+    // Step 2: interface selection + canonicalization.
+    let probe = memprobe::extract(&functional)?;
+    let assignments = selection::select(&probe, itfcs, opts)?;
+    let architectural = selection::lower_to_architectural(&functional, &probe, &assignments)?;
+
+    // Step 3: transaction scheduling + ordering.
+    let schedule = scheduling::schedule(&probe, &assignments, itfcs)?;
+    let temporal = scheduling::lower_to_temporal(&architectural, &schedule)?;
+
+    Ok(SynthResult { functional, architectural, temporal, assignments, schedule, elided })
+}

@@ -1,0 +1,225 @@
+//! The APS-like baseline flow ([24] in the paper) used for Table 2's
+//! "ICCAD'25" columns.
+//!
+//! It reproduces the failure modes §6.2/§6.3 attribute to prior frameworks:
+//!
+//! - **no block-level memory operations**: every transfer is word-by-word
+//!   over the instruction-extension (core) port — the only interface those
+//!   frameworks abstract;
+//! - **intuitive scratchpad elision**: designers "intuitively apply
+//!   scratchpad buffer elision" without interface/access-pattern analysis,
+//!   so staged buffers are *always* elided — per-element global accesses
+//!   replace bulk staging even when the latency cannot be hidden;
+//! - **FIFO transaction order**: no hierarchy-aware grouping, no in-flight
+//!   aware reordering.
+
+use crate::error::Result;
+use crate::interface::model::{InterfaceId, InterfaceSet};
+use crate::interface::TransactionKind;
+use crate::ir::func::{BufferKind, Func, OpRef};
+use crate::ir::ops::OpKind;
+use crate::synthesis::memprobe::{self};
+use crate::synthesis::scheduling::{mixed_sequence_latency, SchedItem, Schedule};
+use crate::synthesis::selection::Assignment;
+use crate::synthesis::SynthResult;
+
+/// Run the naive flow. The result mirrors [`crate::synthesis::synthesize`]
+/// so downstream consumers (cycle models, hwgen, benches) are agnostic.
+pub fn synthesize_naive(func: &Func, itfcs: &InterfaceSet) -> Result<SynthResult> {
+    // "Intuitive" elision: elide every stageable scratchpad regardless of
+    // whether the per-element latency can be hidden.
+    let (functional, elided) = blind_elide(func);
+
+    let probe = memprobe::extract(&functional)?;
+    // Everything goes through the core port (interface 0), word by word.
+    let cpu = InterfaceId(0);
+    let width = itfcs.get(cpu).width;
+    let assignments: Vec<Assignment> = probe
+        .ops
+        .iter()
+        .map(|op| {
+            let n_words = op.bytes.div_ceil(width);
+            Assignment { op: op.id, itfc: cpu, segments: vec![width; n_words] }
+        })
+        .collect();
+
+    let architectural =
+        crate::synthesis::selection::lower_to_architectural(&functional, &probe, &assignments)?;
+
+    // FIFO schedule: program order, no reordering, single chain.
+    let mut items = Vec::new();
+    let mut seq: Vec<(TransactionKind, usize)> = Vec::new();
+    let mut tag = 0u32;
+    let mut last: Option<u32> = None;
+    for a in &assignments {
+        let mop = &probe.ops[a.op];
+        if !mop.bulk {
+            continue;
+        }
+        let mut offset = 0usize;
+        for &size in &a.segments {
+            items.push(SchedItem {
+                op: a.op,
+                itfc: cpu,
+                kind: mop.kind,
+                size,
+                offset,
+                tag,
+                after: last.map(|t| vec![t]).unwrap_or_default(),
+            });
+            seq.push((mop.kind, size));
+            last = Some(tag);
+            tag += 1;
+            offset += size;
+        }
+    }
+    let lat = mixed_sequence_latency(itfcs.get(cpu), &seq);
+    let mut load_latency = 0;
+    let mut store_latency = 0;
+    for (j, &(kind, _)) in seq.iter().enumerate() {
+        let l = mixed_sequence_latency(itfcs.get(cpu), &seq[..=j]);
+        match kind {
+            TransactionKind::Load => load_latency = load_latency.max(l),
+            TransactionKind::Store => store_latency = store_latency.max(l),
+        }
+    }
+    let schedule = Schedule {
+        items,
+        load_latency,
+        store_latency,
+        per_itfc: if seq.is_empty() { vec![] } else { vec![(cpu, lat)] },
+    };
+    let temporal = crate::synthesis::scheduling::lower_to_temporal(&architectural, &schedule)?;
+
+    Ok(SynthResult { functional, architectural, temporal, assignments, schedule, elided })
+}
+
+/// Elide every scratchpad that is filled by exactly one zero-offset
+/// top-level transfer — no legality or profitability analysis.
+fn blind_elide(func: &Func) -> (Func, Vec<String>) {
+    let mut out = func.clone();
+    let mut elided = Vec::new();
+    let defs = func.def_map();
+    let transfers: Vec<OpRef> = func
+        .entry
+        .ops
+        .iter()
+        .copied()
+        .filter(|&o| matches!(func.op(o).kind, OpKind::Transfer { .. }))
+        .collect();
+    for opref in transfers {
+        let op = func.op(opref);
+        if let OpKind::Transfer { dst, src, .. } = op.kind {
+            let dst_smem = matches!(func.buffer(dst).kind, BufferKind::Scratchpad { .. });
+            let src_global = matches!(func.buffer(src).kind, BufferKind::Global);
+            let zero_offsets = op.operands.iter().all(|&v| {
+                defs[v.0 as usize]
+                    .map(|d| matches!(func.op(d).kind, OpKind::ConstI(0)))
+                    .unwrap_or(false)
+            });
+            // Never elide a buffer that compute writes (that would change
+            // semantics, which even a naive designer notices).
+            let written =
+                func.count_ops(|k| matches!(k, OpKind::WriteSmem(b) if *b == dst));
+            if dst_smem && src_global && zero_offsets && written == 0 {
+                out.entry.ops.retain(|&o| o != opref);
+                for i in 0..out.num_ops() {
+                    let r = OpRef(i as u32);
+                    let o = out.op_mut(r);
+                    if matches!(o.kind, OpKind::ReadSmem(b) if b == dst) {
+                        o.kind = OpKind::Fetch(src);
+                    }
+                }
+                elided.push(func.buffer(dst).name.clone());
+            }
+        }
+    }
+    (out, elided)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    fn staged_func() -> Func {
+        let mut b = FuncBuilder::new("staged");
+        let g = b.global("coeffs", DType::F32, 64, CacheHint::Cold);
+        let out = b.global("out", DType::F32, 16, CacheHint::Warm);
+        let s = b.scratchpad("s", DType::F32, 64, 1);
+        let zero = b.const_i(0);
+        b.transfer(s, zero, g, zero, 256);
+        b.for_range(0, 16, 1, |b, iv| {
+            let four = b.const_i(4);
+            let idx = b.mul(iv, four);
+            let v = b.read_smem(s, idx);
+            b.store(out, iv, v);
+        });
+        b.finish(&[])
+    }
+
+    #[test]
+    fn naive_elides_blindly() {
+        let f = staged_func();
+        let itfcs = InterfaceSet::rocket_default();
+        let r = synthesize_naive(&f, &itfcs).unwrap();
+        // stride-4 cold data: the smart flow keeps the stage; naive elides.
+        assert_eq!(r.elided, vec!["s".to_string()]);
+    }
+
+    #[test]
+    fn naive_uses_core_port_only() {
+        let f = staged_func();
+        let itfcs = InterfaceSet::rocket_default();
+        let r = synthesize_naive(&f, &itfcs).unwrap();
+        assert!(r.assignments.iter().all(|a| a.itfc == InterfaceId(0)));
+        assert!(r.assignments.iter().all(|a| a.segments.iter().all(|&s| s <= 4)));
+    }
+
+    #[test]
+    fn naive_slower_than_aquas_on_bulk_moves() {
+        // The headline mechanism of Table 2: Aquas's interface-aware flow
+        // must beat the naive core-port flow on memory-bound ISAXs.
+        let mut b = FuncBuilder::new("bulk");
+        let g = b.global("src", DType::F32, 64, CacheHint::Cold);
+        let s = b.scratchpad("s", DType::F32, 64, 1);
+        let zero = b.const_i(0);
+        b.transfer(s, zero, g, zero, 256);
+        b.for_range(0, 64, 1, |b, iv| {
+            let v = b.read_smem(s, iv);
+            let w = b.mul(v, v);
+            b.write_smem(s, iv, w);
+        });
+        let f = b.finish(&[]);
+        let itfcs = InterfaceSet::rocket_default();
+        let smart = crate::synthesis::synthesize(&f, &itfcs, &Default::default()).unwrap();
+        let naive = synthesize_naive(&f, &itfcs).unwrap();
+        assert!(
+            smart.schedule.mem_latency() < naive.schedule.mem_latency(),
+            "aquas {} !< naive {}",
+            smart.schedule.mem_latency(),
+            naive.schedule.mem_latency()
+        );
+    }
+
+    #[test]
+    fn naive_semantics_still_correct() {
+        use crate::ir::interp::{run as interp, Memory};
+        let f = staged_func();
+        let itfcs = InterfaceSet::rocket_default();
+        let r = synthesize_naive(&f, &itfcs).unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut m1 = Memory::for_func(&f);
+        m1.write_f32(crate::ir::func::BufferId(0), &data);
+        interp(&f, &[], &mut m1).unwrap();
+        let mut m2 = Memory::for_func(&r.temporal);
+        m2.write_f32(crate::ir::func::BufferId(0), &data);
+        interp(&r.temporal, &[], &mut m2).unwrap();
+        assert_eq!(
+            m1.read_f32(crate::ir::func::BufferId(1)),
+            m2.read_f32(crate::ir::func::BufferId(1))
+        );
+    }
+}

@@ -1,0 +1,391 @@
+//! §4.3 step 2 — interface selection and canonicalization.
+//!
+//! Assigns each memory operation `q` to exactly one visible interface `k`
+//! (binary `X(q,k)`), greedily splitting each request into legal transfer
+//! sizes in decreasing order, minimizing
+//!
+//! ```text
+//! min Σ_k T_k + Σ_{q,k} X(q,k) · ⌈m_q / C_k⌉ · C_k / W_k
+//! ```
+//!
+//! where `T_k` is the closed-form latency estimate
+//! ([`crate::interface::latency::tk_estimate`]) and the second term
+//! penalizes cache-hierarchy mismatch (scaled by the `cache_hint` /
+//! hierarchy-level agreement). Loads and stores are optimized separately
+//! within a region, as in the paper.
+//!
+//! Below [`crate::synthesis::SynthOptions::exhaustive_limit`] ops the
+//! assignment is solved exactly by enumeration; above it a greedy
+//! marginal-cost heuristic is used.
+
+use crate::error::{Error, Result};
+use crate::interface::cache::cache_penalty;
+use crate::interface::latency::TransactionKind;
+use crate::interface::model::{InterfaceId, InterfaceSet, MemInterface};
+use crate::ir::func::Func;
+use crate::ir::ops::{Op, OpKind};
+use crate::synthesis::memprobe::{MemOp, MemProbe};
+use crate::synthesis::SynthOptions;
+
+/// The chosen interface + canonicalized segment sizes for one memory op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub op: usize,
+    pub itfc: InterfaceId,
+    /// Legal transfer sizes in issue order (decreasing, §4.3) for one
+    /// execution of the op.
+    pub segments: Vec<usize>,
+}
+
+/// Per-execution transfer cost of one op on one interface (the summand of
+/// `T_k` without the per-interface lead constant), times trip count, plus
+/// the cache-synchronization penalty.
+fn op_cost(itfc: &MemInterface, op: &MemOp, segments: &[usize]) -> f64 {
+    let w = itfc.width as f64;
+    let per_exec: f64 = match op.kind {
+        TransactionKind::Load => {
+            let bubble = itfc.read_lead as f64 / itfc.in_flight.max(1) as f64;
+            segments.iter().map(|&m| (m as f64 / w).max(bubble)).sum()
+        }
+        TransactionKind::Store => {
+            segments.iter().map(|&m| m as f64 / w + itfc.write_cost as f64).sum()
+        }
+    };
+    let total_bytes = op.bytes.saturating_mul(op.trips as usize);
+    per_exec * op.trips as f64
+        + cache_penalty(total_bytes, itfc.line, itfc.width, op.hint, itfc.level)
+}
+
+/// Full objective for a complete assignment of one direction's ops.
+fn total_cost(
+    ops: &[&MemOp],
+    choice: &[usize],
+    itfcs: &InterfaceSet,
+    segments: &[Vec<Vec<usize>>],
+) -> f64 {
+    let mut cost = 0.0;
+    for (kid, itfc) in itfcs.iter() {
+        let assigned: Vec<usize> = (0..ops.len()).filter(|&q| choice[q] == kid.0).collect();
+        if assigned.is_empty() {
+            continue;
+        }
+        // Lead constant of T_k (applies once per direction per interface).
+        let kind = ops[assigned[0]].kind;
+        cost += match kind {
+            TransactionKind::Load => itfc.read_lead as f64 - 1.0,
+            TransactionKind::Store => -1.0,
+        };
+        for q in assigned {
+            cost += op_cost(itfc, ops[q], &segments[q][kid.0]);
+        }
+    }
+    cost
+}
+
+/// Solve the selection problem for every op in the probe.
+pub fn select(
+    probe: &MemProbe,
+    itfcs: &InterfaceSet,
+    opts: &SynthOptions,
+) -> Result<Vec<Assignment>> {
+    if itfcs.is_empty() {
+        return Err(Error::Synthesis("no interfaces declared".into()));
+    }
+    let mut result: Vec<Option<Assignment>> = vec![None; probe.ops.len()];
+    for kind in [TransactionKind::Load, TransactionKind::Store] {
+        let ops: Vec<&MemOp> = probe.ops.iter().filter(|o| o.kind == kind).collect();
+        if ops.is_empty() {
+            continue;
+        }
+        // Precompute canonical decomposition of each op on each interface.
+        let segments: Vec<Vec<Vec<usize>>> = ops
+            .iter()
+            .map(|o| {
+                itfcs
+                    .iter()
+                    .map(|(_, itfc)| itfc.decompose(o.base_addr, o.bytes))
+                    .collect()
+            })
+            .collect();
+
+        let choice = if ops.len() <= opts.exhaustive_limit {
+            exhaustive(&ops, itfcs, &segments)
+        } else {
+            greedy(&ops, itfcs, &segments)
+        };
+        for (q, op) in ops.iter().enumerate() {
+            let k = choice[q];
+            result[op.id] = Some(Assignment {
+                op: op.id,
+                itfc: InterfaceId(k),
+                segments: segments[q][k].clone(),
+            });
+        }
+    }
+    result
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| a.ok_or_else(|| Error::Synthesis(format!("op {i} unassigned"))))
+        .collect()
+}
+
+fn exhaustive(ops: &[&MemOp], itfcs: &InterfaceSet, segments: &[Vec<Vec<usize>>]) -> Vec<usize> {
+    let k = itfcs.len();
+    let n = ops.len();
+    let mut best: Vec<usize> = vec![0; n];
+    let mut best_cost = f64::INFINITY;
+    let mut choice = vec![0usize; n];
+    // Odometer enumeration of k^n assignments.
+    loop {
+        let cost = total_cost(ops, &choice, itfcs, segments);
+        if cost < best_cost {
+            best_cost = cost;
+            best = choice.clone();
+        }
+        // increment
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            choice[i] += 1;
+            if choice[i] < k {
+                break;
+            }
+            choice[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+fn greedy(ops: &[&MemOp], itfcs: &InterfaceSet, segments: &[Vec<Vec<usize>>]) -> Vec<usize> {
+    // Assign each op to its marginally-cheapest interface, processing big
+    // movers first so they claim the wide port.
+    let mut order: Vec<usize> = (0..ops.len()).collect();
+    order.sort_by_key(|&q| std::cmp::Reverse(ops[q].bytes.saturating_mul(ops[q].trips as usize)));
+    let mut choice = vec![usize::MAX; ops.len()];
+    for q in order {
+        let mut best_k = 0;
+        let mut best_cost = f64::INFINITY;
+        for (kid, itfc) in itfcs.iter() {
+            let lead = match ops[q].kind {
+                TransactionKind::Load => itfc.read_lead as f64 - 1.0,
+                TransactionKind::Store => -1.0,
+            };
+            // Marginal: op cost plus the lead if this interface is unused.
+            let unused = !choice.iter().any(|&c| c == kid.0);
+            let cost =
+                op_cost(itfc, ops[q], &segments[q][kid.0]) + if unused { lead } else { 0.0 };
+            if cost < best_cost {
+                best_cost = cost;
+                best_k = kid.0;
+            }
+        }
+        choice[q] = best_k;
+    }
+    choice
+}
+
+/// Lower functional memory ops to the architectural level using the
+/// computed assignments: `transfer` becomes a run of interface-bound
+/// `copy` ops (one per canonical segment, §4.3 Figure 4(b)); per-element
+/// `fetch`/global `load`/`store` become `load_itfc`/`store_itfc`.
+pub fn lower_to_architectural(
+    func: &Func,
+    probe: &MemProbe,
+    assignments: &[Assignment],
+) -> Result<Func> {
+    let mut out = func.clone();
+
+    for a in assignments {
+        let mop = &probe.ops[a.op];
+        let op = out.op(mop.opref).clone();
+        match op.kind {
+            OpKind::Transfer { dst, src, .. } => {
+                // Build the copy run. Segment offsets accumulate.
+                let mut new_refs = Vec::new();
+                let mut delta = 0usize;
+                for &m in &a.segments {
+                    // offset values: original offset + delta
+                    let (dst_off, src_off) = if delta == 0 {
+                        (op.operands[0], op.operands[1])
+                    } else {
+                        let c = out.new_value(crate::ir::types::Type::Int);
+                        let cref = out.add_op(Op::new(
+                            OpKind::ConstI(delta as i64),
+                            vec![],
+                            vec![c],
+                        ));
+                        new_refs.push(cref);
+                        let d = out.new_value(crate::ir::types::Type::Int);
+                        let dref =
+                            out.add_op(Op::new(OpKind::Add, vec![op.operands[0], c], vec![d]));
+                        new_refs.push(dref);
+                        let s = out.new_value(crate::ir::types::Type::Int);
+                        let sref =
+                            out.add_op(Op::new(OpKind::Add, vec![op.operands[1], c], vec![s]));
+                        new_refs.push(sref);
+                        (d, s)
+                    };
+                    let cp = out.add_op(Op::new(
+                        OpKind::Copy { itfc: a.itfc, dst, src, size: m, kind: mop.kind },
+                        vec![dst_off, src_off],
+                        vec![],
+                    ));
+                    new_refs.push(cp);
+                    delta += m;
+                }
+                replace_in_regions(&mut out, mop.opref, &new_refs)?;
+            }
+            OpKind::Fetch(b) | OpKind::Load(b) => {
+                let o = out.op_mut(mop.opref);
+                o.kind = OpKind::LoadItfc { itfc: a.itfc, buf: b };
+            }
+            OpKind::Store(b) => {
+                let o = out.op_mut(mop.opref);
+                o.kind = OpKind::StoreItfc { itfc: a.itfc, buf: b };
+            }
+            other => {
+                return Err(Error::Synthesis(format!(
+                    "cannot lower {} at op {}",
+                    other.mnemonic(),
+                    a.op
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Replace one opref with a run of oprefs wherever it appears.
+fn replace_in_regions(
+    func: &mut Func,
+    target: crate::ir::func::OpRef,
+    replacement: &[crate::ir::func::OpRef],
+) -> Result<()> {
+    // entry region
+    if let Some(pos) = func.entry.ops.iter().position(|&o| o == target) {
+        func.entry.ops.splice(pos..=pos, replacement.iter().copied());
+        return Ok(());
+    }
+    // nested regions: find the op holding the region
+    for i in 0..func.num_ops() {
+        let opref = crate::ir::func::OpRef(i as u32);
+        let op = func.op(opref);
+        let mut found: Option<(usize, usize)> = None;
+        for (ri, region) in op.regions.iter().enumerate() {
+            if let Some(pos) = region.ops.iter().position(|&o| o == target) {
+                found = Some((ri, pos));
+                break;
+            }
+        }
+        if let Some((ri, pos)) = found {
+            let op = func.op_mut(opref);
+            op.regions[ri].ops.splice(pos..=pos, replacement.iter().copied());
+            return Ok(());
+        }
+    }
+    Err(Error::Synthesis("op to replace not found in any region".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+    use crate::synthesis::memprobe;
+
+    /// Build the fir7 stage-in: a 108B src transfer plus an output store
+    /// loop — the paper's running example.
+    fn fir7_src() -> Func {
+        let mut b = FuncBuilder::new("fir7");
+        let src = b.global("src", DType::F32, 27, CacheHint::Cold);
+        let out = b.global("out", DType::F32, 21, CacheHint::Warm);
+        let s_src = b.scratchpad("s_src", DType::F32, 27, 1);
+        let zero = b.const_i(0);
+        b.transfer(s_src, zero, src, zero, 108);
+        b.for_range(0, 21, 1, |b, iv| {
+            let v = b.read_smem(s_src, iv);
+            b.store(out, iv, v);
+        });
+        b.finish(&[])
+    }
+
+    #[test]
+    fn large_cold_transfer_goes_to_bus() {
+        let f = fir7_src();
+        let itfcs = InterfaceSet::rocket_default();
+        let probe = memprobe::extract(&f).unwrap();
+        let assigns = select(&probe, &itfcs, &SynthOptions::default()).unwrap();
+        // op 0 is the 108B src transfer: must pick the system bus and
+        // canonicalize into 64/32/8/4 (paper Figure 4(b)).
+        let a = &assigns[0];
+        assert_eq!(itfcs.get(a.itfc).name, "@busitfc");
+        assert_eq!(a.segments, vec![64, 32, 8, 4]);
+    }
+
+    #[test]
+    fn small_warm_stores_stay_on_cpu_port() {
+        let f = fir7_src();
+        let itfcs = InterfaceSet::rocket_default();
+        let probe = memprobe::extract(&f).unwrap();
+        let assigns = select(&probe, &itfcs, &SynthOptions::default()).unwrap();
+        // op 1: per-element warm stores — the L1-coupled core port is free
+        // of cache penalty there.
+        let a = &assigns[1];
+        assert_eq!(itfcs.get(a.itfc).name, "@cpuitfc");
+    }
+
+    #[test]
+    fn lowering_emits_copy_run() {
+        let f = fir7_src();
+        let itfcs = InterfaceSet::rocket_default();
+        let probe = memprobe::extract(&f).unwrap();
+        let assigns = select(&probe, &itfcs, &SynthOptions::default()).unwrap();
+        let arch = lower_to_architectural(&f, &probe, &assigns).unwrap();
+        assert_eq!(arch.count_ops(|k| matches!(k, OpKind::Transfer { .. })), 0);
+        assert_eq!(arch.count_ops(|k| matches!(k, OpKind::Copy { .. })), 4);
+        assert_eq!(arch.count_ops(|k| matches!(k, OpKind::StoreItfc { .. })), 1);
+        crate::ir::verifier::verify(&arch).unwrap();
+    }
+
+    #[test]
+    fn lowering_preserves_semantics() {
+        use crate::ir::interp::{run as interp, Memory};
+        let f = fir7_src();
+        let itfcs = InterfaceSet::rocket_default();
+        let probe = memprobe::extract(&f).unwrap();
+        let assigns = select(&probe, &itfcs, &SynthOptions::default()).unwrap();
+        let arch = lower_to_architectural(&f, &probe, &assigns).unwrap();
+
+        let data: Vec<f32> = (0..27).map(|i| (i * 3) as f32).collect();
+        let mut m1 = Memory::for_func(&f);
+        m1.write_f32(crate::ir::func::BufferId(0), &data);
+        interp(&f, &[], &mut m1).unwrap();
+        let mut m2 = Memory::for_func(&arch);
+        m2.write_f32(crate::ir::func::BufferId(0), &data);
+        interp(&arch, &[], &mut m2).unwrap();
+        assert_eq!(
+            m1.read_f32(crate::ir::func::BufferId(1)),
+            m2.read_f32(crate::ir::func::BufferId(1))
+        );
+    }
+
+    #[test]
+    fn greedy_matches_exhaustive_on_small_problems() {
+        let f = fir7_src();
+        let itfcs = InterfaceSet::rocket_default();
+        let probe = memprobe::extract(&f).unwrap();
+        let ex = select(&probe, &itfcs, &SynthOptions::default()).unwrap();
+        let gr = select(
+            &probe,
+            &itfcs,
+            &SynthOptions { exhaustive_limit: 0, ..Default::default() },
+        )
+        .unwrap();
+        let ex_itfcs: Vec<_> = ex.iter().map(|a| a.itfc).collect();
+        let gr_itfcs: Vec<_> = gr.iter().map(|a| a.itfc).collect();
+        assert_eq!(ex_itfcs, gr_itfcs);
+    }
+}

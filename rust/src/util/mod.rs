@@ -1,0 +1,8 @@
+//! Small in-crate utilities that replace unavailable external crates on
+//! this offline image: a JSON parser/serializer (instead of serde_json), a
+//! deterministic PRNG (instead of rand), and a tiny statistics helper used
+//! by the bench harness (instead of criterion).
+
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,74 @@
+//! Tiny statistics used by the bench harness (criterion replacement).
+
+/// Summary of a sample of measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Compute a [`Summary`]; `samples` is consumed (sorted in place).
+pub fn summarize(mut samples: Vec<f64>) -> Summary {
+    assert!(!samples.is_empty(), "summarize of empty sample set");
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        stddev: var.sqrt(),
+        min: samples[0],
+        max: samples[n - 1],
+        p50: percentile(&samples, 0.50),
+        p95: percentile(&samples, 0.95),
+        p99: percentile(&samples, 0.99),
+    }
+}
+
+/// Nearest-rank percentile of a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(values: &[f64]) -> f64 {
+    assert!(!values.is_empty());
+    let log_sum: f64 = values.iter().map(|v| v.max(1e-300).ln()).sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = summarize(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p99, 2.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let s = summarize((1..=100).map(|i| i as f64).collect());
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,408 @@
+//! §6.4 — graphics rendering: `vmvar` (vector moments), `mphong` (Phong
+//! lighting) and `vrgb2yuv` (color-space conversion), pitted against the
+//! Saturn vector unit (VLEN=128).
+
+use crate::compiler::IsaxDef;
+use crate::cores::saturn::VectorProfile;
+use crate::interface::cache::CacheHint;
+use crate::interface::model::InterfaceSet;
+use crate::ir::builder::FuncBuilder;
+use crate::ir::interp::Memory;
+use crate::ir::Func;
+use crate::runtime::DType;
+use crate::synthesis::SynthOptions;
+use crate::util::rng::Rng;
+use crate::workloads::Kernel;
+
+/// Pixels for phong / rgb2yuv.
+pub const NPIX: i64 = 64;
+/// vmvar: ROWS vectors of width W.
+pub const ROWS: i64 = 16;
+pub const W: i64 = 16;
+/// Phong material constants (shininess kept small so `powi` stays cheap).
+pub const KA: f64 = 0.1;
+pub const KD: f64 = 0.7;
+pub const KS: f64 = 0.4;
+pub const SHININESS: u32 = 4;
+
+fn write_unit_vectors(func: &Func, mem: &mut Memory, name: &str, seed: u64, n: i64) {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity((n * 3) as usize);
+    for _ in 0..n {
+        let (x, y, z) = (rng.normal(), rng.normal(), rng.normal());
+        let len = (x * x + y * y + z * z).sqrt().max(1e-9);
+        data.extend([(x / len) as f32, (y / len) as f32, (z / len) as f32]);
+    }
+    mem.write_f32(Kernel::buf(func, name), &data);
+}
+
+// ---------------------------------------------------------------------------
+// vmvar — per-row mean and variance
+// ---------------------------------------------------------------------------
+
+fn build_vmvar(isax: bool) -> Func {
+    let mut b = FuncBuilder::new(if isax { "vmvar" } else { "vmvar_sw" });
+    let x = b.global("x", DType::F32, (ROWS * W) as usize, CacheHint::Warm);
+    let mean = b.global("mean", DType::F32, ROWS as usize, CacheHint::Warm);
+    let var = b.global("var", DType::F32, ROWS as usize, CacheHint::Warm);
+    let sx = if isax {
+        Some(b.scratchpad("s_x", DType::F32, (ROWS * W) as usize, 2))
+    } else {
+        None
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(sx.unwrap(), zero, x, zero, (ROWS * W * 4) as usize);
+    }
+    b.for_range(0, ROWS, 1, |b, r| {
+        let wc = b.const_i(W);
+        let base = b.mul(r, wc);
+        // accumulate sum and sum-of-squares in the output buffers
+        b.for_range(0, W, 1, |b, i| {
+            let idx = b.add(base, i);
+            let v = if isax { b.read_smem(sx.unwrap(), idx) } else { b.load(x, idx) };
+            let s = b.load(mean, r);
+            let s2 = b.add(s, v);
+            b.store(mean, r, s2);
+            let sq = b.mul(v, v);
+            let m2 = b.load(var, r);
+            let m22 = b.add(m2, sq);
+            b.store(var, r, m22);
+        });
+        // finalize: mean /= W; var = var/W - mean²
+        let wf = b.const_f(W as f64);
+        let s = b.load(mean, r);
+        let m = b.div(s, wf);
+        b.store(mean, r, m);
+        let m2 = b.load(var, r);
+        let ex2 = b.div(m2, wf);
+        let msq = b.mul(m, m);
+        let v = b.sub(ex2, msq);
+        b.store(var, r, v);
+    });
+    b.finish(&[])
+}
+
+fn init_vmvar(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0x3A12);
+    let xs: Vec<f32> = (0..ROWS * W).map(|_| rng.normal() as f32).collect();
+    mem.write_f32(Kernel::buf(func, "x"), &xs);
+}
+
+// ---------------------------------------------------------------------------
+// mphong — per-pixel Phong lighting over SoA [N*3] unit vectors
+// ---------------------------------------------------------------------------
+
+fn build_phong(isax: bool, redundant_loads: bool) -> Func {
+    let name = if isax { "mphong" } else { "mphong_sw" };
+    let mut b = FuncBuilder::new(name);
+    let nrm = b.global("nrm", DType::F32, (NPIX * 3) as usize, CacheHint::Warm);
+    let lgt = b.global("lgt", DType::F32, (NPIX * 3) as usize, CacheHint::Warm);
+    let view = b.global("view", DType::F32, (NPIX * 3) as usize, CacheHint::Warm);
+    let out = b.global("inten", DType::F32, NPIX as usize, CacheHint::Warm);
+    let (sn, sl, sv, so) = if isax {
+        (
+            Some(b.scratchpad("s_n", DType::F32, (NPIX * 3) as usize, 2)),
+            Some(b.scratchpad("s_l", DType::F32, (NPIX * 3) as usize, 2)),
+            Some(b.scratchpad("s_v", DType::F32, (NPIX * 3) as usize, 2)),
+            Some(b.scratchpad("s_o", DType::F32, NPIX as usize, 1)),
+        )
+    } else {
+        (None, None, None, None)
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(sn.unwrap(), zero, nrm, zero, (NPIX * 3 * 4) as usize);
+        b.transfer(sl.unwrap(), zero, lgt, zero, (NPIX * 3 * 4) as usize);
+        b.transfer(sv.unwrap(), zero, view, zero, (NPIX * 3 * 4) as usize);
+    }
+    b.for_range(0, NPIX, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        let mut n = [None; 3];
+        let mut l = [None; 3];
+        let mut v = [None; 3];
+        for d in 0..3usize {
+            let off = b.const_i(d as i64);
+            let idx = b.add(base, off);
+            n[d] = Some(if isax { b.read_smem(sn.unwrap(), idx) } else { b.load(nrm, idx) });
+            l[d] = Some(if isax { b.read_smem(sl.unwrap(), idx) } else { b.load(lgt, idx) });
+            v[d] = Some(if isax { b.read_smem(sv.unwrap(), idx) } else { b.load(view, idx) });
+        }
+        // ndotl = max(0, n·l)
+        let mut ndotl = b.const_f(0.0);
+        for d in 0..3 {
+            // "RE" robustness attack: spell the same load twice.
+            let nd = if redundant_loads && d == 0 {
+                let off = b.const_i(0);
+                let idx = b.add(base, off);
+                b.load(nrm, idx)
+            } else {
+                n[d].unwrap()
+            };
+            let p = b.mul(nd, l[d].unwrap());
+            ndotl = b.add(ndotl, p);
+        }
+        let zero_f = b.const_f(0.0);
+        let ndotl = b.max(ndotl, zero_f);
+        // refl = 2*ndotl*n - l ; rdotv = max(0, refl·v)
+        let two = b.const_f(2.0);
+        let scale = b.mul(two, ndotl);
+        let mut rdotv = b.const_f(0.0);
+        for d in 0..3 {
+            let rn = b.mul(scale, n[d].unwrap());
+            let refl = b.sub(rn, l[d].unwrap());
+            let p = b.mul(refl, v[d].unwrap());
+            rdotv = b.add(rdotv, p);
+        }
+        let zero_f2 = b.const_f(0.0);
+        let rdotv = b.max(rdotv, zero_f2);
+        let spec_pow = b.powi(rdotv, SHININESS);
+        // spec gated on front-facing normal
+        let gate = b.cmp(crate::ir::ops::CmpPred::Gt, ndotl, zero_f2);
+        let zero_f3 = b.const_f(0.0);
+        let spec = b.select(gate, spec_pow, zero_f3);
+        let ka = b.const_f(KA);
+        let kd = b.const_f(KD);
+        let ks = b.const_f(KS);
+        let diff = b.mul(kd, ndotl);
+        let sp = b.mul(ks, spec);
+        let partial = b.add(ka, diff);
+        let inten = b.add(partial, sp);
+        if isax {
+            b.write_smem(so.unwrap(), i, inten);
+        } else {
+            b.store(out, i, inten);
+        }
+    });
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(out, zero, so.unwrap(), zero, (NPIX * 4) as usize);
+    }
+    b.finish(&[])
+}
+
+fn init_phong(func: &Func, mem: &mut Memory) {
+    write_unit_vectors(func, mem, "nrm", 0x401, NPIX);
+    write_unit_vectors(func, mem, "lgt", 0x402, NPIX);
+    write_unit_vectors(func, mem, "view", 0x403, NPIX);
+}
+
+// ---------------------------------------------------------------------------
+// vrgb2yuv — 3x3 color matrix per pixel
+// ---------------------------------------------------------------------------
+
+const M: [[f64; 3]; 3] = [
+    [0.299, 0.587, 0.114],
+    [-0.14713, -0.28886, 0.436],
+    [0.615, -0.51499, -0.10001],
+];
+
+fn build_rgb2yuv(isax: bool, reassociated: bool) -> Func {
+    let mut b = FuncBuilder::new(if isax { "vrgb2yuv" } else { "vrgb2yuv_sw" });
+    let rgb = b.global("rgb", DType::F32, (NPIX * 3) as usize, CacheHint::Warm);
+    let yuv = b.global("yuv", DType::F32, (NPIX * 3) as usize, CacheHint::Warm);
+    let (si, so) = if isax {
+        (
+            Some(b.scratchpad("s_i", DType::F32, (NPIX * 3) as usize, 2)),
+            Some(b.scratchpad("s_o", DType::F32, (NPIX * 3) as usize, 2)),
+        )
+    } else {
+        (None, None)
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(si.unwrap(), zero, rgb, zero, (NPIX * 3 * 4) as usize);
+    }
+    b.for_range(0, NPIX, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        let mut chan = [None; 3];
+        for c in 0..3usize {
+            let off = b.const_i(c as i64);
+            let idx = b.add(base, off);
+            chan[c] = Some(if isax { b.read_smem(si.unwrap(), idx) } else { b.load(rgb, idx) });
+        }
+        for row in 0..3usize {
+            let mut terms = Vec::new();
+            for c in 0..3usize {
+                let k = b.const_f(M[row][c]);
+                terms.push(b.mul(chan[c].unwrap(), k));
+            }
+            // AF attack: reassociate the 3-term sum.
+            let sum = if reassociated {
+                let t12 = b.add(terms[1], terms[2]);
+                b.add(terms[0], t12)
+            } else {
+                let t01 = b.add(terms[0], terms[1]);
+                b.add(t01, terms[2])
+            };
+            let off = b.const_i(row as i64);
+            let idx = b.add(base, off);
+            if isax {
+                b.write_smem(so.unwrap(), idx, sum);
+            } else {
+                b.store(yuv, idx, sum);
+            }
+        }
+    });
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(yuv, zero, so.unwrap(), zero, (NPIX * 3 * 4) as usize);
+    }
+    b.finish(&[])
+}
+
+fn init_rgb2yuv(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0x26B);
+    let px: Vec<f32> = (0..NPIX * 3).map(|_| rng.f32()).collect();
+    mem.write_f32(Kernel::buf(func, "rgb"), &px);
+}
+
+// ---------------------------------------------------------------------------
+
+/// The three graphics kernels with variants + Saturn vector profiles.
+pub fn kernels() -> Vec<Kernel> {
+    use crate::compiler::loop_passes::{apply, LoopPass};
+    use crate::compiler::matcher::top_loops;
+
+    let sw_vmvar = build_vmvar(false);
+    let vmvar_unrolled =
+        apply(&sw_vmvar, top_loops(&sw_vmvar)[0], LoopPass::Unroll(2)).expect("unroll vmvar");
+
+    vec![
+        Kernel {
+            name: "vmvar",
+            software: sw_vmvar,
+            variants: vec![("Unroll(2)".into(), vmvar_unrolled)],
+            isax: IsaxDef { name: "vmvar".into(), func: build_vmvar(true) },
+            init: init_vmvar,
+            outputs: vec!["mean", "var"],
+            vector_profile: Some(VectorProfile {
+                elements: (ROWS * W) as u64,
+                vector_ops_per_element: 2, // acc + square
+                mem_ops_per_element: 1,
+                reductions: 2 * ROWS as u64, // per-row sum + sumsq trees
+                scalar_ops: 6 * ROWS as u64, // finalize divides
+            }),
+            synth_opts: SynthOptions::default(),
+            itfcs: InterfaceSet::rocket_default(),
+        },
+        Kernel {
+            name: "mphong",
+            software: build_phong(false, false),
+            variants: vec![("RE (redundant loads)".into(), build_phong(false, true))],
+            isax: IsaxDef { name: "mphong".into(), func: build_phong(true, false) },
+            init: init_phong,
+            outputs: vec!["inten"],
+            vector_profile: Some(VectorProfile {
+                elements: NPIX as u64,
+                vector_ops_per_element: 24,
+                mem_ops_per_element: 10,
+                reductions: 0,
+                scalar_ops: 8,
+            }),
+            synth_opts: SynthOptions::default(),
+            itfcs: InterfaceSet::rocket_default(),
+        },
+        Kernel {
+            name: "vrgb2yuv",
+            software: build_rgb2yuv(false, false),
+            variants: vec![("AF (reassociated)".into(), build_rgb2yuv(false, true))],
+            isax: IsaxDef { name: "vrgb2yuv".into(), func: build_rgb2yuv(true, false) },
+            init: init_rgb2yuv,
+            outputs: vec!["yuv"],
+            vector_profile: Some(VectorProfile {
+                elements: NPIX as u64,
+                vector_ops_per_element: 15,
+                mem_ops_per_element: 6,
+                reductions: 0,
+                scalar_ops: 4,
+            }),
+            synth_opts: SynthOptions::default(),
+            itfcs: InterfaceSet::rocket_default(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+
+    #[test]
+    fn vmvar_moments_correct() {
+        let f = build_vmvar(false);
+        let mut mem = Memory::for_func(&f);
+        init_vmvar(&f, &mut mem);
+        let xs = mem.read_f32(Kernel::buf(&f, "x"));
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let mean = mem.read_f32(Kernel::buf(&f, "mean"));
+        let var = mem.read_f32(Kernel::buf(&f, "var"));
+        for r in 0..ROWS as usize {
+            let row = &xs[r * W as usize..(r + 1) * W as usize];
+            let m: f32 = row.iter().sum::<f32>() / W as f32;
+            let v: f32 = row.iter().map(|x| x * x).sum::<f32>() / W as f32 - m * m;
+            assert!((mean[r] - m).abs() < 1e-4, "row {r}");
+            assert!((var[r] - v).abs() < 1e-3, "row {r}");
+        }
+    }
+
+    #[test]
+    fn phong_in_plausible_range() {
+        let f = build_phong(false, false);
+        let mut mem = Memory::for_func(&f);
+        init_phong(&f, &mut mem);
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let inten = mem.read_f32(Kernel::buf(&f, "inten"));
+        for (i, x) in inten.iter().enumerate() {
+            assert!(*x >= KA as f32 - 1e-6, "pixel {i}: {x}");
+            assert!(*x <= (KA + KD + KS) as f32 + 1e-4, "pixel {i}: {x}");
+        }
+    }
+
+    #[test]
+    fn rgb2yuv_matches_matrix() {
+        let f = build_rgb2yuv(false, false);
+        let mut mem = Memory::for_func(&f);
+        init_rgb2yuv(&f, &mut mem);
+        let rgb = mem.read_f32(Kernel::buf(&f, "rgb"));
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let yuv = mem.read_f32(Kernel::buf(&f, "yuv"));
+        for i in 0..NPIX as usize {
+            for row in 0..3 {
+                let want: f32 = (0..3)
+                    .map(|c| rgb[i * 3 + c] * M[row][c] as f32)
+                    .sum();
+                let got = yuv[i * 3 + row];
+                assert!((got - want).abs() < 1e-4, "pixel {i} row {row}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_graphics_kernels_match_their_isax() {
+        for k in kernels() {
+            let r = compile(&k.software, &[k.isax.clone()], &CompileOptions::default())
+                .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+            assert_eq!(r.stats.matched, vec![k.isax.name.clone()], "{}: {:?}", k.name, r.stats);
+        }
+    }
+
+    #[test]
+    fn all_graphics_variants_match() {
+        for k in kernels() {
+            for (desc, variant) in &k.variants {
+                let r = compile(variant, &[k.isax.clone()], &CompileOptions::default())
+                    .unwrap_or_else(|e| panic!("{} {desc}: {e}", k.name));
+                assert_eq!(
+                    r.stats.matched,
+                    vec![k.isax.name.clone()],
+                    "{} variant {desc}: {:?}",
+                    k.name,
+                    r.stats
+                );
+            }
+        }
+    }
+}

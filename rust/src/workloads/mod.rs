@@ -1,0 +1,131 @@
+//! §6 case studies: PQC, point-cloud processing, graphics rendering, and
+//! CPU LLM inference.
+//!
+//! Each kernel bundles (a) the canonical *software* implementation, (b)
+//! deliberately divergent software variants (the robustness attacks of
+//! Table 3: tiling, unrolling, representation changes, redundancy), (c)
+//! the *ISAX description* at the functional Aquas-IR level, (d) data
+//! initialization + the output buffer to check, and (e) a vector profile
+//! for the Saturn comparison where applicable.
+//!
+//! Everything is deterministic (seeded [`crate::util::rng::Rng`]) so
+//! benches reproduce run-to-run.
+
+pub mod graphics;
+pub mod llm;
+pub mod pcp;
+pub mod pqc;
+
+use crate::compiler::IsaxDef;
+use crate::cores::saturn::VectorProfile;
+use crate::interface::model::InterfaceSet;
+use crate::ir::func::BufferId;
+use crate::ir::interp::Memory;
+use crate::ir::Func;
+use crate::synthesis::SynthOptions;
+
+/// A complete case-study kernel.
+pub struct Kernel {
+    pub name: &'static str,
+    /// Canonical software implementation.
+    pub software: Func,
+    /// Divergent variants: (description, function). All must still match.
+    pub variants: Vec<(String, Func)>,
+    /// The ISAX description consumed by synthesis + the compiler.
+    pub isax: IsaxDef,
+    /// Memory initializer (applies to software and aligned-ISAX layouts,
+    /// which share buffer order by construction).
+    pub init: fn(&Func, &mut Memory),
+    /// Buffers (by name) holding the kernel's outputs.
+    pub outputs: Vec<&'static str>,
+    /// Saturn mapping, when the kernel is vectorizable.
+    pub vector_profile: Option<VectorProfile>,
+    /// Synthesis knobs (body-cycle weight for elision etc.).
+    pub synth_opts: SynthOptions,
+    /// Interface configuration for this study.
+    pub itfcs: InterfaceSet,
+}
+
+impl Kernel {
+    /// Find a buffer id by name in a function (panics if missing —
+    /// kernels own their naming).
+    pub fn buf(func: &Func, name: &str) -> BufferId {
+        func.buffer_by_name(name)
+            .unwrap_or_else(|| panic!("kernel buffer `{name}` missing in {}", func.name))
+    }
+
+    /// Run the software version and return the named output contents
+    /// (f32 lossy for i32 buffers — fine for equality on small ints).
+    pub fn run_software(&self) -> crate::error::Result<Vec<Vec<f32>>> {
+        let mut mem = Memory::for_func(&self.software);
+        (self.init)(&self.software, &mut mem);
+        crate::ir::interp::run(&self.software, &[], &mut mem)?;
+        Ok(self
+            .outputs
+            .iter()
+            .map(|n| mem.read_f32(Self::buf(&self.software, n)))
+            .collect())
+    }
+
+    /// Run the ISAX description (functional level) and return outputs.
+    pub fn run_isax(&self) -> crate::error::Result<Vec<Vec<f32>>> {
+        let mut mem = Memory::for_func(&self.isax.func);
+        (self.init)(&self.isax.func, &mut mem);
+        crate::ir::interp::run(&self.isax.func, &[], &mut mem)?;
+        Ok(self
+            .outputs
+            .iter()
+            .map(|n| mem.read_f32(Self::buf(&self.isax.func, n)))
+            .collect())
+    }
+}
+
+/// All Table 2 kernels (PQC + PCP).
+pub fn table2_kernels() -> Vec<Kernel> {
+    let mut v = pqc::kernels();
+    v.extend(pcp::kernels());
+    v
+}
+
+/// All Figure 7 kernels (graphics).
+pub fn graphics_kernels() -> Vec<Kernel> {
+    graphics::kernels()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kernel_software_matches_isax_semantics() {
+        for k in table2_kernels().into_iter().chain(graphics_kernels()) {
+            let sw = k.run_software().unwrap_or_else(|e| panic!("{}: sw {e}", k.name));
+            let hw = k.run_isax().unwrap_or_else(|e| panic!("{}: isax {e}", k.name));
+            assert_eq!(sw.len(), hw.len(), "{}", k.name);
+            for (a, b) in sw.iter().zip(&hw) {
+                assert_eq!(a.len(), b.len(), "{}", k.name);
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-4 * x.abs().max(1.0),
+                        "{}: {x} != {y}",
+                        k.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernel_verifies() {
+        for k in table2_kernels().into_iter().chain(graphics_kernels()) {
+            crate::ir::verifier::verify(&k.software)
+                .unwrap_or_else(|e| panic!("{} software: {e}", k.name));
+            crate::ir::verifier::verify(&k.isax.func)
+                .unwrap_or_else(|e| panic!("{} isax: {e}", k.name));
+            for (d, v) in &k.variants {
+                crate::ir::verifier::verify(v)
+                    .unwrap_or_else(|e| panic!("{} variant {d}: {e}", k.name));
+            }
+        }
+    }
+}

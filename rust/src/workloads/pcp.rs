@@ -1,0 +1,498 @@
+//! §6.3 — point-cloud processing: the ICP (Iterative Closest Point)
+//! pipeline, accelerated by four ISAXs: `vdist3.vv` (squared Euclidean
+//! distances), `mcov.vs` (cross-covariance), `vfsmax` (max + argmax) and
+//! `vmadot` (matrix–vector product).
+//!
+//! This study runs with the widened 128-bit system bus
+//! ([`InterfaceSet::rocket_wide_bus`]) to test whether the interface-aware
+//! flow exploits the extra bandwidth. Point data is stored
+//! structure-of-arrays-free: [N][3] f32 rows, with the "non-2ⁿ-length"
+//! access pattern the paper calls out (3-element rows never align to
+//! power-of-two transactions).
+
+use crate::compiler::IsaxDef;
+use crate::interface::cache::CacheHint;
+use crate::interface::model::InterfaceSet;
+use crate::ir::builder::FuncBuilder;
+use crate::ir::interp::Memory;
+use crate::ir::Func;
+use crate::runtime::DType;
+use crate::synthesis::SynthOptions;
+use crate::util::rng::Rng;
+use crate::workloads::Kernel;
+
+/// Point count for the kernel studies.
+pub const N: i64 = 32;
+/// vmadot dims.
+pub const MR: i64 = 16;
+pub const MC: i64 = 16;
+
+fn write_points(func: &Func, mem: &mut Memory, name: &str, seed: u64, n: i64) {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<f32> = (0..n * 3).map(|_| rng.normal() as f32).collect();
+    mem.write_f32(Kernel::buf(func, name), &pts);
+}
+
+// ---------------------------------------------------------------------------
+// vdist3.vv — d[i] = ||p_i - q_i||²
+// ---------------------------------------------------------------------------
+
+fn build_vdist3(isax: bool) -> Func {
+    let mut b = FuncBuilder::new(if isax { "vdist3" } else { "vdist3_sw" });
+    let p = b.global("p", DType::F32, (N * 3) as usize, CacheHint::Warm);
+    let q = b.global("q", DType::F32, (N * 3) as usize, CacheHint::Warm);
+    let d = b.global("d", DType::F32, N as usize, CacheHint::Warm);
+    let (sp, sq, sd) = if isax {
+        (
+            Some(b.scratchpad("s_p", DType::F32, (N * 3) as usize, 2)),
+            Some(b.scratchpad("s_q", DType::F32, (N * 3) as usize, 2)),
+            Some(b.scratchpad("s_d", DType::F32, N as usize, 1)),
+        )
+    } else {
+        (None, None, None)
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(sp.unwrap(), zero, p, zero, (N * 3 * 4) as usize);
+        b.transfer(sq.unwrap(), zero, q, zero, (N * 3 * 4) as usize);
+    }
+    b.for_range(0, N, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        let mut acc = b.const_f(0.0);
+        for dim in 0..3 {
+            let off = b.const_i(dim);
+            let idx = b.add(base, off);
+            let (pv, qv) = if isax {
+                (b.read_smem(sp.unwrap(), idx), b.read_smem(sq.unwrap(), idx))
+            } else {
+                (b.load(p, idx), b.load(q, idx))
+            };
+            let diff = b.sub(pv, qv);
+            let sq2 = b.mul(diff, diff);
+            acc = b.add(acc, sq2);
+        }
+        if isax {
+            b.write_smem(sd.unwrap(), i, acc);
+        } else {
+            b.store(d, i, acc);
+        }
+    });
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(d, zero, sd.unwrap(), zero, (N * 4) as usize);
+    }
+    b.finish(&[])
+}
+
+fn init_vdist3(func: &Func, mem: &mut Memory) {
+    write_points(func, mem, "p", 0xD157, N);
+    write_points(func, mem, "q", 0xD158, N);
+}
+
+// ---------------------------------------------------------------------------
+// mcov.vs — cov[3][3] += p_i q_iᵀ (inputs pre-centered by the host)
+// ---------------------------------------------------------------------------
+
+fn build_mcov(isax: bool) -> Func {
+    let mut b = FuncBuilder::new(if isax { "mcov" } else { "mcov_sw" });
+    let p = b.global("p", DType::F32, (N * 3) as usize, CacheHint::Warm);
+    let q = b.global("q", DType::F32, (N * 3) as usize, CacheHint::Warm);
+    let cov = b.global("cov", DType::F32, 9, CacheHint::Warm);
+    let (sp, sq, sc) = if isax {
+        (
+            Some(b.scratchpad("s_p", DType::F32, (N * 3) as usize, 2)),
+            Some(b.scratchpad("s_q", DType::F32, (N * 3) as usize, 2)),
+            Some(b.scratchpad("s_c", DType::F32, 9, 1)),
+        )
+    } else {
+        (None, None, None)
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(sp.unwrap(), zero, p, zero, (N * 3 * 4) as usize);
+        b.transfer(sq.unwrap(), zero, q, zero, (N * 3 * 4) as usize);
+    }
+    b.for_range(0, N, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        b.for_range(0, 3, 1, |b, r| {
+            b.for_range(0, 3, 1, |b, c| {
+                let pr = b.add(base, r);
+                let qc = b.add(base, c);
+                let (pv, qv) = if isax {
+                    (b.read_smem(sp.unwrap(), pr), b.read_smem(sq.unwrap(), qc))
+                } else {
+                    (b.load(p, pr), b.load(q, qc))
+                };
+                let prod = b.mul(pv, qv);
+                let three2 = b.const_i(3);
+                let rr = b.mul(r, three2);
+                let cidx = b.add(rr, c);
+                let old = if isax { b.read_smem(sc.unwrap(), cidx) } else { b.load(cov, cidx) };
+                let acc = b.add(old, prod);
+                if isax {
+                    b.write_smem(sc.unwrap(), cidx, acc);
+                } else {
+                    b.store(cov, cidx, acc);
+                }
+            });
+        });
+    });
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(cov, zero, sc.unwrap(), zero, 36);
+    }
+    b.finish(&[])
+}
+
+fn init_mcov(func: &Func, mem: &mut Memory) {
+    write_points(func, mem, "p", 0xC0F1, N);
+    write_points(func, mem, "q", 0xC0F2, N);
+}
+
+// ---------------------------------------------------------------------------
+// vfsmax — running max + argmax kept in memory (ISAX-offloadable form)
+// ---------------------------------------------------------------------------
+
+fn build_vfsmax(isax: bool) -> Func {
+    let mut b = FuncBuilder::new(if isax { "vfsmax" } else { "vfsmax_sw" });
+    let x = b.global("x", DType::F32, N as usize, CacheHint::Warm);
+    let mx = b.global("mx", DType::F32, 1, CacheHint::Warm);
+    let am = b.global("am", DType::I32, 1, CacheHint::Warm);
+    let sx = if isax {
+        Some(b.scratchpad("s_x", DType::F32, N as usize, 2))
+    } else {
+        None
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(sx.unwrap(), zero, x, zero, (N * 4) as usize);
+    }
+    // mx[0] is pre-initialized by the host to x[0]; loop refines.
+    b.for_range(0, N, 1, |b, i| {
+        let v = if isax { b.read_smem(sx.unwrap(), i) } else { b.load(x, i) };
+        let zero = b.const_i(0);
+        let cur = b.load(mx, zero);
+        let better = b.cmp(crate::ir::ops::CmpPred::Gt, v, cur);
+        let newmax = b.select(better, v, cur);
+        b.store(mx, zero, newmax);
+        let curi = b.load(am, zero);
+        let newi = b.select(better, i, curi);
+        b.store(am, zero, newi);
+    });
+    b.finish(&[])
+}
+
+fn init_vfsmax(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0xF5);
+    let xs: Vec<f32> = (0..N).map(|_| rng.normal() as f32).collect();
+    mem.write_f32(Kernel::buf(func, "mx"), &[xs[0]]);
+    mem.write_f32(Kernel::buf(func, "x"), &xs);
+}
+
+// ---------------------------------------------------------------------------
+// vmadot — y = M·v
+// ---------------------------------------------------------------------------
+
+fn build_vmadot(isax: bool) -> Func {
+    let mut b = FuncBuilder::new(if isax { "vmadot" } else { "vmadot_sw" });
+    let m = b.global("m", DType::F32, (MR * MC) as usize, CacheHint::Warm);
+    let v = b.global("v", DType::F32, MC as usize, CacheHint::Warm);
+    let y = b.global("y", DType::F32, MR as usize, CacheHint::Warm);
+    let (sm, sv, sy) = if isax {
+        (
+            Some(b.scratchpad("s_m", DType::F32, (MR * MC) as usize, 2)),
+            Some(b.scratchpad("s_v", DType::F32, MC as usize, 1)),
+            Some(b.scratchpad("s_y", DType::F32, MR as usize, 1)),
+        )
+    } else {
+        (None, None, None)
+    };
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(sm.unwrap(), zero, m, zero, (MR * MC * 4) as usize);
+        b.transfer(sv.unwrap(), zero, v, zero, (MC * 4) as usize);
+    }
+    b.for_range(0, MR, 1, |b, r| {
+        b.for_range(0, MC, 1, |b, c| {
+            let cc = b.const_i(MC);
+            let rb = b.mul(r, cc);
+            let midx = b.add(rb, c);
+            let (mv, vv) = if isax {
+                (b.read_smem(sm.unwrap(), midx), b.read_smem(sv.unwrap(), c))
+            } else {
+                (b.load(m, midx), b.load(v, c))
+            };
+            let prod = b.mul(mv, vv);
+            let old = if isax { b.read_smem(sy.unwrap(), r) } else { b.load(y, r) };
+            let acc = b.add(old, prod);
+            if isax {
+                b.write_smem(sy.unwrap(), r, acc);
+            } else {
+                b.store(y, r, acc);
+            }
+        });
+    });
+    if isax {
+        let zero = b.const_i(0);
+        b.transfer(y, zero, sy.unwrap(), zero, (MR * 4) as usize);
+    }
+    b.finish(&[])
+}
+
+fn init_vmadot(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0x3AD0);
+    let m: Vec<f32> = (0..MR * MC).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..MC).map(|_| rng.normal() as f32).collect();
+    mem.write_f32(Kernel::buf(func, "m"), &m);
+    mem.write_f32(Kernel::buf(func, "v"), &v);
+}
+
+// ---------------------------------------------------------------------------
+
+/// The four PCP kernels with Table-3 variants (wide 128-bit bus).
+pub fn kernels() -> Vec<Kernel> {
+    use crate::compiler::loop_passes::{apply, LoopPass};
+    use crate::compiler::matcher::top_loops;
+
+    let itfcs = InterfaceSet::rocket_wide_bus;
+
+    let sw_vdist = build_vdist3(false);
+    let vdist_tiled =
+        apply(&sw_vdist, top_loops(&sw_vdist)[0], LoopPass::Tile(8)).expect("tile vdist3");
+    let sw_mcov = build_mcov(false);
+    let mcov_tiled =
+        apply(&sw_mcov, top_loops(&sw_mcov)[0], LoopPass::Tile(4)).expect("tile mcov");
+    let sw_vfsmax = build_vfsmax(false);
+    let vfsmax_unrolled =
+        apply(&sw_vfsmax, top_loops(&sw_vfsmax)[0], LoopPass::Unroll(2)).expect("unroll vfsmax");
+    let sw_vmadot = build_vmadot(false);
+    let vmadot_tiled =
+        apply(&sw_vmadot, top_loops(&sw_vmadot)[0], LoopPass::Tile(4)).expect("tile vmadot");
+
+    vec![
+        Kernel {
+            name: "vdist3.vv",
+            software: sw_vdist,
+            variants: vec![("Tiling(8)".into(), vdist_tiled)],
+            isax: IsaxDef { name: "vdist3".into(), func: build_vdist3(true) },
+            init: init_vdist3,
+            outputs: vec!["d"],
+            vector_profile: None,
+            synth_opts: SynthOptions::default(),
+            itfcs: itfcs(),
+        },
+        Kernel {
+            name: "mcov.vs",
+            software: sw_mcov,
+            variants: vec![("Tiling(4)".into(), mcov_tiled)],
+            isax: IsaxDef { name: "mcov".into(), func: build_mcov(true) },
+            init: init_mcov,
+            outputs: vec!["cov"],
+            vector_profile: None,
+            synth_opts: SynthOptions::default(),
+            itfcs: itfcs(),
+        },
+        Kernel {
+            name: "vfsmax",
+            software: sw_vfsmax,
+            variants: vec![("Unroll(2)".into(), vfsmax_unrolled)],
+            isax: IsaxDef { name: "vfsmax".into(), func: build_vfsmax(true) },
+            init: init_vfsmax,
+            outputs: vec!["mx", "am"],
+            vector_profile: None,
+            synth_opts: SynthOptions::default(),
+            itfcs: itfcs(),
+        },
+        Kernel {
+            name: "vmadot",
+            software: sw_vmadot,
+            variants: vec![("Tiling(4)+Unroll".into(), vmadot_tiled)],
+            isax: IsaxDef { name: "vmadot".into(), func: build_vmadot(true) },
+            init: init_vmadot,
+            outputs: vec!["y"],
+            vector_profile: None,
+            synth_opts: SynthOptions::default(),
+            itfcs: itfcs(),
+        },
+    ]
+}
+
+/// The end-to-end PCP workload: one ICP-style iteration — distances,
+/// best-match search, covariance, and a matrix–vector product — as one
+/// program with four offloadable loops.
+pub fn end_to_end_software() -> Func {
+    let mut b = FuncBuilder::new("pcp_e2e");
+    let p = b.global("p", DType::F32, (N * 3) as usize, CacheHint::Warm);
+    let q = b.global("q", DType::F32, (N * 3) as usize, CacheHint::Warm);
+    let d = b.global("d", DType::F32, N as usize, CacheHint::Warm);
+    let mx = b.global("mx", DType::F32, 1, CacheHint::Warm);
+    let am = b.global("am", DType::I32, 1, CacheHint::Warm);
+    let cov = b.global("cov", DType::F32, 9, CacheHint::Warm);
+    let m = b.global("m", DType::F32, (MR * MC) as usize, CacheHint::Warm);
+    let v = b.global("v", DType::F32, MC as usize, CacheHint::Warm);
+    let y = b.global("y", DType::F32, MR as usize, CacheHint::Warm);
+
+    // vdist3
+    b.for_range(0, N, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        let mut acc = b.const_f(0.0);
+        for dim in 0..3 {
+            let off = b.const_i(dim);
+            let idx = b.add(base, off);
+            let pv = b.load(p, idx);
+            let qv = b.load(q, idx);
+            let diff = b.sub(pv, qv);
+            let sq = b.mul(diff, diff);
+            acc = b.add(acc, sq);
+        }
+        b.store(d, i, acc);
+    });
+    // vfsmax over the distances
+    b.for_range(0, N, 1, |b, i| {
+        let val = b.load(d, i);
+        let zero = b.const_i(0);
+        let cur = b.load(mx, zero);
+        let better = b.cmp(crate::ir::ops::CmpPred::Gt, val, cur);
+        let newmax = b.select(better, val, cur);
+        b.store(mx, zero, newmax);
+        let curi = b.load(am, zero);
+        let newi = b.select(better, i, curi);
+        b.store(am, zero, newi);
+    });
+    // mcov
+    b.for_range(0, N, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        b.for_range(0, 3, 1, |b, r| {
+            b.for_range(0, 3, 1, |b, c| {
+                let pr = b.add(base, r);
+                let qc = b.add(base, c);
+                let pv = b.load(p, pr);
+                let qv = b.load(q, qc);
+                let prod = b.mul(pv, qv);
+                let three2 = b.const_i(3);
+                let rr = b.mul(r, three2);
+                let cidx = b.add(rr, c);
+                let old = b.load(cov, cidx);
+                let acc = b.add(old, prod);
+                b.store(cov, cidx, acc);
+            });
+        });
+    });
+    // vmadot
+    b.for_range(0, MR, 1, |b, r| {
+        b.for_range(0, MC, 1, |b, c| {
+            let cc = b.const_i(MC);
+            let rb = b.mul(r, cc);
+            let midx = b.add(rb, c);
+            let mv = b.load(m, midx);
+            let vv = b.load(v, c);
+            let prod = b.mul(mv, vv);
+            let old = b.load(y, r);
+            let acc = b.add(old, prod);
+            b.store(y, r, acc);
+        });
+    });
+    b.finish(&[])
+}
+
+/// Initialize the e2e memory image.
+pub fn init_end_to_end(func: &Func, mem: &mut Memory) {
+    write_points(func, mem, "p", 0xE2E1, N);
+    write_points(func, mem, "q", 0xE2E2, N);
+    let mut rng = Rng::new(0xE2E3);
+    let m: Vec<f32> = (0..MR * MC).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..MC).map(|_| rng.normal() as f32).collect();
+    mem.write_f32(Kernel::buf(func, "m"), &m);
+    mem.write_f32(Kernel::buf(func, "v"), &v);
+    mem.write_f32(Kernel::buf(func, "mx"), &[-1e30]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+
+    #[test]
+    fn vdist3_computes_squared_distances() {
+        let f = build_vdist3(false);
+        let mut mem = Memory::for_func(&f);
+        init_vdist3(&f, &mut mem);
+        let p = mem.read_f32(Kernel::buf(&f, "p"));
+        let q = mem.read_f32(Kernel::buf(&f, "q"));
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let d = mem.read_f32(Kernel::buf(&f, "d"));
+        for i in 0..N as usize {
+            let want: f32 = (0..3)
+                .map(|k| {
+                    let diff = p[i * 3 + k] - q[i * 3 + k];
+                    diff * diff
+                })
+                .sum();
+            assert!((d[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", d[i]);
+        }
+    }
+
+    #[test]
+    fn vfsmax_finds_max_and_argmax() {
+        let f = build_vfsmax(false);
+        let mut mem = Memory::for_func(&f);
+        init_vfsmax(&f, &mut mem);
+        let xs = mem.read_f32(Kernel::buf(&f, "x"));
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let mx = mem.read_f32(Kernel::buf(&f, "mx"))[0];
+        let am = mem.read_i32(Kernel::buf(&f, "am"))[0] as usize;
+        let want = xs.iter().cloned().fold(f32::MIN, f32::max);
+        assert!((mx - want).abs() < 1e-6);
+        assert!((xs[am] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_pcp_kernels_match_their_isax() {
+        for k in kernels() {
+            let r = compile(&k.software, &[k.isax.clone()], &CompileOptions::default())
+                .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+            assert_eq!(
+                r.stats.matched,
+                vec![k.isax.name.clone()],
+                "{}: {:?}",
+                k.name,
+                r.stats
+            );
+        }
+    }
+
+    #[test]
+    fn e2e_offloads_all_four_isaxes() {
+        let sw = end_to_end_software();
+        let isaxes: Vec<_> = kernels().iter().map(|k| k.isax.clone()).collect();
+        let r = compile(&sw, &isaxes, &CompileOptions::default()).unwrap();
+        for name in ["vdist3", "vfsmax", "mcov", "vmadot"] {
+            assert!(
+                r.stats.matched.iter().any(|m| m == name),
+                "{name} not offloaded: {:?}",
+                r.stats
+            );
+        }
+    }
+
+    #[test]
+    fn all_pcp_variants_match() {
+        for k in kernels() {
+            for (desc, variant) in &k.variants {
+                let r = compile(variant, &[k.isax.clone()], &CompileOptions::default())
+                    .unwrap_or_else(|e| panic!("{} {desc}: {e}", k.name));
+                assert_eq!(
+                    r.stats.matched,
+                    vec![k.isax.name.clone()],
+                    "{} variant {desc}: {:?}",
+                    k.name,
+                    r.stats
+                );
+            }
+        }
+    }
+}

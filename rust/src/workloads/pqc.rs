@@ -1,0 +1,348 @@
+//! §6.2 — post-quantum cryptography: syndrome computation s = H·eᵀ over
+//! GF(2).
+//!
+//! Two ISAXs, exactly as the paper designs them:
+//! - **vdecomp** — bitstream unpacking: packed 32-bit words → {0,1} bytes;
+//! - **mgf2mm** — matrix multiplication over GF(2) (requests from multiple
+//!   users are packed into the columns of `E`).
+//!
+//! Dimensions (kept interpreter-friendly; the paper's H is much larger but
+//! sparse — the dense core loop is the same): NBITS = 512 unpacked bits,
+//! H: 16×32, E: 32×8, S: 16×8.
+
+use crate::compiler::IsaxDef;
+use crate::interface::cache::CacheHint;
+use crate::interface::model::InterfaceSet;
+use crate::ir::builder::FuncBuilder;
+use crate::ir::interp::Memory;
+use crate::ir::Func;
+use crate::runtime::DType;
+use crate::synthesis::SynthOptions;
+use crate::util::rng::Rng;
+use crate::workloads::Kernel;
+
+pub const NBITS: i64 = 512;
+pub const NWORDS: i64 = NBITS / 32;
+/// mgf2mm dims: S[R×C] = H[R×K] · E[K×C] over GF(2).
+pub const R: i64 = 16;
+pub const K: i64 = 32;
+pub const C: i64 = 8;
+
+// ---------------------------------------------------------------------------
+// vdecomp
+// ---------------------------------------------------------------------------
+
+/// Canonical software: shift/mask spelling (`i >> 5`, `i & 31`) — the
+/// idiomatic C form, deliberately *not* the ISAX's div/rem form. The
+/// internal rules `shr-to-div` / `mask-to-rem` bridge the gap (Table 3
+/// "RF" divergence).
+pub fn software_vdecomp() -> Func {
+    let mut b = FuncBuilder::new("vdecomp_sw");
+    let e = b.global("e", DType::I32, NWORDS as usize, CacheHint::Warm);
+    let out = b.global("out", DType::I32, NBITS as usize, CacheHint::Warm);
+    b.for_range(0, NBITS, 1, |b, i| {
+        let five = b.const_i(5);
+        let word_idx = b.shr(i, five);
+        let w = b.load(e, word_idx);
+        let mask31 = b.const_i(31);
+        let sh = b.and(i, mask31);
+        let shifted = b.shr(w, sh);
+        let one = b.const_i(1);
+        let bit = b.and(shifted, one);
+        b.store(out, i, bit);
+    });
+    b.finish(&[])
+}
+
+/// ISAX description: stages the packed words into a scratchpad over the
+/// bus, unpacks with div/rem indexing, stages the unpacked bytes out.
+pub fn isax_vdecomp() -> Func {
+    let mut b = FuncBuilder::new("vdecomp");
+    let e = b.global("e", DType::I32, NWORDS as usize, CacheHint::Warm);
+    let out = b.global("out", DType::I32, NBITS as usize, CacheHint::Warm);
+    let s_e = b.scratchpad("s_e", DType::I32, NWORDS as usize, 2);
+    let s_out = b.scratchpad("s_out", DType::I32, NBITS as usize, 2);
+    let zero = b.const_i(0);
+    b.transfer(s_e, zero, e, zero, (NWORDS * 4) as usize);
+    b.for_range(0, NBITS, 1, |b, i| {
+        let c32 = b.const_i(32);
+        let word_idx = b.div(i, c32);
+        let w = b.read_smem(s_e, word_idx);
+        let sh = b.rem(i, c32);
+        let shifted = b.shr(w, sh);
+        let one = b.const_i(1);
+        let bit = b.and(shifted, one);
+        b.write_smem(s_out, i, bit);
+    });
+    let zero2 = b.const_i(0);
+    b.transfer(out, zero2, s_out, zero2, (NBITS * 4) as usize);
+    b.finish(&[])
+}
+
+fn init_vdecomp(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0x50C5EED);
+    let words: Vec<i32> = (0..NWORDS).map(|_| rng.next_u64() as i32).collect();
+    mem.write_i32(Kernel::buf(func, "e"), &words);
+}
+
+// ---------------------------------------------------------------------------
+// mgf2mm
+// ---------------------------------------------------------------------------
+
+/// Canonical software: xor-accumulate into S, then the loop structure the
+/// paper's robustness study perturbs.
+pub fn software_mgf2mm() -> Func {
+    let mut b = FuncBuilder::new("mgf2mm_sw");
+    let h = b.global("h", DType::I32, (R * K) as usize, CacheHint::Warm);
+    let e = b.global("em", DType::I32, (K * C) as usize, CacheHint::Warm);
+    let s = b.global("s", DType::I32, (R * C) as usize, CacheHint::Warm);
+    b.for_range(0, R, 1, |b, r| {
+        b.for_range(0, C, 1, |b, c| {
+            b.for_range(0, K, 1, |b, k| {
+                let kc = b.const_i(K);
+                let rk = b.mul(r, kc);
+                let hidx = b.add(rk, k);
+                let hv = b.load(h, hidx);
+                let cc = b.const_i(C);
+                let kcidx = b.mul(k, cc);
+                let eidx = b.add(kcidx, c);
+                let ev = b.load(e, eidx);
+                let prod = b.and(hv, ev);
+                let rc = b.mul(r, cc);
+                let sidx = b.add(rc, c);
+                let sv = b.load(s, sidx);
+                let acc = b.xor(sv, prod);
+                b.store(s, sidx, acc);
+            });
+        });
+    });
+    b.finish(&[])
+}
+
+/// ISAX: all three operands staged; same xor/and datapath.
+pub fn isax_mgf2mm() -> Func {
+    let mut b = FuncBuilder::new("mgf2mm");
+    let h = b.global("h", DType::I32, (R * K) as usize, CacheHint::Warm);
+    let e = b.global("em", DType::I32, (K * C) as usize, CacheHint::Warm);
+    let s = b.global("s", DType::I32, (R * C) as usize, CacheHint::Warm);
+    let s_h = b.scratchpad("s_h", DType::I32, (R * K) as usize, 2);
+    let s_e = b.scratchpad("s_e", DType::I32, (K * C) as usize, 2);
+    let s_s = b.scratchpad("s_s", DType::I32, (R * C) as usize, 2);
+    let zero = b.const_i(0);
+    b.transfer(s_h, zero, h, zero, (R * K * 4) as usize);
+    b.transfer(s_e, zero, e, zero, (K * C * 4) as usize);
+    b.for_range(0, R, 1, |b, r| {
+        b.for_range(0, C, 1, |b, c| {
+            b.for_range(0, K, 1, |b, k| {
+                let kc = b.const_i(K);
+                let rk = b.mul(r, kc);
+                let hidx = b.add(rk, k);
+                let hv = b.read_smem(s_h, hidx);
+                let cc = b.const_i(C);
+                let kcidx = b.mul(k, cc);
+                let eidx = b.add(kcidx, c);
+                let ev = b.read_smem(s_e, eidx);
+                let prod = b.and(hv, ev);
+                let rc = b.mul(r, cc);
+                let sidx = b.add(rc, c);
+                let sv = b.read_smem(s_s, sidx);
+                let acc = b.xor(sv, prod);
+                b.write_smem(s_s, sidx, acc);
+            });
+        });
+    });
+    let zero2 = b.const_i(0);
+    b.transfer(s, zero2, s_s, zero2, (R * C * 4) as usize);
+    b.finish(&[])
+}
+
+fn init_mgf2mm(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0x46F2);
+    let hbits: Vec<i32> = (0..R * K).map(|_| rng.below(2) as i32).collect();
+    let ebits: Vec<i32> = (0..K * C).map(|_| rng.below(2) as i32).collect();
+    mem.write_i32(Kernel::buf(func, "h"), &hbits);
+    mem.write_i32(Kernel::buf(func, "em"), &ebits);
+}
+
+// ---------------------------------------------------------------------------
+// Kernels + variants
+// ---------------------------------------------------------------------------
+
+/// Both PQC kernels with their Table-3 variants.
+pub fn kernels() -> Vec<Kernel> {
+    use crate::compiler::loop_passes::{apply, LoopPass};
+    use crate::compiler::matcher::top_loops;
+
+    let sw_vd = software_vdecomp();
+    let vd_tiled = apply(&sw_vd, top_loops(&sw_vd)[0], LoopPass::Tile(4)).expect("tile vdecomp");
+    let sw_mm = software_mgf2mm();
+    // Unroll the innermost k-loop? Table 3 says Unroll(4) — unroll the
+    // outer loop is what our guided engine inverts; use the top loop.
+    let mm_unrolled =
+        apply(&sw_mm, top_loops(&sw_mm)[0], LoopPass::Unroll(4)).expect("unroll mgf2mm");
+
+    vec![
+        Kernel {
+            name: "vdecomp",
+            software: sw_vd,
+            variants: vec![("Tiling(4)".into(), vd_tiled)],
+            isax: IsaxDef { name: "vdecomp".into(), func: isax_vdecomp() },
+            init: init_vdecomp,
+            outputs: vec!["out"],
+            vector_profile: None,
+            synth_opts: SynthOptions::default(),
+            itfcs: InterfaceSet::rocket_default(),
+        },
+        Kernel {
+            name: "mgf2mm",
+            software: sw_mm,
+            variants: vec![("Unroll(4)".into(), mm_unrolled)],
+            isax: IsaxDef { name: "mgf2mm".into(), func: isax_mgf2mm() },
+            init: init_mgf2mm,
+            outputs: vec!["s"],
+            vector_profile: None,
+            synth_opts: SynthOptions::default(),
+            itfcs: InterfaceSet::rocket_default(),
+        },
+    ]
+}
+
+/// The end-to-end PQC workload: unpack the error bitstream, then multiply
+/// (software has both loops; the compiler should offload both ISAXs).
+pub fn end_to_end_software() -> Func {
+    let mut b = FuncBuilder::new("pqc_e2e");
+    let e = b.global("e", DType::I32, NWORDS as usize, CacheHint::Warm);
+    let out = b.global("out", DType::I32, NBITS as usize, CacheHint::Warm);
+    let h = b.global("h", DType::I32, (R * K) as usize, CacheHint::Warm);
+    let em = b.global("em", DType::I32, (K * C) as usize, CacheHint::Warm);
+    let s = b.global("s", DType::I32, (R * C) as usize, CacheHint::Warm);
+
+    // vdecomp loop (shift/mask spelling)
+    b.for_range(0, NBITS, 1, |b, i| {
+        let five = b.const_i(5);
+        let word_idx = b.shr(i, five);
+        let w = b.load(e, word_idx);
+        let mask31 = b.const_i(31);
+        let sh = b.and(i, mask31);
+        let shifted = b.shr(w, sh);
+        let one = b.const_i(1);
+        let bit = b.and(shifted, one);
+        b.store(out, i, bit);
+    });
+    // glue: pack the first K*C unpacked bits into the request matrix
+    b.for_range(0, K * C, 1, |b, i| {
+        let bit = b.load(out, i);
+        b.store(em, i, bit);
+    });
+    // mgf2mm loop
+    b.for_range(0, R, 1, |b, r| {
+        b.for_range(0, C, 1, |b, c| {
+            b.for_range(0, K, 1, |b, k| {
+                let kc = b.const_i(K);
+                let rk = b.mul(r, kc);
+                let hidx = b.add(rk, k);
+                let hv = b.load(h, hidx);
+                let cc = b.const_i(C);
+                let kcidx = b.mul(k, cc);
+                let eidx = b.add(kcidx, c);
+                let ev = b.load(em, eidx);
+                let prod = b.and(hv, ev);
+                let rc = b.mul(r, cc);
+                let sidx = b.add(rc, c);
+                let sv = b.load(s, sidx);
+                let acc = b.xor(sv, prod);
+                b.store(s, sidx, acc);
+            });
+        });
+    });
+    b.finish(&[])
+}
+
+/// Initialize the e2e memory image.
+pub fn init_end_to_end(func: &Func, mem: &mut Memory) {
+    let mut rng = Rng::new(0xE2E);
+    let words: Vec<i32> = (0..NWORDS).map(|_| rng.next_u64() as i32).collect();
+    let hbits: Vec<i32> = (0..R * K).map(|_| rng.below(2) as i32).collect();
+    mem.write_i32(Kernel::buf(func, "e"), &words);
+    mem.write_i32(Kernel::buf(func, "h"), &hbits);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::ir::ops::OpKind;
+
+    #[test]
+    fn vdecomp_unpacks_correctly() {
+        let f = software_vdecomp();
+        let mut mem = Memory::for_func(&f);
+        let mut words = vec![0i32; NWORDS as usize];
+        words[0] = 0b1011;
+        words[1] = 1 << 31;
+        mem.write_i32(Kernel::buf(&f, "e"), &words);
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let out = mem.read_i32(Kernel::buf(&f, "out"));
+        assert_eq!(&out[..4], &[1, 1, 0, 1]);
+        assert_eq!(out[63], 1); // bit 31 of word 1
+        assert_eq!(out[62], 0);
+    }
+
+    #[test]
+    fn mgf2mm_matches_reference_multiply() {
+        let f = software_mgf2mm();
+        let mut mem = Memory::for_func(&f);
+        init_mgf2mm(&f, &mut mem);
+        let h = mem.read_i32(Kernel::buf(&f, "h"));
+        let e = mem.read_i32(Kernel::buf(&f, "em"));
+        crate::ir::interp::run(&f, &[], &mut mem).unwrap();
+        let s = mem.read_i32(Kernel::buf(&f, "s"));
+        for r in 0..R as usize {
+            for c in 0..C as usize {
+                let mut acc = 0;
+                for k in 0..K as usize {
+                    acc ^= h[r * K as usize + k] & e[k * C as usize + c];
+                }
+                assert_eq!(s[r * C as usize + c], acc, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn compiler_matches_canonical_vdecomp() {
+        let ks = kernels();
+        let vd = &ks[0];
+        let r = compile(&vd.software, &[vd.isax.clone()], &CompileOptions::default()).unwrap();
+        assert_eq!(r.stats.matched, vec!["vdecomp".to_string()], "{:?}", r.stats);
+        assert_eq!(r.func.count_ops(|k| matches!(k, OpKind::Intrinsic(_))), 1);
+    }
+
+    #[test]
+    fn compiler_matches_tiled_vdecomp_variant() {
+        let ks = kernels();
+        let vd = &ks[0];
+        let (desc, variant) = &vd.variants[0];
+        let r = compile(variant, &[vd.isax.clone()], &CompileOptions::default()).unwrap();
+        assert_eq!(r.stats.matched, vec!["vdecomp".to_string()], "variant {desc}: {:?}", r.stats);
+        assert!(r.stats.external_rewrites >= 1);
+    }
+
+    #[test]
+    fn compiler_matches_unrolled_mgf2mm_variant() {
+        let ks = kernels();
+        let mm = &ks[1];
+        let (desc, variant) = &mm.variants[0];
+        let r = compile(variant, &[mm.isax.clone()], &CompileOptions::default()).unwrap();
+        assert_eq!(r.stats.matched, vec!["mgf2mm".to_string()], "variant {desc}: {:?}", r.stats);
+    }
+
+    #[test]
+    fn e2e_offloads_both_isaxes() {
+        let ks = kernels();
+        let sw = end_to_end_software();
+        let isaxes: Vec<_> = ks.iter().map(|k| k.isax.clone()).collect();
+        let r = compile(&sw, &isaxes, &CompileOptions::default()).unwrap();
+        assert!(r.stats.matched.contains(&"vdecomp".to_string()), "{:?}", r.stats);
+        assert!(r.stats.matched.contains(&"mgf2mm".to_string()), "{:?}", r.stats);
+    }
+}

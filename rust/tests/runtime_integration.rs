@@ -1,0 +1,275 @@
+//! Runtime integration: load real AOT artifacts and execute them via PJRT.
+//!
+//! Requires `make artifacts` to have been run (CI does this; `make test`
+//! orders it correctly). These tests validate the full python→HLO→Rust
+//! path including numerics of each ISAX golden-model artifact.
+
+use aquas::runtime::{Runtime, Tensor};
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::load(&dir).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let rt = runtime();
+    let names = rt.entry_names();
+    for expected in [
+        "attention", "gf2mm", "llm_decode", "llm_prefill", "mcov", "phong",
+        "vdecomp", "vdist3", "vfsmax", "vmadot", "vmvar", "vrgb2yuv",
+    ] {
+        assert!(names.iter().any(|n| n == expected), "missing entry {expected}");
+    }
+}
+
+#[test]
+fn vdecomp_unpacks_bits() {
+    let rt = runtime();
+    // word 0 = 0b1011 -> bits [1,1,0,1,0,...]
+    let mut words = vec![0i32; 16];
+    words[0] = 0b1011;
+    let out = rt
+        .execute("vdecomp", &[Tensor::i32(words, &[16]).unwrap()])
+        .unwrap();
+    let bits = out[0].as_i32().unwrap();
+    assert_eq!(&bits[..5], &[1, 1, 0, 1, 0]);
+    assert_eq!(bits.len(), 512);
+    assert!(bits[4..].iter().all(|&b| b == 0));
+}
+
+#[test]
+fn gf2mm_identity_roundtrip() {
+    let rt = runtime();
+    // a * I = a over GF(2)
+    let mut eye = vec![0i32; 64 * 64];
+    for i in 0..64 {
+        eye[i * 64 + i] = 1;
+    }
+    let mut a = vec![0i32; 64 * 64];
+    let mut rng = aquas::util::rng::Rng::new(7);
+    for x in a.iter_mut() {
+        *x = rng.below(2) as i32;
+    }
+    let out = rt
+        .execute(
+            "gf2mm",
+            &[
+                Tensor::i32(a.clone(), &[64, 64]).unwrap(),
+                Tensor::i32(eye, &[64, 64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].as_i32().unwrap(), a.as_slice());
+}
+
+#[test]
+fn vdist3_matches_host_computation() {
+    let rt = runtime();
+    let mut rng = aquas::util::rng::Rng::new(11);
+    let p: Vec<f32> = (0..256 * 3).map(|_| rng.normal() as f32).collect();
+    let q: Vec<f32> = (0..256 * 3).map(|_| rng.normal() as f32).collect();
+    let out = rt
+        .execute(
+            "vdist3",
+            &[
+                Tensor::f32(p.clone(), &[256, 3]).unwrap(),
+                Tensor::f32(q.clone(), &[256, 3]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for i in 0..256 {
+        let want: f32 = (0..3)
+            .map(|d| {
+                let diff = p[i * 3 + d] - q[i * 3 + d];
+                diff * diff
+            })
+            .sum();
+        assert!((got[i] - want).abs() < 1e-4, "i={i} got {} want {want}", got[i]);
+    }
+}
+
+#[test]
+fn llm_prefill_then_decode() {
+    let rt = runtime();
+    let m = rt.manifest().model.clone();
+    let ids = Tensor::i32(vec![1; m.prefill_len], &[1, m.prefill_len]).unwrap();
+    let outs = rt.execute("llm_prefill", &[ids]).unwrap();
+    assert_eq!(outs.len(), 3);
+    let logits = &outs[0];
+    assert_eq!(logits.shape(), &[1, m.prefill_len, m.vocab]);
+    assert!(logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // One decode step at position prefill_len.
+    let next = Tensor::i32(vec![2], &[1, 1]).unwrap();
+    let pos = Tensor::i32(vec![m.prefill_len as i32], &[1]).unwrap();
+    let douts = rt
+        .execute("llm_decode", &[next, outs[1].clone(), outs[2].clone(), pos])
+        .unwrap();
+    assert_eq!(douts[0].shape(), &[1, m.vocab]);
+    assert!(douts[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn execute_rejects_bad_shapes() {
+    let rt = runtime();
+    let bad = Tensor::i32(vec![0; 4], &[2, 2]).unwrap();
+    assert!(rt.execute("gf2mm", &[bad.clone(), bad]).is_err());
+}
+
+#[test]
+fn execute_rejects_unknown_entry() {
+    let rt = runtime();
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Serving coordinator over the real artifacts
+// ---------------------------------------------------------------------------
+
+use aquas::coordinator::{Coordinator, CoordinatorConfig, SchedulePolicy};
+
+#[test]
+fn coordinator_serves_batch_to_completion() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(&rt, CoordinatorConfig::default());
+    let a = coord.submit(vec![1, 2, 3, 4], 4).unwrap();
+    let b = coord.submit(vec![9, 8, 7], 3).unwrap();
+    let metrics = coord.run_to_completion().unwrap();
+    assert_eq!(metrics.len(), 2);
+    assert_eq!(metrics[0].id, a);
+    assert_eq!(metrics[1].id, b);
+    assert_eq!(metrics[0].generated.len(), 4);
+    assert_eq!(metrics[1].generated.len(), 3);
+    for m in &metrics {
+        assert!(m.ttft_us > 0);
+        assert!(m.sim_base_cycles > m.sim_isax_cycles);
+    }
+}
+
+#[test]
+fn coordinator_greedy_decode_is_deterministic() {
+    let rt = runtime();
+    let gen = |policy| {
+        let mut c = Coordinator::new(&rt, CoordinatorConfig { policy, ..Default::default() });
+        c.submit(vec![5, 6, 7, 8, 9], 6).unwrap();
+        c.run_to_completion().unwrap()[0].generated.clone()
+    };
+    let g1 = gen(SchedulePolicy::DecodeFirst);
+    let g2 = gen(SchedulePolicy::PrefillFirst);
+    // Scheduling policy must not change single-request numerics.
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn coordinator_decode_matches_unbatched_reference() {
+    // Interleaved serving of two requests must produce the same tokens as
+    // serving each alone (KV isolation).
+    let rt = runtime();
+    let solo = |prompt: Vec<i32>| {
+        let mut c = Coordinator::new(&rt, CoordinatorConfig::default());
+        c.submit(prompt, 5).unwrap();
+        c.run_to_completion().unwrap()[0].generated.clone()
+    };
+    let s1 = solo(vec![10, 20, 30]);
+    let s2 = solo(vec![40, 50, 60, 70]);
+
+    let mut c = Coordinator::new(
+        &rt,
+        CoordinatorConfig { policy: SchedulePolicy::PrefillFirst, ..Default::default() },
+    );
+    c.submit(vec![10, 20, 30], 5).unwrap();
+    c.submit(vec![40, 50, 60, 70], 5).unwrap();
+    let both = c.run_to_completion().unwrap();
+    assert_eq!(both[0].generated, s1, "request 0 perturbed by batching");
+    assert_eq!(both[1].generated, s2, "request 1 perturbed by batching");
+}
+
+#[test]
+fn coordinator_rejects_oversized_requests() {
+    let rt = runtime();
+    let m = rt.manifest().model.clone();
+    let mut coord = Coordinator::new(&rt, CoordinatorConfig::default());
+    assert!(coord.submit(vec![], 4).is_err(), "empty prompt");
+    assert!(
+        coord.submit(vec![1; m.prefill_len + 1], 4).is_err(),
+        "prompt beyond prefill window"
+    );
+    assert!(
+        coord.submit(vec![1; 4], m.max_seq).is_err(),
+        "generation beyond KV capacity"
+    );
+}
+
+#[test]
+fn coordinator_respects_max_active() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        &rt,
+        CoordinatorConfig {
+            policy: SchedulePolicy::PrefillFirst,
+            max_active: 2,
+            ..Default::default()
+        },
+    );
+    for i in 0..5 {
+        coord.submit(vec![i as i32 + 1; 4], 2).unwrap();
+    }
+    let metrics = coord.run_to_completion().unwrap();
+    assert_eq!(metrics.len(), 5);
+}
+
+#[test]
+fn attention_artifact_matches_serving_numerics() {
+    // The standalone attention artifact (the L1 kernel's golden model)
+    // must agree with a direct softmax(QK^T)V on the host.
+    let rt = runtime();
+    let mut rng = aquas::util::rng::Rng::new(99);
+    let (b, h, t, d) = (1usize, 4usize, 64usize, 16usize);
+    let n = b * h * t * d;
+    let q: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+    let k: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+    let shape = [b, h, t, d];
+    let out = rt
+        .execute(
+            "attention",
+            &[
+                Tensor::f32(q.clone(), &shape).unwrap(),
+                Tensor::f32(k.clone(), &shape).unwrap(),
+                Tensor::f32(v.clone(), &shape).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    // host reference (causal)
+    let scale = 1.0 / (d as f32).sqrt();
+    for hi in 0..h {
+        for qi in 0..t {
+            let mut scores = vec![f32::NEG_INFINITY; t];
+            for ki in 0..=qi {
+                let mut s = 0.0;
+                for di in 0..d {
+                    s += q[(hi * t + qi) * d + di] * k[(hi * t + ki) * d + di];
+                }
+                scores[ki] = s * scale;
+            }
+            let mx = scores.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - mx).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            for di in 0..d {
+                let mut o = 0.0;
+                for ki in 0..=qi {
+                    o += exps[ki] / denom * v[(hi * t + ki) * d + di];
+                }
+                let gotv = got[(hi * t + qi) * d + di];
+                assert!(
+                    (gotv - o).abs() < 1e-3,
+                    "h{hi} q{qi} d{di}: {gotv} vs {o}"
+                );
+            }
+        }
+    }
+}
