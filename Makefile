@@ -1,0 +1,32 @@
+# Convenience targets for the Aquas reproduction.
+#
+# `artifacts` requires a Python environment with JAX; everything else is
+# pure Rust and works offline. The Rust runtime does NOT need the
+# artifacts: without them it serves the built-in simulated manifest
+# (rust/src/runtime/sim.rs), which is what CI exercises.
+
+CARGO = cargo --manifest-path rust/Cargo.toml
+
+.PHONY: build test bench artifacts pytest clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench --bench hotpath
+
+# AOT-lower the L1/L2 Python stack to rust/artifacts/*.hlo.txt + a
+# manifest.json. The output lands inside rust/ so both the integration
+# tests (CARGO_MANIFEST_DIR/artifacts) and `cargo run` from rust/ pick it
+# up; when present, the manifest's shapes drive the runtime's typechecks.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+pytest:
+	python -m pytest python/tests -q
+
+clean:
+	rm -rf rust/target rust/artifacts artifacts

@@ -54,7 +54,8 @@ fn main() -> aquas::Result<()> {
     println!("\n{}", bench_harness::fig7().render());
     let area = AreaModel::default();
     println!(
-        "saturn int-only still costs {:.1}% more area than Rocket; Aquas stays in single digits per kernel",
+        "saturn int-only still costs {:.1}% more area than Rocket; \
+         Aquas stays in single digits per kernel",
         area.saturn_int_only().area_overhead_pct()
     );
     Ok(())

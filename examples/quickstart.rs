@@ -55,8 +55,8 @@ fn main() -> aquas::Result<()> {
     let base = RocketModel::new(CoreConfig::default());
     let mut mem = Memory::for_func(&software);
     let base_report = base.simulate(&software, &[], &mut mem)?;
-    let acc =
-        RocketModel::new(CoreConfig::default()).with_isax("vdecomp", engine.cycles_per_invocation());
+    let acc = RocketModel::new(CoreConfig::default())
+        .with_isax("vdecomp", engine.cycles_per_invocation());
     let mut mem2 = Memory::for_func(&result.func);
     let acc_report = acc.simulate(&result.func, &[], &mut mem2)?;
     println!("base core:   {} cycles", base_report.cycles);

@@ -1,7 +1,7 @@
-//! `cargo bench --bench hotpath` — micro-benchmarks of the three hot
-//! paths the §Perf pass optimizes: e-graph saturation + matching, the
-//! memoized transaction-scheduling search, and the serving-loop step
-//! (PJRT decode round). Criterion replacement; see DESIGN.md.
+//! `cargo bench --bench hotpath` — micro-benchmarks of the hot paths:
+//! e-graph saturation + matching, the memoized transaction-scheduling
+//! search, cycle simulation, and the serving-loop decode step through
+//! the simulated runtime. Criterion replacement; see DESIGN.md.
 
 use std::time::Instant;
 
@@ -19,11 +19,16 @@ fn time_ms<F: FnMut()>(n: usize, mut f: F) -> aquas::util::stats::Summary {
 }
 
 fn main() {
+    // `cargo bench --bench hotpath -- --test` (the CI smoke) runs one
+    // timed iteration per section instead of the full sample counts.
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = |full: usize| if smoke { 1 } else { full };
+
     // 1. Compiler matching (encode + saturate + match) on the heaviest
     //    kernel (mcov, 3-deep nest) and on a tiled variant.
     let ks = aquas::workloads::pcp::kernels();
     let mcov = ks.iter().find(|k| k.name == "mcov.vs").unwrap();
-    let s = time_ms(20, || {
+    let s = time_ms(n(20), || {
         let r = aquas::compiler::compile(
             &mcov.software,
             &[mcov.isax.clone()],
@@ -35,7 +40,7 @@ fn main() {
     println!("compile/match mcov canonical: mean {:.3} ms p95 {:.3} ms", s.mean, s.p95);
 
     let (desc, variant) = &mcov.variants[0];
-    let s = time_ms(20, || {
+    let s = time_ms(n(20), || {
         let r = aquas::compiler::compile(variant, &[mcov.isax.clone()], &Default::default())
             .unwrap();
         assert!(!r.stats.matched.is_empty());
@@ -45,7 +50,7 @@ fn main() {
     // 2. Synthesis (elision + selection + memoized scheduling) on fir7.
     let f = aquas::bench_harness::fir7::fir7();
     let itfcs = aquas::interface::model::InterfaceSet::rocket_default();
-    let s = time_ms(50, || {
+    let s = time_ms(n(50), || {
         let r = aquas::synthesis::synthesize(&f, &itfcs, &Default::default()).unwrap();
         assert!(r.schedule.mem_latency() > 0);
     });
@@ -55,7 +60,7 @@ fn main() {
     let e2e = aquas::workloads::pqc::end_to_end_software();
     let model =
         aquas::cores::rocket::RocketModel::new(aquas::cores::rocket::CoreConfig::default());
-    let s = time_ms(10, || {
+    let s = time_ms(n(10), || {
         let mut mem = aquas::ir::interp::Memory::for_func(&e2e);
         aquas::workloads::pqc::init_end_to_end(&e2e, &mut mem);
         let r = model.simulate(&e2e, &[], &mut mem).unwrap();
@@ -63,7 +68,8 @@ fn main() {
     });
     println!("simulate pqc e2e (rocket):    mean {:.3} ms p95 {:.3} ms", s.mean, s.p95);
 
-    // 4. Serving loop: one decode round through PJRT (needs artifacts).
+    // 4. Serving loop: one decode step through the runtime (uses the
+    //    built-in simulated manifest when no artifacts exist).
     match aquas::runtime::Runtime::load("artifacts") {
         Ok(rt) => {
             rt.compile_entry("llm_prefill").unwrap();
@@ -71,12 +77,12 @@ fn main() {
             let mut coord = aquas::coordinator::Coordinator::new(&rt, Default::default());
             coord.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 50).unwrap();
             coord.step().unwrap(); // prefill
-            let s = time_ms(30, || {
+            let s = time_ms(n(30), || {
                 // one decode step per iteration (bounded by max_new_tokens = 50
                 // which covers warm-up + the 30 timed steps)
                 let _ = coord.step().unwrap();
             });
-            println!("serving decode step (PJRT):   mean {:.3} ms p95 {:.3} ms", s.mean, s.p95);
+            println!("serving decode step (sim):    mean {:.3} ms p95 {:.3} ms", s.mean, s.p95);
         }
         Err(e) => println!("serving decode step: skipped ({e})"),
     }

@@ -44,11 +44,7 @@ pub fn fig2() -> Report {
     );
     // Suboptimal B: both over itfc2 but issuing the small transfer first
     // (serializes the burst behind the lead-off of the small one).
-    let sub_b = sequence_latency(
-        &itfc2,
-        TransactionKind::Load,
-        &[small, big].map(|m| m).to_vec(),
-    );
+    let sub_b = sequence_latency(&itfc2, TransactionKind::Load, &[small, big]);
 
     r.row(vec!["optimal (burst on @itfc2, word on @itfc1)".into(), opt.to_string(), "—".into()]);
     r.row(vec![
@@ -70,7 +66,10 @@ pub fn fig2() -> Report {
 pub fn fig6() -> Report {
     let mut r = Report::new(
         "Figure 6 — BOOMv3 vs Aquas on point-cloud workloads",
-        vec!["case", "boom cyc", "aquas cyc", "boom t(µs)", "aquas t(µs)", "aquas/boom speed", "area ratio"],
+        vec![
+            "case", "boom cyc", "aquas cyc", "boom t(µs)", "aquas t(µs)", "aquas/boom speed",
+            "area ratio",
+        ],
     );
     let area = AreaModel::default();
     let boom_rep = area.boom();
@@ -107,7 +106,10 @@ pub fn fig6() -> Report {
 pub fn fig7() -> Report {
     let mut r = Report::new(
         "Figure 7 — Saturn (RVV, VLEN=128) vs Aquas on graphics workloads",
-        vec!["case", "base cyc", "saturn cyc", "aquas cyc", "saturn speed*", "aquas speed*", "saturn area", "aquas area"],
+        vec![
+            "case", "base cyc", "saturn cyc", "aquas cyc", "saturn speed*", "aquas speed*",
+            "saturn area", "aquas area",
+        ],
     );
     let area = AreaModel::default();
     let saturn_rep = area.saturn();

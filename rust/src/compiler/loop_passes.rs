@@ -106,7 +106,11 @@ impl<'f> Rebuilder<'f> {
         Ok(out)
     }
 
-    fn clone_op(&mut self, opref: OpRef, intercept: Option<(OpRef, LoopPass)>) -> Result<Vec<OpRef>> {
+    fn clone_op(
+        &mut self,
+        opref: OpRef,
+        intercept: Option<(OpRef, LoopPass)>,
+    ) -> Result<Vec<OpRef>> {
         let op = self.src.op(opref).clone();
         let operands: Vec<Value> = op.operands.iter().map(|&v| self.v(v)).collect::<Result<_>>()?;
         let mut regions = Vec::new();
@@ -511,14 +515,13 @@ mod tests {
         let (f, target) = sum_loop();
         let tiled = apply(&f, target, LoopPass::Tile(4)).unwrap();
         // Find outer loop of the tiled version.
-        let mut outer = None;
         let mut depth0 = Vec::new();
         for &o in &tiled.entry.ops {
             if matches!(tiled.op(o).kind, OpKind::For) {
                 depth0.push(o);
             }
         }
-        outer = depth0.first().copied();
+        let outer = depth0.first().copied();
         let coalesced = apply(&tiled, outer.unwrap(), LoopPass::Coalesce).unwrap();
         crate::ir::verifier::verify(&coalesced).unwrap();
         assert_eq!(run_sum(&coalesced), 136);

@@ -81,7 +81,11 @@ impl Default for CompileOptions {
 }
 
 /// Compile: offload every matching loop of `software` onto the ISAXs.
-pub fn compile(software: &Func, isaxes: &[IsaxDef], opts: &CompileOptions) -> Result<CompileResult> {
+pub fn compile(
+    software: &Func,
+    isaxes: &[IsaxDef],
+    opts: &CompileOptions,
+) -> Result<CompileResult> {
     let mut stats = CompileStats::default();
     let mut current = align::canonicalize_software(software);
 
@@ -108,7 +112,8 @@ pub fn compile(software: &Func, isaxes: &[IsaxDef], opts: &CompileOptions) -> Re
 pub fn saturate_func(func: &Func, opts: &CompileOptions) -> (EGraph, encode::EncodeMap) {
     let mut g = EGraph::new();
     let map = encode::encode_func(&mut g, func);
-    let runner = Runner { iter_limit: opts.iter_limit, node_limit: opts.node_limit, ..Default::default() };
+    let runner =
+        Runner { iter_limit: opts.iter_limit, node_limit: opts.node_limit, ..Default::default() };
     let rs = rules::internal_rules();
     runner.run(&mut g, &rs);
     (g, map)

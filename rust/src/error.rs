@@ -1,59 +1,94 @@
 //! Crate-wide error type.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls: `thiserror` is not in the offline
+//! vendor set (see DESIGN.md), and the variants are few enough that the
+//! derive buys nothing.
 
 /// Errors produced anywhere in the Aquas stack.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// IR construction or verification failure.
-    #[error("ir error: {0}")]
     Ir(String),
 
     /// A memory transaction violates the microarchitectural constraints of
     /// its bound interface (§4.1: beat count, alignment, in-flight limit).
-    #[error("interface constraint violated: {0}")]
     Interface(String),
 
     /// Synthesis-time optimization failure (§4.3).
-    #[error("synthesis error: {0}")]
     Synthesis(String),
 
     /// E-graph or rewrite failure (§5.2–5.3).
-    #[error("egraph error: {0}")]
     Egraph(String),
 
     /// Compiler matching/lowering failure (§5.4).
-    #[error("compiler error: {0}")]
     Compiler(String),
 
     /// Cycle-level simulation failure.
-    #[error("simulation error: {0}")]
     Sim(String),
 
-    /// PJRT runtime failure (artifact loading / execution).
-    #[error("runtime error: {0}")]
+    /// Runtime failure (artifact loading / entry execution).
     Runtime(String),
 
     /// Serving-coordinator failure.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Artifact manifest problems.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
-    Xla(String),
+    /// I/O failure (file system access).
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Ir(m) => write!(f, "ir error: {m}"),
+            Error::Interface(m) => write!(f, "interface constraint violated: {m}"),
+            Error::Synthesis(m) => write!(f, "synthesis error: {m}"),
+            Error::Egraph(m) => write!(f, "egraph error: {m}"),
+            Error::Compiler(m) => write!(f, "compiler error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_layer() {
+        assert_eq!(Error::Ir("x".into()).to_string(), "ir error: x");
+        assert_eq!(Error::Manifest("y".into()).to_string(), "manifest error: y");
+        assert!(Error::Interface("z".into()).to_string().contains("constraint"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -80,7 +80,12 @@ impl FuncBuilder {
 
     // ----- op emission helpers -------------------------------------------
 
-    fn emit(&mut self, kind: OpKind, operands: Vec<Value>, result_ty: Option<Type>) -> Option<Value> {
+    fn emit(
+        &mut self,
+        kind: OpKind,
+        operands: Vec<Value>,
+        result_ty: Option<Type>,
+    ) -> Option<Value> {
         let results = result_ty.map(|ty| vec![self.func.new_value(ty)]).unwrap_or_default();
         let out = results.first().copied();
         let op = Op::new(kind, operands, results);
@@ -187,7 +192,14 @@ impl FuncBuilder {
         self.emit(OpKind::Store(buf), vec![index, value], None);
     }
 
-    pub fn transfer(&mut self, dst: BufferId, dst_off: Value, src: BufferId, src_off: Value, size: usize) {
+    pub fn transfer(
+        &mut self,
+        dst: BufferId,
+        dst_off: Value,
+        src: BufferId,
+        src_off: Value,
+        size: usize,
+    ) {
         self.emit(OpKind::Transfer { dst, src, size }, vec![dst_off, src_off], None);
     }
 
@@ -226,7 +238,12 @@ impl FuncBuilder {
         self.emit(OpKind::Copy { itfc, dst, src, size, kind }, vec![dst_off, src_off], None);
     }
 
-    pub fn intrinsic(&mut self, name: &str, operands: Vec<Value>, has_result: bool) -> Option<Value> {
+    pub fn intrinsic(
+        &mut self,
+        name: &str,
+        operands: Vec<Value>,
+        has_result: bool,
+    ) -> Option<Value> {
         self.emit(
             OpKind::Intrinsic(name.into()),
             operands,

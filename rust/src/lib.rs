@@ -12,14 +12,16 @@
 //!   simulators, the [`area`](crate::area) model, the four case-study
 //!   [`workloads`](crate::workloads) (§6), and the LLM serving
 //!   [`coordinator`](crate::coordinator) that drives AOT artifacts through
-//!   the PJRT [`runtime`](crate::runtime).
+//!   the [`runtime`](crate::runtime) (a pure-Rust executor standing in for
+//!   PJRT on this offline image; see `runtime/sim.rs`).
 //! - **Layer 2 (build-time)** — `python/compile/model.py`: a Llama-style
 //!   transformer in JAX, lowered once to HLO text.
 //! - **Layer 1 (build-time)** — `python/compile/kernels/`: Pallas kernels
 //!   modelling each ISAX datapath, verified against pure-jnp oracles.
 //!
 //! Python never runs on the request path: `make artifacts` produces
-//! `artifacts/*.hlo.txt`, and the Rust binary is self-contained after that.
+//! `artifacts/*.hlo.txt`, and the Rust binary is self-contained after that
+//! — or entirely without it, via the runtime's simulated fallback.
 
 pub mod area;
 pub mod bench_harness;

@@ -79,7 +79,12 @@ impl EntrySpec {
     fn from_json(j: &Json) -> Result<Self> {
         Ok(Self {
             file: j.get("file")?.as_str()?.to_string(),
-            args: j.get("args")?.as_arr()?.iter().map(TensorSpec::from_json).collect::<Result<_>>()?,
+            args: j
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
             outputs: j
                 .get("outputs")?
                 .as_arr()?

@@ -1,0 +1,757 @@
+//! Pure-Rust executor for the AOT entry points.
+//!
+//! The paper's Layer-1/2 artifacts are Pallas kernels + a Llama-style
+//! transformer, AOT-lowered to HLO and executed through PJRT. The PJRT
+//! binding (`xla` crate) is not in the offline vendor set, so this module
+//! supplies the same contract natively: every manifest entry is backed by
+//! a deterministic Rust implementation of its golden model
+//! (`python/compile/kernels/ref.py`), and the LLM entries run a real
+//! (tiny) transformer — RMSNorm, RoPE, causal attention over a
+//! fixed-capacity KV cache, SwiGLU MLP — with weights generated
+//! deterministically from the in-crate PRNG.
+//!
+//! The serving semantics match `python/compile/model.py` exactly:
+//! `llm_prefill` processes a `[1, prefill_len]` window and returns
+//! `max_seq`-capacity caches; `llm_decode` writes the new token's K/V at
+//! slot `pos` and attends slots `<= pos`, so padded prefill slots are
+//! never read (the coordinator's cursor overwrites them first).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{EntrySpec, Manifest, ModelSpec, TensorSpec};
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::rng::Rng;
+
+// Phong material constants + the RGB→YUV matrix come from
+// `workloads::graphics` so the artifact golden models and the IR kernels
+// cannot desynchronize.
+use crate::workloads::graphics::{KA, KD, KS, RGB2YUV, SHININESS};
+
+fn spec(shape: &[usize], dtype: DType) -> TensorSpec {
+    TensorSpec::new(shape.to_vec(), dtype)
+}
+
+/// The manifest the simulated backend serves when no `artifacts/`
+/// directory exists — same model configuration and entry catalogue as
+/// `python/compile/aot.py` (TINY_CONFIG, PREFILL_LEN = 16, BATCH = 1).
+pub(crate) fn default_manifest() -> Manifest {
+    let model = ModelSpec {
+        vocab: 256,
+        dim: 64,
+        n_layers: 2,
+        n_heads: 4,
+        head_dim: 16,
+        hidden: 160,
+        max_seq: 64,
+        prefill_len: 16,
+        batch: 1,
+        // vocab*dim*2 (embed+unembed) + L*(4*dim² + 3*dim*hidden + 2*dim) + dim
+        param_count: (256 * 64 * 2 + 2 * (4 * 64 * 64 + 3 * 64 * 160 + 2 * 64) + 64) as u64,
+    };
+    let (l, b, h, t, dh) =
+        (model.n_layers, model.batch, model.n_heads, model.max_seq, model.head_dim);
+    let kv = spec(&[l, b, h, t, dh], DType::F32);
+    let f = DType::F32;
+    let i = DType::I32;
+
+    let mut entries = BTreeMap::new();
+    let mut add = |name: &str, args: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+        entries.insert(
+            name.to_string(),
+            EntrySpec { file: format!("{name}.hlo.txt"), args, outputs },
+        );
+    };
+    add(
+        "llm_prefill",
+        vec![spec(&[b, model.prefill_len], i)],
+        vec![spec(&[b, model.prefill_len, model.vocab], f), kv.clone(), kv.clone()],
+    );
+    add(
+        "llm_decode",
+        vec![spec(&[b, 1], i), kv.clone(), kv.clone(), spec(&[1], i)],
+        vec![spec(&[b, model.vocab], f), kv.clone(), kv],
+    );
+    add(
+        "attention",
+        vec![spec(&[1, 4, 64, 16], f); 3],
+        vec![spec(&[1, 4, 64, 16], f)],
+    );
+    add("gf2mm", vec![spec(&[64, 64], i); 2], vec![spec(&[64, 64], i)]);
+    add("vdecomp", vec![spec(&[16], i)], vec![spec(&[512], i)]);
+    add("vdist3", vec![spec(&[256, 3], f); 2], vec![spec(&[256], f)]);
+    add("mcov", vec![spec(&[256, 3], f); 2], vec![spec(&[3, 3], f)]);
+    add("vfsmax", vec![spec(&[256], f)], vec![spec(&[], f), spec(&[], i)]);
+    add(
+        "vmadot",
+        vec![spec(&[64, 64], f), spec(&[64], f)],
+        vec![spec(&[64], f)],
+    );
+    add("phong", vec![spec(&[256, 3], f); 3], vec![spec(&[256], f)]);
+    add("vrgb2yuv", vec![spec(&[256, 3], f)], vec![spec(&[256, 3], f)]);
+    add(
+        "vmvar",
+        vec![spec(&[64, 16], f)],
+        vec![spec(&[64], f), spec(&[64], f)],
+    );
+    Manifest { model, entries }
+}
+
+// ---------------------------------------------------------------------------
+// Tiny Llama-style transformer (the llm_prefill / llm_decode backend)
+// ---------------------------------------------------------------------------
+
+const ROPE_THETA: f32 = 10000.0;
+const NORM_EPS: f32 = 1e-5;
+
+struct Layer {
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    /// `[dim, dim]`, row-major (input index major).
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    /// `[dim, hidden]`.
+    w1: Vec<f32>,
+    /// `[hidden, dim]`.
+    w2: Vec<f32>,
+    /// `[dim, hidden]`.
+    w3: Vec<f32>,
+}
+
+/// The deterministic tiny transformer driving the LLM serving entries.
+pub(crate) struct TinyLlm {
+    vocab: usize,
+    dim: usize,
+    n_heads: usize,
+    head_dim: usize,
+    hidden: usize,
+    max_seq: usize,
+    n_layers: usize,
+    /// `[vocab, dim]`.
+    embed: Vec<f32>,
+    /// `[dim, vocab]`.
+    unembed: Vec<f32>,
+    final_norm: Vec<f32>,
+    layers: Vec<Layer>,
+}
+
+fn dense(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    // Xavier-ish scale keeps activations and logits well-conditioned.
+    let scale = 1.0 / (rows as f64).sqrt();
+    (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+impl TinyLlm {
+    /// Build weights deterministically from the model configuration.
+    pub(crate) fn new(m: &ModelSpec) -> Self {
+        let mut rng = Rng::new(0xA9_0A5);
+        let layers = (0..m.n_layers)
+            .map(|_| Layer {
+                attn_norm: vec![1.0; m.dim],
+                mlp_norm: vec![1.0; m.dim],
+                wq: dense(&mut rng, m.dim, m.dim),
+                wk: dense(&mut rng, m.dim, m.dim),
+                wv: dense(&mut rng, m.dim, m.dim),
+                wo: dense(&mut rng, m.dim, m.dim),
+                w1: dense(&mut rng, m.dim, m.hidden),
+                w2: dense(&mut rng, m.hidden, m.dim),
+                w3: dense(&mut rng, m.dim, m.hidden),
+            })
+            .collect();
+        Self {
+            vocab: m.vocab,
+            dim: m.dim,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim,
+            hidden: m.hidden,
+            max_seq: m.max_seq,
+            n_layers: m.n_layers,
+            embed: dense(&mut rng, m.vocab, m.dim),
+            unembed: dense(&mut rng, m.dim, m.vocab),
+            final_norm: vec![1.0; m.dim],
+            layers,
+        }
+    }
+
+    fn kv_len(&self) -> usize {
+        self.n_layers * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    fn kv_index(&self, layer: usize, head: usize, slot: usize) -> usize {
+        ((layer * self.n_heads + head) * self.max_seq + slot) * self.head_dim
+    }
+
+    /// Advance the model by one token at absolute position `pos`,
+    /// writing its K/V into the caches and returning the logits row.
+    /// Attention sees slots `0..=pos` (exact-causal for prefill replay,
+    /// full-window for decode).
+    fn step(&self, token: i32, pos: usize, kc: &mut [f32], vc: &mut [f32]) -> Vec<f32> {
+        let d = self.dim;
+        let dh = self.head_dim;
+        let tok = token.rem_euclid(self.vocab as i32) as usize;
+        let mut x: Vec<f32> = self.embed[tok * d..(tok + 1) * d].to_vec();
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Attention sublayer.
+            let h = rmsnorm(&x, &layer.attn_norm);
+            let mut q = matvec(&h, &layer.wq, d, d);
+            let mut k = matvec(&h, &layer.wk, d, d);
+            let v = matvec(&h, &layer.wv, d, d);
+            for head in 0..self.n_heads {
+                rope(&mut q[head * dh..(head + 1) * dh], pos);
+                rope(&mut k[head * dh..(head + 1) * dh], pos);
+            }
+            let mut attn = vec![0.0f32; d];
+            for head in 0..self.n_heads {
+                let base = self.kv_index(li, head, 0);
+                let slot = self.kv_index(li, head, pos);
+                kc[slot..slot + dh].copy_from_slice(&k[head * dh..(head + 1) * dh]);
+                vc[slot..slot + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
+                let qh = &q[head * dh..(head + 1) * dh];
+                let window = base..base + (pos + 1) * dh;
+                attend(
+                    qh,
+                    &kc[window.clone()],
+                    &vc[window],
+                    &mut attn[head * dh..(head + 1) * dh],
+                );
+            }
+            let proj = matvec(&attn, &layer.wo, d, d);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+
+            // SwiGLU MLP sublayer.
+            let h = rmsnorm(&x, &layer.mlp_norm);
+            let gate = matvec(&h, &layer.w1, d, self.hidden);
+            let up = matvec(&h, &layer.w3, d, self.hidden);
+            let inner: Vec<f32> =
+                gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+            let down = matvec(&inner, &layer.w2, self.hidden, d);
+            for (xi, di) in x.iter_mut().zip(&down) {
+                *xi += di;
+            }
+        }
+
+        let h = rmsnorm(&x, &self.final_norm);
+        matvec(&h, &self.unembed, d, self.vocab)
+    }
+
+    /// Prefill: logits for every position + fresh max_seq-capacity caches.
+    fn prefill(&self, ids: &[i32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut kc = vec![0.0f32; self.kv_len()];
+        let mut vc = vec![0.0f32; self.kv_len()];
+        let mut logits = Vec::with_capacity(ids.len() * self.vocab);
+        for (pos, &id) in ids.iter().enumerate() {
+            logits.extend(self.step(id, pos, &mut kc, &mut vc));
+        }
+        (logits, kc, vc)
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// `softmax(q·Kᵀ / √dh) · V` over contiguous `[visible, dh]` key/value
+/// slabs, accumulated into `out` (`out.len() == dh`). Shared by the
+/// serving path and the standalone `attention` golden model so their
+/// numerics cannot diverge. Two passes (max, exp/normalize) — exact and
+/// fast enough for these tiny windows.
+fn attend(qrow: &[f32], keys: &[f32], vals: &[f32], out: &mut [f32]) {
+    let dh = qrow.len();
+    let visible = keys.len() / dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = Vec::with_capacity(visible);
+    let mut mx = f32::NEG_INFINITY;
+    for t in 0..visible {
+        let s = dot(qrow, &keys[t * dh..(t + 1) * dh]) * scale;
+        mx = mx.max(s);
+        scores.push(s);
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - mx).exp();
+        denom += *s;
+    }
+    for (t, &p) in scores.iter().enumerate() {
+        let w = p / denom;
+        for (o, &vv) in out.iter_mut().zip(&vals[t * dh..(t + 1) * dh]) {
+            *o += w * vv;
+        }
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// `y[j] = Σ_i x[i] · w[i, j]` with `w` row-major `[rows, cols]`.
+fn matvec(x: &[f32], w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(w.len(), rows * cols);
+    let mut y = vec![0.0f32; cols];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * cols..(i + 1) * cols];
+        for (yj, &wij) in y.iter_mut().zip(row) {
+            *yj += xi * wij;
+        }
+    }
+    y
+}
+
+fn rmsnorm(x: &[f32], weight: &[f32]) -> Vec<f32> {
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + NORM_EPS).sqrt();
+    x.iter().zip(weight).map(|(&v, &w)| v * inv * w).collect()
+}
+
+/// Rotary embedding on one head vector (`model.py`'s rotate-half form).
+fn rope(x: &mut [f32], pos: usize) {
+    let half = x.len() / 2;
+    for i in 0..half {
+        let freq = 1.0 / ROPE_THETA.powf(i as f32 / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[i], x[half + i]);
+        x[i] = a * cos - b * sin;
+        x[half + i] = a * sin + b * cos;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry dispatch
+// ---------------------------------------------------------------------------
+
+/// Execute one manifest entry. `args` have already been typechecked
+/// against `entry` by the caller.
+pub(crate) fn execute(
+    model: &TinyLlm,
+    name: &str,
+    args: &[Tensor],
+    entry: &EntrySpec,
+) -> Result<Vec<Tensor>> {
+    match name {
+        "llm_prefill" => {
+            let ids = args[0].as_i32()?;
+            expect_rank(name, args, 0, 2)?;
+            if args[0].shape()[0] != 1 {
+                return Err(Error::Manifest(format!(
+                    "llm_prefill: batch {} unsupported (simulated backend is batch-1)",
+                    args[0].shape()[0]
+                )));
+            }
+            let t = args[0].shape()[1];
+            if t > model.max_seq {
+                return Err(Error::Manifest(format!(
+                    "llm_prefill: window {t} exceeds KV capacity {}",
+                    model.max_seq
+                )));
+            }
+            let (logits, kc, vc) = model.prefill(ids);
+            let kv_shape =
+                [model.n_layers, 1, model.n_heads, model.max_seq, model.head_dim];
+            Ok(vec![
+                Tensor::f32(logits, &[1, t, model.vocab])?,
+                Tensor::f32(kc, &kv_shape)?,
+                Tensor::f32(vc, &kv_shape)?,
+            ])
+        }
+        "llm_decode" => {
+            let id = args[0].as_i32()?[0];
+            let mut kc = args[1].as_f32()?.to_vec();
+            let mut vc = args[2].as_f32()?.to_vec();
+            if kc.len() != model.kv_len() || vc.len() != model.kv_len() {
+                return Err(Error::Manifest(format!(
+                    "llm_decode: cache specs hold {} elements, model needs {}",
+                    kc.len(),
+                    model.kv_len()
+                )));
+            }
+            let pos = args[3].as_i32()?[0];
+            if pos < 0 || pos as usize >= model.max_seq {
+                return Err(Error::Runtime(format!(
+                    "decode position {pos} outside KV capacity {}",
+                    model.max_seq
+                )));
+            }
+            let logits = model.step(id, pos as usize, &mut kc, &mut vc);
+            let kv_shape =
+                [model.n_layers, 1, model.n_heads, model.max_seq, model.head_dim];
+            Ok(vec![
+                Tensor::f32(logits, &[1, model.vocab])?,
+                Tensor::f32(kc, &kv_shape)?,
+                Tensor::f32(vc, &kv_shape)?,
+            ])
+        }
+        "attention" => attention(args),
+        "gf2mm" => gf2mm(args),
+        "vdecomp" => vdecomp(args, entry),
+        "vdist3" => vdist3(args),
+        "mcov" => mcov(args),
+        "vfsmax" => vfsmax(args),
+        "vmadot" => vmadot(args),
+        "phong" => phong(args),
+        "vrgb2yuv" => vrgb2yuv(args),
+        "vmvar" => vmvar(args),
+        other => Err(Error::Runtime(format!(
+            "entry `{other}` has no simulated implementation"
+        ))),
+    }
+}
+
+/// Guard against manifests whose entry shapes deviate from the geometry
+/// a simulated kernel implements: wrong ranks/inner dims become manifest
+/// errors instead of index-out-of-bounds panics.
+fn expect_rank(entry: &str, args: &[Tensor], idx: usize, rank: usize) -> Result<()> {
+    if args[idx].shape().len() != rank {
+        return Err(Error::Manifest(format!(
+            "{entry}: arg {idx} must be rank {rank}, manifest declares shape {:?}",
+            args[idx].shape()
+        )));
+    }
+    Ok(())
+}
+
+/// Guard a fixed inner dimension (e.g. the `3` of `[N, 3]` point rows).
+fn expect_dim(entry: &str, args: &[Tensor], idx: usize, dim: usize, want: usize) -> Result<()> {
+    let shape = args[idx].shape();
+    if shape.len() <= dim || shape[dim] != want {
+        return Err(Error::Manifest(format!(
+            "{entry}: arg {idx} dim {dim} must be {want}, manifest declares shape {shape:?}"
+        )));
+    }
+    Ok(())
+}
+
+/// Causal multi-head attention, `[B, H, T, Dh]` → same shape (`ref.mha`).
+fn attention(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_rank("attention", args, 0, 4)?;
+    let (q, k, v) = (args[0].as_f32()?, args[1].as_f32()?, args[2].as_f32()?);
+    let shape = args[0].shape();
+    if k.len() != q.len() || v.len() != q.len() {
+        return Err(Error::Manifest(
+            "attention: q/k/v entry specs disagree on element count".into(),
+        ));
+    }
+    let (b, h, t, dh) = (shape[0], shape[1], shape[2], shape[3]);
+    let mut out = vec![0.0f32; q.len()];
+    for bh in 0..b * h {
+        let base = bh * t * dh;
+        for qi in 0..t {
+            let qrow = &q[base + qi * dh..base + (qi + 1) * dh];
+            let window = base..base + (qi + 1) * dh;
+            attend(
+                qrow,
+                &k[window.clone()],
+                &v[window],
+                &mut out[base + qi * dh..base + (qi + 1) * dh],
+            );
+        }
+    }
+    Ok(vec![Tensor::f32(out, shape)?])
+}
+
+/// Matrix multiply over GF(2): `(a · b) & 1`.
+fn gf2mm(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_rank("gf2mm", args, 0, 2)?;
+    expect_rank("gf2mm", args, 1, 2)?;
+    let (a, b) = (args[0].as_i32()?, args[1].as_i32()?);
+    let (m, k) = (args[0].shape()[0], args[0].shape()[1]);
+    if args[1].shape()[0] != k {
+        return Err(Error::Manifest(format!(
+            "gf2mm: inner dims disagree ({k} vs {})",
+            args[1].shape()[0]
+        )));
+    }
+    let n = args[1].shape()[1];
+    let mut out = vec![0i32; m * n];
+    for r in 0..m {
+        for kk in 0..k {
+            let av = a[r * k + kk];
+            if av == 0 {
+                continue;
+            }
+            for c in 0..n {
+                out[r * n + c] ^= av & b[kk * n + c] & 1;
+            }
+        }
+    }
+    Ok(vec![Tensor::i32(out, &[m, n])?])
+}
+
+/// Bitstream unpacking: packed little-endian 32-bit words → {0,1}.
+fn vdecomp(args: &[Tensor], entry: &EntrySpec) -> Result<Vec<Tensor>> {
+    let words = args[0].as_i32()?;
+    let nbits = entry.outputs[0].numel();
+    if nbits > words.len() * 32 {
+        return Err(Error::Manifest(format!(
+            "vdecomp: entry declares {nbits} output bits but only {} input words",
+            words.len()
+        )));
+    }
+    let bits: Vec<i32> = (0..nbits)
+        .map(|i| (words[i / 32] >> (i % 32)) & 1)
+        .collect();
+    Ok(vec![Tensor::i32(bits, &entry.outputs[0].shape)?])
+}
+
+/// Squared Euclidean distance between 3-D point pairs: `[N,3]² → [N]`.
+fn vdist3(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_dim("vdist3", args, 0, 1, 3)?;
+    expect_dim("vdist3", args, 1, 1, 3)?;
+    let (p, q) = (args[0].as_f32()?, args[1].as_f32()?);
+    let n = args[0].shape()[0].min(args[1].shape()[0]);
+    let out: Vec<f32> = (0..n)
+        .map(|i| {
+            (0..3)
+                .map(|d| {
+                    let diff = p[i * 3 + d] - q[i * 3 + d];
+                    diff * diff
+                })
+                .sum()
+        })
+        .collect();
+    Ok(vec![Tensor::f32(out, &[n])?])
+}
+
+/// Cross-covariance of two centered point sets: `[N,3]² → [3,3]`.
+fn mcov(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_dim("mcov", args, 0, 1, 3)?;
+    expect_dim("mcov", args, 1, 1, 3)?;
+    let (p, q) = (args[0].as_f32()?, args[1].as_f32()?);
+    let n = args[0].shape()[0].min(args[1].shape()[0]);
+    let mut pm = [0.0f32; 3];
+    let mut qm = [0.0f32; 3];
+    for i in 0..n {
+        for d in 0..3 {
+            pm[d] += p[i * 3 + d];
+            qm[d] += q[i * 3 + d];
+        }
+    }
+    for d in 0..3 {
+        pm[d] /= n as f32;
+        qm[d] /= n as f32;
+    }
+    let mut cov = vec![0.0f32; 9];
+    for i in 0..n {
+        for r in 0..3 {
+            for c in 0..3 {
+                cov[r * 3 + c] += (p[i * 3 + r] - pm[r]) * (q[i * 3 + c] - qm[c]);
+            }
+        }
+    }
+    Ok(vec![Tensor::f32(cov, &[3, 3])?])
+}
+
+/// Max value + argmax of a float vector.
+fn vfsmax(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    let x = args[0].as_f32()?;
+    if x.is_empty() {
+        return Err(Error::Manifest("vfsmax: entry declares an empty input".into()));
+    }
+    let mut best = 0usize;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    Ok(vec![
+        Tensor::f32(vec![x[best]], &[])?,
+        Tensor::i32(vec![best as i32], &[])?,
+    ])
+}
+
+/// Matrix–vector multiply: `[R,C] · [C] → [R]`.
+fn vmadot(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_rank("vmadot", args, 0, 2)?;
+    expect_rank("vmadot", args, 1, 1)?;
+    let (m, v) = (args[0].as_f32()?, args[1].as_f32()?);
+    let (r, c) = (args[0].shape()[0], args[0].shape()[1]);
+    if v.len() != c {
+        return Err(Error::Manifest(format!(
+            "vmadot: matrix has {c} columns but vector has {} elements",
+            v.len()
+        )));
+    }
+    let out: Vec<f32> = (0..r).map(|row| dot(&m[row * c..(row + 1) * c], v)).collect();
+    Ok(vec![Tensor::f32(out, &[r])?])
+}
+
+/// Phong lighting per pixel over `[N,3]` unit vectors.
+fn phong(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    for i in 0..3 {
+        expect_dim("phong", args, i, 1, 3)?;
+    }
+    let (nrm, lgt, view) = (args[0].as_f32()?, args[1].as_f32()?, args[2].as_f32()?);
+    let n = args.iter().map(|a| a.shape()[0]).min().unwrap_or(0);
+    let out: Vec<f32> = (0..n)
+        .map(|i| {
+            let row = i * 3;
+            let ndotl = dot(&nrm[row..row + 3], &lgt[row..row + 3]).max(0.0);
+            let mut rdotv = 0.0f32;
+            for d in 0..3 {
+                let refl = 2.0 * ndotl * nrm[row + d] - lgt[row + d];
+                rdotv += refl * view[row + d];
+            }
+            let rdotv = rdotv.max(0.0);
+            let spec = if ndotl > 0.0 { rdotv.powi(SHININESS as i32) } else { 0.0 };
+            KA as f32 + KD as f32 * ndotl + KS as f32 * spec
+        })
+        .collect();
+    Ok(vec![Tensor::f32(out, &[n])?])
+}
+
+/// Color-space conversion `rgb · M'`, `[N,3] → [N,3]`.
+fn vrgb2yuv(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_dim("vrgb2yuv", args, 0, 1, 3)?;
+    let rgb = args[0].as_f32()?;
+    let n = args[0].shape()[0];
+    let mut out = vec![0.0f32; n * 3];
+    for i in 0..n {
+        for (row, coeffs) in RGB2YUV.iter().enumerate() {
+            out[i * 3 + row] = (0..3).map(|c| rgb[i * 3 + c] * coeffs[c] as f32).sum();
+        }
+    }
+    Ok(vec![Tensor::f32(out, &[n, 3])?])
+}
+
+/// Row mean + variance: `[N,W] → ([N], [N])`.
+fn vmvar(args: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_rank("vmvar", args, 0, 2)?;
+    let x = args[0].as_f32()?;
+    let (n, w) = (args[0].shape()[0], args[0].shape()[1]);
+    if w == 0 {
+        return Err(Error::Manifest("vmvar: zero-width rows".into()));
+    }
+    let mut mean = vec![0.0f32; n];
+    let mut var = vec![0.0f32; n];
+    for r in 0..n {
+        let row = &x[r * w..(r + 1) * w];
+        let m = row.iter().sum::<f32>() / w as f32;
+        let ex2 = row.iter().map(|&v| v * v).sum::<f32>() / w as f32;
+        mean[r] = m;
+        var[r] = ex2 - m * m;
+    }
+    Ok(vec![Tensor::f32(mean, &[n])?, Tensor::f32(var, &[n])?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TinyLlm {
+        TinyLlm::new(&default_manifest().model)
+    }
+
+    #[test]
+    fn default_manifest_lists_every_aot_entry() {
+        let m = default_manifest();
+        for name in [
+            "attention", "gf2mm", "llm_decode", "llm_prefill", "mcov", "phong",
+            "vdecomp", "vdist3", "vfsmax", "vmadot", "vmvar", "vrgb2yuv",
+        ] {
+            assert!(m.entries.contains_key(name), "missing {name}");
+        }
+        assert_eq!(m.model.prefill_len, 16);
+        assert_eq!(m.model.max_seq, 64);
+    }
+
+    #[test]
+    fn prefill_is_deterministic_and_finite() {
+        let m = model();
+        let (l1, k1, v1) = m.prefill(&[1, 2, 3, 4]);
+        let (l2, k2, v2) = m.prefill(&[1, 2, 3, 4]);
+        assert_eq!(l1, l2);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        assert!(l1.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_continues_prefill_consistently() {
+        // Teacher-forcing equivalence: prefill([a,b,c]) position-2 logits
+        // must equal prefill([a,b]) followed by decode(c, pos=2).
+        let m = model();
+        let (full, _, _) = m.prefill(&[7, 8, 9]);
+        let (_, mut kc, mut vc) = m.prefill(&[7, 8]);
+        let step = m.step(9, 2, &mut kc, &mut vc);
+        let want = &full[2 * m.vocab..3 * m.vocab];
+        for (a, b) in step.iter().zip(want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn padding_does_not_perturb_earlier_positions() {
+        // Causality: logits at position i must not depend on later tokens
+        // (the coordinator right-pads prompts relying on this).
+        let m = model();
+        let (a, _, _) = m.prefill(&[5, 6, 0, 0]);
+        let (b, _, _) = m.prefill(&[5, 6, 9, 9]);
+        assert_eq!(&a[..2 * m.vocab], &b[..2 * m.vocab]);
+    }
+
+    #[test]
+    fn attention_matches_direct_softmax() {
+        let mut rng = Rng::new(3);
+        let (b, h, t, d) = (1usize, 2usize, 8usize, 4usize);
+        let n = b * h * t * d;
+        let q: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let shape = [b, h, t, d];
+        let out = attention(&[
+            Tensor::f32(q.clone(), &shape).unwrap(),
+            Tensor::f32(k.clone(), &shape).unwrap(),
+            Tensor::f32(v.clone(), &shape).unwrap(),
+        ])
+        .unwrap();
+        let got = out[0].as_f32().unwrap();
+        // Row 0 attends only itself: output == v row 0 per head.
+        for head in 0..h {
+            let base = head * t * d;
+            for di in 0..d {
+                assert!((got[base + di] - v[base + di]).abs() < 1e-5);
+            }
+        }
+        assert!(got.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn gf2mm_identity() {
+        let mut eye = vec![0i32; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1;
+        }
+        let a = vec![1, 0, 1, 1, 0, 1, 0, 1, 1, 1, 0, 0, 0, 0, 1, 1];
+        let out = gf2mm(&[
+            Tensor::i32(a.clone(), &[4, 4]).unwrap(),
+            Tensor::i32(eye, &[4, 4]).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(out[0].as_i32().unwrap(), a.as_slice());
+    }
+
+    #[test]
+    fn vfsmax_scalar_outputs() {
+        let out = vfsmax(&[Tensor::f32(vec![1.0, 9.0, 3.0], &[3]).unwrap()]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[9.0]);
+        assert_eq!(out[1].as_i32().unwrap(), &[1]);
+        assert_eq!(out[0].shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn phong_of_zero_vectors_is_ambient() {
+        let z = Tensor::f32(vec![0.0; 6], &[2, 3]).unwrap();
+        let out = phong(&[z.clone(), z.clone(), z]).unwrap();
+        for &v in out[0].as_f32().unwrap() {
+            assert!((v - KA as f32).abs() < 1e-6);
+        }
+    }
+}

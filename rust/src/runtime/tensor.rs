@@ -114,24 +114,6 @@ impl Tensor {
         }
     }
 
-    /// Convert to an XLA literal (copies).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = match &self.data {
-            TensorData::F32(v) => xla::Literal::vec1(v),
-            TensorData::I32(v) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    /// Read an XLA literal back into a typed tensor, shaped per `spec`.
-    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
-        match spec.dtype {
-            DType::F32 => Tensor::f32(lit.to_vec::<f32>()?, &spec.shape),
-            DType::I32 => Tensor::i32(lit.to_vec::<i32>()?, &spec.shape),
-        }
-    }
-
     /// Row-major linear index of a multi-dim coordinate.
     pub fn index(&self, coord: &[usize]) -> usize {
         debug_assert_eq!(coord.len(), self.shape.len());

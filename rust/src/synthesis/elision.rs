@@ -78,7 +78,8 @@ fn find_candidates(func: &Func) -> Vec<Candidate> {
                 continue;
             }
             // Exactly one filling transfer per scratchpad.
-            let fills = func.count_ops(|k| matches!(k, OpKind::Transfer { dst: d, .. } if *d == dst));
+            let fills =
+                func.count_ops(|k| matches!(k, OpKind::Transfer { dst: d, .. } if *d == dst));
             if fills != 1 {
                 continue;
             }

@@ -259,7 +259,11 @@ pub fn to_verilog(desc: &PipelineDesc) -> String {
         );
         let _ = writeln!(v, "  reg stage{i}_valid;");
     }
-    let _ = writeln!(v, "  // compute: II={} depth={}", desc.initiation_interval, desc.datapath_depth);
+    let _ = writeln!(
+        v,
+        "  // compute: II={} depth={}",
+        desc.initiation_interval, desc.datapath_depth
+    );
     let _ = writeln!(v, "endmodule");
     v
 }

@@ -82,13 +82,6 @@ impl Json {
             .ok_or_else(|| Error::Manifest(format!("missing field `{key}`")))
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
-
     /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
@@ -142,6 +135,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`to_string()` comes via the `ToString`
+/// blanket impl).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 
@@ -307,8 +310,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
@@ -385,7 +390,8 @@ mod tests {
     fn parses_nested_manifest_shape() {
         let text = r#"{"entries": {"x": {"file": "x.hlo.txt", "args": [{"shape": [2, 3], "dtype": "float32"}]}}}"#;
         let v = Json::parse(text).unwrap();
-        let shape = v.get("entries").unwrap().get("x").unwrap().get("args").unwrap().as_arr().unwrap()[0]
+        let args = v.get("entries").unwrap().get("x").unwrap().get("args").unwrap();
+        let shape = args.as_arr().unwrap()[0]
             .get("shape")
             .unwrap()
             .as_arr()

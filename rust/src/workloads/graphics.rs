@@ -192,7 +192,10 @@ fn init_phong(func: &Func, mem: &mut Memory) {
 // vrgb2yuv — 3x3 color matrix per pixel
 // ---------------------------------------------------------------------------
 
-const M: [[f64; 3]; 3] = [
+/// ITU-R BT.601-ish RGB→YUV matrix. Shared with the artifact golden
+/// model (`runtime::sim`), which must agree numerically with the IR
+/// kernel (same constants as `python/compile/kernels/ref.py`).
+pub const RGB2YUV: [[f64; 3]; 3] = [
     [0.299, 0.587, 0.114],
     [-0.14713, -0.28886, 0.436],
     [0.615, -0.51499, -0.10001],
@@ -226,7 +229,7 @@ fn build_rgb2yuv(isax: bool, reassociated: bool) -> Func {
         for row in 0..3usize {
             let mut terms = Vec::new();
             for c in 0..3usize {
-                let k = b.const_f(M[row][c]);
+                let k = b.const_f(RGB2YUV[row][c]);
                 terms.push(b.mul(chan[c].unwrap(), k));
             }
             // AF attack: reassociate the 3-term sum.
@@ -372,7 +375,7 @@ mod tests {
         for i in 0..NPIX as usize {
             for row in 0..3 {
                 let want: f32 = (0..3)
-                    .map(|c| rgb[i * 3 + c] * M[row][c] as f32)
+                    .map(|c| rgb[i * 3 + c] * RGB2YUV[row][c] as f32)
                     .sum();
                 let got = yuv[i * 3 + row];
                 assert!((got - want).abs() < 1e-4, "pixel {i} row {row}: {got} vs {want}");

@@ -1,0 +1,88 @@
+//! CLI surface tests for the `aquas` binary: exit codes, usage text, and
+//! the artifact-free subcommands (everything here must pass on a clean
+//! checkout with no `make artifacts` step).
+
+use std::process::{Command, Output};
+
+fn aquas(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_aquas"))
+        .args(args)
+        .output()
+        .expect("spawn aquas binary")
+}
+
+#[test]
+fn help_exits_zero_with_usage() {
+    let out = aquas(&["help"]);
+    assert!(out.status.success(), "exit: {:?}", out.status);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"), "no usage in: {text}");
+    assert!(text.contains("synth"), "missing synth in: {text}");
+    assert!(text.contains("serve"), "missing serve in: {text}");
+}
+
+#[test]
+fn no_arguments_prints_usage_and_exits_zero() {
+    let out = aquas(&[]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_exits_one_with_usage() {
+    let out = aquas(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"), "stderr: {err}");
+    assert!(err.contains("USAGE"), "no usage on stderr: {err}");
+}
+
+#[test]
+fn ir_levels_prints_table1_summary() {
+    let out = aquas(&["ir-levels"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table 1"), "missing title: {text}");
+    for level in ["Functional", "Architectural", "Temporal"] {
+        assert!(text.contains(level), "missing {level}: {text}");
+    }
+}
+
+#[test]
+fn synth_demo_fir7_shows_all_refinement_levels() {
+    let out = aquas(&["synth", "--demo", "fir7"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("transfer"), "functional level missing");
+    assert!(text.contains("copy_issue"), "temporal level missing");
+    assert!(text.contains("module isax_fir7"), "verilog missing");
+}
+
+#[test]
+fn compile_vmadot_reports_match() {
+    let out = aquas(&["compile", "vmadot"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("kernel: vmadot"), "got: {text}");
+    assert!(text.contains("vmadot"), "no match report: {text}");
+    assert!(text.contains("isax"), "no intrinsic in lowered program: {text}");
+}
+
+#[test]
+fn compile_unknown_kernel_fails() {
+    let out = aquas(&["compile", "nonexistent_kernel"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown kernel"));
+}
+
+#[test]
+fn serve_runs_artifact_free() {
+    // The runtime falls back to the built-in simulated manifest, so
+    // `aquas serve` must work on a clean checkout.
+    let out = aquas(&["serve", "-n", "2"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("platform:"), "no platform line: {text}");
+    assert!(text.contains("req 0:"), "no request metrics: {text}");
+    assert!(text.contains("req 1:"), "second request missing: {text}");
+}
