@@ -1,0 +1,616 @@
+//! `cargo bench --bench egraph` — e-graph engine benchmarks.
+//!
+//! Three sections:
+//! 1. the library report (`bench_harness::egraph::report`): saturation
+//!    time, e-nodes/sec and match-round latency per workload on the
+//!    current engine;
+//! 2. an **old-vs-new comparison**: the `legacy` module below is a copy
+//!    of the pre-PR engine (full-memo-rehash `rebuild`, per-class scan
+//!    with string-keyed `HashMap` bindings). Both engines replay the same
+//!    encoded term graphs and saturate with the same rule set; the
+//!    speedup is recorded in the report;
+//! 3. the JSON report (`--out <path>`, default `BENCH_egraph.json`) and
+//!    the CI regression gate (`--check <baseline.json>` fails the run if
+//!    gf2mm saturation regresses >2x against the checked-in baseline).
+//!
+//! `-- --test` is the CI smoke mode: one sample per section.
+
+use std::time::Instant;
+
+use aquas::bench_harness::egraph::{
+    attention_term_graph, bench_runner, gf2mm_term_graph, replay, TermGraph,
+};
+use aquas::compiler::rules::internal_rules;
+use aquas::util::stats::summarize;
+
+// ---------------------------------------------------------------------------
+// The pre-PR engine, kept verbatim for comparison. `rebuild` rehashes the
+// whole memo per fixpoint iteration, `nodes`/`nodes_with_sym` clone node
+// vectors, and matching scans every class with string-keyed HashMap
+// bindings cloned per branch. The pattern AST is shared with the library.
+// ---------------------------------------------------------------------------
+#[allow(dead_code)]
+mod legacy {
+    use aquas::egraph::Pattern;
+    use std::collections::HashMap;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct SymId(pub u32);
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct ClassId(pub u32);
+
+    #[derive(Debug, Clone, PartialEq, Eq, Hash)]
+    pub struct ENode {
+        pub sym: SymId,
+        pub children: Vec<ClassId>,
+    }
+
+    impl ENode {
+        fn canonicalize(&self, uf: &mut UnionFind) -> ENode {
+            ENode {
+                sym: self.sym,
+                children: self.children.iter().map(|&c| uf.find(c)).collect(),
+            }
+        }
+    }
+
+    #[derive(Debug, Default, Clone)]
+    struct UnionFind {
+        parent: Vec<u32>,
+    }
+
+    impl UnionFind {
+        fn make(&mut self) -> ClassId {
+            let id = self.parent.len() as u32;
+            self.parent.push(id);
+            ClassId(id)
+        }
+
+        fn find(&mut self, c: ClassId) -> ClassId {
+            let mut root = c.0;
+            while self.parent[root as usize] != root {
+                root = self.parent[root as usize];
+            }
+            let mut cur = c.0;
+            while self.parent[cur as usize] != root {
+                let next = self.parent[cur as usize];
+                self.parent[cur as usize] = root;
+                cur = next;
+            }
+            ClassId(root)
+        }
+
+        fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
+            let ra = self.find(a);
+            let rb = self.find(b);
+            if ra != rb {
+                let (keep, drop) = if ra.0 < rb.0 { (ra, rb) } else { (rb, ra) };
+                self.parent[drop.0 as usize] = keep.0;
+                keep
+            } else {
+                ra
+            }
+        }
+    }
+
+    #[derive(Debug, Default, Clone)]
+    pub struct EGraph {
+        syms: Vec<String>,
+        sym_ids: HashMap<String, SymId>,
+        uf: UnionFind,
+        memo: HashMap<ENode, ClassId>,
+        classes: HashMap<ClassId, Vec<ENode>>,
+        dirty: Vec<ClassId>,
+    }
+
+    impl EGraph {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn sym(&mut self, name: &str) -> SymId {
+            if let Some(&id) = self.sym_ids.get(name) {
+                return id;
+            }
+            let id = SymId(self.syms.len() as u32);
+            self.syms.push(name.to_string());
+            self.sym_ids.insert(name.to_string(), id);
+            id
+        }
+
+        pub fn find_sym(&self, name: &str) -> Option<SymId> {
+            self.sym_ids.get(name).copied()
+        }
+
+        pub fn sym_name(&self, s: SymId) -> &str {
+            &self.syms[s.0 as usize]
+        }
+
+        pub fn find(&mut self, c: ClassId) -> ClassId {
+            self.uf.find(c)
+        }
+
+        pub fn add(&mut self, node: ENode) -> ClassId {
+            let node = node.canonicalize(&mut self.uf);
+            if let Some(&c) = self.memo.get(&node) {
+                return self.uf.find(c);
+            }
+            let id = self.uf.make();
+            self.memo.insert(node.clone(), id);
+            self.classes.entry(id).or_default().push(node);
+            id
+        }
+
+        pub fn add_named(&mut self, name: &str, children: Vec<ClassId>) -> ClassId {
+            let sym = self.sym(name);
+            self.add(ENode { sym, children })
+        }
+
+        pub fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
+            let ra = self.uf.find(a);
+            let rb = self.uf.find(b);
+            if ra == rb {
+                return ra;
+            }
+            let keep = self.uf.union(ra, rb);
+            let drop = if keep == ra { rb } else { ra };
+            let moved = self.classes.remove(&drop).unwrap_or_default();
+            self.classes.entry(keep).or_default().extend(moved);
+            self.dirty.push(keep);
+            keep
+        }
+
+        pub fn rebuild(&mut self) {
+            while !self.dirty.is_empty() {
+                self.dirty.clear();
+                let old_memo = std::mem::take(&mut self.memo);
+                let mut new_memo: HashMap<ENode, ClassId> =
+                    HashMap::with_capacity(old_memo.len());
+                let mut unions: Vec<(ClassId, ClassId)> = Vec::new();
+                for (node, cls) in old_memo {
+                    let canon = node.canonicalize(&mut self.uf);
+                    let ccls = self.uf.find(cls);
+                    match new_memo.get(&canon) {
+                        Some(&existing) if existing != ccls => unions.push((existing, ccls)),
+                        Some(_) => {}
+                        None => {
+                            new_memo.insert(canon, ccls);
+                        }
+                    }
+                }
+                self.memo = new_memo;
+                for (a, b) in unions {
+                    self.union(a, b);
+                }
+                let mut new_classes: HashMap<ClassId, Vec<ENode>> = HashMap::new();
+                let mut seen: std::collections::HashSet<(ClassId, ENode)> =
+                    std::collections::HashSet::new();
+                let old = std::mem::take(&mut self.classes);
+                for (cls, nodes) in old {
+                    let ccls = self.uf.find(cls);
+                    for n in nodes {
+                        let canon = n.canonicalize(&mut self.uf);
+                        if seen.insert((ccls, canon.clone())) {
+                            new_classes.entry(ccls).or_default().push(canon);
+                        }
+                    }
+                }
+                self.classes = new_classes;
+            }
+        }
+
+        pub fn nodes(&mut self, c: ClassId) -> Vec<ENode> {
+            let c = self.uf.find(c);
+            self.classes.get(&c).cloned().unwrap_or_default()
+        }
+
+        pub fn nodes_with_sym(&mut self, c: ClassId, sym: SymId, arity: usize) -> Vec<ENode> {
+            let c = self.uf.find(c);
+            match self.classes.get(&c) {
+                Some(ns) => ns
+                    .iter()
+                    .filter(|n| n.sym == sym && n.children.len() == arity)
+                    .cloned()
+                    .collect(),
+                None => Vec::new(),
+            }
+        }
+
+        pub fn class_ids(&mut self) -> Vec<ClassId> {
+            let ids: Vec<ClassId> = self.classes.keys().copied().collect();
+            ids.into_iter().map(|c| self.uf.find(c)).collect()
+        }
+
+        pub fn node_count(&self) -> usize {
+            self.classes.values().map(|v| v.len()).sum()
+        }
+    }
+
+    pub type Bindings = HashMap<String, ClassId>;
+
+    pub enum Action {
+        Template(Pattern),
+        Dynamic(Box<dyn Fn(&mut EGraph, &Bindings) -> Option<ClassId>>),
+    }
+
+    pub struct Rewrite {
+        pub name: String,
+        pub lhs: Pattern,
+        pub action: Action,
+    }
+
+    impl Rewrite {
+        pub fn simple(name: &str, lhs: &str, rhs: &str) -> Self {
+            Self {
+                name: name.into(),
+                lhs: Pattern::parse(lhs),
+                action: Action::Template(Pattern::parse(rhs)),
+            }
+        }
+
+        pub fn dynamic<F>(name: &str, lhs: &str, f: F) -> Self
+        where
+            F: Fn(&mut EGraph, &Bindings) -> Option<ClassId> + 'static,
+        {
+            Self {
+                name: name.into(),
+                lhs: Pattern::parse(lhs),
+                action: Action::Dynamic(Box::new(f)),
+            }
+        }
+    }
+
+    pub fn match_pattern(
+        g: &mut EGraph,
+        pattern: &Pattern,
+        c: ClassId,
+        binds: &Bindings,
+        sink: &mut Vec<Bindings>,
+    ) {
+        match pattern {
+            Pattern::Var(v) => {
+                let c = g.find(c);
+                match binds.get(v) {
+                    Some(&bound) if g.find(bound) != c => {}
+                    _ => {
+                        let mut b = binds.clone();
+                        b.insert(v.clone(), c);
+                        sink.push(b);
+                    }
+                }
+            }
+            Pattern::App(name, kids) => {
+                let Some(sym) = g.find_sym(name) else { return };
+                let nodes = g.nodes_with_sym(c, sym, kids.len());
+                for node in nodes {
+                    let mut states = vec![binds.clone()];
+                    for (kid_pat, &kid_cls) in kids.iter().zip(&node.children) {
+                        let mut next = Vec::new();
+                        for s in &states {
+                            match_pattern(g, kid_pat, kid_cls, s, &mut next);
+                        }
+                        states = next;
+                        if states.is_empty() {
+                            break;
+                        }
+                    }
+                    sink.extend(states);
+                }
+            }
+        }
+    }
+
+    pub fn instantiate(g: &mut EGraph, pattern: &Pattern, binds: &Bindings) -> ClassId {
+        match pattern {
+            Pattern::Var(v) => {
+                *binds.get(v).unwrap_or_else(|| panic!("unbound var ?{v}"))
+            }
+            Pattern::App(name, kids) => {
+                let children: Vec<ClassId> =
+                    kids.iter().map(|k| instantiate(g, k, binds)).collect();
+                let sym = g.sym(name);
+                g.add(ENode { sym, children })
+            }
+        }
+    }
+
+    pub struct Runner {
+        pub iter_limit: usize,
+        pub node_limit: usize,
+        pub match_limit: usize,
+    }
+
+    impl Runner {
+        pub fn run(&self, g: &mut EGraph, rules: &[Rewrite]) -> usize {
+            let mut iterations = 0;
+            for _ in 0..self.iter_limit {
+                iterations += 1;
+                if !self.run_one(g, rules) {
+                    break;
+                }
+                if g.node_count() > self.node_limit {
+                    break;
+                }
+            }
+            iterations
+        }
+
+        fn run_one(&self, g: &mut EGraph, rules: &[Rewrite]) -> bool {
+            let mut any_change = false;
+            for rule in rules.iter() {
+                let classes = g.class_ids();
+                let mut matches: Vec<(ClassId, Bindings)> = Vec::new();
+                'collect: for c in classes {
+                    let mut sink = Vec::new();
+                    match_pattern(g, &rule.lhs, c, &HashMap::new(), &mut sink);
+                    for b in sink {
+                        matches.push((c, b));
+                        if matches.len() >= self.match_limit {
+                            break 'collect;
+                        }
+                    }
+                }
+                let mut rule_changed = false;
+                for (c, binds) in matches {
+                    let replacement = match &rule.action {
+                        Action::Template(rhs) => Some(instantiate(g, rhs, &binds)),
+                        Action::Dynamic(f) => f(g, &binds),
+                    };
+                    if let Some(r) = replacement {
+                        let before = g.find(c);
+                        let after = g.find(r);
+                        if before != after {
+                            g.union(c, r);
+                            any_change = true;
+                            rule_changed = true;
+                        }
+                    }
+                    if g.node_count() > self.node_limit {
+                        g.rebuild();
+                        return any_change;
+                    }
+                }
+                if rule_changed {
+                    g.rebuild();
+                }
+            }
+            any_change
+        }
+    }
+
+    fn const_of(g: &mut EGraph, c: ClassId) -> Option<i64> {
+        for n in g.nodes(c) {
+            let name = g.sym_name(n.sym).to_string();
+            if let Some(v) = name.strip_prefix("const:") {
+                if let Ok(k) = v.parse::<i64>() {
+                    return Some(k);
+                }
+            }
+        }
+        None
+    }
+
+    /// The internal rule set over legacy engine types. The pattern→pattern
+    /// rules come from the library's shared `SIMPLE_RULES` table, so both
+    /// engines always saturate the same rule set; only the dynamic
+    /// closures are duplicated (they are engine-typed).
+    pub fn internal_rules() -> Vec<Rewrite> {
+        let mut rules: Vec<Rewrite> = aquas::compiler::rules::SIMPLE_RULES
+            .iter()
+            .map(|&(n, l, r)| Rewrite::simple(n, l, r))
+            .collect();
+        rules.push(Rewrite::dynamic("shl-to-mul", "(shl ?x ?c)", |g, binds| {
+            let k = const_of(g, binds["c"])?;
+            if !(0..=32).contains(&k) {
+                return None;
+            }
+            let x = binds["x"];
+            let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
+            Some(g.add_named("mul", vec![x, cm]))
+        }));
+        rules.push(Rewrite::dynamic("shr-to-div", "(shr ?x ?c)", |g, binds| {
+            let k = const_of(g, binds["c"])?;
+            if !(1..=32).contains(&k) {
+                return None;
+            }
+            let x = binds["x"];
+            let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
+            Some(g.add_named("div", vec![x, cm]))
+        }));
+        rules.push(Rewrite::dynamic("fold-add", "(add ?a ?b)", |g, binds| {
+            let x = const_of(g, binds["a"])?;
+            let y = const_of(g, binds["b"])?;
+            Some(g.add_named(&format!("const:{}", x.wrapping_add(y)), vec![]))
+        }));
+        rules.push(Rewrite::dynamic("fold-mul", "(mul ?a ?b)", |g, binds| {
+            let x = const_of(g, binds["a"])?;
+            let y = const_of(g, binds["b"])?;
+            Some(g.add_named(&format!("const:{}", x.wrapping_mul(y)), vec![]))
+        }));
+        rules.push(Rewrite::dynamic("mask-to-rem", "(and ?x ?c)", |g, binds| {
+            let k = const_of(g, binds["c"])?;
+            if k <= 0 || (k + 1) & k != 0 {
+                return None;
+            }
+            let x = binds["x"];
+            let cm = g.add_named(&format!("const:{}", k + 1), vec![]);
+            Some(g.add_named("rem", vec![x, cm]))
+        }));
+        rules.push(Rewrite::dynamic("rem-to-mask", "(rem ?x ?c)", |g, binds| {
+            let k = const_of(g, binds["c"])?;
+            if k <= 1 || k & (k - 1) != 0 {
+                return None;
+            }
+            let x = binds["x"];
+            let cm = g.add_named(&format!("const:{}", k - 1), vec![]);
+            Some(g.add_named("and", vec![x, cm]))
+        }));
+        rules
+    }
+}
+
+/// Scale a term graph to `copies` disjoint kernel-pair instances in one
+/// graph — the "many ISAXes and workloads" scenario the engine must
+/// sustain. Leaf/buffer symbols (those with a `:`, except shared
+/// `const:*` literals) get a per-copy suffix so copies stay disjoint
+/// while the rule alphabet (`add`, `mul`, `shl`, …) is untouched.
+fn scaled(tg: &TermGraph, copies: usize) -> TermGraph {
+    let mut terms = Vec::with_capacity(tg.terms.len() * copies);
+    for i in 0..copies {
+        let base = (i * tg.terms.len()) as u32;
+        for (sym, kids) in &tg.terms {
+            let sym = if i > 0 && sym.contains(':') && !sym.starts_with("const:") {
+                format!("{sym}@{i}")
+            } else {
+                sym.clone()
+            };
+            terms.push((sym, kids.iter().map(|&k| k + base).collect()));
+        }
+    }
+    TermGraph { terms, sw_root: tg.sw_root, isax_root: tg.isax_root }
+}
+
+/// Replay a term graph into the legacy engine.
+fn replay_legacy(tg: &TermGraph) -> (legacy::EGraph, legacy::ClassId, legacy::ClassId) {
+    let mut g = legacy::EGraph::new();
+    let mut ids: Vec<legacy::ClassId> = Vec::with_capacity(tg.terms.len());
+    for (sym, kids) in &tg.terms {
+        let children: Vec<legacy::ClassId> =
+            kids.iter().map(|&k| ids[k as usize]).collect();
+        ids.push(g.add_named(sym, children));
+    }
+    (g, ids[tg.sw_root as usize], ids[tg.isax_root as usize])
+}
+
+/// Saturate + match on the legacy engine; returns (wall ms, loops equal).
+fn run_legacy(tg: &TermGraph) -> (f64, bool) {
+    let (mut g, sw, isax) = replay_legacy(tg);
+    let rules = legacy::internal_rules();
+    let runner =
+        legacy::Runner { iter_limit: 12, node_limit: 100_000, match_limit: 10_000 };
+    let t0 = Instant::now();
+    runner.run(&mut g, &rules);
+    let eq = g.find(sw) == g.find(isax);
+    (t0.elapsed().as_secs_f64() * 1e3, eq)
+}
+
+/// Saturate + match on the current engine; returns (wall ms, loops equal).
+fn run_new(tg: &TermGraph) -> (f64, bool) {
+    let (mut g, sw, isax) = replay(tg);
+    let rules = internal_rules();
+    let t0 = Instant::now();
+    bench_runner().run(&mut g, &rules);
+    let eq = g.find(sw) == g.find(isax);
+    (t0.elapsed().as_secs_f64() * 1e3, eq)
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--test");
+    let out_path =
+        flag_value(&args, "--out").unwrap_or_else(|| "BENCH_egraph.json".to_string());
+    let check_path = flag_value(&args, "--check");
+
+    // 1. Current-engine workload report.
+    let mut report = aquas::bench_harness::egraph::report(quick);
+
+    // 2. Old-vs-new on the same replayed term graphs, scaled to several
+    //    disjoint kernel-pair instances per graph (multi-ISAX programs).
+    let samples = if quick { 1 } else { 3 };
+    let copies = if quick { 4 } else { 16 };
+    for (name, tg) in
+        [("gf2mm", gf2mm_term_graph()), ("attention", attention_term_graph())]
+    {
+        let tg = scaled(&tg, copies);
+        let mut legacy_eq = false;
+        let legacy_ms = summarize(
+            (0..samples)
+                .map(|_| {
+                    let (ms, eq) = run_legacy(&tg);
+                    legacy_eq = eq;
+                    ms
+                })
+                .collect(),
+        )
+        .mean;
+        let mut new_eq = false;
+        let new_ms = summarize(
+            (0..samples)
+                .map(|_| {
+                    let (ms, eq) = run_new(&tg);
+                    new_eq = eq;
+                    ms
+                })
+                .collect(),
+        )
+        .mean;
+        // Report verdict (dis)agreement as data and finish all measurements
+        // before failing: the `--check` gate below turns disagreement into
+        // a non-zero exit, so CI catches it with the full JSON uploaded.
+        if legacy_eq != new_eq {
+            eprintln!(
+                "WARNING: engines disagree on {name}: legacy={legacy_eq} new={new_eq} \
+                 (match/node caps truncate differently?)"
+            );
+        }
+        let speedup = legacy_ms / new_ms.max(1e-9);
+        println!(
+            "{name} x{copies}: legacy {legacy_ms:.3} ms, new {new_ms:.3} ms → \
+             {speedup:.1}x (saturation+match, loops equal: new={new_eq} \
+             legacy={legacy_eq})"
+        );
+        report.metric(&format!("{name}_scaled_copies"), copies as f64);
+        report.metric(&format!("{name}_legacy_saturate_ms"), legacy_ms);
+        report.metric(&format!("{name}_speedup_vs_legacy"), speedup);
+        report.metric(&format!("{name}_loops_equal_new"), if new_eq { 1.0 } else { 0.0 });
+        report.metric(
+            &format!("{name}_verdicts_agree"),
+            if legacy_eq == new_eq { 1.0 } else { 0.0 },
+        );
+    }
+
+    println!("\n{}", report.render());
+
+    // 3. JSON report + regression gate.
+    std::fs::write(&out_path, report.metrics_json())
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("report written to {out_path}");
+
+    if let Some(baseline_path) = check_path {
+        // Gate 1: the two engines must agree on every match verdict (and
+        // the new engine must have unified each sw/isax pair).
+        for name in ["gf2mm", "attention"] {
+            if report.metrics[&format!("{name}_verdicts_agree")] != 1.0
+                || report.metrics[&format!("{name}_loops_equal_new")] != 1.0
+            {
+                eprintln!("VERDICT MISMATCH: see {name}_* metrics in {out_path}");
+                std::process::exit(1);
+            }
+        }
+        // Gate 2: saturation wall time vs the checked-in baseline.
+        let text = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+        let j = aquas::util::json::Json::parse(&text).expect("baseline json parses");
+        let base = j
+            .get("gf2mm_saturate_ms")
+            .and_then(|v| v.as_f64())
+            .expect("baseline has gf2mm_saturate_ms");
+        let measured = report.metrics["gf2mm_saturate_ms"];
+        if measured > 2.0 * base {
+            eprintln!(
+                "REGRESSION: gf2mm saturation {measured:.3} ms is more than 2x the \
+                 baseline {base:.3} ms"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "checks ok: verdicts agree on every workload; gf2mm saturation \
+             {measured:.3} ms vs {base:.3} ms baseline (gate: 2x)"
+        );
+    }
+}

@@ -19,7 +19,7 @@
 
 use std::collections::HashMap;
 
-use crate::egraph::{ClassId, EGraph};
+use crate::egraph::{ClassId, EGraph, ENode};
 use crate::ir::func::{BufferId, Func, OpRef, Region, Value};
 use crate::ir::ops::{CmpPred, OpKind};
 
@@ -45,9 +45,10 @@ pub fn encode_func(g: &mut EGraph, func: &Func) -> EncodeMap {
         func,
         map: EncodeMap::default(),
         depth: 0,
+        scratch: String::with_capacity(32),
     };
     for (i, &p) in func.params.iter().enumerate() {
-        let c = ctx.g.add_named(&format!("param:{i}"), vec![]);
+        let c = ctx.named(format_args!("param:{i}"), vec![]);
         ctx.map.value_class.insert(p, c);
     }
     // Buffer slots are scoped per *top-level anchor*: each top-level loop
@@ -76,9 +77,22 @@ struct Ctx<'a> {
     func: &'a Func,
     map: EncodeMap,
     depth: usize,
+    /// Reused buffer for formatted symbol names — encoding allocates no
+    /// fresh `String` per op.
+    scratch: String,
 }
 
 impl<'a> Ctx<'a> {
+    /// Add a node whose symbol is a formatted name, via the scratch
+    /// buffer (no per-op `format!` allocation).
+    fn named(&mut self, args: std::fmt::Arguments<'_>, children: Vec<ClassId>) -> ClassId {
+        use std::fmt::Write;
+        self.scratch.clear();
+        self.scratch.write_fmt(args).expect("symbol format");
+        let sym = self.g.sym(&self.scratch);
+        self.g.add(ENode { sym, children })
+    }
+
     fn slot(&mut self, b: BufferId) -> usize {
         let next = self.map.buf_slot.len();
         *self.map.buf_slot.entry(b).or_insert(next)
@@ -110,8 +124,8 @@ impl<'a> Ctx<'a> {
     fn op(&mut self, opref: OpRef) -> Option<ClassId> {
         let op = self.func.op(opref).clone();
         let class = match &op.kind {
-            OpKind::ConstI(v) => self.g.add_named(&format!("const:{v}"), vec![]),
-            OpKind::ConstF(v) => self.g.add_named(&format!("constf:{v}"), vec![]),
+            OpKind::ConstI(v) => self.named(format_args!("const:{v}"), vec![]),
+            OpKind::ConstF(v) => self.named(format_args!("constf:{v}"), vec![]),
             OpKind::Add
             | OpKind::Sub
             | OpKind::Mul
@@ -134,7 +148,7 @@ impl<'a> Ctx<'a> {
             }
             OpKind::Powi(e) => {
                 let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
-                self.g.add_named(&format!("powi:{e}"), kids)
+                self.named(format_args!("powi:{e}"), kids)
             }
             OpKind::Cmp(pred) => {
                 let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
@@ -151,35 +165,35 @@ impl<'a> Ctx<'a> {
             OpKind::Load(b) | OpKind::ReadSmem(b) | OpKind::Fetch(b) => {
                 let slot = self.slot(*b);
                 let idx = self.value(op.operands[0]);
-                self.g.add_named(&format!("load:m{slot}"), vec![idx])
+                self.named(format_args!("load:m{slot}"), vec![idx])
             }
             OpKind::LoadItfc { buf, .. } => {
                 let slot = self.slot(*buf);
                 let idx = self.value(op.operands[0]);
-                self.g.add_named(&format!("load:m{slot}"), vec![idx])
+                self.named(format_args!("load:m{slot}"), vec![idx])
             }
             OpKind::Store(b) | OpKind::WriteSmem(b) => {
                 let slot = self.slot(*b);
                 let idx = self.value(op.operands[0]);
                 let val = self.value(op.operands[1]);
-                self.g.add_named(&format!("store:m{slot}"), vec![idx, val])
+                self.named(format_args!("store:m{slot}"), vec![idx, val])
             }
             OpKind::StoreItfc { buf, .. } => {
                 let slot = self.slot(*buf);
                 let idx = self.value(op.operands[0]);
                 let val = self.value(op.operands[1]);
-                self.g.add_named(&format!("store:m{slot}"), vec![idx, val])
+                self.named(format_args!("store:m{slot}"), vec![idx, val])
             }
-            OpKind::ReadIrf(r) => self.g.add_named(&format!("irf:{r}"), vec![]),
+            OpKind::ReadIrf(r) => self.named(format_args!("irf:{r}"), vec![]),
             OpKind::WriteIrf(r) => {
                 let val = self.value(op.operands[0]);
-                self.g.add_named(&format!("wirf:{r}"), vec![val])
+                self.named(format_args!("wirf:{r}"), vec![val])
             }
             OpKind::Transfer { dst, src, size } => {
                 let ds = self.slot(*dst);
                 let ss = self.slot(*src);
                 let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
-                self.g.add_named(&format!("transfer:m{ds}:m{ss}:{size}"), kids)
+                self.named(format_args!("transfer:m{ds}:m{ss}:{size}"), kids)
             }
             OpKind::Copy { .. } | OpKind::CopyIssue { .. } | OpKind::CopyWait { .. } => {
                 // Post-binding ops never reach the compiler path.
@@ -191,10 +205,11 @@ impl<'a> Ctx<'a> {
                     op.operands.iter().map(|&v| self.value(v)).collect();
                 let region = &op.regions[0];
                 let iv = region.params[0];
-                let ivc = self.g.add_named(&format!("iv:{}", self.depth), vec![]);
+                let depth = self.depth;
+                let ivc = self.named(format_args!("iv:{depth}"), vec![]);
                 self.map.value_class.insert(iv, ivc);
                 for (i, &c) in region.params[1..].iter().enumerate() {
-                    let cc = self.g.add_named(&format!("carry:{}:{i}", self.depth), vec![]);
+                    let cc = self.named(format_args!("carry:{depth}:{i}"), vec![]);
                     self.map.value_class.insert(c, cc);
                 }
                 self.depth += 1;
@@ -204,7 +219,7 @@ impl<'a> Ctx<'a> {
                 let c = self.g.add_named("for", kids);
                 // Loop results: represent as projections of the loop.
                 for (i, &r) in op.results.iter().enumerate() {
-                    let proj = self.g.add_named(&format!("for-out:{i}"), vec![c]);
+                    let proj = self.named(format_args!("for-out:{i}"), vec![c]);
                     self.map.value_class.insert(r, proj);
                 }
                 self.map.loops.push((opref, c, self.depth));
@@ -216,7 +231,7 @@ impl<'a> Ctx<'a> {
                 let else_t = self.region(&op.regions[1]);
                 let c = self.g.add_named("if", vec![cond, then_t, else_t]);
                 for (i, &r) in op.results.iter().enumerate() {
-                    let proj = self.g.add_named(&format!("if-out:{i}"), vec![c]);
+                    let proj = self.named(format_args!("if-out:{i}"), vec![c]);
                     self.map.value_class.insert(r, proj);
                 }
                 c
@@ -231,7 +246,7 @@ impl<'a> Ctx<'a> {
             }
             OpKind::Intrinsic(name) => {
                 let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();
-                self.g.add_named(&format!("isax:{name}"), kids)
+                self.named(format_args!("isax:{name}"), kids)
             }
         };
         for &r in &op.results {

@@ -148,8 +148,8 @@ pub fn match_isax(
     let origins = top_loops(software);
 
     // Skeleton matching closure: any software depth-0 loop class equal to
-    // any ISAX class?
-    let try_match = |g: &mut EGraph,
+    // any ISAX class? Read-only — class equality needs no `&mut`.
+    let try_match = |g: &EGraph,
                      variants: &[Variant],
                      isax_classes: &[ClassId]|
      -> Option<(OpRef, bool)> {
@@ -174,7 +174,7 @@ pub fn match_isax(
         // then saturate one iteration at a time, re-checking after each.
         let mut report = crate::egraph::RunReport::default();
         loop {
-            if let Some((matched, _)) = try_match(&mut g, &variants, &isax_classes) {
+            if let Some((matched, _)) = try_match(&g, &variants, &isax_classes) {
                 // Tag the matched class with the ISAX marker (§5.4).
                 let marker = g.add_named(&format!("isax:{name}"), vec![]);
                 let cls = variants
@@ -211,7 +211,8 @@ pub fn match_isax(
 
         // ISAX-guided external rewrites (§5.3): pick transformations from
         // the shape difference. Returns false when no transformation
-        // applies — then we're done failing.
+        // applies — then we're done failing. Variant encodes + unions are
+        // batched: one congruence rebuild covers the whole round.
         let mut progressed = false;
         for &origin in &origins {
             let Some(sw_shape) = loop_shape(software, origin) else { continue };
@@ -228,7 +229,6 @@ pub fn match_isax(
                                 sw_map.op_class.get(&origin),
                             ) {
                                 g.union(nc, oc);
-                                g.rebuild();
                             }
                             variants.push(Variant { origin, map });
                             stats.external_rewrites += 1;
@@ -243,7 +243,6 @@ pub fn match_isax(
                             {
                                 if let Some(&ic) = isax_classes.first() {
                                     g.union(nc, ic);
-                                    g.rebuild();
                                 }
                                 isax_classes.push(nc);
                             }
@@ -258,6 +257,7 @@ pub fn match_isax(
         if !progressed {
             break;
         }
+        g.rebuild();
     }
     Ok(MatchRound { matched_loop: None, stats })
 }

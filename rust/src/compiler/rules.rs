@@ -15,8 +15,9 @@
 use crate::egraph::rewrite::Rewrite;
 use crate::egraph::EGraph;
 
-/// Parse a `const:<v>` symbol on any node of a class.
-fn const_of(g: &mut EGraph, c: crate::egraph::ClassId) -> Option<i64> {
+/// Parse a `const:<v>` symbol on any node of a class. Read-only — the
+/// engine's borrowed accessors mean no clone and no `&mut` here.
+fn const_of(g: &EGraph, c: crate::egraph::ClassId) -> Option<i64> {
     for n in g.nodes(c) {
         let name = g.sym_name(n.sym);
         if let Some(v) = name.strip_prefix("const:") {
@@ -28,59 +29,62 @@ fn const_of(g: &mut EGraph, c: crate::egraph::ClassId) -> Option<i64> {
     None
 }
 
+/// The pattern→pattern internal rules as data: `(name, lhs, rhs)`.
+/// Shared with the bench target's embedded pre-PR engine
+/// (`benches/egraph.rs`) so old-vs-new comparisons always saturate the
+/// same rule set — edit here, both engines follow.
+pub const SIMPLE_RULES: &[(&str, &str, &str)] = &[
+    // -- AF: commutativity --------------------------------------------------
+    ("comm-add", "(add ?a ?b)", "(add ?b ?a)"),
+    ("comm-mul", "(mul ?a ?b)", "(mul ?b ?a)"),
+    ("comm-and", "(and ?a ?b)", "(and ?b ?a)"),
+    ("comm-or", "(or ?a ?b)", "(or ?b ?a)"),
+    ("comm-xor", "(xor ?a ?b)", "(xor ?b ?a)"),
+    ("comm-min", "(min ?a ?b)", "(min ?b ?a)"),
+    ("comm-max", "(max ?a ?b)", "(max ?b ?a)"),
+    // -- AF: associativity (one direction; comm gives the rest).
+    //    NOTE: assoc-mul and distributivity are deliberately absent from
+    //    the default set — on loop-index polynomials they explode the
+    //    graph combinatorially, which is exactly the §5.3 "blindly
+    //    saturating would cause the e-graph to grow explosively" failure.
+    //    The ISAX-guided strategy keeps the rule set lean and lets loop
+    //    passes handle structural change.
+    ("assoc-add", "(add (add ?a ?b) ?c)", "(add ?a (add ?b ?c))"),
+    // -- AF: identities -----------------------------------------------------
+    ("add-zero", "(add ?x const:0)", "?x"),
+    ("mul-one", "(mul ?x const:1)", "?x"),
+    ("mul-zero", "(mul ?x const:0)", "const:0"),
+    ("sub-zero", "(sub ?x const:0)", "?x"),
+    ("sub-self", "(sub ?x ?x)", "const:0"),
+    ("and-self", "(and ?x ?x)", "?x"),
+    ("or-self", "(or ?x ?x)", "?x"),
+    ("xor-self", "(xor ?x ?x)", "const:0"),
+    ("shl-zero", "(shl ?x const:0)", "?x"),
+    // -- RF: overflow-safe average (the §6.2 robustness attack):
+    //    (a + b) / 2  ==  (a & b) + ((a ^ b) >> 1)
+    (
+        "avg-overflow-safe",
+        "(div (add ?a ?b) const:2)",
+        "(add (and ?a ?b) (shr (xor ?a ?b) const:1))",
+    ),
+    (
+        "avg-plain",
+        "(add (and ?a ?b) (shr (xor ?a ?b) const:1))",
+        "(div (add ?a ?b) const:2)",
+    ),
+    // -- Index reconstruction after coalescing:
+    //    (k / B) * B + (k % B)  ==  k   (B constant, non-negative k)
+    ("div-mul-rem", "(add (mul (div ?x ?c) ?c) (rem ?x ?c))", "?x"),
+    // -- RF: select(cmp) as min/max -----------------------------------------
+    ("select-max", "(select (cmp:gt ?a ?b) ?a ?b)", "(max ?a ?b)"),
+    ("select-min", "(select (cmp:lt ?a ?b) ?a ?b)", "(min ?a ?b)"),
+    ("max-select", "(max ?a ?b)", "(select (cmp:gt ?a ?b) ?a ?b)"),
+];
+
 /// The standard internal rule set.
 pub fn internal_rules() -> Vec<Rewrite> {
-    let mut rules = vec![
-        // -- AF: commutativity ------------------------------------------------
-        Rewrite::simple("comm-add", "(add ?a ?b)", "(add ?b ?a)"),
-        Rewrite::simple("comm-mul", "(mul ?a ?b)", "(mul ?b ?a)"),
-        Rewrite::simple("comm-and", "(and ?a ?b)", "(and ?b ?a)"),
-        Rewrite::simple("comm-or", "(or ?a ?b)", "(or ?b ?a)"),
-        Rewrite::simple("comm-xor", "(xor ?a ?b)", "(xor ?b ?a)"),
-        Rewrite::simple("comm-min", "(min ?a ?b)", "(min ?b ?a)"),
-        Rewrite::simple("comm-max", "(max ?a ?b)", "(max ?b ?a)"),
-        // -- AF: associativity (one direction; comm gives the rest).
-        //    NOTE: assoc-mul and distributivity are deliberately absent
-        //    from the default set — on loop-index polynomials they explode
-        //    the graph combinatorially, which is exactly the §5.3 "blindly
-        //    saturating would cause the e-graph to grow explosively"
-        //    failure. The ISAX-guided strategy keeps the rule set lean and
-        //    lets loop passes handle structural change.
-        Rewrite::simple("assoc-add", "(add (add ?a ?b) ?c)", "(add ?a (add ?b ?c))"),
-        // -- AF: identities ----------------------------------------------------
-        Rewrite::simple("add-zero", "(add ?x const:0)", "?x"),
-        Rewrite::simple("mul-one", "(mul ?x const:1)", "?x"),
-        Rewrite::simple("mul-zero", "(mul ?x const:0)", "const:0"),
-        Rewrite::simple("sub-zero", "(sub ?x const:0)", "?x"),
-        Rewrite::simple("sub-self", "(sub ?x ?x)", "const:0"),
-        Rewrite::simple("and-self", "(and ?x ?x)", "?x"),
-        Rewrite::simple("or-self", "(or ?x ?x)", "?x"),
-        Rewrite::simple("xor-self", "(xor ?x ?x)", "const:0"),
-        Rewrite::simple("shl-zero", "(shl ?x const:0)", "?x"),
-        // -- RF: overflow-safe average (the §6.2 robustness attack):
-        //    (a + b) / 2  ==  (a & b) + ((a ^ b) >> 1)
-        Rewrite::simple(
-            "avg-overflow-safe",
-            "(div (add ?a ?b) const:2)",
-            "(add (and ?a ?b) (shr (xor ?a ?b) const:1))",
-        ),
-        Rewrite::simple(
-            "avg-plain",
-            "(add (and ?a ?b) (shr (xor ?a ?b) const:1))",
-            "(div (add ?a ?b) const:2)",
-        ),
-        // -- Index reconstruction after coalescing:
-        //    (k / B) * B + (k % B)  ==  k   (B constant, non-negative k)
-        Rewrite::simple(
-            "div-mul-rem",
-            "(add (mul (div ?x ?c) ?c) (rem ?x ?c))",
-            "?x",
-        ),
-        // -- RF: select(cmp) as min/max ----------------------------------------
-        Rewrite::simple("select-max", "(select (cmp:gt ?a ?b) ?a ?b)", "(max ?a ?b)"),
-        Rewrite::simple("select-min", "(select (cmp:lt ?a ?b) ?a ?b)", "(min ?a ?b)"),
-        Rewrite::simple("max-select", "(max ?a ?b)", "(select (cmp:gt ?a ?b) ?a ?b)"),
-    ];
+    let mut rules: Vec<Rewrite> =
+        SIMPLE_RULES.iter().map(|&(n, l, r)| Rewrite::simple(n, l, r)).collect();
 
     // -- RF: shift <-> multiply/divide with constant folding (dynamic) -----
     rules.push(Rewrite::dynamic("shl-to-mul", "(shl ?x ?c)", |g, binds| {
@@ -166,7 +170,7 @@ mod tests {
         let c2 = g.add_named("const:2", vec![]);
         let shl = g.add_named("shl", vec![iv, c2]);
         Runner::default().run(&mut g, &internal_rules());
-        let out = extract_best(&mut g, shl, &affine_cost).unwrap();
+        let out = extract_best(&g, shl, &affine_cost).unwrap();
         assert_eq!(out.to_sexp(), "(mul iv:0 const:4)");
     }
 

@@ -34,17 +34,18 @@ impl Extracted {
 
 /// Extract the minimum-cost term for `root`.
 /// Returns `None` if every node in the class is forbidden or unreachable.
-pub fn extract_best(g: &mut EGraph, root: ClassId, cost: CostFn<'_>) -> Option<Extracted> {
+/// Read-only: works over `&EGraph` (the engine's accessors borrow).
+pub fn extract_best(g: &EGraph, root: ClassId, cost: CostFn<'_>) -> Option<Extracted> {
     let root = g.find(root);
     // Fixpoint: best known cost + node per class.
     let mut best: HashMap<ClassId, (f64, ENode)> = HashMap::new();
     let classes = g.class_ids();
+    let mut child_costs: Vec<f64> = Vec::new();
     loop {
         let mut changed = false;
         for &c in &classes {
-            let nodes = g.nodes(c);
-            for node in nodes {
-                let mut child_costs = Vec::with_capacity(node.children.len());
+            for node in g.nodes(c) {
+                child_costs.clear();
                 let mut ok = true;
                 for &ch in &node.children {
                     let ch = g.find(ch);
@@ -59,8 +60,8 @@ pub fn extract_best(g: &mut EGraph, root: ClassId, cost: CostFn<'_>) -> Option<E
                 if !ok {
                     continue;
                 }
-                let name = g.sym_name(node.sym).to_string();
-                let c_total = cost(&name, &child_costs);
+                let name = g.sym_name(node.sym);
+                let c_total = cost(name, &child_costs);
                 if !c_total.is_finite() {
                     continue;
                 }
@@ -79,7 +80,7 @@ pub fn extract_best(g: &mut EGraph, root: ClassId, cost: CostFn<'_>) -> Option<E
 }
 
 fn build(
-    g: &mut EGraph,
+    g: &EGraph,
     c: ClassId,
     best: &HashMap<ClassId, (f64, ENode)>,
 ) -> Option<Extracted> {
@@ -124,7 +125,7 @@ mod tests {
         w.insert("shl".to_string(), 10.0);
         w.insert("mul".to_string(), 1.0);
         let cost_fn = weighted_cost(&w);
-        let out = extract_best(&mut g, shl, &cost_fn).unwrap();
+        let out = extract_best(&g, shl, &cost_fn).unwrap();
         assert_eq!(out.sym, "mul");
     }
 
@@ -138,7 +139,7 @@ mod tests {
         g.rebuild();
         let w = HashMap::new();
         let cost_fn = weighted_cost(&w);
-        let out = extract_best(&mut g, x, &cost_fn).unwrap();
+        let out = extract_best(&g, x, &cost_fn).unwrap();
         assert_eq!(out.sym, "x"); // the non-cyclic representative
     }
 
@@ -156,7 +157,7 @@ mod tests {
                 1.0 + kids.iter().sum::<f64>()
             }
         };
-        let out = extract_best(&mut g, a, &cost_fn).unwrap();
+        let out = extract_best(&g, a, &cost_fn).unwrap();
         assert_eq!(out.sym, "good");
     }
 
@@ -170,7 +171,7 @@ mod tests {
         Runner::default().run(&mut g, &rules);
         let w = HashMap::new();
         let cost_fn = weighted_cost(&w);
-        let out = extract_best(&mut g, add, &cost_fn).unwrap();
+        let out = extract_best(&g, add, &cost_fn).unwrap();
         assert_eq!(out.sym, "x");
         assert_eq!(out.cost, 1.0);
     }

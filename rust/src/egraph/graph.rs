@@ -1,5 +1,31 @@
 //! Core e-graph: interned symbols, union-find, hashcons, congruence.
+//!
+//! Engine layout (egg-style worklist design, see Willsey et al. 2021):
+//!
+//! - **Dense class storage.** Classes live in a `Vec<Option<EClass>>`
+//!   indexed by `ClassId`, so the hot read paths (`nodes`, `class_has_sym`,
+//!   seeding) never hash. `Some` exactly for union-find-canonical ids.
+//! - **Parent lists.** Every class records the e-nodes that reference it
+//!   (and the class each such node belongs to). `union` merely concatenates
+//!   node + parent lists and pushes the survivor onto a worklist.
+//! - **Worklist `rebuild`.** Congruence is restored by repairing only the
+//!   parents of classes touched by unions instead of re-hashing the whole
+//!   memo to a fixpoint. A finishing pass canonicalizes + dedups the
+//!   stored nodes of exactly the classes this rebuild touched — rebuild
+//!   cost stays proportional to the dirty region, never the whole graph.
+//! - **Symbol occurrence index.** `sym_index[sym]` lists the classes
+//!   containing a node with that symbol, so e-matching seeds directly from
+//!   the index and never iterates classes that cannot match. The index is
+//!   append-only (one entry per class per symbol at `add` time; a class's
+//!   symbol set never shrinks, and merged ids resolve via the query's
+//!   canonicalize + dedup), so no rebuild pass regenerates it.
+//! - **Split read/write paths.** `find` is `&self` and non-compressing;
+//!   `find_mut` compresses. Accessors (`nodes`, `class_ids`, `node_count`,
+//!   `classes_with_sym`) take `&self` and return borrowed slices where
+//!   possible, so matching holds no `&mut` borrow and allocates nothing
+//!   per candidate node.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
 /// Interned symbol id.
@@ -11,7 +37,7 @@ pub struct SymId(pub u32);
 pub struct ClassId(pub u32);
 
 /// An e-node: a function symbol applied to child e-classes.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ENode {
     pub sym: SymId,
     pub children: Vec<ClassId>,
@@ -20,10 +46,6 @@ pub struct ENode {
 impl ENode {
     pub fn leaf(sym: SymId) -> Self {
         Self { sym, children: vec![] }
-    }
-
-    fn canonicalize(&self, uf: &mut UnionFind) -> ENode {
-        ENode { sym: self.sym, children: self.children.iter().map(|&c| uf.find(c)).collect() }
     }
 }
 
@@ -39,12 +61,22 @@ impl UnionFind {
         ClassId(id)
     }
 
-    fn find(&mut self, c: ClassId) -> ClassId {
+    /// Non-compressing find: usable from `&self` read paths. Cheap in
+    /// practice because every `&mut` operation compresses as it goes.
+    fn find(&self, c: ClassId) -> ClassId {
         let mut root = c.0;
         while self.parent[root as usize] != root {
             root = self.parent[root as usize];
         }
-        // path compression
+        ClassId(root)
+    }
+
+    /// Path-compressing find for mutating paths.
+    fn find_mut(&mut self, c: ClassId) -> ClassId {
+        let mut root = c.0;
+        while self.parent[root as usize] != root {
+            root = self.parent[root as usize];
+        }
         let mut cur = c.0;
         while self.parent[cur as usize] != root {
             let next = self.parent[cur as usize];
@@ -55,8 +87,8 @@ impl UnionFind {
     }
 
     fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
-        let ra = self.find(a);
-        let rb = self.find(b);
+        let ra = self.find_mut(a);
+        let rb = self.find_mut(b);
         if ra != rb {
             // Union toward the smaller id keeps canonical ids stable-ish.
             let (keep, drop) = if ra.0 < rb.0 { (ra, rb) } else { (rb, ra) };
@@ -66,6 +98,16 @@ impl UnionFind {
             ra
         }
     }
+
+}
+
+/// One e-class: its nodes plus the e-nodes that reference it.
+#[derive(Debug, Default, Clone)]
+struct EClass {
+    nodes: Vec<ENode>,
+    /// Parent e-nodes (as shaped when recorded) and the class each belongs
+    /// to. Repair re-canonicalizes these lazily — only for dirty classes.
+    parents: Vec<(ENode, ClassId)>,
 }
 
 /// The e-graph.
@@ -74,12 +116,25 @@ pub struct EGraph {
     syms: Vec<String>,
     sym_ids: HashMap<String, SymId>,
     uf: UnionFind,
-    /// Hashcons: canonical node -> class.
+    /// Hashcons: canonical node -> class (values canonicalized lazily).
     memo: HashMap<ENode, ClassId>,
-    /// Nodes per canonical class.
-    classes: HashMap<ClassId, Vec<ENode>>,
-    /// Classes touched since the last rebuild.
-    dirty: Vec<ClassId>,
+    /// Dense class storage; `Some` exactly for canonical live ids.
+    classes: Vec<Option<EClass>>,
+    /// sym -> classes containing a node with that symbol. Append-only:
+    /// one entry per class per symbol at `add` time. Entries for merged
+    /// classes go stale but stay correct — a class's symbol set never
+    /// shrinks, and queries canonicalize + dedup.
+    sym_index: Vec<Vec<ClassId>>,
+    /// Classes whose parents must be repaired before congruence holds.
+    worklist: Vec<ClassId>,
+    /// Classes whose *stored nodes* may be stale (merged into, or holding
+    /// a node whose child merged) — the finishing pass canonicalizes and
+    /// dedups exactly these.
+    touched: Vec<ClassId>,
+    /// Total stored nodes (exact after `rebuild`, monotone between).
+    live_nodes: usize,
+    /// Number of live (canonical) classes.
+    live_classes: usize,
 }
 
 impl EGraph {
@@ -95,6 +150,7 @@ impl EGraph {
         let id = SymId(self.syms.len() as u32);
         self.syms.push(name.to_string());
         self.sym_ids.insert(name.to_string(), id);
+        self.sym_index.push(Vec::new());
         id
     }
 
@@ -108,20 +164,41 @@ impl EGraph {
         &self.syms[s.0 as usize]
     }
 
-    /// Canonical class id.
-    pub fn find(&mut self, c: ClassId) -> ClassId {
+    /// Canonical class id (read-only, non-compressing).
+    pub fn find(&self, c: ClassId) -> ClassId {
         self.uf.find(c)
     }
 
+    /// Canonical class id with path compression (mutating hot paths).
+    pub fn find_mut(&mut self, c: ClassId) -> ClassId {
+        self.uf.find_mut(c)
+    }
+
     /// Add an e-node, returning its class (hashconsed).
-    pub fn add(&mut self, node: ENode) -> ClassId {
-        let node = node.canonicalize(&mut self.uf);
+    pub fn add(&mut self, mut node: ENode) -> ClassId {
+        for c in &mut node.children {
+            *c = self.uf.find_mut(*c);
+        }
         if let Some(&c) = self.memo.get(&node) {
-            return self.uf.find(c);
+            return self.uf.find_mut(c);
         }
         let id = self.uf.make();
+        for &ch in &node.children {
+            self.classes[ch.0 as usize]
+                .as_mut()
+                .expect("canonical child class is live")
+                .parents
+                .push((node.clone(), id));
+        }
+        let sym = node.sym.0 as usize;
+        if self.sym_index.len() <= sym {
+            self.sym_index.resize_with(sym + 1, Vec::new);
+        }
+        self.sym_index[sym].push(id);
         self.memo.insert(node.clone(), id);
-        self.classes.entry(id).or_default().push(node);
+        self.classes.push(Some(EClass { nodes: vec![node], parents: Vec::new() }));
+        self.live_nodes += 1;
+        self.live_classes += 1;
         id
     }
 
@@ -133,100 +210,170 @@ impl EGraph {
 
     /// Merge two classes; returns the canonical survivor.
     pub fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
-        let ra = self.uf.find(a);
-        let rb = self.uf.find(b);
+        let ra = self.uf.find_mut(a);
+        let rb = self.uf.find_mut(b);
         if ra == rb {
             return ra;
         }
         let keep = self.uf.union(ra, rb);
         let drop = if keep == ra { rb } else { ra };
-        let moved = self.classes.remove(&drop).unwrap_or_default();
-        self.classes.entry(keep).or_default().extend(moved);
-        self.dirty.push(keep);
+        let dropped =
+            self.classes[drop.0 as usize].take().expect("canonical class is live");
+        let kept = self.classes[keep.0 as usize]
+            .as_mut()
+            .expect("canonical class is live");
+        kept.nodes.extend(dropped.nodes);
+        kept.parents.extend(dropped.parents);
+        self.live_classes -= 1;
+        self.worklist.push(keep);
+        self.touched.push(keep);
         keep
     }
 
-    /// Restore congruence: nodes whose children were unioned may now be
-    /// duplicates; re-canonicalize until fixpoint.
+    /// Restore congruence: repair only the parents of classes touched by
+    /// unions (worklist algorithm) instead of rehashing the whole memo.
     pub fn rebuild(&mut self) {
-        while !self.dirty.is_empty() {
-            self.dirty.clear();
-            let old_memo = std::mem::take(&mut self.memo);
-            let mut new_memo: HashMap<ENode, ClassId> = HashMap::with_capacity(old_memo.len());
-            let mut unions: Vec<(ClassId, ClassId)> = Vec::new();
-            for (node, cls) in old_memo {
-                let canon = node.canonicalize(&mut self.uf);
-                let ccls = self.uf.find(cls);
-                match new_memo.get(&canon) {
-                    Some(&existing) if existing != ccls => unions.push((existing, ccls)),
-                    Some(_) => {}
-                    None => {
-                        new_memo.insert(canon, ccls);
-                    }
+        if self.worklist.is_empty() {
+            return;
+        }
+        while !self.worklist.is_empty() {
+            let mut todo = std::mem::take(&mut self.worklist);
+            todo.sort_unstable();
+            todo.dedup();
+            for id in todo {
+                self.repair(id);
+            }
+        }
+        self.rebuild_touched();
+    }
+
+    /// Re-canonicalize the parents of one dirty class, unioning classes
+    /// whose nodes have become congruent.
+    fn repair(&mut self, id: ClassId) {
+        let id = self.uf.find_mut(id);
+        let parents = {
+            let cls = self.classes[id.0 as usize]
+                .as_mut()
+                .expect("repair target is live");
+            std::mem::take(&mut cls.parents)
+        };
+        if parents.is_empty() {
+            return;
+        }
+        let mut seen: HashMap<ENode, ClassId> = HashMap::with_capacity(parents.len());
+        for (mut pnode, pclass) in parents {
+            // Remove by the as-recorded shape. If a sibling child's repair
+            // already re-keyed this node, the remove misses and that older
+            // re-keyed entry goes stale — harmless (lookups always
+            // canonicalize children first, so stale keys are unreachable)
+            // and bounded by union churn, the same trade egg makes.
+            self.memo.remove(&pnode);
+            for ch in &mut pnode.children {
+                *ch = self.uf.find_mut(*ch);
+            }
+            let pclass = self.uf.find_mut(pclass);
+            // This parent class's stored copy of `pnode` is now stale:
+            // queue it for the finishing canonicalize+dedup pass.
+            self.touched.push(pclass);
+            match seen.entry(pnode) {
+                Entry::Occupied(mut e) => {
+                    // Two parents canonicalized to the same node: their
+                    // classes are congruent. Union (pushes more work).
+                    let merged = self.union(*e.get(), pclass);
+                    e.insert(merged);
+                }
+                Entry::Vacant(e) => {
+                    e.insert(pclass);
                 }
             }
-            self.memo = new_memo;
-            for (a, b) in unions {
-                self.union(a, b);
-            }
-            // Re-bucket class nodes canonically (hash-set dedup per bucket).
-            let mut new_classes: HashMap<ClassId, Vec<ENode>> = HashMap::new();
-            let mut seen: std::collections::HashSet<(ClassId, ENode)> =
-                std::collections::HashSet::new();
-            let old = std::mem::take(&mut self.classes);
-            for (cls, nodes) in old {
-                let ccls = self.uf.find(cls);
-                for n in nodes {
-                    let canon = n.canonicalize(&mut self.uf);
-                    if seen.insert((ccls, canon.clone())) {
-                        new_classes.entry(ccls).or_default().push(canon);
-                    }
-                }
-            }
-            self.classes = new_classes;
+        }
+        // Write back the deduped, canonical parent set + memo entries. The
+        // repaired class may itself have been merged by the unions above.
+        let id = self.uf.find_mut(id);
+        for (pnode, pclass) in seen {
+            let pclass = self.uf.find_mut(pclass);
+            self.memo.insert(pnode.clone(), pclass);
+            self.classes[id.0 as usize]
+                .as_mut()
+                .expect("repair target is live")
+                .parents
+                .push((pnode, pclass));
         }
     }
 
-    /// Nodes of a class (canonical).
-    pub fn nodes(&mut self, c: ClassId) -> Vec<ENode> {
-        let c = self.uf.find(c);
-        self.classes.get(&c).cloned().unwrap_or_default()
-    }
-
-    /// Nodes of a class restricted to one symbol + arity — the e-matching
-    /// hot path (avoids cloning whole classes that can't match anyway).
-    pub fn nodes_with_sym(&mut self, c: ClassId, sym: SymId, arity: usize) -> Vec<ENode> {
-        let c = self.uf.find(c);
-        match self.classes.get(&c) {
-            Some(ns) => ns
-                .iter()
-                .filter(|n| n.sym == sym && n.children.len() == arity)
-                .cloned()
-                .collect(),
-            None => Vec::new(),
+    /// Canonicalize + dedup the stored nodes of exactly the classes this
+    /// rebuild touched (merge targets + owners of re-canonicalized parent
+    /// nodes). Untouched classes are already canonical — no child of
+    /// theirs merged, or they would appear in that child's parents and be
+    /// queued here. Runs once per `rebuild`, after the worklist drains.
+    fn rebuild_touched(&mut self) {
+        let mut touched = std::mem::take(&mut self.touched);
+        for c in &mut touched {
+            *c = self.uf.find_mut(*c);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        let uf = &mut self.uf;
+        for id in touched {
+            let Some(cls) = self.classes[id.0 as usize].as_mut() else { continue };
+            let before = cls.nodes.len();
+            for n in &mut cls.nodes {
+                for c in &mut n.children {
+                    *c = uf.find_mut(*c);
+                }
+            }
+            cls.nodes.sort_unstable();
+            cls.nodes.dedup();
+            self.live_nodes -= before - cls.nodes.len();
         }
     }
 
-    /// All canonical class ids.
-    pub fn class_ids(&mut self) -> Vec<ClassId> {
-        let ids: Vec<ClassId> = self.classes.keys().copied().collect();
-        ids.into_iter().map(|c| self.uf.find(c)).collect()
+    /// Nodes of a class, as stored (canonical after `rebuild`). Borrowed —
+    /// the e-matching hot path clones nothing.
+    pub fn nodes(&self, c: ClassId) -> &[ENode] {
+        let c = self.uf.find(c);
+        match self.classes.get(c.0 as usize) {
+            Some(Some(cls)) => &cls.nodes,
+            _ => &[],
+        }
     }
 
-    /// Total e-node count (Table 3's "e-nodes" statistic).
+    /// All canonical class ids, ascending (live slots are canonical by
+    /// construction — no per-id `find` needed).
+    pub fn class_ids(&self) -> Vec<ClassId> {
+        self.classes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| ClassId(i as u32)))
+            .collect()
+    }
+
+    /// Classes containing at least one node with symbol `sym` — the
+    /// e-matching seed set. Canonicalized, sorted, deduped (entries for
+    /// merged-away classes are stale but resolve through `find`).
+    pub fn classes_with_sym(&self, sym: SymId) -> Vec<ClassId> {
+        let Some(bucket) = self.sym_index.get(sym.0 as usize) else {
+            return Vec::new();
+        };
+        let mut out: Vec<ClassId> = bucket.iter().map(|&c| self.uf.find(c)).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Total e-node count (Table 3's "e-nodes" statistic). O(1).
     pub fn node_count(&self) -> usize {
-        self.classes.values().map(|v| v.len()).sum()
+        self.live_nodes
     }
 
-    /// Class count.
+    /// Class count. O(1).
     pub fn class_count(&self) -> usize {
-        self.classes.len()
+        self.live_classes
     }
 
     /// Does class `c` contain a node with symbol `sym` (marker test)?
-    pub fn class_has_sym(&mut self, c: ClassId, sym: SymId) -> bool {
-        let c = self.uf.find(c);
-        self.classes.get(&c).map(|ns| ns.iter().any(|n| n.sym == sym)).unwrap_or(false)
+    pub fn class_has_sym(&self, c: ClassId, sym: SymId) -> bool {
+        self.nodes(c).iter().any(|n| n.sym == sym)
     }
 }
 
@@ -290,5 +437,79 @@ mod tests {
         g.rebuild();
         let ms = g.sym("marker");
         assert!(g.class_has_sym(a, ms));
+    }
+
+    #[test]
+    fn rebuild_dedupes_congruent_nodes() {
+        // After union(a, b) + rebuild, f(a) and f(b) are the same node:
+        // the merged class stores it once and node_count reflects that.
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let fa = g.add_named("f", vec![a]);
+        g.add_named("f", vec![b]);
+        assert_eq!(g.node_count(), 4);
+        g.union(a, b);
+        g.rebuild();
+        // a|b holds {a, b}; f-class holds one canonical f node.
+        assert_eq!(g.node_count(), 3);
+        assert_eq!(g.nodes(fa).len(), 1);
+    }
+
+    #[test]
+    fn sym_index_seeds_matching() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let ma = g.add_named("mul", vec![a, b]);
+        let mb = g.add_named("mul", vec![b, a]);
+        let mul = g.sym("mul");
+        assert_eq!(g.classes_with_sym(mul), vec![g.find(ma), g.find(mb)]);
+        // Merging the two mul classes collapses the seed set too.
+        g.union(ma, mb);
+        g.rebuild();
+        assert_eq!(g.classes_with_sym(mul), vec![g.find(ma)]);
+        // Leaf symbols index their own classes.
+        let asym = g.sym("a");
+        assert_eq!(g.classes_with_sym(asym), vec![g.find(a)]);
+    }
+
+    #[test]
+    fn read_accessors_take_shared_borrows() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let f = g.add_named("f", vec![a]);
+        // All of these coexist on &g — no &mut needed for reads.
+        let r = &g;
+        assert_eq!(r.find(f), f);
+        assert_eq!(r.nodes(f).len(), 1);
+        assert_eq!(r.nodes(f)[0].children, vec![a]);
+        assert_eq!(r.class_ids(), vec![a, f]);
+        assert_eq!(r.node_count(), 2);
+        assert_eq!(r.class_count(), 2);
+    }
+
+    #[test]
+    fn deep_union_chain_rebuilds_transitively() {
+        // A chain of unions across separately-built towers must fully
+        // collapse: g^k(a) == g^k(b) for all k once a == b.
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let mut ta = a;
+        let mut tb = b;
+        let mut pairs = Vec::new();
+        for _ in 0..12 {
+            ta = g.add_named("g", vec![ta]);
+            tb = g.add_named("g", vec![tb]);
+            pairs.push((ta, tb));
+        }
+        g.union(a, b);
+        g.rebuild();
+        for (x, y) in pairs {
+            assert_eq!(g.find(x), g.find(y));
+        }
+        // Each tower level deduped to a single node.
+        assert_eq!(g.nodes(ta).len(), 1);
     }
 }

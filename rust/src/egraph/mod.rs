@@ -7,9 +7,16 @@
 //! accumulating every variant. Extraction selects one representative per
 //! class minimizing a user-defined cost.
 //!
+//! Engine notes: the core uses an egg-style **worklist rebuild** (only
+//! parents of union-touched classes are re-canonicalized, never the whole
+//! memo), dense class storage, and an incrementally-maintained **symbol
+//! occurrence index**; rewrites are **compiled once** into flat register
+//! machines so a match attempt does no string hashing and no map cloning.
+//! See `README.md` § "E-graph engine internals".
+//!
 //! Submodules: [`graph`] (union-find + hashcons + congruence closure),
-//! [`rewrite`] (pattern language + saturation engine with iteration/node
-//! limits), [`extract`] (cost-based extraction).
+//! [`rewrite`] (pattern language + compiled matcher + saturation engine
+//! with iteration/node limits), [`extract`] (cost-based extraction).
 
 pub mod extract;
 pub mod graph;
@@ -17,4 +24,4 @@ pub mod rewrite;
 
 pub use extract::{extract_best, CostFn, Extracted};
 pub use graph::{ClassId, EGraph, ENode, SymId};
-pub use rewrite::{Pattern, Rewrite, RunReport, Runner};
+pub use rewrite::{CompiledPattern, Pattern, Rewrite, RunReport, Runner};

@@ -1,14 +1,24 @@
 //! Pattern language + saturation engine (the "internal rewrites" of §5.3).
 //!
-//! Patterns are small s-expression trees over symbols and variables.
-//! A [`Rewrite`] either instantiates a RHS pattern or runs a dynamic
-//! callback (needed e.g. for constant arithmetic: `x << c → x * 2^c`).
-//! The [`Runner`] applies all rules to saturation under iteration and
-//! node-count limits — the paper's antidote to e-graph blowup.
+//! Patterns are small s-expression trees over symbols and variables. Each
+//! [`Rewrite`] compiles its LHS **once** into a flat instruction sequence
+//! ([`CompiledPattern`]): variables become interned register slots, so a
+//! match attempt runs over a fixed-size `[ClassId]` binding frame with no
+//! string hashing and no `HashMap` cloning per branch. Searches seed from
+//! the e-graph's symbol occurrence index — rules whose root symbol never
+//! occurs cost one vector lookup, and rules never visit classes that
+//! cannot match their root.
+//!
+//! A [`Rewrite`] either instantiates a compiled RHS template or runs a
+//! dynamic callback (needed e.g. for constant arithmetic: `x << c →
+//! x * 2^c`); only the dynamic path materializes a name-keyed [`Bindings`]
+//! map, and only for frames that actually matched. The [`Runner`] applies
+//! all rules to saturation under iteration and node-count limits — the
+//! paper's antidote to e-graph blowup.
 
 use std::collections::HashMap;
 
-use crate::egraph::graph::{ClassId, EGraph, ENode};
+use crate::egraph::graph::{ClassId, EGraph, ENode, SymId};
 
 /// A pattern: variable or symbol application.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -76,33 +86,278 @@ fn parse_tokens(tokens: &[String]) -> (Pattern, &[String]) {
     }
 }
 
-/// Variable bindings from a successful match.
+/// Variable bindings from a successful match. Only materialized for
+/// dynamic rules (the template path works on raw register frames).
 pub type Bindings = HashMap<String, ClassId>;
 
-/// RHS action of a rule.
-pub enum Action {
-    /// Instantiate a pattern.
-    Template(Pattern),
+// ---------------------------------------------------------------------------
+// Compiled LHS: a flat instruction sequence over a register frame.
+// ---------------------------------------------------------------------------
+
+/// One matching instruction. Registers hold e-class ids; the root class is
+/// always register 0, and a `Bind` writes the matched node's children into
+/// a contiguous register block (depth-first, so every register is written
+/// before it is read).
+#[derive(Debug, Clone, Copy)]
+enum Inst {
+    /// Iterate the nodes of class `regs[src]` with the given symbol and
+    /// arity; for each, write its children into `regs[base..base+arity]`
+    /// and continue (backtracking over node choices).
+    Bind { src: usize, sym: usize, arity: usize, base: usize },
+    /// Non-linear variable use: require `find(regs[a]) == find(regs[b])`.
+    Compare { a: usize, b: usize },
+}
+
+/// An LHS pattern compiled to instructions. Symbols are referenced by
+/// index into `sym_names` and resolved against a concrete e-graph once per
+/// search (one hash lookup per distinct symbol, not per branch).
+#[derive(Debug, Clone)]
+pub struct CompiledPattern {
+    insts: Vec<Inst>,
+    n_regs: usize,
+    /// (variable name, register) in first-occurrence order.
+    vars: Vec<(String, usize)>,
+    /// Distinct symbol names referenced by `Inst::Bind`.
+    sym_names: Vec<String>,
+    /// Index into `sym_names` of the root symbol (`None` = bare-var LHS,
+    /// which matches every class).
+    root_sym: Option<usize>,
+}
+
+impl CompiledPattern {
+    pub fn compile(pattern: &Pattern) -> Self {
+        let mut cp = CompiledPattern {
+            insts: Vec::new(),
+            n_regs: 1,
+            vars: Vec::new(),
+            sym_names: Vec::new(),
+            root_sym: None,
+        };
+        match pattern {
+            Pattern::Var(v) => cp.vars.push((v.clone(), 0)),
+            Pattern::App(name, kids) => {
+                let sym = cp.intern(name);
+                cp.root_sym = Some(sym);
+                let base = cp.alloc(kids.len());
+                cp.insts.push(Inst::Bind { src: 0, sym, arity: kids.len(), base });
+                for (i, k) in kids.iter().enumerate() {
+                    cp.compile_sub(k, base + i);
+                }
+            }
+        }
+        cp
+    }
+
+    /// Registers a full match frame occupies.
+    pub fn frame_len(&self) -> usize {
+        self.n_regs
+    }
+
+    fn intern(&mut self, name: &str) -> usize {
+        if let Some(i) = self.sym_names.iter().position(|n| n == name) {
+            return i;
+        }
+        self.sym_names.push(name.to_string());
+        self.sym_names.len() - 1
+    }
+
+    fn alloc(&mut self, n: usize) -> usize {
+        let base = self.n_regs;
+        self.n_regs += n;
+        base
+    }
+
+    fn compile_sub(&mut self, p: &Pattern, reg: usize) {
+        match p {
+            Pattern::Var(v) => {
+                match self.vars.iter().find(|(n, _)| n == v) {
+                    Some(&(_, prev)) => self.insts.push(Inst::Compare { a: prev, b: reg }),
+                    None => self.vars.push((v.clone(), reg)),
+                }
+            }
+            Pattern::App(name, kids) => {
+                let sym = self.intern(name);
+                let base = self.alloc(kids.len());
+                self.insts.push(Inst::Bind { src: reg, sym, arity: kids.len(), base });
+                for (i, k) in kids.iter().enumerate() {
+                    self.compile_sub(k, base + i);
+                }
+            }
+        }
+    }
+
+    /// Resolve this pattern's symbol table against `g` without interning.
+    fn resolve(&self, g: &EGraph) -> Vec<Option<SymId>> {
+        self.sym_names.iter().map(|n| g.find_sym(n)).collect()
+    }
+
+    /// Seed classes: only classes whose node set contains the root symbol
+    /// (from the occurrence index), or every class for a bare-var LHS.
+    fn seeds(&self, g: &EGraph, syms: &[Option<SymId>]) -> Vec<ClassId> {
+        match self.root_sym {
+            Some(i) => match syms[i] {
+                Some(s) => g.classes_with_sym(s),
+                None => Vec::new(),
+            },
+            None => g.class_ids(),
+        }
+    }
+
+    /// Match against every seed class, appending one frame of
+    /// `frame_len()` registers per complete match (at most `limit`).
+    pub fn search(&self, g: &EGraph, limit: usize) -> Vec<ClassId> {
+        let syms = self.resolve(g);
+        let mut frames = Vec::new();
+        let mut regs = vec![ClassId(0); self.n_regs];
+        for c in self.seeds(g, &syms) {
+            regs[0] = c;
+            if !self.exec(g, &syms, 0, &mut regs, &mut frames, limit) {
+                break;
+            }
+        }
+        frames
+    }
+
+    /// Execute from instruction `ip`; returns `false` once `limit` frames
+    /// have been emitted (caller stops searching).
+    fn exec(
+        &self,
+        g: &EGraph,
+        syms: &[Option<SymId>],
+        ip: usize,
+        regs: &mut [ClassId],
+        out: &mut Vec<ClassId>,
+        limit: usize,
+    ) -> bool {
+        if ip == self.insts.len() {
+            out.extend_from_slice(regs);
+            return out.len() < limit * self.n_regs;
+        }
+        match self.insts[ip] {
+            Inst::Compare { a, b } => {
+                if g.find(regs[a]) != g.find(regs[b]) {
+                    return true;
+                }
+                self.exec(g, syms, ip + 1, regs, out, limit)
+            }
+            Inst::Bind { src, sym, arity, base } => {
+                let Some(sym) = syms[sym] else { return true };
+                let cls = regs[src];
+                for node in g.nodes(cls) {
+                    if node.sym != sym || node.children.len() != arity {
+                        continue;
+                    }
+                    regs[base..base + arity].copy_from_slice(&node.children);
+                    if !self.exec(g, syms, ip + 1, regs, out, limit) {
+                        return false;
+                    }
+                }
+                true
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiled RHS: a post-order construction plan.
+// ---------------------------------------------------------------------------
+
+/// One step of RHS instantiation; children reference earlier steps.
+#[derive(Debug, Clone)]
+enum TStep {
+    /// Copy an LHS register (variable reference).
+    Var(usize),
+    /// Add a node: symbol-table index + indices of earlier steps.
+    App { sym: usize, kids: Vec<usize> },
+}
+
+/// An RHS pattern compiled against its LHS's variable registers.
+#[derive(Debug, Clone)]
+struct CompiledTemplate {
+    steps: Vec<TStep>,
+    sym_names: Vec<String>,
+}
+
+impl CompiledTemplate {
+    fn compile(p: &Pattern, vars: &[(String, usize)]) -> Self {
+        let mut t = CompiledTemplate { steps: Vec::new(), sym_names: Vec::new() };
+        t.walk(p, vars);
+        t
+    }
+
+    fn walk(&mut self, p: &Pattern, vars: &[(String, usize)]) -> usize {
+        match p {
+            Pattern::Var(v) => {
+                let reg = vars
+                    .iter()
+                    .find(|(n, _)| n == v)
+                    .unwrap_or_else(|| panic!("unbound var ?{v} in rhs"))
+                    .1;
+                self.steps.push(TStep::Var(reg));
+            }
+            Pattern::App(name, kids) => {
+                let kid_steps: Vec<usize> = kids.iter().map(|k| self.walk(k, vars)).collect();
+                let sym = match self.sym_names.iter().position(|n| n == name) {
+                    Some(i) => i,
+                    None => {
+                        self.sym_names.push(name.to_string());
+                        self.sym_names.len() - 1
+                    }
+                };
+                self.steps.push(TStep::App { sym, kids: kid_steps });
+            }
+        }
+        self.steps.len() - 1
+    }
+
+    /// Instantiate under a match frame. `syms` is this template's symbol
+    /// table pre-interned into `g` (once per rule per iteration).
+    fn apply(&self, g: &mut EGraph, syms: &[SymId], frame: &[ClassId]) -> ClassId {
+        let mut vals: Vec<ClassId> = Vec::with_capacity(self.steps.len());
+        for step in &self.steps {
+            let v = match step {
+                TStep::Var(reg) => frame[*reg],
+                TStep::App { sym, kids } => {
+                    let children: Vec<ClassId> = kids.iter().map(|&i| vals[i]).collect();
+                    g.add(ENode { sym: syms[*sym], children })
+                }
+            };
+            vals.push(v);
+        }
+        *vals.last().expect("non-empty template")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// Compiled RHS action of a rule.
+enum Action {
+    /// Instantiate a compiled template.
+    Template(CompiledTemplate),
     /// Dynamic: given the e-graph + bindings, produce the replacement
     /// class (or None to skip this match).
     Dynamic(Box<dyn Fn(&mut EGraph, &Bindings) -> Option<ClassId> + Send + Sync>),
 }
 
-/// A named rewrite rule.
+/// A named rewrite rule. Both sides are compiled once at construction —
+/// the compiled forms are the single source of truth (no retained
+/// uncompiled `Pattern` to drift out of sync with what actually runs).
 pub struct Rewrite {
     pub name: String,
-    pub lhs: Pattern,
-    pub action: Action,
+    prog: CompiledPattern,
+    action: Action,
 }
 
 impl Rewrite {
     /// `lhs => rhs` with both sides as pattern text.
     pub fn simple(name: &str, lhs: &str, rhs: &str) -> Self {
-        Self {
-            name: name.into(),
-            lhs: Pattern::parse(lhs),
-            action: Action::Template(Pattern::parse(rhs)),
-        }
+        let lhs = Pattern::parse(lhs);
+        let rhs = Pattern::parse(rhs);
+        let prog = CompiledPattern::compile(&lhs);
+        let template = CompiledTemplate::compile(&rhs, &prog.vars);
+        Self { name: name.into(), prog, action: Action::Template(template) }
     }
 
     /// Dynamic rule.
@@ -110,54 +365,29 @@ impl Rewrite {
     where
         F: Fn(&mut EGraph, &Bindings) -> Option<ClassId> + Send + Sync + 'static,
     {
-        Self { name: name.into(), lhs: Pattern::parse(lhs), action: Action::Dynamic(Box::new(f)) }
+        let lhs = Pattern::parse(lhs);
+        let prog = CompiledPattern::compile(&lhs);
+        Self { name: name.into(), prog, action: Action::Dynamic(Box::new(f)) }
+    }
+
+    /// The compiled LHS (exposed for benchmarks and diagnostics).
+    pub fn compiled(&self) -> &CompiledPattern {
+        &self.prog
+    }
+
+    /// Materialize name-keyed bindings from a register frame (dynamic
+    /// rules only — the template path never builds a map).
+    fn bindings(&self, g: &EGraph, frame: &[ClassId]) -> Bindings {
+        self.prog
+            .vars
+            .iter()
+            .map(|(name, reg)| (name.clone(), g.find(frame[*reg])))
+            .collect()
     }
 }
 
-/// Match `pattern` against class `c`: extend `binds`, calling `sink` per
-/// complete match.
-pub fn match_pattern(
-    g: &mut EGraph,
-    pattern: &Pattern,
-    c: ClassId,
-    binds: &Bindings,
-    sink: &mut Vec<Bindings>,
-) {
-    match pattern {
-        Pattern::Var(v) => {
-            let c = g.find(c);
-            match binds.get(v) {
-                Some(&bound) if g.find(bound) != c => {}
-                _ => {
-                    let mut b = binds.clone();
-                    b.insert(v.clone(), c);
-                    sink.push(b);
-                }
-            }
-        }
-        Pattern::App(name, kids) => {
-            let Some(sym) = g.find_sym(name) else { return };
-            let nodes = g.nodes_with_sym(c, sym, kids.len());
-            for node in nodes {
-                // Match children left-to-right, threading bindings.
-                let mut states = vec![binds.clone()];
-                for (kid_pat, &kid_cls) in kids.iter().zip(&node.children) {
-                    let mut next = Vec::new();
-                    for s in &states {
-                        match_pattern(g, kid_pat, kid_cls, s, &mut next);
-                    }
-                    states = next;
-                    if states.is_empty() {
-                        break;
-                    }
-                }
-                sink.extend(states);
-            }
-        }
-    }
-}
-
-/// Instantiate a pattern under bindings.
+/// Instantiate a pattern under bindings (uncompiled path; kept for tests
+/// and ad-hoc construction — the Runner uses compiled templates).
 pub fn instantiate(g: &mut EGraph, pattern: &Pattern, binds: &Bindings) -> ClassId {
     match pattern {
         Pattern::Var(v) => *binds.get(v).unwrap_or_else(|| panic!("unbound var ?{v}")),
@@ -224,29 +454,35 @@ impl Runner {
         }
         let mut any_change = false;
         for (ri, rule) in rules.iter().enumerate() {
-            // Gather matches first (immutable phase), apply after.
-            let classes = g.class_ids();
-            let mut matches: Vec<(ClassId, Bindings)> = Vec::new();
-            'collect: for c in classes {
-                let mut sink = Vec::new();
-                match_pattern(g, &rule.lhs, c, &HashMap::new(), &mut sink);
-                for b in sink {
-                    matches.push((c, b));
-                    if matches.len() >= self.match_limit {
-                        break 'collect;
-                    }
-                }
+            // Search phase (shared borrow, seeded from the symbol index);
+            // frames are flat [ClassId] blocks, the root class in slot 0.
+            let frames = rule.prog.search(g, self.match_limit);
+            if frames.is_empty() {
+                continue;
             }
+            let n_regs = rule.prog.frame_len();
+            // Intern template symbols once per rule per iteration, not per
+            // applied match.
+            let tsyms: Option<Vec<SymId>> = match &rule.action {
+                Action::Template(t) => {
+                    Some(t.sym_names.iter().map(|n| g.sym(n)).collect())
+                }
+                Action::Dynamic(_) => None,
+            };
             let mut rule_changed = false;
-            for (c, binds) in matches {
+            for frame in frames.chunks(n_regs) {
+                let c = frame[0];
                 let replacement = match &rule.action {
-                    Action::Template(rhs) => Some(instantiate(g, rhs, &binds)),
-                    Action::Dynamic(f) => f(g, &binds),
+                    Action::Template(t) => {
+                        Some(t.apply(g, tsyms.as_ref().expect("template syms"), frame))
+                    }
+                    Action::Dynamic(f) => {
+                        let binds = rule.bindings(g, frame);
+                        f(g, &binds)
+                    }
                 };
                 if let Some(r) = replacement {
-                    let before = g.find(c);
-                    let after = g.find(r);
-                    if before != after {
+                    if g.find(c) != g.find(r) {
                         g.union(c, r);
                         any_change = true;
                         rule_changed = true;
@@ -293,6 +529,35 @@ mod tests {
     }
 
     #[test]
+    fn compile_allocates_registers_depth_first() {
+        let p = Pattern::parse("(mul ?x (add ?x const:1))");
+        let cp = CompiledPattern::compile(&p);
+        // root + 2 mul kids + 2 add kids = 5 registers.
+        assert_eq!(cp.frame_len(), 5);
+        // One var (x), bound at the first mul child.
+        assert_eq!(cp.vars, vec![("x".to_string(), 1)]);
+        // Three symbols: mul, add, const:1.
+        assert_eq!(cp.sym_names, vec!["mul", "add", "const:1"]);
+        // Instructions: Bind(mul) / Bind(add) / Compare(x) / Bind(const:1).
+        assert_eq!(cp.insts.len(), 4);
+    }
+
+    #[test]
+    fn search_seeds_from_symbol_index() {
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        g.add_named("mul", vec![a, b]);
+        // A rule over a symbol absent from the graph searches nothing.
+        let absent = CompiledPattern::compile(&Pattern::parse("(div ?x ?y)"));
+        assert!(absent.search(&g, 1000).is_empty());
+        let mul = CompiledPattern::compile(&Pattern::parse("(mul ?x ?y)"));
+        let frames = mul.search(&g, 1000);
+        assert_eq!(frames.len(), mul.frame_len()); // exactly one match
+        assert_eq!(&frames[1..], &[a, b]); // children bound in order
+    }
+
+    #[test]
     fn commutativity_saturates() {
         let mut g = EGraph::new();
         let a = g.add_named("a", vec![]);
@@ -315,20 +580,21 @@ mod tests {
         // x << 2 => x * 4 (the §5.3 example)
         let rule = Rewrite::dynamic("shl-to-mul", "(shl ?x ?c)", |g, binds| {
             let c = binds["c"];
-            let nodes = g.nodes(c);
-            for n in nodes {
-                let name = g.sym_name(n.sym).to_string();
-                if let Some(v) = name.strip_prefix("const:") {
+            let mut shift = None;
+            for n in g.nodes(c) {
+                if let Some(v) = g.sym_name(n.sym).strip_prefix("const:") {
                     if let Ok(k) = v.parse::<i64>() {
                         if (0..=62).contains(&k) {
-                            let x = binds["x"];
-                            let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
-                            return Some(g.add_named("mul", vec![x, cm]));
+                            shift = Some(k);
+                            break;
                         }
                     }
                 }
             }
-            None
+            let k = shift?;
+            let x = binds["x"];
+            let cm = g.add_named(&format!("const:{}", 1i64 << k), vec![]);
+            Some(g.add_named("mul", vec![x, cm]))
         });
         let report = Runner::default().run(&mut g, &[rule]);
         assert_eq!(report.applied, 1);
@@ -364,5 +630,35 @@ mod tests {
         let zero = g.add_named("zero", vec![]);
         assert_eq!(g.find(aa), g.find(zero));
         assert_ne!(g.find(ab), g.find(zero));
+    }
+
+    #[test]
+    fn match_limit_caps_frames() {
+        let mut g = EGraph::new();
+        for i in 0..20 {
+            let x = g.add_named(&format!("x{i}"), vec![]);
+            g.add_named("f", vec![x]);
+        }
+        let cp = CompiledPattern::compile(&Pattern::parse("(f ?x)"));
+        let frames = cp.search(&g, 5);
+        assert_eq!(frames.len(), 5 * cp.frame_len());
+    }
+
+    #[test]
+    fn nested_template_instantiates_via_compiled_rhs() {
+        // (add (mul ?a ?b) const:0) => (mul ?b ?a): exercises var reuse,
+        // nested Bind, and a multi-step template.
+        let mut g = EGraph::new();
+        let a = g.add_named("a", vec![]);
+        let b = g.add_named("b", vec![]);
+        let m = g.add_named("mul", vec![a, b]);
+        let z = g.add_named("const:0", vec![]);
+        let root = g.add_named("add", vec![m, z]);
+        let rules =
+            vec![Rewrite::simple("strip", "(add (mul ?a ?b) const:0)", "(mul ?b ?a)")];
+        let report = Runner::default().run(&mut g, &rules);
+        assert_eq!(report.applied, 1);
+        let ba = g.add_named("mul", vec![b, a]);
+        assert_eq!(g.find(root), g.find(ba));
     }
 }

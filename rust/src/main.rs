@@ -22,6 +22,7 @@ COMMANDS:
                                vfsmax vmadot vmvar mphong vrgb2yuv)
     bench <what>              regenerate a table/figure:
                               table2 | table3 | fig2 | fig3 | fig6 | fig7 | fig8 | all
+                              (engine microbench: egraph)
     serve [--policy p] [-n N] run the LLM serving demo over the AOT
                               artifacts (policy: decode-first | prefill-first)
     ir-levels                 print the Aquas-IR level summary (Table 1)
@@ -117,6 +118,7 @@ fn cmd_bench(args: &[String]) -> aquas::Result<()> {
             "fig6" => println!("{}", bh::fig6().render()),
             "fig7" => println!("{}", bh::fig7().render()),
             "fig8" => println!("{}", bh::fig8().render()),
+            "egraph" => println!("{}", bh::egraph::report(false).render()),
             other => eprintln!("unknown bench `{other}`"),
         };
     };

@@ -1,0 +1,163 @@
+//! Randomized stress tests for the worklist e-graph engine (seeded, fully
+//! deterministic — the in-crate PRNG replaces proptest on the offline
+//! image).
+//!
+//! Invariants checked after every rebuild:
+//! - `class_ids` returns canonical ids; node/class counts are consistent;
+//! - stored nodes are canonical and **congruence-closed**: no two live
+//!   classes contain the same (sym, canonical-children) shape;
+//! - hashcons idempotence: re-adding any stored node lands in its class;
+//! - the symbol occurrence index covers every (class, sym) occurrence.
+//!
+//! Plus an engine-equivalence check for the compiler: `match_isax` must
+//! produce the same `CompileStats` outcomes run-to-run (the pre-PR engine
+//! iterated `HashMap`s and was not deterministic) and must still match
+//! every bundled workload kernel and variant.
+
+use std::collections::HashMap;
+
+use aquas::egraph::{ClassId, EGraph, ENode};
+use aquas::util::rng::Rng;
+
+fn check_invariants(g: &mut EGraph) {
+    let classes = g.class_ids();
+    let mut total = 0usize;
+    for &c in &classes {
+        assert_eq!(g.find(c), c, "class_ids returns canonical ids");
+        total += g.nodes(c).len();
+    }
+    assert_eq!(total, g.node_count(), "node_count matches stored nodes");
+    assert_eq!(classes.len(), g.class_count(), "class_count matches live classes");
+
+    // Congruence closure: one class per canonical node shape.
+    let mut shapes: HashMap<(u32, Vec<u32>), ClassId> = HashMap::new();
+    for &c in &classes {
+        for n in g.nodes(c) {
+            for &ch in &n.children {
+                assert_eq!(g.find(ch), ch, "post-rebuild children are canonical");
+            }
+            let key = (n.sym.0, n.children.iter().map(|k| k.0).collect::<Vec<u32>>());
+            match shapes.get(&key) {
+                Some(&prev) => assert_eq!(
+                    prev, c,
+                    "congruent nodes live in distinct classes: sym {}",
+                    g.sym_name(n.sym)
+                ),
+                None => {
+                    shapes.insert(key, c);
+                }
+            }
+            assert!(
+                g.classes_with_sym(n.sym).contains(&c),
+                "symbol index misses class {c:?} for sym {}",
+                g.sym_name(n.sym)
+            );
+        }
+    }
+
+    // Hashcons idempotence.
+    let mut all: Vec<(ClassId, ENode)> = Vec::new();
+    for &c in &classes {
+        for n in g.nodes(c) {
+            all.push((c, n.clone()));
+        }
+    }
+    let before = g.node_count();
+    for (c, n) in all {
+        let got = g.add(n);
+        assert_eq!(g.find(got), c, "re-adding a stored node lands in its class");
+    }
+    assert_eq!(g.node_count(), before, "re-adds create no nodes");
+}
+
+#[test]
+fn stress_random_graphs_hold_invariants() {
+    let mut rng = Rng::new(0xE64AF1);
+    for round in 0..4 {
+        let mut g = EGraph::new();
+        let mut ids: Vec<ClassId> =
+            (0..16).map(|i| g.add_named(&format!("leaf{i}"), vec![])).collect();
+        let sym_pool: Vec<String> = (0..12).map(|i| format!("op{i}")).collect();
+        for step in 0..1200 {
+            match rng.range(0, 10) {
+                // ~70% adds: random symbol over random existing classes.
+                0..=6 => {
+                    let arity = rng.range(0, 4);
+                    let kids: Vec<ClassId> =
+                        (0..arity).map(|_| *rng.choose(&ids)).collect();
+                    let name = rng.choose(&sym_pool).clone();
+                    ids.push(g.add_named(&name, kids));
+                }
+                // ~20% random unions.
+                7 | 8 => {
+                    let a = *rng.choose(&ids);
+                    let b = *rng.choose(&ids);
+                    g.union(a, b);
+                }
+                // ~10% rebuilds at arbitrary points.
+                _ => g.rebuild(),
+            }
+            if step % 400 == 399 {
+                g.rebuild();
+                check_invariants(&mut g);
+            }
+        }
+        g.rebuild();
+        check_invariants(&mut g);
+        assert!(g.node_count() > 300, "round {round}: graph stayed trivial");
+    }
+}
+
+#[test]
+fn stress_union_heavy_collapse() {
+    // Aggressively union everything in sight: the graph must collapse
+    // without violating congruence, and repeated rebuilds must be no-ops.
+    let mut rng = Rng::new(0xC0117);
+    let mut g = EGraph::new();
+    let mut ids: Vec<ClassId> =
+        (0..8).map(|i| g.add_named(&format!("x{i}"), vec![])).collect();
+    for _ in 0..400 {
+        let a = *rng.choose(&ids);
+        let b = *rng.choose(&ids);
+        let f = g.add_named("f", vec![a, b]);
+        ids.push(f);
+        let c = *rng.choose(&ids);
+        g.union(f, c);
+    }
+    g.rebuild();
+    check_invariants(&mut g);
+    let count = g.node_count();
+    let class_count = g.class_count();
+    g.rebuild(); // idempotent
+    assert_eq!(g.node_count(), count);
+    assert_eq!(g.class_count(), class_count);
+}
+
+#[test]
+fn match_isax_outcomes_deterministic_on_bundled_workloads() {
+    let opts = aquas::compiler::CompileOptions::default();
+    for k in aquas::workloads::table2_kernels() {
+        let r1 = aquas::compiler::compile(&k.software, &[k.isax.clone()], &opts).unwrap();
+        assert!(
+            r1.stats.matched.contains(&k.isax.name),
+            "{}: canonical software must match: {:?}",
+            k.name,
+            r1.stats
+        );
+        let r2 = aquas::compiler::compile(&k.software, &[k.isax.clone()], &opts).unwrap();
+        assert_eq!(
+            r1.stats, r2.stats,
+            "{}: CompileStats must be deterministic run-to-run",
+            k.name
+        );
+        for (desc, variant) in &k.variants {
+            let rv = aquas::compiler::compile(variant, &[k.isax.clone()], &opts).unwrap();
+            assert!(
+                rv.stats.matched.contains(&k.isax.name),
+                "{} variant `{desc}` must match: {:?}",
+                k.name,
+                rv.stats
+            );
+        }
+    }
+}

@@ -155,7 +155,7 @@ fn prop_rewrites_preserve_interpreter_semantics() {
         let sh = g.add_named(&format!("const:{shift}"), vec![]);
         let root = g.add_named("shl", vec![add, sh]);
         Runner::default().run(&mut g, &internal_rules());
-        let term = extract_best(&mut g, root, &affine_cost).unwrap();
+        let term = extract_best(&g, root, &affine_cost).unwrap();
         let got = eval(&term, iv);
         assert_eq!(got, expected, "case {case}: {}", term.to_sexp());
     }
