@@ -1,0 +1,76 @@
+//! `cargo bench --bench serve` — paged-KV continuous-batching serving
+//! benchmark.
+//!
+//! Replays the checked-in deterministic trace through the serving engine
+//! at batch widths 1 / 4 / 8 (see `bench_harness::serve`), prints the
+//! report, writes the raw metrics to `--out` (default `BENCH_serve.json`)
+//! and — with `--check <baseline.json>` — enforces the CI gates:
+//!
+//! - KV block accounting leak-free on every run;
+//! - replay determinism (identical tokens + simulated clock);
+//! - batch widths never perturb the greedy token streams;
+//! - batched aggregate throughput at least `min_batch4_throughput_x`
+//!   times the single-stream baseline recorded in the baseline file.
+//!
+//! `-- --test` is the CI smoke mode (shorter trace).
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--test");
+    let out_path =
+        flag_value(&args, "--out").unwrap_or_else(|| "BENCH_serve.json".to_string());
+    let check_path = flag_value(&args, "--check");
+
+    let report = aquas::bench_harness::serve::report(quick);
+    println!("{}", report.render());
+
+    std::fs::write(&out_path, report.metrics_json())
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("report written to {out_path}");
+
+    if let Some(baseline_path) = check_path {
+        let mut failed = false;
+        // Gate 1: correctness invariants must hold on every replay.
+        for (metric, why) in [
+            ("replay_deterministic", "trace replay must be deterministic"),
+            ("batch4_tokens_match_single", "batching perturbed greedy tokens"),
+            ("batch8_tokens_match_single", "batching perturbed greedy tokens"),
+            ("single_kv_leak_free", "KV blocks leaked"),
+            ("batch4_kv_leak_free", "KV blocks leaked"),
+            ("batch8_kv_leak_free", "KV blocks leaked"),
+            ("fair4_kv_leak_free", "KV blocks leaked"),
+        ] {
+            if report.metrics.get(metric) != Some(&1.0) {
+                eprintln!("GATE FAILED: {metric} != 1 ({why}); see {out_path}");
+                failed = true;
+            }
+        }
+        // Gate 2: batched throughput vs the recorded single-stream bar.
+        let text = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+        let j = aquas::util::json::Json::parse(&text).expect("baseline json parses");
+        let min_x = j
+            .get("min_batch4_throughput_x")
+            .and_then(|v| v.as_f64())
+            .expect("baseline has min_batch4_throughput_x");
+        let measured = report.metrics["batch4_throughput_x"];
+        if measured < min_x {
+            eprintln!(
+                "REGRESSION: batch-4 throughput {measured:.2}x the single-stream \
+                 baseline is below the recorded floor {min_x:.2}x"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "checks ok: deterministic + leak-free + token-stable; batch-4 throughput \
+             {measured:.2}x single-stream (floor {min_x:.2}x)"
+        );
+    }
+}

@@ -7,6 +7,7 @@
 pub mod egraph;
 pub mod fir7;
 pub mod report;
+pub mod serve;
 pub mod table2;
 pub mod table3;
 

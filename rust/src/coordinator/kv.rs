@@ -1,44 +1,396 @@
-//! KV-cache state for one active sequence.
+//! Paged KV-cache allocator.
 //!
-//! The artifacts use fixed-capacity caches (`[L, B, H, max_seq, Dh]`) with
-//! a scalar cursor: slots `< len` are valid; `llm_decode` writes slot
-//! `len` and the attention masks everything beyond. This is the
-//! paged-attention-without-paging layout appropriate for a batch-1 edge
-//! SoC (one contiguous region per sequence).
+//! The serving engine no longer keeps one monolithic `[L, B, H, max_seq,
+//! Dh]` tensor pair per sequence. Instead a [`KvPool`] owns a fixed pool
+//! of equal-sized *blocks* (each holding `block_slots` token positions of
+//! K and V for every layer/head), handed out through a free list. Each
+//! active sequence maps its logical slots onto blocks through a
+//! [`BlockTable`]; admission control queues or preempts when the pool
+//! runs dry.
+//!
+//! Execution still needs the model's contiguous `[L, H, max_seq, Dh]`
+//! layout (the simulated backend mirrors the AOT artifact geometry), so
+//! the pool provides `gather`/`scatter` staging: blocks are DMA-staged
+//! into a per-tick scratch working set, the decode step writes one new
+//! slot, and that slot is scattered back to its block. This is the
+//! block-structured accelerator-memory discipline of the paper's §4
+//! scratchpads applied to the serving layer — storage at rest is paged,
+//! execution sees a gathered tile.
+//!
+//! Block layout (per block, per direction): `[L, H, block_slots, Dh]`
+//! row-major, so one `(layer, block)` pair is a contiguous burst for the
+//! DMA cost model.
 
-use crate::runtime::Tensor;
+use crate::runtime::ModelSpec;
 
-/// KV tensors + cursor for one sequence.
-#[derive(Debug, Clone)]
-pub struct KvState {
-    pub k: Tensor,
-    pub v: Tensor,
-    len: usize,
+/// Paged-allocator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PagedKvConfig {
+    /// Token positions per block.
+    pub block_slots: usize,
+    /// Total blocks in the pool (shared by all sequences).
+    pub num_blocks: usize,
 }
 
-impl KvState {
-    pub fn new(k: Tensor, v: Tensor, len: usize) -> Self {
-        debug_assert_eq!(k.shape(), v.shape());
-        Self { k, v, len }
+impl Default for PagedKvConfig {
+    fn default() -> Self {
+        // For the tiny artifact model (max_seq = 64): 8-slot blocks, a
+        // pool deep enough for 8 fully-grown sequences.
+        Self { block_slots: 8, num_blocks: 64 }
     }
+}
 
-    /// Number of valid positions.
+/// Index of a block within the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockId(pub u32);
+
+/// One sequence's slot → block mapping.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+}
+
+impl BlockTable {
+    /// Blocks currently held.
     pub fn len(&self) -> usize {
-        self.len
+        self.blocks.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.blocks.is_empty()
     }
 
-    /// Total capacity (max_seq dimension).
-    pub fn capacity(&self) -> usize {
-        // [L, B, H, max_seq, Dh]
-        self.k.shape()[3]
+    /// Slot capacity of the held blocks.
+    pub fn capacity(&self, block_slots: usize) -> usize {
+        self.blocks.len() * block_slots
+    }
+}
+
+/// Pool statistics (leak checking + bench reporting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvStats {
+    pub total_blocks: usize,
+    /// Token positions per block (the pool's actual geometry, so
+    /// reporting never has to re-derive it from a config default).
+    pub block_slots: usize,
+    pub free_blocks: usize,
+    pub peak_in_use: usize,
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl KvStats {
+    /// Every allocated block has been returned.
+    pub fn leak_free(&self) -> bool {
+        self.free_blocks == self.total_blocks
+    }
+}
+
+/// The paged block pool: backing storage + free list.
+#[derive(Debug)]
+pub struct KvPool {
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    max_seq: usize,
+    block_slots: usize,
+    num_blocks: usize,
+    /// Block storage, `num_blocks × [L, H, block_slots, Dh]` each.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// LIFO free list of block indices.
+    free: Vec<BlockId>,
+    peak_in_use: usize,
+    allocs: u64,
+    frees: u64,
+}
+
+impl KvPool {
+    pub fn new(model: &ModelSpec, cfg: PagedKvConfig) -> Self {
+        assert!(cfg.block_slots > 0, "zero-slot blocks");
+        assert!(cfg.num_blocks > 0, "empty pool");
+        let block_elems = model.n_layers * model.n_heads * cfg.block_slots * model.head_dim;
+        Self {
+            layers: model.n_layers,
+            heads: model.n_heads,
+            head_dim: model.head_dim,
+            max_seq: model.max_seq,
+            block_slots: cfg.block_slots,
+            num_blocks: cfg.num_blocks,
+            k: vec![0.0; block_elems * cfg.num_blocks],
+            v: vec![0.0; block_elems * cfg.num_blocks],
+            // Hand out low ids first (pop from the back).
+            free: (0..cfg.num_blocks as u32).rev().map(BlockId).collect(),
+            peak_in_use: 0,
+            allocs: 0,
+            frees: 0,
+        }
     }
 
-    /// Remaining slots.
-    pub fn remaining(&self) -> usize {
-        self.capacity().saturating_sub(self.len)
+    pub fn block_slots(&self) -> usize {
+        self.block_slots
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            total_blocks: self.total_blocks(),
+            block_slots: self.block_slots,
+            free_blocks: self.free.len(),
+            peak_in_use: self.peak_in_use,
+            allocs: self.allocs,
+            frees: self.frees,
+        }
+    }
+
+    /// Blocks needed to hold `slots` token positions.
+    pub fn blocks_for(&self, slots: usize) -> usize {
+        slots.div_ceil(self.block_slots)
+    }
+
+    fn block_elems(&self) -> usize {
+        self.layers * self.heads * self.block_slots * self.head_dim
+    }
+
+    /// Elements of one gathered `[L, H, max_seq, Dh]` working set.
+    pub fn gathered_elems(&self) -> usize {
+        self.layers * self.heads * self.max_seq * self.head_dim
+    }
+
+    /// Grow `table` until it covers `slots` positions; returns false
+    /// (table unchanged beyond partial growth kept) if the pool runs out.
+    pub fn ensure_capacity(&mut self, table: &mut BlockTable, slots: usize) -> bool {
+        while table.capacity(self.block_slots) < slots {
+            match self.free.pop() {
+                Some(b) => {
+                    self.allocs += 1;
+                    table.blocks.push(b);
+                    let in_use = self.total_blocks() - self.free.len();
+                    self.peak_in_use = self.peak_in_use.max(in_use);
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Return every block of `table` to the free list.
+    pub fn release(&mut self, table: &mut BlockTable) {
+        for b in table.blocks.drain(..) {
+            self.frees += 1;
+            debug_assert!(!self.free.contains(&b), "double free of block {b:?}");
+            self.free.push(b);
+        }
+    }
+
+    /// Offset of `(layer, head, offset-in-block)` within one block.
+    fn in_block_index(&self, layer: usize, head: usize, off: usize) -> usize {
+        ((layer * self.heads + head) * self.block_slots + off) * self.head_dim
+    }
+
+    /// Offset of `(layer, head, slot)` within a gathered working set
+    /// (matches the simulated backend's cache layout).
+    fn gathered_index(&self, layer: usize, head: usize, slot: usize) -> usize {
+        ((layer * self.heads + head) * self.max_seq + slot) * self.head_dim
+    }
+
+    /// Stage slots `0..len` of a sequence into contiguous `[L, H, max_seq,
+    /// Dh]` working sets; positions `>= len` are zeroed (the model never
+    /// attends them — slot `len` is written by the decode step itself).
+    pub fn gather(&self, table: &BlockTable, len: usize, kc: &mut [f32], vc: &mut [f32]) {
+        debug_assert_eq!(kc.len(), self.gathered_elems());
+        debug_assert_eq!(vc.len(), self.gathered_elems());
+        debug_assert!(len <= table.capacity(self.block_slots), "table under-allocated");
+        kc.fill(0.0);
+        vc.fill(0.0);
+        let dh = self.head_dim;
+        let be = self.block_elems();
+        for (bi, b) in table.blocks.iter().enumerate() {
+            let base = b.0 as usize * be;
+            let first = bi * self.block_slots;
+            if first >= len {
+                break;
+            }
+            let fill = (len - first).min(self.block_slots);
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    for off in 0..fill {
+                        let src = base + self.in_block_index(l, h, off);
+                        let dst = self.gathered_index(l, h, first + off);
+                        kc[dst..dst + dh].copy_from_slice(&self.k[src..src + dh]);
+                        vc[dst..dst + dh].copy_from_slice(&self.v[src..src + dh]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write back one slot from a gathered working set into its block
+    /// (the slot the decode step just produced).
+    pub fn scatter_slot(&mut self, table: &BlockTable, slot: usize, kc: &[f32], vc: &[f32]) {
+        debug_assert!(slot < table.capacity(self.block_slots), "slot beyond table");
+        let b = table.blocks[slot / self.block_slots];
+        let off = slot % self.block_slots;
+        let base = b.0 as usize * self.block_elems();
+        let dh = self.head_dim;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let dst = base + self.in_block_index(l, h, off);
+                let src = self.gathered_index(l, h, slot);
+                self.k[dst..dst + dh].copy_from_slice(&kc[src..src + dh]);
+                self.v[dst..dst + dh].copy_from_slice(&vc[src..src + dh]);
+            }
+        }
+    }
+
+    /// Scatter slots `0..len` of full `[L, B=1, H, max_seq, Dh]` prefill
+    /// caches into the sequence's blocks (padded prefill positions beyond
+    /// `len` are dropped — they hold pad-token K/V nothing may attend).
+    pub fn scatter_prefill(&mut self, table: &BlockTable, len: usize, kc: &[f32], vc: &[f32]) {
+        debug_assert_eq!(kc.len(), self.gathered_elems(), "prefill cache geometry");
+        debug_assert!(len <= table.capacity(self.block_slots), "table under-allocated");
+        let dh = self.head_dim;
+        let be = self.block_elems();
+        for (bi, b) in table.blocks.iter().enumerate() {
+            let base = b.0 as usize * be;
+            let first = bi * self.block_slots;
+            if first >= len {
+                break;
+            }
+            let fill = (len - first).min(self.block_slots);
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    for off in 0..fill {
+                        let dst = base + self.in_block_index(l, h, off);
+                        let src = self.gathered_index(l, h, first + off);
+                        self.k[dst..dst + dh].copy_from_slice(&kc[src..src + dh]);
+                        self.v[dst..dst + dh].copy_from_slice(&vc[src..src + dh]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelSpec {
+        ModelSpec {
+            vocab: 16,
+            dim: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            hidden: 16,
+            max_seq: 16,
+            prefill_len: 8,
+            batch: 1,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_is_leak_free() {
+        let mut pool = KvPool::new(&model(), PagedKvConfig { block_slots: 4, num_blocks: 6 });
+        let mut t1 = BlockTable::default();
+        let mut t2 = BlockTable::default();
+        assert!(pool.ensure_capacity(&mut t1, 7)); // 2 blocks
+        assert!(pool.ensure_capacity(&mut t2, 9)); // 3 blocks
+        assert_eq!(pool.free_blocks(), 1);
+        assert_eq!(pool.stats().peak_in_use, 5);
+        // Pool exhaustion is reported, not panicked.
+        assert!(!pool.ensure_capacity(&mut t1, 13));
+        pool.release(&mut t1);
+        pool.release(&mut t2);
+        let s = pool.stats();
+        assert!(s.leak_free(), "{s:?}");
+        assert_eq!(s.allocs, s.frees);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrips_slots() {
+        let m = model();
+        let mut pool = KvPool::new(&m, PagedKvConfig { block_slots: 4, num_blocks: 8 });
+        let n = pool.gathered_elems();
+        let mut table = BlockTable::default();
+        assert!(pool.ensure_capacity(&mut table, 6));
+
+        // Write slots 0..6 one at a time through scatter_slot, with
+        // distinct per-slot values.
+        for slot in 0..6usize {
+            let mut kc = vec![0.0f32; n];
+            let mut vc = vec![0.0f32; n];
+            for l in 0..m.n_layers {
+                for h in 0..m.n_heads {
+                    let at = pool.gathered_index(l, h, slot);
+                    for d in 0..m.head_dim {
+                        kc[at + d] = (slot * 100 + l * 10 + h) as f32 + d as f32 * 0.1;
+                        vc[at + d] = -(kc[at + d]);
+                    }
+                }
+            }
+            pool.scatter_slot(&table, slot, &kc, &vc);
+        }
+
+        // Gather back and check every written slot, plus zeroed tail.
+        let mut kc = vec![9.0f32; n];
+        let mut vc = vec![9.0f32; n];
+        pool.gather(&table, 6, &mut kc, &mut vc);
+        for slot in 0..6usize {
+            for l in 0..m.n_layers {
+                for h in 0..m.n_heads {
+                    let at = pool.gathered_index(l, h, slot);
+                    for d in 0..m.head_dim {
+                        let want = (slot * 100 + l * 10 + h) as f32 + d as f32 * 0.1;
+                        assert_eq!(kc[at + d], want, "k slot {slot} l{l} h{h} d{d}");
+                        assert_eq!(vc[at + d], -want, "v slot {slot} l{l} h{h} d{d}");
+                    }
+                }
+            }
+        }
+        let tail = pool.gathered_index(0, 0, 6);
+        assert!(kc[tail..tail + m.head_dim].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prefill_scatter_matches_slotwise_writes() {
+        let m = model();
+        let mut pool = KvPool::new(&m, PagedKvConfig { block_slots: 4, num_blocks: 8 });
+        let n = pool.gathered_elems();
+        let mut full_k = vec![0.0f32; n];
+        let mut full_v = vec![0.0f32; n];
+        for (i, x) in full_k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in full_v.iter_mut().enumerate() {
+            *x = i as f32 * 2.0;
+        }
+        let mut table = BlockTable::default();
+        assert!(pool.ensure_capacity(&mut table, 5));
+        pool.scatter_prefill(&table, 5, &full_k, &full_v);
+        let mut kc = vec![0.0f32; n];
+        let mut vc = vec![0.0f32; n];
+        pool.gather(&table, 5, &mut kc, &mut vc);
+        for l in 0..m.n_layers {
+            for h in 0..m.n_heads {
+                for slot in 0..5usize {
+                    let at = pool.gathered_index(l, h, slot);
+                    assert_eq!(&kc[at..at + m.head_dim], &full_k[at..at + m.head_dim]);
+                    assert_eq!(&vc[at..at + m.head_dim], &full_v[at..at + m.head_dim]);
+                }
+                // Ungathered tail slots are zero, not stale prefill pad.
+                let at = pool.gathered_index(l, h, 5);
+                assert!(kc[at..at + m.head_dim].iter().all(|&x| x == 0.0));
+            }
+        }
     }
 }

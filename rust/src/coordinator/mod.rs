@@ -1,52 +1,83 @@
-//! L3 serving coordinator for the LLM case study (§6.5).
+//! L3 serving engine for the LLM case study (§6.5).
 //!
-//! A request router + batcher + KV-cache manager in the style of a
-//! (single-node) vLLM router, driving the AOT artifacts through the PJRT
+//! A continuous-batching scheduler over a **paged KV cache** in the style
+//! of a (single-node) vLLM router, driving the AOT artifacts through the
 //! [`crate::runtime::Runtime`]. Python never appears here: prefill and
-//! decode are compiled HLO executables.
+//! decode are compiled executables (or their simulated golden models).
 //!
-//! Scheduling: a continuous-batching-style loop over single-sequence
-//! executables (the artifact batch is 1, matching the paper's single-core
-//! edge SoC): each [`Coordinator::step`] either admits a waiting request
-//! (prefill) or advances an active one (decode), under a configurable
-//! decode-first / prefill-first policy. Every step also advances the
-//! *modelled* SoC clock (base core vs Aquas ISAX cycle models from
-//! [`crate::workloads::llm`]), so the example can report TTFT/ITL both in
-//! host wall-clock and in simulated-silicon milliseconds.
+//! Architecture per tick ([`Coordinator::step`]):
+//!
+//! 1. **Arrivals** — trace requests whose simulated arrival time has
+//!    passed move into the waiting queue.
+//! 2. **Admission** — waiting requests are admitted when a batch slot and
+//!    enough KV *blocks* (see [`kv::KvPool`]) are available; the policy
+//!    decides whether admission outranks running decodes.
+//! 3. **Decode batch** — every active sequence advances one token in a
+//!    single batched tick. Sequences crossing a block boundary grab a
+//!    fresh block first, *preempting* the most recently admitted sequence
+//!    (recompute-style, as in vLLM) when the pool is dry.
+//!
+//! The engine runs entirely on the *modelled SoC clock*: every tick is
+//! charged batch-aware cycle + DMA-burst costs from
+//! [`crate::workloads::llm`] / [`crate::interface::latency`], so TTFT /
+//! ITL / throughput metrics are deterministic across replays (no host
+//! wall-clock anywhere). A batched tick streams the weight tiles once for
+//! the whole batch — that amortization is what turns the single-stream
+//! coordinator of the original study into a servable system.
 
 mod kv;
+mod trace;
 
-pub use kv::KvState;
+pub use kv::{BlockTable, KvPool, KvStats, PagedKvConfig};
+pub use trace::{TraceRequest, TraceSpec};
 
 use std::collections::VecDeque;
-use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::runtime::{Runtime, Tensor};
+use crate::interface::model::MemInterface;
+use crate::runtime::{DecodeSlot, Runtime, Tensor};
 use crate::workloads::llm::{BaseCpuModel, IsaxLlmModel, LlmConfig};
 
 /// Scheduling policy for mixed prefill/decode load.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulePolicy {
-    /// Favor inter-token latency of running requests.
+    /// Favor inter-token latency of running requests; admissions backfill
+    /// after the decode batch.
     DecodeFirst,
-    /// Favor time-to-first-token of queued requests.
+    /// Favor time-to-first-token of queued requests: admit whenever
+    /// capacity allows, decode otherwise.
     PrefillFirst,
+    /// Earliest-deadline-first fairness: requests whose TTFT deadline
+    /// (arrival + [`CoordinatorConfig::slo_ttft_ms`]) has expired are
+    /// admitted ahead of the decode batch; otherwise behaves like
+    /// `DecodeFirst` with EDF-ordered backfill.
+    Fair,
 }
 
-/// Coordinator configuration.
+/// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub policy: SchedulePolicy,
-    /// Hard cap on concurrently active sequences (KV memory budget).
+    /// Max concurrently active sequences == decode batch width.
     pub max_active: usize,
     /// Cycle models for the simulated-SoC clock.
     pub llm: LlmConfig,
+    /// Paged KV allocator geometry.
+    pub kv: PagedKvConfig,
+    /// TTFT service-level objective (simulated ms) used by
+    /// [`SchedulePolicy::Fair`] deadlines.
+    pub slo_ttft_ms: f64,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: SchedulePolicy::DecodeFirst, max_active: 4, llm: LlmConfig::default() }
+        Self {
+            policy: SchedulePolicy::DecodeFirst,
+            max_active: 4,
+            llm: LlmConfig::default(),
+            kv: PagedKvConfig::default(),
+            slo_ttft_ms: 2000.0,
+        }
     }
 }
 
@@ -58,67 +89,146 @@ pub struct Request {
     pub max_new_tokens: usize,
 }
 
-/// Per-request lifecycle metrics.
+/// Per-request lifecycle metrics, all on the simulated SoC clock.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
     pub id: u64,
     pub prompt_len: usize,
     pub generated: Vec<i32>,
-    /// Host wall-clock µs from submit to first generated token.
+    /// Simulated µs from arrival to first generated token.
     pub ttft_us: u128,
-    /// Host wall-clock µs between subsequent tokens.
+    /// Simulated µs between subsequent tokens.
     pub itl_us: Vec<u128>,
     /// Simulated base-core cycles attributable to this request.
     pub sim_base_cycles: f64,
-    /// Simulated Aquas-ISAX cycles attributable to this request.
+    /// Simulated Aquas-ISAX cycles attributable to this request
+    /// (batched ticks are shared equally across the batch).
     pub sim_isax_cycles: f64,
+    /// Times this request was preempted (blocks reclaimed + recompute).
+    pub preemptions: u32,
 }
 
+/// An active sequence: request + paged-KV table + progress.
 struct Active {
     req: Request,
-    kv: KvState,
+    admitted_order: u64,
+    table: BlockTable,
+    /// Valid KV slots (context length).
+    len: usize,
     generated: Vec<i32>,
-    submitted: Instant,
-    first_token: Option<Instant>,
-    last_token: Option<Instant>,
+    arrive_ms: f64,
+    deadline_ms: f64,
+    first_token_ms: Option<f64>,
+    last_token_ms: f64,
     itl_us: Vec<u128>,
     sim_base_cycles: f64,
     sim_isax_cycles: f64,
+    preemptions: u32,
 }
 
-/// The serving coordinator.
+enum WaitItem {
+    Fresh { req: Request, arrive_ms: f64, deadline_ms: f64 },
+    /// A preempted sequence awaiting re-admission (recompute on return).
+    Resume(Box<Active>),
+}
+
+impl WaitItem {
+    fn deadline_ms(&self) -> f64 {
+        match self {
+            WaitItem::Fresh { deadline_ms, .. } => *deadline_ms,
+            WaitItem::Resume(a) => a.deadline_ms,
+        }
+    }
+
+    /// KV slots the item needs at admission.
+    fn needed_slots(&self) -> usize {
+        match self {
+            WaitItem::Fresh { req, .. } => req.prompt.len(),
+            WaitItem::Resume(a) => a.req.prompt.len() + a.generated.len(),
+        }
+    }
+}
+
+/// The serving engine.
 pub struct Coordinator<'rt> {
     rt: &'rt Runtime,
     cfg: CoordinatorConfig,
     next_id: u64,
-    waiting: VecDeque<(Request, Instant)>,
+    next_admit: u64,
+    /// Trace requests not yet arrived (sorted by arrival time).
+    pending: VecDeque<(f64, Request)>,
+    waiting: VecDeque<WaitItem>,
     active: Vec<Active>,
     done: Vec<RequestMetrics>,
+    pool: KvPool,
     base_model: BaseCpuModel,
     isax_model: IsaxLlmModel,
-    bus: crate::interface::model::MemInterface,
+    bus: MemInterface,
+    /// Simulated SoC clock, in Aquas-core cycles.
+    clock_cycles: f64,
+    /// DMA cycles for one paged KV block (precomputed).
+    block_dma_cycles: f64,
+    /// Ideal (un-paged) KV stream rate, bytes/cycle.
+    kv_stream_rate: f64,
+    /// Persistent gather/scatter working sets (batch × kv_elems each),
+    /// reused across ticks so the decode hot path never heap-allocates.
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    preemptions: u64,
 }
 
 impl<'rt> Coordinator<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: CoordinatorConfig) -> Self {
+        assert!(cfg.max_active >= 1, "max_active must be positive");
+        let bus = MemInterface::system_bus();
+        let isax_model = IsaxLlmModel::default();
+        let block_dma_cycles = isax_model.kv_block_dma_cycles(&cfg.llm, &bus, cfg.kv.block_slots);
+        let kv_stream_rate = isax_model.mem_bytes_per_cycle(&bus);
+        let pool = KvPool::new(&rt.manifest().model, cfg.kv);
         Self {
             rt,
             cfg,
             next_id: 0,
+            next_admit: 0,
+            pending: VecDeque::new(),
             waiting: VecDeque::new(),
             active: Vec::new(),
             done: Vec::new(),
+            pool,
             base_model: BaseCpuModel::default(),
-            isax_model: IsaxLlmModel::default(),
-            bus: crate::interface::model::MemInterface::system_bus(),
+            isax_model,
+            bus,
+            clock_cycles: 0.0,
+            block_dma_cycles,
+            kv_stream_rate,
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+            preemptions: 0,
         }
     }
 
-    /// Enqueue a prompt; returns the request id.
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<u64> {
+    /// Current simulated time in milliseconds.
+    pub fn sim_now_ms(&self) -> f64 {
+        self.clock_cycles / self.cfg.llm.clock_hz * 1e3
+    }
+
+    /// KV pool accounting (leak check: `stats().leak_free()` once idle).
+    pub fn kv_stats(&self) -> KvStats {
+        self.pool.stats()
+    }
+
+    /// Total preemption events so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    fn validate(&self, prompt: &[i32], max_new_tokens: usize) -> Result<()> {
         let m = &self.rt.manifest().model;
         if prompt.is_empty() {
             return Err(Error::Coordinator("empty prompt".into()));
+        }
+        if max_new_tokens == 0 {
+            return Err(Error::Coordinator("max_new_tokens must be positive".into()));
         }
         if prompt.len() > m.prefill_len {
             return Err(Error::Coordinator(format!(
@@ -135,141 +245,515 @@ impl<'rt> Coordinator<'rt> {
                 m.max_seq
             )));
         }
+        // High-water KV demand: the final token is emitted without a
+        // decode step writing its slot (requests satisfied by the prefill
+        // token alone retire at admission), so the mark is
+        // prompt + max_new - 1 slots.
+        let worst = self.pool.blocks_for(prompt.len() + max_new_tokens - 1);
+        if worst > self.pool.total_blocks() {
+            return Err(Error::Coordinator(format!(
+                "request needs up to {worst} KV blocks but the pool only has {}",
+                self.pool.total_blocks()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Enqueue a prompt arriving *now*; returns the request id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<u64> {
+        let now = self.sim_now_ms();
+        self.submit_at(prompt, max_new_tokens, now)
+    }
+
+    /// Enqueue a prompt with an explicit simulated arrival time (trace
+    /// replay). Arrivals must be submitted in non-decreasing time order.
+    pub fn submit_at(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        arrive_ms: f64,
+    ) -> Result<u64> {
+        self.validate(&prompt, max_new_tokens)?;
+        if let Some((last, _)) = self.pending.back() {
+            if arrive_ms < *last {
+                return Err(Error::Coordinator("trace arrivals must be sorted".into()));
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
-        self.waiting.push_back((Request { id, prompt, max_new_tokens }, Instant::now()));
+        let req = Request { id, prompt, max_new_tokens };
+        self.pending.push_back((arrive_ms, req));
         Ok(id)
+    }
+
+    /// Enqueue a whole trace; returns the request ids.
+    pub fn submit_trace(&mut self, reqs: &[TraceRequest]) -> Result<Vec<u64>> {
+        reqs.iter()
+            .map(|r| self.submit_at(r.prompt.clone(), r.max_new_tokens, r.arrive_ms))
+            .collect()
     }
 
     /// Is there outstanding work?
     pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty() || !self.active.is_empty()
+        !self.pending.is_empty() || !self.waiting.is_empty() || !self.active.is_empty()
     }
 
-    /// One scheduling step per policy (continuous batching). Returns
-    /// whether anything ran.
-    ///
-    /// - `PrefillFirst`: admit a waiting request whenever capacity allows
-    ///   (minimizes TTFT at the cost of ITL jitter for running requests);
-    /// - `DecodeFirst`: advance all running requests, then backfill one
-    ///   admission with leftover capacity (steadier ITL).
+    /// One scheduling tick; returns whether anything ran.
     pub fn step(&mut self) -> Result<bool> {
-        let can_admit = !self.waiting.is_empty() && self.active.len() < self.cfg.max_active;
-        let can_decode = !self.active.is_empty();
+        self.release_arrivals();
+        // Idle with only future arrivals: fast-forward the clock.
+        if self.active.is_empty() && self.waiting.is_empty() {
+            match self.pending.front().map(|(t, _)| *t) {
+                Some(t) => {
+                    self.fast_forward_to(t);
+                    self.release_arrivals();
+                }
+                None => return Ok(false),
+            }
+        }
+        let mut ran = false;
         match self.cfg.policy {
             SchedulePolicy::PrefillFirst => {
-                if can_admit {
-                    self.do_prefill()?;
-                    return Ok(true);
+                while self.try_admit(AdmitOrder::Fifo, false)? {
+                    ran = true;
                 }
-                if can_decode {
+                if !ran && !self.active.is_empty() {
                     self.do_decode_round()?;
-                    return Ok(true);
+                    ran = true;
                 }
-                Ok(false)
             }
             SchedulePolicy::DecodeFirst => {
-                let mut ran = false;
-                if can_decode {
+                if !self.active.is_empty() {
                     self.do_decode_round()?;
                     ran = true;
                 }
-                if !self.waiting.is_empty() && self.active.len() < self.cfg.max_active {
-                    self.do_prefill()?;
+                while self.try_admit(AdmitOrder::Fifo, false)? {
                     ran = true;
                 }
-                Ok(ran)
+            }
+            SchedulePolicy::Fair => {
+                // Overdue requests jump the decode batch (EDF).
+                while self.try_admit(AdmitOrder::Edf, true)? {
+                    ran = true;
+                }
+                if !self.active.is_empty() {
+                    self.do_decode_round()?;
+                    ran = true;
+                }
+                while self.try_admit(AdmitOrder::Edf, false)? {
+                    ran = true;
+                }
             }
         }
+        if !ran && self.active.is_empty() {
+            // Waiting requests exist but nothing ran — only possible when
+            // admission is gated on future arrivals (waiting empty) — or a
+            // scheduler bug. Fast-forward if we can; run_to_completion
+            // turns a persistent stall into an error.
+            if let Some(t) = self.pending.front().map(|(t, _)| *t) {
+                self.fast_forward_to(t);
+                self.release_arrivals();
+                ran = true;
+            }
+        }
+        Ok(ran)
     }
 
-    /// Drive to completion; returns all request metrics.
+    /// Drive to completion; returns all request metrics sorted by id.
     pub fn run_to_completion(&mut self) -> Result<Vec<RequestMetrics>> {
         while self.has_work() {
-            self.step()?;
+            if !self.step()? && self.has_work() {
+                return Err(Error::Coordinator(format!(
+                    "scheduler stalled: {} waiting / {} active / {} pending",
+                    self.waiting.len(),
+                    self.active.len(),
+                    self.pending.len()
+                )));
+            }
         }
+        debug_assert!(self.pool.stats().leak_free(), "KV blocks leaked: {:?}", self.pool.stats());
         let mut out = std::mem::take(&mut self.done);
         out.sort_by_key(|m| m.id);
         Ok(out)
     }
 
-    fn do_prefill(&mut self) -> Result<()> {
-        let (req, submitted) = self.waiting.pop_front().expect("checked non-empty");
+    // ----- internals -------------------------------------------------------
+
+    /// Block-granular KV paging cost beyond the ideal contiguous stream
+    /// (already charged inside the batched tick) for one sequence at
+    /// context length `ctx`: whole blocks are DMA-staged per tick, so the
+    /// partially-filled tail block costs real burst cycles.
+    fn paging_overhead_cycles(&self, ctx: usize) -> f64 {
+        let blocks = self.pool.blocks_for(ctx) as f64;
+        let ideal = self.cfg.llm.kv_bytes(ctx) as f64 / self.kv_stream_rate;
+        (blocks * self.block_dma_cycles - ideal).max(0.0)
+    }
+
+    fn fast_forward_to(&mut self, t_ms: f64) {
+        // One extra cycle past the target: the ms -> cycles -> ms round
+        // trip can land an ulp *below* `t_ms`, which would leave the
+        // arrival unreleased and the scheduler spinning on fast-forwards.
+        let cycles = t_ms / 1e3 * self.cfg.llm.clock_hz + 1.0;
+        if cycles > self.clock_cycles {
+            self.clock_cycles = cycles;
+        }
+    }
+
+    fn release_arrivals(&mut self) {
+        let now = self.sim_now_ms();
+        while let Some((t, _)) = self.pending.front() {
+            if *t > now {
+                break;
+            }
+            let (arrive_ms, req) = self.pending.pop_front().expect("checked non-empty");
+            let deadline_ms = arrive_ms + self.cfg.slo_ttft_ms;
+            self.waiting.push_back(WaitItem::Fresh { req, arrive_ms, deadline_ms });
+        }
+    }
+
+    /// Pick and admit one waiting item. With `overdue_only`, admits only
+    /// items whose deadline has already passed. Returns whether one ran.
+    fn try_admit(&mut self, order: AdmitOrder, overdue_only: bool) -> Result<bool> {
+        if self.waiting.is_empty() || self.active.len() >= self.cfg.max_active {
+            return Ok(false);
+        }
+        let idx = match order {
+            AdmitOrder::Fifo => 0,
+            AdmitOrder::Edf => {
+                let mut best = 0;
+                for (i, item) in self.waiting.iter().enumerate() {
+                    if item.deadline_ms() < self.waiting[best].deadline_ms() {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        if overdue_only && self.waiting[idx].deadline_ms() > self.sim_now_ms() {
+            return Ok(false);
+        }
+        let needed = self.pool.blocks_for(self.waiting[idx].needed_slots());
+        if needed > self.pool.free_blocks() {
+            return Ok(false);
+        }
+        let item = self.waiting.remove(idx).expect("index in range");
+        match item {
+            WaitItem::Fresh { req, arrive_ms, deadline_ms } => {
+                self.admit_fresh(req, arrive_ms, deadline_ms)?;
+            }
+            WaitItem::Resume(act) => self.admit_resume(*act)?,
+        }
+        Ok(true)
+    }
+
+    /// Run `llm_prefill` for `prompt`, scatter the caches into `table`,
+    /// and return the first generated token.
+    fn run_prefill(&mut self, prompt: &[i32], table: &BlockTable) -> Result<i32> {
         let m = self.rt.manifest().model.clone();
-        // Right-pad the prompt to the compiled prefill window; the KV
-        // cursor only advances by the true prompt length, so padded
-        // positions are never attended.
-        let mut ids = req.prompt.clone();
+        // Right-pad to the compiled prefill window; only the true prompt
+        // positions are scattered into blocks, so pad K/V never survives.
+        let mut ids = prompt.to_vec();
         ids.resize(m.prefill_len, 0);
         let t = Tensor::i32(ids, &[1, m.prefill_len])?;
         let outs = self.rt.execute("llm_prefill", &[t])?;
-        let logits = &outs[0];
-        // Next token = argmax over the last *real* prompt position.
-        let next = argmax_at(logits, req.prompt.len() - 1, m.vocab)?;
-        let kv = KvState::new(outs[1].clone(), outs[2].clone(), req.prompt.len());
+        let next = argmax_at(&outs[0], prompt.len() - 1, m.vocab)?;
+        self.pool.scatter_prefill(table, prompt.len(), outs[1].as_f32()?, outs[2].as_f32()?);
+        Ok(next)
+    }
 
-        let now = Instant::now();
-        let mut act = Active {
-            sim_base_cycles: 0.0,
-            sim_isax_cycles: 0.0,
-            kv,
-            generated: vec![next],
-            submitted,
-            first_token: Some(now),
-            last_token: Some(now),
-            itl_us: Vec::new(),
-            req,
-        };
-        // Simulated cycles for the whole prefill.
-        for t in 0..act.req.prompt.len() {
-            act.sim_base_cycles += self.base_model.token_cycles(&self.cfg.llm, t + 1);
-            act.sim_isax_cycles += self.isax_model.token_cycles(&self.cfg.llm, t + 1, &self.bus);
+    fn admit_fresh(&mut self, req: Request, arrive_ms: f64, deadline_ms: f64) -> Result<()> {
+        let plen = req.prompt.len();
+        let mut table = BlockTable::default();
+        if !self.pool.ensure_capacity(&mut table, plen) {
+            // try_admit checked free capacity; getting here is a bug.
+            self.pool.release(&mut table);
+            return Err(Error::Coordinator("admission raced the KV pool".into()));
         }
+        let next = match self.run_prefill(&req.prompt, &table) {
+            Ok(n) => n,
+            Err(e) => {
+                self.pool.release(&mut table);
+                return Err(e);
+            }
+        };
+        // Charge the modelled clock: the ISAX tiles the whole prompt
+        // through one weight stream; the scalar baseline walks it
+        // token-by-token (weights re-streamed each time).
+        let isax = self.isax_model.prefill_cycles(&self.cfg.llm, plen, &self.bus);
+        let mut base = 0.0;
+        for t in 0..plen {
+            base += self.base_model.token_cycles(&self.cfg.llm, t + 1);
+        }
+        self.clock_cycles += isax;
+        let now = self.sim_now_ms();
+        let id = req.id;
+        let satisfied = req.max_new_tokens <= 1;
+        self.active.push(Active {
+            req,
+            admitted_order: self.next_admit,
+            table,
+            len: plen,
+            generated: vec![next],
+            arrive_ms,
+            deadline_ms,
+            first_token_ms: Some(now),
+            last_token_ms: now,
+            itl_us: Vec::new(),
+            sim_base_cycles: base,
+            sim_isax_cycles: isax,
+            preemptions: 0,
+        });
+        self.next_admit += 1;
+        // A max_new_tokens == 1 request is satisfied by the prefill token
+        // alone — retire it now rather than overshoot by a decode round.
+        if satisfied {
+            self.retire(id);
+        }
+        Ok(())
+    }
+
+    /// Re-admit a preempted sequence: re-prefill the prompt, then replay
+    /// its already-emitted tokens to rebuild the KV state (recompute
+    /// preemption). Replayed tokens are not re-emitted — metrics keep
+    /// their original timestamps; the recompute cost lands on the clock.
+    fn admit_resume(&mut self, mut act: Active) -> Result<()> {
+        let plen = act.req.prompt.len();
+        let total = plen + act.generated.len();
+        if !self.pool.ensure_capacity(&mut act.table, total) {
+            self.pool.release(&mut act.table);
+            return Err(Error::Coordinator("resume admission raced the KV pool".into()));
+        }
+        let prompt = act.req.prompt.clone();
+        let refirst = self.run_prefill(&prompt, &act.table);
+        if let Err(e) = refirst {
+            self.pool.release(&mut act.table);
+            return Err(e);
+        }
+        act.len = plen;
+        let mut isax = self.isax_model.prefill_cycles(&self.cfg.llm, plen, &self.bus);
+
+        // Replay all but the last generated token through single decode
+        // steps (the last one is the pending input of the next tick).
+        let kvn = self.pool.gathered_elems();
+        if self.scratch_k.len() < kvn {
+            self.scratch_k.resize(kvn, 0.0);
+            self.scratch_v.resize(kvn, 0.0);
+        }
+        // Gather once: each decode step writes its new slot into the
+        // scratch working set in place, so the scratch stays current
+        // through the whole replay (scatter_slot only mirrors the new
+        // slot back to its block).
+        self.pool.gather(
+            &act.table,
+            act.len,
+            &mut self.scratch_k[..kvn],
+            &mut self.scratch_v[..kvn],
+        );
+        let replay: Vec<i32> = act.generated[..act.generated.len() - 1].to_vec();
+        for (i, tok) in replay.into_iter().enumerate() {
+            let pos = plen + i;
+            let step = {
+                let mut slots = [DecodeSlot {
+                    token: tok,
+                    pos,
+                    kc: &mut self.scratch_k[..kvn],
+                    vc: &mut self.scratch_v[..kvn],
+                }];
+                self.rt.decode_batch(&mut slots)
+            };
+            let logits = match step {
+                Ok(l) => l,
+                Err(e) => {
+                    self.pool.release(&mut act.table);
+                    return Err(e);
+                }
+            };
+            self.pool.scatter_slot(&act.table, pos, &self.scratch_k[..kvn], &self.scratch_v[..kvn]);
+            act.len += 1;
+            debug_assert_eq!(
+                argmax_row(&logits[0]),
+                act.generated[i + 1],
+                "replay diverged from the original decode"
+            );
+            // Same pricing as the regular decode path: batched tick plus
+            // the block-granular paging DMA overhead.
+            isax += self.isax_model.batch_tick_cycles(&self.cfg.llm, &[act.len], &self.bus)
+                + self.paging_overhead_cycles(act.len);
+        }
+        self.clock_cycles += isax;
+        act.sim_isax_cycles += isax;
+        act.admitted_order = self.next_admit;
+        self.next_admit += 1;
         self.active.push(act);
         Ok(())
     }
 
-    fn do_decode_round(&mut self) -> Result<()> {
-        let m = self.rt.manifest().model.clone();
-        let mut finished = Vec::new();
-        for (i, act) in self.active.iter_mut().enumerate() {
-            let last = *act.generated.last().expect("at least the prefill token");
-            let ids = Tensor::i32(vec![last], &[1, 1])?;
-            let pos = Tensor::i32(vec![act.kv.len() as i32], &[1])?;
-            let outs =
-                self.rt.execute("llm_decode", &[ids, act.kv.k.clone(), act.kv.v.clone(), pos])?;
-            let next = argmax_flat(&outs[0])? as i32;
-            act.kv = KvState::new(outs[1].clone(), outs[2].clone(), act.kv.len() + 1);
-            act.generated.push(next);
-            let now = Instant::now();
-            if let Some(prev) = act.last_token.replace(now) {
-                act.itl_us.push(now.duration_since(prev).as_micros());
-            }
-            act.sim_base_cycles += self.base_model.token_cycles(&self.cfg.llm, act.kv.len());
-            act.sim_isax_cycles +=
-                self.isax_model.token_cycles(&self.cfg.llm, act.kv.len(), &self.bus);
+    /// Reclaim the blocks of `active[idx]` and push it back to the head
+    /// of the waiting queue for recompute re-admission.
+    fn preempt(&mut self, idx: usize) {
+        let mut act = self.active.remove(idx);
+        self.pool.release(&mut act.table);
+        act.len = 0;
+        act.preemptions += 1;
+        self.preemptions += 1;
+        self.waiting.push_front(WaitItem::Resume(Box::new(act)));
+    }
 
-            let full = act.kv.len() >= m.max_seq;
-            if act.generated.len() >= act.req.max_new_tokens || full {
-                finished.push(i);
+    /// Make sure sequence `id` owns blocks for one more slot, preempting
+    /// the most recently admitted *other* sequence while the pool is dry.
+    fn grow_kv(&mut self, id: u64) -> Result<()> {
+        loop {
+            let Some(idx) = self.active.iter().position(|a| a.req.id == id) else {
+                return Ok(()); // preempted by an earlier grow this round
+            };
+            let need = self.active[idx].len + 1;
+            if self.pool.ensure_capacity(&mut self.active[idx].table, need) {
+                return Ok(());
+            }
+            let victim = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != idx)
+                .max_by_key(|(_, a)| a.admitted_order)
+                .map(|(i, _)| i);
+            match victim {
+                Some(vi) => self.preempt(vi),
+                None => {
+                    return Err(Error::Coordinator(
+                        "KV pool exhausted by a single sequence".into(),
+                    ))
+                }
             }
         }
-        // Retire back-to-front so indices stay valid.
-        for i in finished.into_iter().rev() {
-            let act = self.active.remove(i);
-            let first = act.first_token.expect("prefill produced a token");
-            self.done.push(RequestMetrics {
-                id: act.req.id,
-                prompt_len: act.req.prompt.len(),
-                generated: act.generated,
-                ttft_us: first.duration_since(act.submitted).as_micros(),
-                itl_us: act.itl_us,
-                sim_base_cycles: act.sim_base_cycles,
-                sim_isax_cycles: act.sim_isax_cycles,
-            });
+    }
+
+    /// Advance every active sequence one token in a single batched tick.
+    fn do_decode_round(&mut self) -> Result<()> {
+        let ids: Vec<u64> = self.active.iter().map(|a| a.req.id).collect();
+        // Phase A: secure the next slot per sequence (may preempt).
+        for &id in &ids {
+            self.grow_kv(id)?;
+        }
+        let batch: Vec<u64> = ids
+            .into_iter()
+            .filter(|id| self.active.iter().any(|a| a.req.id == *id))
+            .collect();
+        if batch.is_empty() {
+            return Ok(());
+        }
+
+        // Phase B: gather each sequence's blocks into the persistent
+        // scratch working sets and run the batched decode path (no
+        // per-token heap churn on the hot path).
+        let kvn = self.pool.gathered_elems();
+        let n = batch.len();
+        if self.scratch_k.len() < n * kvn {
+            self.scratch_k.resize(n * kvn, 0.0);
+            self.scratch_v.resize(n * kvn, 0.0);
+        }
+        let mut feeds: Vec<(i32, usize)> = Vec::with_capacity(n);
+        for (bi, id) in batch.iter().enumerate() {
+            let act = self
+                .active
+                .iter()
+                .find(|a| a.req.id == *id)
+                .expect("batch members are active");
+            self.pool.gather(
+                &act.table,
+                act.len,
+                &mut self.scratch_k[bi * kvn..(bi + 1) * kvn],
+                &mut self.scratch_v[bi * kvn..(bi + 1) * kvn],
+            );
+            feeds.push((*act.generated.last().expect("prefill emitted a token"), act.len));
+        }
+        let logits = {
+            let mut slots: Vec<DecodeSlot<'_>> = self
+                .scratch_k
+                .chunks_mut(kvn)
+                .zip(self.scratch_v.chunks_mut(kvn))
+                .zip(&feeds)
+                .map(|((kc, vc), &(token, pos))| DecodeSlot { token, pos, kc, vc })
+                .collect();
+            self.rt.decode_batch(&mut slots)?
+        };
+
+        // Charge the modelled clock: one batched tick (weights streamed
+        // once across the batch) + the paged-KV DMA-burst overhead of
+        // reading whole blocks instead of an ideal contiguous stream.
+        let ctxs: Vec<usize> = feeds.iter().map(|&(_, pos)| pos + 1).collect();
+        let mut tick = self.isax_model.batch_tick_cycles(&self.cfg.llm, &ctxs, &self.bus);
+        for &ctx in &ctxs {
+            tick += self.paging_overhead_cycles(ctx);
+        }
+        self.clock_cycles += tick;
+        let share = tick / batch.len() as f64;
+        let now = self.sim_now_ms();
+        let max_seq = self.rt.manifest().model.max_seq;
+
+        // Phase C: commit tokens, timestamps and retirements.
+        let mut retired = Vec::new();
+        for (i, id) in batch.iter().enumerate() {
+            let next = argmax_row(&logits[i]);
+            let idx = self
+                .active
+                .iter()
+                .position(|a| a.req.id == *id)
+                .expect("batch members are active");
+            self.pool.scatter_slot(
+                &self.active[idx].table,
+                self.active[idx].len,
+                &self.scratch_k[i * kvn..(i + 1) * kvn],
+                &self.scratch_v[i * kvn..(i + 1) * kvn],
+            );
+            let act = &mut self.active[idx];
+            act.len += 1;
+            act.generated.push(next);
+            act.itl_us.push(ms_delta_us(act.last_token_ms, now));
+            act.last_token_ms = now;
+            act.sim_isax_cycles += share;
+            act.sim_base_cycles += self.base_model.token_cycles(&self.cfg.llm, act.len);
+            if act.generated.len() >= act.req.max_new_tokens || act.len >= max_seq {
+                retired.push(*id);
+            }
+        }
+        for id in retired {
+            self.retire(id);
         }
         Ok(())
     }
+
+    fn retire(&mut self, id: u64) {
+        let idx = self
+            .active
+            .iter()
+            .position(|a| a.req.id == id)
+            .expect("retiring an unknown sequence");
+        let mut act = self.active.remove(idx);
+        self.pool.release(&mut act.table);
+        let first = act.first_token_ms.expect("prefill emitted a token");
+        self.done.push(RequestMetrics {
+            id: act.req.id,
+            prompt_len: act.req.prompt.len(),
+            generated: act.generated,
+            ttft_us: ms_delta_us(act.arrive_ms, first),
+            itl_us: act.itl_us,
+            sim_base_cycles: act.sim_base_cycles,
+            sim_isax_cycles: act.sim_isax_cycles,
+            preemptions: act.preemptions,
+        });
+    }
+}
+
+#[derive(Clone, Copy)]
+enum AdmitOrder {
+    Fifo,
+    Edf,
+}
+
+/// Simulated-ms interval as non-negative µs.
+fn ms_delta_us(from_ms: f64, to_ms: f64) -> u128 {
+    ((to_ms - from_ms).max(0.0) * 1e3).round() as u128
 }
 
 /// Argmax over logits[0, pos, :] of a [1, T, V] tensor.
@@ -285,7 +769,14 @@ fn argmax_at(logits: &Tensor, pos: usize, vocab: usize) -> Result<i32> {
     Ok(best as i32)
 }
 
-/// Argmax over a flat [1, V] tensor.
-fn argmax_flat(logits: &Tensor) -> Result<usize> {
-    logits.argmax_f32()
+/// Argmax over one logits row (strict `>`, first-wins — matches the
+/// tensor argmax the monolithic path used).
+fn argmax_row(row: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
 }

@@ -1,0 +1,141 @@
+//! Deterministic request-trace generation + replay specs.
+//!
+//! A [`TraceSpec`] describes a synthetic arrival process compactly enough
+//! to put on a CLI (`aquas serve --trace n=16,seed=7,rate=4,plen=4..12,
+//! gen=6..14`); [`TraceSpec::generate`] expands it into concrete
+//! [`TraceRequest`]s with exponential inter-arrival times and uniform
+//! prompt/generation lengths, all drawn from the seeded in-crate PRNG so
+//! two replays of the same spec are byte-identical.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One request of a serving trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Arrival time on the simulated SoC clock, in milliseconds.
+    pub arrive_ms: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A compact, deterministic trace description.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Number of requests.
+    pub n: usize,
+    /// PRNG seed (prompts, lengths, arrivals).
+    pub seed: u64,
+    /// Mean arrival rate in requests per simulated second (Poisson
+    /// process). `0` means all requests arrive at t = 0.
+    pub rate: f64,
+    /// Prompt length range (inclusive), clamped to the prefill window.
+    pub plen: (usize, usize),
+    /// Generation length range (inclusive).
+    pub gen: (usize, usize),
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self { n: 16, seed: 7, rate: 2.0, plen: (4, 12), gen: (6, 14) }
+    }
+}
+
+impl TraceSpec {
+    /// Parse the CLI form: comma-separated `key=value` pairs over the
+    /// defaults, e.g. `n=16,seed=7,rate=4,plen=4..12,gen=6..14`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut spec = Self::default();
+        for part in text.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| Error::Coordinator(format!("trace spec `{part}`: expected key=value")))?;
+            let bad = |what: &str| Error::Coordinator(format!("trace spec {key}={val}: {what}"));
+            match key {
+                "n" => spec.n = val.parse().map_err(|_| bad("not an integer"))?,
+                "seed" => spec.seed = val.parse().map_err(|_| bad("not an integer"))?,
+                "rate" => spec.rate = val.parse().map_err(|_| bad("not a number"))?,
+                "plen" => spec.plen = parse_range(val).ok_or_else(|| bad("expected lo..hi"))?,
+                "gen" => spec.gen = parse_range(val).ok_or_else(|| bad("expected lo..hi"))?,
+                _ => return Err(Error::Coordinator(format!("trace spec: unknown key `{key}`"))),
+            }
+        }
+        if spec.n == 0 {
+            return Err(Error::Coordinator("trace spec: n must be positive".into()));
+        }
+        if spec.plen.0 == 0 || spec.plen.0 > spec.plen.1 || spec.gen.0 == 0 || spec.gen.0 > spec.gen.1 {
+            return Err(Error::Coordinator("trace spec: empty plen/gen range".into()));
+        }
+        Ok(spec)
+    }
+
+    /// Expand into concrete requests. `vocab`/`prefill_len` come from the
+    /// serving model so generated prompts are always admissible.
+    pub fn generate(&self, vocab: usize, prefill_len: usize) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        let mut t_ms = 0.0f64;
+        let (plo, phi) = (self.plen.0.min(prefill_len), self.plen.1.min(prefill_len));
+        let mut out = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            if self.rate > 0.0 {
+                t_ms += rng.exponential(self.rate) * 1e3;
+            }
+            let len = rng.range(plo, phi + 1);
+            let prompt = (0..len).map(|_| rng.below(vocab as u64) as i32).collect();
+            let max_new = rng.range(self.gen.0, self.gen.1 + 1);
+            out.push(TraceRequest { arrive_ms: t_ms, prompt, max_new_tokens: max_new });
+        }
+        out
+    }
+}
+
+fn parse_range(text: &str) -> Option<(usize, usize)> {
+    let (lo, hi) = text.split_once("..")?;
+    Some((lo.parse().ok()?, hi.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_overrides_defaults() {
+        let s = TraceSpec::parse("n=8,seed=3,rate=0,plen=2..4,gen=1..2").unwrap();
+        assert_eq!(s.n, 8);
+        assert_eq!(s.seed, 3);
+        assert_eq!(s.rate, 0.0);
+        assert_eq!(s.plen, (2, 4));
+        assert_eq!(s.gen, (1, 2));
+        assert!(TraceSpec::parse("bogus").is_err());
+        assert!(TraceSpec::parse("n=0").is_err());
+        assert!(TraceSpec::parse("plen=9..4").is_err());
+        assert!(TraceSpec::parse("warp=9").is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_admissible() {
+        let spec = TraceSpec::default();
+        let a = spec.generate(256, 16);
+        let b = spec.generate(256, 16);
+        assert_eq!(a.len(), spec.n);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrive_ms, y.arrive_ms);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let mut last = 0.0;
+        for r in &a {
+            assert!(!r.prompt.is_empty() && r.prompt.len() <= 16);
+            assert!(r.prompt.iter().all(|&t| (0..256).contains(&t)));
+            assert!((spec.gen.0..=spec.gen.1).contains(&r.max_new_tokens));
+            assert!(r.arrive_ms >= last, "arrivals must be sorted");
+            last = r.arrive_ms;
+        }
+    }
+
+    #[test]
+    fn zero_rate_means_simultaneous_arrival() {
+        let spec = TraceSpec { rate: 0.0, ..Default::default() };
+        assert!(spec.generate(256, 16).iter().all(|r| r.arrive_ms == 0.0));
+    }
+}

@@ -4,7 +4,7 @@
 //! see DESIGN.md).
 
 use aquas::bench_harness as bh;
-use aquas::coordinator::{Coordinator, CoordinatorConfig, SchedulePolicy};
+use aquas::coordinator::{Coordinator, CoordinatorConfig, SchedulePolicy, TraceSpec};
 use aquas::runtime::Runtime;
 
 const USAGE: &str = "\
@@ -22,9 +22,14 @@ COMMANDS:
                                vfsmax vmadot vmvar mphong vrgb2yuv)
     bench <what>              regenerate a table/figure:
                               table2 | table3 | fig2 | fig3 | fig6 | fig7 | fig8 | all
-                              (engine microbench: egraph)
-    serve [--policy p] [-n N] run the LLM serving demo over the AOT
-                              artifacts (policy: decode-first | prefill-first)
+                              (engine microbenches: egraph | serve)
+    serve [OPTIONS]           run the paged-KV continuous-batching LLM
+                              serving engine over the AOT artifacts:
+                              --policy decode-first|prefill-first|fair
+                              --batch N      decode batch width (default 4)
+                              -n N           ad-hoc request count (default 4)
+                              --trace SPEC   deterministic trace replay,
+                                             e.g. n=16,seed=7,rate=4,plen=4..12,gen=6..14
     ir-levels                 print the Aquas-IR level summary (Table 1)
     help                      this text
 ";
@@ -119,6 +124,7 @@ fn cmd_bench(args: &[String]) -> aquas::Result<()> {
             "fig7" => println!("{}", bh::fig7().render()),
             "fig8" => println!("{}", bh::fig8().render()),
             "egraph" => println!("{}", bh::egraph::report(false).render()),
+            "serve" => println!("{}", bh::serve::report(false).render()),
             other => eprintln!("unknown bench `{other}`"),
         };
     };
@@ -135,6 +141,8 @@ fn cmd_bench(args: &[String]) -> aquas::Result<()> {
 fn cmd_serve(args: &[String]) -> aquas::Result<()> {
     let mut policy = SchedulePolicy::DecodeFirst;
     let mut n_requests = 4usize;
+    let mut batch = 4usize;
+    let mut trace: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -142,6 +150,7 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
                 i += 1;
                 policy = match args.get(i).map(String::as_str) {
                     Some("prefill-first") => SchedulePolicy::PrefillFirst,
+                    Some("fair") => SchedulePolicy::Fair,
                     _ => SchedulePolicy::DecodeFirst,
                 };
             }
@@ -149,24 +158,43 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
                 i += 1;
                 n_requests = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(4);
             }
+            "--batch" => {
+                i += 1;
+                batch = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+            }
+            "--trace" => {
+                i += 1;
+                trace = args.get(i).cloned();
+            }
             _ => {}
         }
         i += 1;
     }
     let rt = Runtime::load("artifacts")?;
     println!("platform: {} | entries: {:?}", rt.platform(), rt.entry_names());
-    let mut coord = Coordinator::new(&rt, CoordinatorConfig { policy, ..Default::default() });
-    let mut rng = aquas::util::rng::Rng::new(7);
-    let vocab = rt.manifest().model.vocab;
-    for _ in 0..n_requests {
-        let len = rng.range(4, rt.manifest().model.prefill_len);
-        let prompt: Vec<i32> = (0..len).map(|_| rng.below(vocab as u64) as i32).collect();
-        coord.submit(prompt, 8)?;
+    let mut coord = Coordinator::new(
+        &rt,
+        CoordinatorConfig { policy, max_active: batch, ..Default::default() },
+    );
+    let model = rt.manifest().model.clone();
+    if let Some(text) = &trace {
+        // Deterministic trace replay: every metric below is on the
+        // simulated SoC clock, so two replays print identical bytes.
+        let spec = TraceSpec::parse(text)?;
+        coord.submit_trace(&spec.generate(model.vocab, model.prefill_len))?;
+    } else {
+        let mut rng = aquas::util::rng::Rng::new(7);
+        for _ in 0..n_requests {
+            let len = rng.range(4, model.prefill_len);
+            let prompt: Vec<i32> =
+                (0..len).map(|_| rng.below(model.vocab as u64) as i32).collect();
+            coord.submit(prompt, 8)?;
+        }
     }
     let metrics = coord.run_to_completion()?;
     for m in &metrics {
         println!(
-            "req {}: prompt {} -> {} tokens | ttft {} us | mean itl {} us | sim speedup {:.2}x",
+            "req {}: prompt {} -> {} tokens | ttft {} us | mean itl {} us | preempted {} | sim speedup {:.2}x",
             m.id,
             m.prompt_len,
             m.generated.len(),
@@ -176,9 +204,28 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
             } else {
                 m.itl_us.iter().sum::<u128>() / m.itl_us.len() as u128
             },
+            m.preemptions,
             m.sim_base_cycles / m.sim_isax_cycles.max(1.0),
         );
     }
+    let total_tokens: usize = metrics.iter().map(|m| m.generated.len()).sum();
+    let elapsed_s = coord.sim_now_ms() / 1e3;
+    let kv = coord.kv_stats();
+    println!(
+        "total: {} requests, {} tokens in {:.3} sim s -> {:.2} tok/s (batch {batch})",
+        metrics.len(),
+        total_tokens,
+        elapsed_s,
+        total_tokens as f64 / elapsed_s.max(1e-12),
+    );
+    println!(
+        "kv: {} blocks x {} slots | peak in use {} | preemptions {} | leak-free {}",
+        kv.total_blocks,
+        kv.block_slots,
+        kv.peak_in_use,
+        coord.preemptions(),
+        kv.leak_free(),
+    );
     Ok(())
 }
 

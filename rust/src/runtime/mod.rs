@@ -20,6 +20,7 @@ mod sim;
 mod tensor;
 
 pub use manifest::{EntrySpec, Manifest, ModelSpec, TensorSpec};
+pub use sim::DecodeSlot;
 pub use tensor::{DType, Tensor};
 
 use std::path::{Path, PathBuf};
@@ -87,6 +88,22 @@ impl Runtime {
             )));
         }
         Ok(outs)
+    }
+
+    /// Elements of one sequence's `[L, H, max_seq, Dh]` KV working set
+    /// (the slice length [`Runtime::decode_batch`] expects per direction).
+    pub fn kv_elems(&self) -> usize {
+        let m = &self.manifest.model;
+        m.n_layers * m.n_heads * m.max_seq * m.head_dim
+    }
+
+    /// Batched decode: advance N sequences one token each against their
+    /// gathered KV working sets, in place. This is the serving engine's
+    /// hot path — numerically identical to the `llm_decode` entry but
+    /// without per-token tensor wrapping/cloning, and shaped for
+    /// continuous batching (each slot carries its own position).
+    pub fn decode_batch(&self, slots: &mut [DecodeSlot<'_>]) -> Result<Vec<Vec<f32>>> {
+        sim::decode_batch(&self.model, slots)
     }
 
     /// Names of all available entries, sorted.

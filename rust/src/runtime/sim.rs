@@ -239,6 +239,10 @@ impl TinyLlm {
         matvec(&h, &self.unembed, d, self.vocab)
     }
 
+    pub(crate) fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
     /// Prefill: logits for every position + fresh max_seq-capacity caches.
     fn prefill(&self, ids: &[i32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let mut kc = vec![0.0f32; self.kv_len()];
@@ -253,6 +257,52 @@ impl TinyLlm {
 
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+// ---------------------------------------------------------------------------
+// Batched decode path (continuous-batching serving engine)
+// ---------------------------------------------------------------------------
+
+/// One sequence's slice of a batched decode tick.
+///
+/// `kc`/`vc` are the sequence's *gathered* `[L, H, max_seq, Dh]` working
+/// sets (the paged-KV coordinator stages blocks into this layout, which is
+/// exactly the artifact cache geometry minus the unit batch axis). The
+/// step writes the new token's K/V at slot `pos` in place — no tensor
+/// wrapping or cache cloning per token, unlike the `llm_decode` entry.
+#[derive(Debug)]
+pub struct DecodeSlot<'a> {
+    /// Token to feed (the sequence's last emitted token).
+    pub token: i32,
+    /// Absolute position to write — must equal the context length.
+    pub pos: usize,
+    pub kc: &'a mut [f32],
+    pub vc: &'a mut [f32],
+}
+
+/// Advance every slot by one token; returns one logits row per slot in
+/// order. Numerically identical to running the `llm_decode` entry per
+/// sequence (same `TinyLlm::step`), so batching can never perturb tokens.
+pub(crate) fn decode_batch(model: &TinyLlm, slots: &mut [DecodeSlot<'_>]) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(slots.len());
+    for (i, s) in slots.iter_mut().enumerate() {
+        if s.kc.len() != model.kv_len() || s.vc.len() != model.kv_len() {
+            return Err(Error::Runtime(format!(
+                "decode_batch slot {i}: cache holds {} elements, model needs {}",
+                s.kc.len(),
+                model.kv_len()
+            )));
+        }
+        if s.pos >= model.max_seq() {
+            return Err(Error::Runtime(format!(
+                "decode_batch slot {i}: position {} outside KV capacity {}",
+                s.pos,
+                model.max_seq()
+            )));
+        }
+        out.push(model.step(s.token, s.pos, s.kc, s.vc));
+    }
+    Ok(out)
 }
 
 /// `softmax(q·Kᵀ / √dh) · V` over contiguous `[visible, dh]` key/value

@@ -56,6 +56,106 @@ fn prop_latency_monotone_in_size_and_count() {
     }
 }
 
+/// Draw a uniform-size legal transaction sequence on `itfc`.
+fn uniform_sizes(rng: &mut Rng, itfc: &MemInterface, n: usize) -> Vec<usize> {
+    let max_shift = itfc.max_beats.trailing_zeros() as usize + 1;
+    let beats = 1usize << rng.range(0, max_shift);
+    vec![itfc.width * beats; n]
+}
+
+#[test]
+fn prop_latency_monotone_in_transaction_size() {
+    // Growing any single transaction must never reduce sequence latency.
+    let mut rng = Rng::new(0x512E);
+    for case in 0..CASES {
+        let itfc = random_itfc(&mut rng);
+        let n = rng.range(1, 12);
+        let max_shift = itfc.max_beats.trailing_zeros() as usize + 1;
+        let sizes: Vec<usize> =
+            (0..n).map(|_| itfc.width << rng.range(0, max_shift)).collect();
+        let j = rng.range(0, n);
+        let mut grown = sizes.clone();
+        grown[j] = (grown[j] * 2).min(itfc.max_transaction());
+        for kind in [TransactionKind::Load, TransactionKind::Store] {
+            let before = sequence_latency(&itfc, kind, &sizes);
+            let after = sequence_latency(&itfc, kind, &grown);
+            assert!(
+                after >= before,
+                "case {case} {kind:?}: growing txn {j} reduced latency {before} -> {after}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_completion_cycles_end_at_sequence_latency() {
+    use aquas::interface::latency::completion_cycles;
+    let mut rng = Rng::new(0xC0C0);
+    for case in 0..CASES {
+        let itfc = random_itfc(&mut rng);
+        let n = rng.range(1, 16);
+        let max_shift = itfc.max_beats.trailing_zeros() as usize + 1;
+        let sizes: Vec<usize> =
+            (0..n).map(|_| itfc.width << rng.range(0, max_shift)).collect();
+        for kind in [TransactionKind::Load, TransactionKind::Store] {
+            let cs = completion_cycles(&itfc, kind, &sizes);
+            assert_eq!(cs.len(), n, "case {case}");
+            assert!(
+                cs.windows(2).all(|w| w[0] < w[1]),
+                "case {case} {kind:?}: completions not strictly increasing: {cs:?}"
+            );
+            assert_eq!(
+                *cs.last().unwrap(),
+                sequence_latency(&itfc, kind, &sizes),
+                "case {case} {kind:?}: last completion != sequence latency"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tk_store_form_is_exact_on_uniform_sequences() {
+    // §4.3 documented bound, store half: the closed form reproduces the
+    // exact recurrence for back-to-back same-size stores.
+    use aquas::interface::latency::tk_estimate;
+    let mut rng = Rng::new(0x7E57);
+    for case in 0..CASES {
+        let itfc = random_itfc(&mut rng);
+        let n = rng.range(8, 33);
+        let sizes = uniform_sizes(&mut rng, &itfc, n);
+        let exact = sequence_latency(&itfc, TransactionKind::Store, &sizes) as f64;
+        let est = tk_estimate(&itfc, TransactionKind::Store, &[sizes.clone()]);
+        assert!(
+            (est - exact).abs() < 1e-9,
+            "case {case}: store T_k {est} != exact {exact} on {itfc:?} x{}",
+            sizes.len()
+        );
+    }
+}
+
+#[test]
+fn prop_tk_load_form_within_documented_error_bound() {
+    // §4.3 documented bound, load half: within 50% of the exact
+    // recurrence (the closed form drops the per-transaction issue cycle;
+    // see the `tk_estimate` docs). Anything past that means the
+    // approximation or the recurrence drifted.
+    use aquas::interface::latency::tk_estimate;
+    let mut rng = Rng::new(0x7E58);
+    for case in 0..CASES {
+        let itfc = random_itfc(&mut rng);
+        let n = rng.range(8, 33);
+        let sizes = uniform_sizes(&mut rng, &itfc, n);
+        let exact = sequence_latency(&itfc, TransactionKind::Load, &sizes) as f64;
+        let est = tk_estimate(&itfc, TransactionKind::Load, &[sizes.clone()]);
+        let rel = (est - exact).abs() / exact.max(1.0);
+        assert!(
+            rel <= 0.5,
+            "case {case}: load T_k {est} vs exact {exact} (rel {rel:.3}) on {itfc:?} x{}",
+            sizes.len()
+        );
+    }
+}
+
 #[test]
 fn prop_schedule_beats_or_matches_fifo() {
     use aquas::synthesis::scheduling::mixed_sequence_latency;

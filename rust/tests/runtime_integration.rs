@@ -275,3 +275,157 @@ fn attention_artifact_matches_serving_numerics() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Paged-KV continuous-batching engine
+// ---------------------------------------------------------------------------
+
+use aquas::coordinator::PagedKvConfig;
+use aquas::runtime::DecodeSlot;
+
+#[test]
+fn batched_decode_path_matches_llm_decode_entry_bitwise() {
+    // The serving hot path (Runtime::decode_batch over gathered working
+    // sets) must be numerically identical to the per-token llm_decode
+    // entry — same TinyLlm::step under the hood, zero drift allowed.
+    let rt = runtime();
+    let m = rt.manifest().model.clone();
+    let mut ids = vec![3i32, 14, 15, 9];
+    let plen = ids.len();
+    ids.resize(m.prefill_len, 0);
+    let outs = rt
+        .execute("llm_prefill", &[Tensor::i32(ids, &[1, m.prefill_len]).unwrap()])
+        .unwrap();
+    let (k0, v0) = (outs[1].clone(), outs[2].clone());
+    let tok = 42i32;
+
+    // Entry path: tensors in, tensors out.
+    let entry = rt
+        .execute(
+            "llm_decode",
+            &[
+                Tensor::i32(vec![tok], &[1, 1]).unwrap(),
+                k0.clone(),
+                v0.clone(),
+                Tensor::i32(vec![plen as i32], &[1]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let entry_logits = entry[0].as_f32().unwrap();
+
+    // Batched path: in-place slices.
+    let mut kc = k0.as_f32().unwrap().to_vec();
+    let mut vc = v0.as_f32().unwrap().to_vec();
+    assert_eq!(kc.len(), rt.kv_elems());
+    let logits = {
+        let mut slots =
+            [DecodeSlot { token: tok, pos: plen, kc: &mut kc, vc: &mut vc }];
+        rt.decode_batch(&mut slots).unwrap()
+    };
+    assert_eq!(logits[0].as_slice(), entry_logits, "logits diverge");
+    // The written KV slot must match the entry's output caches too.
+    assert_eq!(kc.as_slice(), entry[1].as_f32().unwrap(), "K cache diverges");
+    assert_eq!(vc.as_slice(), entry[2].as_f32().unwrap(), "V cache diverges");
+}
+
+#[test]
+fn tiny_pool_preempts_and_still_matches_solo_tokens() {
+    // A deliberately starved block pool: two long generations cannot both
+    // hold their full working sets, so decode growth must preempt —
+    // and recompute re-admission must reproduce the exact token streams.
+    let rt = runtime();
+    let solo = |prompt: Vec<i32>| {
+        let mut c = Coordinator::new(&rt, CoordinatorConfig::default());
+        c.submit(prompt, 16).unwrap();
+        c.run_to_completion().unwrap()[0].generated.clone()
+    };
+    let s1 = solo(vec![10, 20, 30, 40]);
+    let s2 = solo(vec![50, 60, 70, 80]);
+
+    let mut c = Coordinator::new(
+        &rt,
+        CoordinatorConfig {
+            kv: PagedKvConfig { block_slots: 4, num_blocks: 7 },
+            ..Default::default()
+        },
+    );
+    c.submit(vec![10, 20, 30, 40], 16).unwrap();
+    c.submit(vec![50, 60, 70, 80], 16).unwrap();
+    let metrics = c.run_to_completion().unwrap();
+    assert_eq!(metrics.len(), 2);
+    assert_eq!(metrics[0].generated, s1, "request 0 perturbed by preemption");
+    assert_eq!(metrics[1].generated, s2, "request 1 perturbed by preemption");
+    assert!(
+        c.preemptions() > 0,
+        "7 blocks x 4 slots cannot hold two 20-slot sequences without preemption"
+    );
+    assert!(metrics.iter().any(|m| m.preemptions > 0));
+    let kv = c.kv_stats();
+    assert!(kv.leak_free(), "blocks leaked after preemption churn: {kv:?}");
+}
+
+#[test]
+fn oversized_request_for_the_pool_is_rejected_up_front() {
+    let rt = runtime();
+    let mut c = Coordinator::new(
+        &rt,
+        CoordinatorConfig {
+            kv: PagedKvConfig { block_slots: 4, num_blocks: 3 },
+            ..Default::default()
+        },
+    );
+    // 4 + 16 = 20 slots > 3 blocks x 4 slots: must be rejected, not
+    // deadlock the scheduler later.
+    assert!(c.submit(vec![1, 2, 3, 4], 16).is_err());
+    // A request that fits the pool is fine.
+    assert!(c.submit(vec![1, 2, 3, 4], 6).is_ok());
+    let metrics = c.run_to_completion().unwrap();
+    assert_eq!(metrics[0].generated.len(), 6);
+    assert!(c.kv_stats().leak_free());
+}
+
+#[test]
+fn fair_policy_matches_decode_first_tokens() {
+    // Scheduling policy reorders work in time but must never change the
+    // greedy numerics of any request.
+    let rt = runtime();
+    let run = |policy| {
+        let mut c = Coordinator::new(&rt, CoordinatorConfig { policy, ..Default::default() });
+        for i in 0..5 {
+            c.submit(vec![i as i32 * 7 + 1, 2, 3], 4).unwrap();
+        }
+        let ms = c.run_to_completion().unwrap();
+        assert!(c.kv_stats().leak_free());
+        ms.into_iter().map(|m| (m.id, m.generated)).collect::<Vec<_>>()
+    };
+    let df = run(SchedulePolicy::DecodeFirst);
+    let fair = run(SchedulePolicy::Fair);
+    let pf = run(SchedulePolicy::PrefillFirst);
+    assert_eq!(df, fair, "Fair diverged from DecodeFirst");
+    assert_eq!(df, pf, "PrefillFirst diverged from DecodeFirst");
+}
+
+#[test]
+fn trace_arrivals_gate_admission_and_ttft_accounts_queueing() {
+    use aquas::coordinator::TraceSpec;
+    let rt = runtime();
+    let m = rt.manifest().model.clone();
+    let spec = TraceSpec { n: 6, seed: 5, rate: 1.0, plen: (4, 8), gen: (4, 6) };
+    let reqs = spec.generate(m.vocab, m.prefill_len);
+    let mut c = Coordinator::new(&rt, CoordinatorConfig::default());
+    let ids = c.submit_trace(&reqs).unwrap();
+    assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+    let metrics = c.run_to_completion().unwrap();
+    assert_eq!(metrics.len(), 6);
+    // The engine can never finish before the last request has arrived.
+    let last_arrival = reqs.last().unwrap().arrive_ms;
+    assert!(
+        c.sim_now_ms() >= last_arrival,
+        "clock {} ended before final arrival {last_arrival}",
+        c.sim_now_ms()
+    );
+    for m in &metrics {
+        assert!(m.ttft_us > 0);
+        assert!(!m.generated.is_empty());
+    }
+}
