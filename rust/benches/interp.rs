@@ -1,0 +1,90 @@
+//! `cargo bench --bench interp` — IR interpreter engine benchmark.
+//!
+//! Three sections:
+//! 1. the library report (`bench_harness::interp::report`): every AOT
+//!    kernel at manifest shapes executed through the tree-walking oracle
+//!    and the compiled register-bytecode VM, recording wall time,
+//!    compile cost and per-kernel `speedup_vs_legacy` (the tree-walker
+//!    *is* the legacy engine and stays in-tree as the oracle, so no
+//!    embedded copy is needed);
+//! 2. a **seeded random-program fuzz sweep**: `random_program` generates
+//!    nested-loop/if/copy/irf programs and `check_equivalent` demands
+//!    bit-identical outputs, memory images, irf, `ExecStats` — or
+//!    identical failures — from both engines;
+//! 3. the JSON report (`--out <path>`, default `BENCH_interp.json`) and
+//!    the CI gate (`--check`): fails on ANY divergence (kernels or fuzz
+//!    seeds) or a geo-mean speedup below 5x.
+//!
+//! `-- --test` is the CI smoke mode (fewer reps / seeds).
+
+use aquas::bench_harness::interp::{check_equivalent, random_program};
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--test");
+    let out_path =
+        flag_value(&args, "--out").unwrap_or_else(|| "BENCH_interp.json".to_string());
+    let check = args.iter().any(|a| a == "--check");
+
+    // 1. Kernel replay through both engines.
+    let mut report = aquas::bench_harness::interp::report(quick);
+
+    // 2. Fuzz sweep: seeded random programs, exact equivalence demanded.
+    let n_seeds: u64 = if quick { 32 } else { 128 };
+    let mut failures: Vec<String> = Vec::new();
+    for seed in 0..n_seeds {
+        let f = random_program(seed);
+        if let Err(e) = check_equivalent(&f, seed) {
+            failures.push(e);
+        }
+    }
+    println!(
+        "fuzz: {n_seeds} seeded random programs through both engines, {} divergence(s)",
+        failures.len()
+    );
+    for e in &failures {
+        eprintln!("FUZZ DIVERGENCE: {e}");
+    }
+    report.metric("fuzz_seeds", n_seeds as f64);
+    report.metric("fuzz_agree", if failures.is_empty() { 1.0 } else { 0.0 });
+
+    println!("\n{}", report.render());
+
+    // 3. JSON report + gates.
+    std::fs::write(&out_path, report.metrics_json())
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("report written to {out_path}");
+
+    if check {
+        let mut failed = false;
+        // Gate 1: the differential — every kernel and every fuzz seed
+        // must agree between the VM and the tree-walking oracle.
+        for (metric, value) in &report.metrics {
+            if metric.ends_with("_agree") && *value != 1.0 {
+                eprintln!("GATE FAILED: {metric} != 1 (engines diverge); see {out_path}");
+                failed = true;
+            }
+        }
+        // Gate 2: the point of the rewrite — compile-once execution must
+        // hold a geo-mean speedup of at least 5x over the tree-walker.
+        let geomean = report.metrics["geomean_speedup_vs_legacy"];
+        if geomean < 5.0 {
+            eprintln!(
+                "REGRESSION: geo-mean speedup {geomean:.2}x over the tree-walker is \
+                 below the 5x acceptance bar"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "checks ok: VM ≡ tree-walker on all kernels + {n_seeds} fuzz seeds; \
+             geo-mean speedup {geomean:.2}x (gate: 5x)"
+        );
+    }
+}

@@ -1,0 +1,913 @@
+//! IR-interpreter benchmarks (`cargo bench --bench interp`).
+//!
+//! Measures, per AOT kernel at *manifest* shapes, the tree-walking
+//! reference interpreter ([`crate::ir::interp`]) against the compiled
+//! register-bytecode VM ([`crate::ir::vm`]): wall time per execution,
+//! one-off compile cost, and `speedup_vs_legacy`. The tree-walker *is*
+//! the legacy engine — it stays in-tree as the differential oracle, so
+//! the comparison needs no embedded copy (unlike `benches/egraph.rs`).
+//!
+//! The module also hosts the building blocks the differential tests
+//! share:
+//!
+//! - the IR spellings of every AOT kernel entry (`ir_gf2mm`, `ir_vmvar`,
+//!   …) used by `tests/golden_diff.rs` for the interp/vm/runtime triple
+//!   check;
+//! - [`random_program`], a seeded random Aquas-IR generator (nested
+//!   loops with carried values, if/else, loads/stores, bulk copies, irf
+//!   traffic, mixed int/float dataflow) used by `tests/vm_diff.rs` and
+//!   the bench's `--check` fuzz gate;
+//! - [`check_equivalent`], which runs one function through both engines
+//!   on identically seeded memories and compares return values, the full
+//!   memory image (bit-exact, via the typed arena views), the irf, and
+//!   [`ExecStats`] — or, for failing programs, that both engines fail
+//!   identically.
+
+use std::time::Instant;
+
+use crate::interface::cache::CacheHint;
+use crate::interface::model::InterfaceId;
+use crate::interface::TransactionKind;
+use crate::ir::builder::FuncBuilder;
+use crate::ir::func::BufferId;
+use crate::ir::interp::{self, ExecStats, Memory, Val};
+use crate::ir::ops::CmpPred;
+use crate::ir::types::Type;
+use crate::ir::{vm, Func, Value};
+use crate::runtime::DType;
+use crate::util::rng::Rng;
+use crate::util::stats::geomean;
+use crate::workloads::graphics::{KA, KD, KS, RGB2YUV, SHININESS};
+
+use super::Report;
+
+// ---------------------------------------------------------------------------
+// IR spellings of the AOT kernel entries (manifest shapes)
+// ---------------------------------------------------------------------------
+
+/// gf2mm — `[n,n] x [n,n]` over GF(2) (and/xor datapath).
+pub fn ir_gf2mm(n: i64) -> Func {
+    let mut b = FuncBuilder::new("gf2mm_ir");
+    let a = b.global("a", DType::I32, (n * n) as usize, CacheHint::Warm);
+    let bm = b.global("b", DType::I32, (n * n) as usize, CacheHint::Warm);
+    let s = b.global("s", DType::I32, (n * n) as usize, CacheHint::Warm);
+    b.for_range(0, n, 1, |b, r| {
+        b.for_range(0, n, 1, |b, c| {
+            b.for_range(0, n, 1, |b, k| {
+                let nn = b.const_i(n);
+                let rk = b.mul(r, nn);
+                let aidx = b.add(rk, k);
+                let av = b.load(a, aidx);
+                let kn = b.mul(k, nn);
+                let bidx = b.add(kn, c);
+                let bv = b.load(bm, bidx);
+                let prod = b.and(av, bv);
+                let rc = b.mul(r, nn);
+                let sidx = b.add(rc, c);
+                let sv = b.load(s, sidx);
+                let acc = b.xor(sv, prod);
+                b.store(s, sidx, acc);
+            });
+        });
+    });
+    b.finish(&[])
+}
+
+/// vdecomp — `[nwords]` packed words -> `[nwords*32]` bits (shift/mask).
+pub fn ir_vdecomp(nwords: i64) -> Func {
+    let nbits = nwords * 32;
+    let mut b = FuncBuilder::new("vdecomp_ir");
+    let e = b.global("e", DType::I32, nwords as usize, CacheHint::Warm);
+    let out = b.global("out", DType::I32, nbits as usize, CacheHint::Warm);
+    b.for_range(0, nbits, 1, |b, i| {
+        let five = b.const_i(5);
+        let word_idx = b.shr(i, five);
+        let w = b.load(e, word_idx);
+        let mask31 = b.const_i(31);
+        let sh = b.and(i, mask31);
+        let shifted = b.shr(w, sh);
+        let one = b.const_i(1);
+        let bit = b.and(shifted, one);
+        b.store(out, i, bit);
+    });
+    b.finish(&[])
+}
+
+/// vdist3 — `[n,3]`² -> `[n]` squared distances.
+pub fn ir_vdist3(n: i64) -> Func {
+    let mut b = FuncBuilder::new("vdist3_ir");
+    let p = b.global("p", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let q = b.global("q", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let d = b.global("d", DType::F32, n as usize, CacheHint::Warm);
+    b.for_range(0, n, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        let mut acc = b.const_f(0.0);
+        for dim in 0..3 {
+            let off = b.const_i(dim);
+            let idx = b.add(base, off);
+            let pv = b.load(p, idx);
+            let qv = b.load(q, idx);
+            let diff = b.sub(pv, qv);
+            let sq = b.mul(diff, diff);
+            acc = b.add(acc, sq);
+        }
+        b.store(d, i, acc);
+    });
+    b.finish(&[])
+}
+
+/// mcov — `[n,3]`² -> `[3,3]` cross-covariance of *centered* points.
+/// Assumes the `pm`/`qm` mean buffers start zeroed (they are outputs of
+/// the first two stages).
+pub fn ir_mcov_centered(n: i64) -> Func {
+    let mut b = FuncBuilder::new("mcov_ir");
+    let p = b.global("p", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let q = b.global("q", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let pm = b.global("pm", DType::F32, 3, CacheHint::Warm);
+    let qm = b.global("qm", DType::F32, 3, CacheHint::Warm);
+    let cov = b.global("cov", DType::F32, 9, CacheHint::Warm);
+    // Column sums.
+    b.for_range(0, n, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        for d in 0..3 {
+            let off = b.const_i(d);
+            let idx = b.add(base, off);
+            let pv = b.load(p, idx);
+            let ps = b.load(pm, off);
+            let ps2 = b.add(ps, pv);
+            b.store(pm, off, ps2);
+            let qv = b.load(q, idx);
+            let qs = b.load(qm, off);
+            let qs2 = b.add(qs, qv);
+            b.store(qm, off, qs2);
+        }
+    });
+    // Sums -> means.
+    b.for_range(0, 3, 1, |b, d| {
+        let nf = b.const_f(n as f64);
+        let ps = b.load(pm, d);
+        let pmean = b.div(ps, nf);
+        b.store(pm, d, pmean);
+        let qs = b.load(qm, d);
+        let qmean = b.div(qs, nf);
+        b.store(qm, d, qmean);
+    });
+    // Centered cross-covariance.
+    b.for_range(0, n, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        b.for_range(0, 3, 1, |b, r| {
+            b.for_range(0, 3, 1, |b, c| {
+                let pr = b.add(base, r);
+                let pv = b.load(p, pr);
+                let pmv = b.load(pm, r);
+                let pc = b.sub(pv, pmv);
+                let qc_idx = b.add(base, c);
+                let qv = b.load(q, qc_idx);
+                let qmv = b.load(qm, c);
+                let qc = b.sub(qv, qmv);
+                let prod = b.mul(pc, qc);
+                let three2 = b.const_i(3);
+                let rr = b.mul(r, three2);
+                let cidx = b.add(rr, c);
+                let old = b.load(cov, cidx);
+                let acc = b.add(old, prod);
+                b.store(cov, cidx, acc);
+            });
+        });
+    });
+    b.finish(&[])
+}
+
+/// vfsmax — `[n]` -> max + argmax. Refines from `mx[0]` (seed it to
+/// `x[0]` when comparing against the runtime entry).
+pub fn ir_vfsmax(n: i64) -> Func {
+    let mut b = FuncBuilder::new("vfsmax_ir");
+    let x = b.global("x", DType::F32, n as usize, CacheHint::Warm);
+    let mx = b.global("mx", DType::F32, 1, CacheHint::Warm);
+    let am = b.global("am", DType::I32, 1, CacheHint::Warm);
+    b.for_range(0, n, 1, |b, i| {
+        let v = b.load(x, i);
+        let zero = b.const_i(0);
+        let cur = b.load(mx, zero);
+        let better = b.cmp(CmpPred::Gt, v, cur);
+        let newmax = b.select(better, v, cur);
+        b.store(mx, zero, newmax);
+        let curi = b.load(am, zero);
+        let newi = b.select(better, i, curi);
+        b.store(am, zero, newi);
+    });
+    b.finish(&[])
+}
+
+/// vmadot — `[rows,cols] · [cols]` -> `[rows]`.
+pub fn ir_vmadot(rows: i64, cols: i64) -> Func {
+    let mut b = FuncBuilder::new("vmadot_ir");
+    let m = b.global("m", DType::F32, (rows * cols) as usize, CacheHint::Warm);
+    let v = b.global("v", DType::F32, cols as usize, CacheHint::Warm);
+    let y = b.global("y", DType::F32, rows as usize, CacheHint::Warm);
+    b.for_range(0, rows, 1, |b, r| {
+        b.for_range(0, cols, 1, |b, c| {
+            let cc = b.const_i(cols);
+            let rb = b.mul(r, cc);
+            let midx = b.add(rb, c);
+            let mv = b.load(m, midx);
+            let vv = b.load(v, c);
+            let prod = b.mul(mv, vv);
+            let old = b.load(y, r);
+            let acc = b.add(old, prod);
+            b.store(y, r, acc);
+        });
+    });
+    b.finish(&[])
+}
+
+/// phong — `[n,3]`³ unit vectors -> `[n]` intensities.
+pub fn ir_phong(n: i64) -> Func {
+    let mut b = FuncBuilder::new("phong_ir");
+    let nrm = b.global("nrm", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let lgt = b.global("lgt", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let view = b.global("view", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let out = b.global("inten", DType::F32, n as usize, CacheHint::Warm);
+    b.for_range(0, n, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        let mut nv = [None; 3];
+        let mut lv = [None; 3];
+        let mut vv = [None; 3];
+        for d in 0..3usize {
+            let off = b.const_i(d as i64);
+            let idx = b.add(base, off);
+            nv[d] = Some(b.load(nrm, idx));
+            lv[d] = Some(b.load(lgt, idx));
+            vv[d] = Some(b.load(view, idx));
+        }
+        let mut ndotl = b.const_f(0.0);
+        for d in 0..3 {
+            let p = b.mul(nv[d].unwrap(), lv[d].unwrap());
+            ndotl = b.add(ndotl, p);
+        }
+        let zero_f = b.const_f(0.0);
+        let ndotl = b.max(ndotl, zero_f);
+        let two = b.const_f(2.0);
+        let scale = b.mul(two, ndotl);
+        let mut rdotv = b.const_f(0.0);
+        for d in 0..3 {
+            let rn = b.mul(scale, nv[d].unwrap());
+            let refl = b.sub(rn, lv[d].unwrap());
+            let p = b.mul(refl, vv[d].unwrap());
+            rdotv = b.add(rdotv, p);
+        }
+        let zero_f2 = b.const_f(0.0);
+        let rdotv = b.max(rdotv, zero_f2);
+        let spec_pow = b.powi(rdotv, SHININESS);
+        let gate = b.cmp(CmpPred::Gt, ndotl, zero_f2);
+        let zero_f3 = b.const_f(0.0);
+        let spec = b.select(gate, spec_pow, zero_f3);
+        let ka = b.const_f(KA);
+        let kd = b.const_f(KD);
+        let ks = b.const_f(KS);
+        let diff = b.mul(kd, ndotl);
+        let sp = b.mul(ks, spec);
+        let partial = b.add(ka, diff);
+        let inten = b.add(partial, sp);
+        b.store(out, i, inten);
+    });
+    b.finish(&[])
+}
+
+/// vrgb2yuv — `[n,3]` -> `[n,3]` colorspace matrix.
+pub fn ir_vrgb2yuv(n: i64) -> Func {
+    let mut b = FuncBuilder::new("vrgb2yuv_ir");
+    let rgb = b.global("rgb", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    let yuv = b.global("yuv", DType::F32, (n * 3) as usize, CacheHint::Warm);
+    b.for_range(0, n, 1, |b, i| {
+        let three = b.const_i(3);
+        let base = b.mul(i, three);
+        for (row, coeffs) in RGB2YUV.iter().enumerate() {
+            let mut acc = b.const_f(0.0);
+            for (c, &coeff) in coeffs.iter().enumerate() {
+                let off = b.const_i(c as i64);
+                let idx = b.add(base, off);
+                let v = b.load(rgb, idx);
+                let k = b.const_f(coeff);
+                let p = b.mul(v, k);
+                acc = b.add(acc, p);
+            }
+            let roff = b.const_i(row as i64);
+            let oidx = b.add(base, roff);
+            b.store(yuv, oidx, acc);
+        }
+    });
+    b.finish(&[])
+}
+
+/// vmvar — `[rows,w]` -> (`[rows]` mean, `[rows]` var).
+pub fn ir_vmvar(rows: i64, w: i64) -> Func {
+    let mut b = FuncBuilder::new("vmvar_ir");
+    let x = b.global("x", DType::F32, (rows * w) as usize, CacheHint::Warm);
+    let mean = b.global("mean", DType::F32, rows as usize, CacheHint::Warm);
+    let var = b.global("var", DType::F32, rows as usize, CacheHint::Warm);
+    b.for_range(0, rows, 1, |b, r| {
+        let wc = b.const_i(w);
+        let base = b.mul(r, wc);
+        b.for_range(0, w, 1, |b, i| {
+            let idx = b.add(base, i);
+            let v = b.load(x, idx);
+            let s = b.load(mean, r);
+            let s2 = b.add(s, v);
+            b.store(mean, r, s2);
+            let sq = b.mul(v, v);
+            let m2 = b.load(var, r);
+            let m22 = b.add(m2, sq);
+            b.store(var, r, m22);
+        });
+        let wf = b.const_f(w as f64);
+        let s = b.load(mean, r);
+        let m = b.div(s, wf);
+        b.store(mean, r, m);
+        let m2 = b.load(var, r);
+        let ex2 = b.div(m2, wf);
+        let msq = b.mul(m, m);
+        let v = b.sub(ex2, msq);
+        b.store(var, r, v);
+    });
+    b.finish(&[])
+}
+
+/// Every AOT kernel entry as an IR function at its manifest shape
+/// (serving entries excluded: the transformer runs in `runtime::sim`).
+pub fn aot_cases() -> Vec<(&'static str, Func)> {
+    vec![
+        ("gf2mm", ir_gf2mm(64)),
+        ("vdecomp", ir_vdecomp(16)),
+        ("vdist3", ir_vdist3(256)),
+        ("mcov", ir_mcov_centered(256)),
+        ("vfsmax", ir_vfsmax(256)),
+        ("vmadot", ir_vmadot(64, 64)),
+        ("phong", ir_phong(256)),
+        ("vrgb2yuv", ir_vrgb2yuv(256)),
+        ("vmvar", ir_vmvar(64, 16)),
+        ("attention", crate::workloads::llm::ir_causal_attention(4, 64, 16)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Differential checking
+// ---------------------------------------------------------------------------
+
+/// Fill every buffer and the irf deterministically from `seed`.
+pub fn seed_memory(func: &Func, mem: &mut Memory, seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x5EED_F00D);
+    for (i, decl) in func.buffers.iter().enumerate() {
+        let id = BufferId(i as u32);
+        match decl.elem {
+            DType::F32 => {
+                let data: Vec<f32> =
+                    (0..decl.len).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+                mem.write_f32(id, &data);
+            }
+            DType::I32 => {
+                let data: Vec<i32> =
+                    (0..decl.len).map(|_| rng.below(256) as i32 - 128).collect();
+                mem.write_i32(id, &data);
+            }
+        }
+    }
+    for r in mem.irf.iter_mut() {
+        *r = rng.below(64) as i64 - 32;
+    }
+}
+
+fn vals_equal(a: &Val, b: &Val) -> bool {
+    match (a, b) {
+        (Val::I(x), Val::I(y)) => x == y,
+        (Val::F(x), Val::F(y)) => x.to_bits() == y.to_bits(),
+        _ => false,
+    }
+}
+
+/// Bit-exact comparison of two memory images: every buffer through the
+/// typed arena views (float equality by `to_bits`, so NaNs compare), plus
+/// the integer register file. Shared by [`check_equivalent`] and the
+/// golden-diff triple check.
+pub fn memories_equal(
+    func: &Func,
+    m1: &Memory,
+    m2: &Memory,
+) -> std::result::Result<(), String> {
+    for (i, decl) in func.buffers.iter().enumerate() {
+        let id = BufferId(i as u32);
+        let same = match (m1.f64s(id), m2.f64s(id)) {
+            (Some(a), Some(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (None, None) => m1.i64s(id) == m2.i64s(id),
+            _ => false,
+        };
+        if !same {
+            return Err(format!("{}: buffer `{}` image diverges", func.name, decl.name));
+        }
+    }
+    if m1.irf != m2.irf {
+        return Err(format!("{}: irf diverges", func.name));
+    }
+    Ok(())
+}
+
+/// Run `func` through the tree-walker and the bytecode VM on identically
+/// seeded memories; `Err(diagnosis)` on any divergence in return values,
+/// memory image (bit-exact), irf, [`ExecStats`], or error verdict.
+pub fn check_equivalent(func: &Func, seed: u64) -> std::result::Result<(), String> {
+    let args: Vec<Val> = func
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| match func.value_type(p) {
+            Type::Float => Val::F(0.25 + i as f64),
+            _ => Val::I(2 + i as i64),
+        })
+        .collect();
+    let mut m1 = Memory::for_func(func);
+    seed_memory(func, &mut m1, seed);
+    let mut m2 = m1.clone();
+    let mut s1 = ExecStats::default();
+    let mut s2 = ExecStats::default();
+    let r1 = interp::run_with_stats(func, &args, &mut m1, &mut s1);
+    let compiled =
+        vm::compile(func).map_err(|e| format!("{}: vm compile failed: {e}", func.name))?;
+    let r2 = compiled.run_with_stats(&args, &mut m2, &mut s2);
+    match (&r1, &r2) {
+        (Ok(a), Ok(b)) => {
+            if a.len() != b.len() || !a.iter().zip(b.iter()).all(|(x, y)| vals_equal(x, y)) {
+                return Err(format!("{}: outputs diverge: {a:?} vs {b:?}", func.name));
+            }
+        }
+        (Err(e1), Err(e2)) => {
+            if e1.to_string() != e2.to_string() {
+                return Err(format!("{}: errors diverge: `{e1}` vs `{e2}`", func.name));
+            }
+        }
+        _ => {
+            return Err(format!(
+                "{}: verdicts diverge: walker {r1:?} vs vm {r2:?}",
+                func.name
+            ))
+        }
+    }
+    if s1 != s2 {
+        return Err(format!("{}: stats diverge: {s1:?} vs {s2:?}", func.name));
+    }
+    memories_equal(func, &m1, &m2)
+}
+
+// ---------------------------------------------------------------------------
+// Seeded random-program generator
+// ---------------------------------------------------------------------------
+
+/// Generate a deterministic random Aquas-IR function: nested `for`s with
+/// loop-carried values, `if`/`else`, in-bounds loads/stores, bulk
+/// transfers/copies (including overlapping same-buffer moves), irf
+/// traffic, and mixed int/float dataflow (`exp` included, clamped).
+/// Indices are wrapped in-bounds and divisors are non-zero constants, so
+/// generated programs execute cleanly; NaN-producing float chains are
+/// possible and must fail identically in both engines.
+pub fn random_program(seed: u64) -> Func {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xF0_22);
+    let mut b = FuncBuilder::new(format!("fuzz_{seed}"));
+    let mut ints: Vec<Value> = (0..rng.range(0, 3)).map(|_| b.param(Type::Int)).collect();
+    let mut bufs: Vec<(BufferId, DType, i64)> = Vec::new();
+    for bi in 0..rng.range(2, 5) {
+        let len = *rng.choose(&[4i64, 8, 12, 16, 32]);
+        let dt = if rng.bool(0.5) { DType::F32 } else { DType::I32 };
+        bufs.push((b.global(&format!("b{bi}"), dt, len as usize, CacheHint::Warm), dt, len));
+    }
+    let mut floats: Vec<Value> = Vec::new();
+    ints.push(b.const_i(1));
+    ints.push(b.const_i(3));
+    ints.push(b.const_i(-2));
+    floats.push(b.const_f(0.5));
+    floats.push(b.const_f(-1.25));
+    gen_block(&mut b, &mut rng, &bufs, &mut ints, &mut floats, 0, 60);
+    let mut rets: Vec<Value> = Vec::new();
+    for _ in 0..rng.range(0, 4) {
+        rets.push(if rng.bool(0.5) { *rng.choose(&ints) } else { *rng.choose(&floats) });
+    }
+    b.finish(&rets)
+}
+
+/// An always-in-bounds index: `((x % len) + len) % len` over a pool int.
+fn inbounds_index(b: &mut FuncBuilder, rng: &mut Rng, ints: &[Value], len: i64) -> Value {
+    let x = *rng.choose(ints);
+    let lc = b.const_i(len);
+    let r1 = b.rem(x, lc);
+    let r2 = b.add(r1, lc);
+    b.rem(r2, lc)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gen_block(
+    b: &mut FuncBuilder,
+    rng: &mut Rng,
+    bufs: &[(BufferId, DType, i64)],
+    ints: &mut Vec<Value>,
+    floats: &mut Vec<Value>,
+    depth: usize,
+    budget: usize,
+) {
+    let n_stmts = rng.range(2, 8).min(budget.max(1));
+    for _ in 0..n_stmts {
+        match rng.below(14) {
+            0 | 1 => {
+                // Int arithmetic / bitwise.
+                let x = *rng.choose(ints);
+                let y = *rng.choose(ints);
+                let v = match rng.below(8) {
+                    0 => b.add(x, y),
+                    1 => b.sub(x, y),
+                    2 => b.mul(x, y),
+                    3 => b.and(x, y),
+                    4 => b.or(x, y),
+                    5 => b.xor(x, y),
+                    6 => b.min(x, y),
+                    _ => b.max(x, y),
+                };
+                ints.push(v);
+            }
+            2 => {
+                // Shifts with masked amounts; div/rem by non-zero consts.
+                let x = *rng.choose(ints);
+                let v = match rng.below(4) {
+                    0 => {
+                        let seven = b.const_i(7);
+                        let amt = b.and(x, seven);
+                        let y = *rng.choose(ints);
+                        b.shl(y, amt)
+                    }
+                    1 => {
+                        let seven = b.const_i(7);
+                        let amt = b.and(x, seven);
+                        let y = *rng.choose(ints);
+                        b.shr(y, amt)
+                    }
+                    2 => {
+                        let c = b.const_i(*rng.choose(&[2i64, 3, 5, 8]));
+                        b.div(x, c)
+                    }
+                    _ => {
+                        let c = b.const_i(*rng.choose(&[2i64, 3, 5, 8]));
+                        b.rem(x, c)
+                    }
+                };
+                ints.push(v);
+            }
+            3 | 4 => {
+                // Float arithmetic.
+                let x = *rng.choose(floats);
+                let y = *rng.choose(floats);
+                let v = match rng.below(5) {
+                    0 => b.add(x, y),
+                    1 => b.sub(x, y),
+                    2 => b.mul(x, y),
+                    3 => b.min(x, y),
+                    _ => b.max(x, y),
+                };
+                floats.push(v);
+            }
+            5 => {
+                // Unary float: clamped exp, sqrt of a square, neg, powi.
+                let x = *rng.choose(floats);
+                let v = match rng.below(4) {
+                    0 => {
+                        let hi = b.const_f(4.0);
+                        let lo = b.const_f(-30.0);
+                        let x1 = b.min(x, hi);
+                        let x2 = b.max(x1, lo);
+                        b.exp(x2)
+                    }
+                    1 => {
+                        let sq = b.mul(x, x);
+                        b.sqrt(sq)
+                    }
+                    2 => b.neg(x),
+                    _ => b.powi(x, rng.below(4) as u32),
+                };
+                floats.push(v);
+            }
+            6 => {
+                // Conversions.
+                if rng.bool(0.5) {
+                    let x = *rng.choose(ints);
+                    let v = b.to_float(x);
+                    floats.push(v);
+                } else {
+                    let x = *rng.choose(floats);
+                    let v = b.to_int(x);
+                    ints.push(v);
+                }
+            }
+            7 => {
+                // Compare + select (same-typed arms).
+                let preds =
+                    [CmpPred::Eq, CmpPred::Ne, CmpPred::Lt, CmpPred::Le, CmpPred::Gt, CmpPred::Ge];
+                let pred = *rng.choose(&preds);
+                let c = if rng.bool(0.7) {
+                    let x = *rng.choose(ints);
+                    let y = *rng.choose(ints);
+                    b.cmp(pred, x, y)
+                } else {
+                    let x = *rng.choose(floats);
+                    let y = *rng.choose(floats);
+                    b.cmp(pred, x, y)
+                };
+                ints.push(c);
+                if rng.bool(0.5) {
+                    let x = *rng.choose(ints);
+                    let y = *rng.choose(ints);
+                    let v = b.select(c, x, y);
+                    ints.push(v);
+                } else {
+                    let x = *rng.choose(floats);
+                    let y = *rng.choose(floats);
+                    let v = b.select(c, x, y);
+                    floats.push(v);
+                }
+            }
+            8 | 9 => {
+                // Load (typed by the buffer) / store (occasionally
+                // cross-typed to exercise the arena's store coercion).
+                let (buf, dt, len) = *rng.choose(bufs);
+                let idx = inbounds_index(b, rng, ints, len);
+                if rng.bool(0.55) {
+                    let v = b.load(buf, idx);
+                    match dt {
+                        DType::F32 => floats.push(v),
+                        DType::I32 => ints.push(v),
+                    }
+                } else {
+                    let cross = rng.bool(0.2);
+                    let v = match (dt, cross) {
+                        (DType::F32, false) | (DType::I32, true) => *rng.choose(floats),
+                        _ => *rng.choose(ints),
+                    };
+                    b.store(buf, idx, v);
+                }
+            }
+            10 => {
+                // Integer register file traffic.
+                let reg = rng.below(32) as u8;
+                let v = *rng.choose(ints);
+                b.write_irf(reg, v);
+                let r = b.read_irf(reg);
+                ints.push(r);
+            }
+            11 => {
+                // Bulk transfer/copy with constant in-bounds offsets
+                // (same-buffer overlap included on purpose).
+                let (dst, _, dlen) = *rng.choose(bufs);
+                let (src, _, slen) = *rng.choose(bufs);
+                let n = rng.range(1, dlen.min(slen) as usize + 1) as i64;
+                let d_off = rng.range(0, (dlen - n + 1) as usize) as i64;
+                let s_off = rng.range(0, (slen - n + 1) as usize) as i64;
+                let dv = b.const_i(d_off * 4);
+                let sv = b.const_i(s_off * 4);
+                if rng.bool(0.7) {
+                    b.transfer(dst, dv, src, sv, (n * 4) as usize);
+                } else {
+                    b.copy(
+                        InterfaceId(0),
+                        dst,
+                        dv,
+                        src,
+                        sv,
+                        (n * 4) as usize,
+                        TransactionKind::Load,
+                    );
+                }
+            }
+            12 => {
+                // Nested for with carried values.
+                if depth >= 3 || budget < 8 {
+                    ints.push(b.const_i(7));
+                    continue;
+                }
+                let trip = rng.range(1, 6) as i64;
+                let lb = b.const_i(0);
+                let ub = b.const_i(trip);
+                let step = b.const_i(if rng.bool(0.3) { 2 } else { 1 });
+                let mut init = Vec::new();
+                let mut carried_is_float = Vec::new();
+                for _ in 0..rng.range(0, 3) {
+                    if rng.bool(0.5) {
+                        init.push(*rng.choose(ints));
+                        carried_is_float.push(false);
+                    } else {
+                        init.push(*rng.choose(floats));
+                        carried_is_float.push(true);
+                    }
+                }
+                let mut crng = Rng::new(rng.next_u64());
+                let mut ints_c = ints.clone();
+                let mut floats_c = floats.clone();
+                let cif = carried_is_float.clone();
+                let inner_budget = budget / 2;
+                let results = b.for_loop(lb, ub, step, &init, move |b, iv, carried| {
+                    ints_c.push(iv);
+                    for (k, &cv) in carried.iter().enumerate() {
+                        if cif[k] {
+                            floats_c.push(cv);
+                        } else {
+                            ints_c.push(cv);
+                        }
+                    }
+                    gen_block(b, &mut crng, bufs, &mut ints_c, &mut floats_c, depth + 1, inner_budget);
+                    cif.iter()
+                        .map(|&isf| {
+                            if isf {
+                                *crng.choose(&floats_c)
+                            } else {
+                                *crng.choose(&ints_c)
+                            }
+                        })
+                        .collect()
+                });
+                for (k, &r) in results.iter().enumerate() {
+                    if carried_is_float[k] {
+                        floats.push(r);
+                    } else {
+                        ints.push(r);
+                    }
+                }
+            }
+            _ => {
+                // If/else with matching-typed yields.
+                if depth >= 3 || budget < 8 {
+                    floats.push(b.const_f(0.75));
+                    continue;
+                }
+                let x = *rng.choose(ints);
+                let y = *rng.choose(ints);
+                let cond = b.cmp(*rng.choose(&[CmpPred::Lt, CmpPred::Ge, CmpPred::Ne]), x, y);
+                let res_is_float: Vec<bool> = (0..rng.range(0, 3)).map(|_| rng.bool(0.5)).collect();
+                let mut r1 = Rng::new(rng.next_u64());
+                let mut r2 = Rng::new(rng.next_u64());
+                let mut i1 = ints.clone();
+                let mut f1 = floats.clone();
+                let mut i2 = ints.clone();
+                let mut f2 = floats.clone();
+                let rif1 = res_is_float.clone();
+                let rif2 = res_is_float.clone();
+                let inner_budget = budget / 3;
+                let results = b.if_else(
+                    cond,
+                    move |b| {
+                        gen_block(b, &mut r1, bufs, &mut i1, &mut f1, depth + 1, inner_budget);
+                        rif1.iter()
+                            .map(|&isf| if isf { *r1.choose(&f1) } else { *r1.choose(&i1) })
+                            .collect()
+                    },
+                    move |b| {
+                        gen_block(b, &mut r2, bufs, &mut i2, &mut f2, depth + 1, inner_budget);
+                        rif2.iter()
+                            .map(|&isf| if isf { *r2.choose(&f2) } else { *r2.choose(&i2) })
+                            .collect()
+                    },
+                );
+                for (k, &r) in results.iter().enumerate() {
+                    if res_is_float[k] {
+                        floats.push(r);
+                    } else {
+                        ints.push(r);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The bench report
+// ---------------------------------------------------------------------------
+
+fn name_seed(name: &str) -> u64 {
+    name.bytes().fold(0xD1F0u64, |h, c| h.wrapping_mul(31).wrapping_add(c as u64))
+}
+
+/// Mean wall ms per execution against a clone of `template` (cloning
+/// stays outside the timed region so both engines pay identical setup).
+fn time_ms<F: FnMut(&mut Memory)>(template: &Memory, quick: bool, mut run: F) -> f64 {
+    let (min_reps, max_reps, target_s) = if quick { (1, 3, 0.005) } else { (3, 40, 0.06) };
+    let mut total = 0.0;
+    let mut reps = 0usize;
+    loop {
+        let mut m = template.clone();
+        let t0 = Instant::now();
+        run(&mut m);
+        total += t0.elapsed().as_secs_f64();
+        reps += 1;
+        if reps >= max_reps || (reps >= min_reps && total >= target_s) {
+            break;
+        }
+    }
+    total / reps as f64 * 1e3
+}
+
+/// The interpreter engine report: per AOT kernel, tree-walker vs
+/// compiled-bytecode wall time, the one-off compile cost, the speedup,
+/// and the differential verdict. `quick` is the CI smoke mode.
+pub fn report(quick: bool) -> Report {
+    let mut r = Report::new(
+        "IR interpreter — register-bytecode VM vs tree-walking oracle \
+         (every AOT kernel at manifest shapes)",
+        vec!["kernel", "walker ms", "vm ms", "compile ms", "speedup", "insns", "agree"],
+    );
+    let mut speedups = Vec::new();
+    let mut all_agree = true;
+    for (name, func) in aot_cases() {
+        let agree = match check_equivalent(&func, name_seed(name)) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("DIVERGENCE: {e}");
+                false
+            }
+        };
+        all_agree &= agree;
+
+        let t0 = Instant::now();
+        let compiled = vm::compile(&func).expect("AOT kernel compiles to bytecode");
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut template = Memory::for_func(&func);
+        seed_memory(&func, &mut template, name_seed(name) ^ 0xBEEF);
+        let walker_ms = time_ms(&template, quick, |m| {
+            interp::run(&func, &[], m).expect("tree-walker run");
+        });
+        let vm_ms = time_ms(&template, quick, |m| {
+            compiled.run(&[], m).expect("vm run");
+        });
+        let speedup = walker_ms / vm_ms.max(1e-9);
+        speedups.push(speedup);
+
+        r.row(vec![
+            name.into(),
+            format!("{walker_ms:.3}"),
+            format!("{vm_ms:.3}"),
+            format!("{compile_ms:.3}"),
+            format!("{speedup:.1}x"),
+            compiled.num_insns().to_string(),
+            if agree { "yes".into() } else { "NO".into() },
+        ]);
+        r.metric(&format!("{name}_legacy_ms"), walker_ms);
+        r.metric(&format!("{name}_vm_ms"), vm_ms);
+        r.metric(&format!("{name}_vm_compile_ms"), compile_ms);
+        r.metric(&format!("{name}_speedup_vs_legacy"), speedup);
+        r.metric(&format!("{name}_agree"), if agree { 1.0 } else { 0.0 });
+    }
+    r.metric("kernels", speedups.len() as f64);
+    r.metric("geomean_speedup_vs_legacy", geomean(&speedups));
+    r.metric("all_agree", if all_agree { 1.0 } else { 0.0 });
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_aot_case_compiles_and_agrees() {
+        for (name, func) in aot_cases() {
+            check_equivalent(&func, name_seed(name))
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn random_programs_are_deterministic_per_seed() {
+        let a = random_program(42);
+        let c = random_program(42);
+        assert_eq!(a.num_ops(), c.num_ops());
+        assert_eq!(a.buffers.len(), c.buffers.len());
+        assert_eq!(
+            crate::ir::printer::print_func(&a),
+            crate::ir::printer::print_func(&c),
+            "generator must be deterministic"
+        );
+        let d = random_program(43);
+        assert_ne!(
+            crate::ir::printer::print_func(&a),
+            crate::ir::printer::print_func(&d),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn a_few_fuzz_seeds_agree_in_unit_tests() {
+        for seed in 0..12 {
+            let f = random_program(seed);
+            check_equivalent(&f, seed).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod egraph;
 pub mod fir7;
+pub mod interp;
 pub mod report;
 pub mod serve;
 pub mod table2;

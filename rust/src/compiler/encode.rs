@@ -141,6 +141,7 @@ impl<'a> Ctx<'a> {
             | OpKind::Neg
             | OpKind::Select
             | OpKind::Sqrt
+            | OpKind::Exp
             | OpKind::ToFloat
             | OpKind::ToInt => {
                 let kids: Vec<ClassId> = op.operands.iter().map(|&v| self.value(v)).collect();

@@ -150,6 +150,9 @@ pub fn affine_cost(sym: &str, kids: &[f64]) -> f64 {
         match sym {
             "shl" | "shr" => 10.0, // non-affine index forms
             "div" | "rem" => 8.0,
+            // Transcendentals are expensive scalar FUs but never index
+            // math; keep them extractable without distorting index forms.
+            "exp" | "sqrt" => 6.0,
             "mul" => 1.0,
             "for" => 2.0,
             _ => 1.0,

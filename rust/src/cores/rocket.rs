@@ -154,7 +154,7 @@ fn arith_mix(func: &Func) -> (u64, u64, u64, u64) {
     func.walk(|_, op| match op.kind {
         OpKind::Mul => m += 1,
         OpKind::Div | OpKind::Rem => d += 1,
-        OpKind::Sqrt | OpKind::Powi(_) => f += 1,
+        OpKind::Sqrt | OpKind::Exp | OpKind::Powi(_) => f += 1,
         OpKind::Add
         | OpKind::Sub
         | OpKind::Shl

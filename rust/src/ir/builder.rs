@@ -153,6 +153,10 @@ impl FuncBuilder {
         self.emit(OpKind::Sqrt, vec![a], Some(Type::Float)).unwrap()
     }
 
+    pub fn exp(&mut self, a: Value) -> Value {
+        self.emit(OpKind::Exp, vec![a], Some(Type::Float)).unwrap()
+    }
+
     pub fn powi(&mut self, a: Value, e: u32) -> Value {
         self.emit(OpKind::Powi(e), vec![a], Some(Type::Float)).unwrap()
     }

@@ -6,6 +6,18 @@
 //! synthesis transformations (§4.3) and compiler rewrites (§5.3) preserve
 //! behaviour, and to check the ISAX datapaths against the AOT Pallas
 //! artifacts (see `rust/tests/`).
+//!
+//! This module is the *tree-walking* engine: it re-dispatches on `OpKind`
+//! per executed op against a register map. Since PR 4 it serves as the
+//! differential oracle for the compiled register-bytecode VM
+//! ([`crate::ir::vm`]), which executes the same semantics at
+//! compile-once/run-many speed. Traced execution (`run_traced` with a
+//! live trace sink) always routes through this engine.
+//!
+//! [`Memory`] is shared by both engines: a flat *typed* arena — one
+//! `Vec<f64>` or `Vec<i64>` per buffer, no per-element tag — so bulk
+//! copies are slice operations and host read-back needs no per-element
+//! match.
 
 use std::collections::HashMap;
 
@@ -37,11 +49,21 @@ impl Val {
     }
 }
 
-/// Memory image: one typed vector per buffer, plus an integer register file
-/// for `read_irf`/`write_irf`.
+/// Typed storage for one buffer: float buffers hold `f64` (the
+/// interpreter's float width), int buffers hold `i64`. Flat and untagged —
+/// the buffer's declared element type decides the representation, and
+/// values coerce on store exactly like the host read-back always did.
+#[derive(Debug, Clone)]
+pub(crate) enum BufData {
+    F(Vec<f64>),
+    I(Vec<i64>),
+}
+
+/// Memory image: one typed flat vector per buffer, plus an integer
+/// register file for `read_irf`/`write_irf`.
 #[derive(Debug, Clone, Default)]
 pub struct Memory {
-    bufs: HashMap<BufferId, Vec<Val>>,
+    pub(crate) bufs: Vec<BufData>,
     pub irf: [i64; 32],
 }
 
@@ -49,57 +71,151 @@ impl Memory {
     /// Allocate every buffer declared by `func`, zero-initialized.
     pub fn for_func(func: &Func) -> Self {
         let mut mem = Memory::default();
-        for (i, decl) in func.buffers.iter().enumerate() {
-            let zero = match decl.elem {
-                DType::F32 => Val::F(0.0),
-                DType::I32 => Val::I(0),
-            };
-            mem.bufs.insert(BufferId(i as u32), vec![zero; decl.len]);
+        for decl in &func.buffers {
+            mem.bufs.push(match decl.elem {
+                DType::F32 => BufData::F(vec![0.0; decl.len]),
+                DType::I32 => BufData::I(vec![0; decl.len]),
+            });
         }
         mem
     }
 
     pub fn write_f32(&mut self, buf: BufferId, data: &[f32]) {
-        let v = self.bufs.get_mut(&buf).expect("unknown buffer");
-        for (slot, &x) in v.iter_mut().zip(data) {
-            *slot = Val::F(x as f64);
+        match &mut self.bufs[buf.0 as usize] {
+            BufData::F(v) => {
+                for (slot, &x) in v.iter_mut().zip(data) {
+                    *slot = x as f64;
+                }
+            }
+            BufData::I(v) => {
+                for (slot, &x) in v.iter_mut().zip(data) {
+                    *slot = x as i64;
+                }
+            }
         }
     }
 
     pub fn write_i32(&mut self, buf: BufferId, data: &[i32]) {
-        let v = self.bufs.get_mut(&buf).expect("unknown buffer");
-        for (slot, &x) in v.iter_mut().zip(data) {
-            *slot = Val::I(x as i64);
+        match &mut self.bufs[buf.0 as usize] {
+            BufData::F(v) => {
+                for (slot, &x) in v.iter_mut().zip(data) {
+                    *slot = x as f64;
+                }
+            }
+            BufData::I(v) => {
+                for (slot, &x) in v.iter_mut().zip(data) {
+                    *slot = x as i64;
+                }
+            }
         }
     }
 
     pub fn read_f32(&self, buf: BufferId) -> Vec<f32> {
-        self.bufs[&buf].iter().map(|v| match v {
-            Val::F(x) => *x as f32,
-            Val::I(x) => *x as f32,
-        }).collect()
+        match &self.bufs[buf.0 as usize] {
+            BufData::F(v) => v.iter().map(|&x| x as f32).collect(),
+            BufData::I(v) => v.iter().map(|&x| x as f32).collect(),
+        }
     }
 
     pub fn read_i32(&self, buf: BufferId) -> Vec<i32> {
-        self.bufs[&buf].iter().map(|v| match v {
-            Val::I(x) => *x as i32,
-            Val::F(x) => *x as i32,
-        }).collect()
+        match &self.bufs[buf.0 as usize] {
+            BufData::F(v) => v.iter().map(|&x| x as i32).collect(),
+            BufData::I(v) => v.iter().map(|&x| x as i32).collect(),
+        }
+    }
+
+    /// Borrowed typed view of a float buffer (`None` for int buffers).
+    pub fn f64s(&self, buf: BufferId) -> Option<&[f64]> {
+        match &self.bufs[buf.0 as usize] {
+            BufData::F(v) => Some(v),
+            BufData::I(_) => None,
+        }
+    }
+
+    /// Borrowed typed view of an int buffer (`None` for float buffers).
+    pub fn i64s(&self, buf: BufferId) -> Option<&[i64]> {
+        match &self.bufs[buf.0 as usize] {
+            BufData::I(v) => Some(v),
+            BufData::F(_) => None,
+        }
     }
 
     fn get(&self, buf: BufferId, idx: i64, len: usize) -> Result<Val> {
         if idx < 0 || idx as usize >= len {
             return Err(Error::Ir(format!("index {idx} out of bounds (len {len})")));
         }
-        Ok(self.bufs[&buf][idx as usize])
+        Ok(match &self.bufs[buf.0 as usize] {
+            BufData::F(v) => Val::F(v[idx as usize]),
+            BufData::I(v) => Val::I(v[idx as usize]),
+        })
     }
 
     fn set(&mut self, buf: BufferId, idx: i64, len: usize, val: Val) -> Result<()> {
         if idx < 0 || idx as usize >= len {
             return Err(Error::Ir(format!("index {idx} out of bounds (len {len})")));
         }
-        self.bufs.get_mut(&buf).unwrap()[idx as usize] = val;
+        match &mut self.bufs[buf.0 as usize] {
+            BufData::F(v) => {
+                v[idx as usize] = match val {
+                    Val::F(x) => x,
+                    Val::I(x) => x as f64,
+                }
+            }
+            BufData::I(v) => {
+                v[idx as usize] = match val {
+                    Val::I(x) => x,
+                    Val::F(x) => x as i64,
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Bulk element copy (element offsets, not bytes). Bounds must have
+    /// been validated by the caller ([`checked_copy`]). Same-buffer
+    /// copies keep the historical forward element-by-element semantics;
+    /// distinct same-typed buffers are a straight slice copy.
+    pub(crate) fn bulk_copy(&mut self, dst: BufferId, d0: usize, src: BufferId, s0: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let (di, si) = (dst.0 as usize, src.0 as usize);
+        if di == si {
+            match &mut self.bufs[di] {
+                BufData::F(v) => {
+                    for i in 0..n {
+                        v[d0 + i] = v[s0 + i];
+                    }
+                }
+                BufData::I(v) => {
+                    for i in 0..n {
+                        v[d0 + i] = v[s0 + i];
+                    }
+                }
+            }
+            return;
+        }
+        let (dbuf, sbuf) = if di < si {
+            let (lo, hi) = self.bufs.split_at_mut(si);
+            (&mut lo[di], &hi[0])
+        } else {
+            let (lo, hi) = self.bufs.split_at_mut(di);
+            (&mut hi[0], &lo[si])
+        };
+        match (dbuf, sbuf) {
+            (BufData::F(d), BufData::F(s)) => d[d0..d0 + n].copy_from_slice(&s[s0..s0 + n]),
+            (BufData::I(d), BufData::I(s)) => d[d0..d0 + n].copy_from_slice(&s[s0..s0 + n]),
+            (BufData::F(d), BufData::I(s)) => {
+                for i in 0..n {
+                    d[d0 + i] = s[s0 + i] as f64;
+                }
+            }
+            (BufData::I(d), BufData::F(s)) => {
+                for i in 0..n {
+                    d[d0 + i] = s[s0 + i] as i64;
+                }
+            }
+        }
     }
 }
 
@@ -259,6 +375,10 @@ fn exec_op(
             stats.arith_ops += 1;
             set1!(Val::F(get(env, op.operands[0])?.as_f()?.sqrt()))
         }
+        OpKind::Exp => {
+            stats.arith_ops += 1;
+            set1!(Val::F(get(env, op.operands[0])?.as_f()?.exp()))
+        }
         OpKind::Powi(e) => {
             stats.arith_ops += *e as u64;
             set1!(Val::F(get(env, op.operands[0])?.as_f()?.powi(*e as i32)))
@@ -334,7 +454,16 @@ fn exec_op(
             stats.transfer_bytes += *size as u64;
             let dst_off = get(env, op.operands[0])?.as_i()?;
             let src_off = get(env, op.operands[1])?.as_i()?;
-            do_copy(func, mem, *dst, dst_off, *src, src_off, *size)?;
+            checked_copy(
+                mem,
+                *dst,
+                dst_off,
+                *src,
+                src_off,
+                *size,
+                func.buffer(*dst).len,
+                func.buffer(*src).len,
+            )?;
         }
         OpKind::CopyIssue { dst, src, size, tag, .. } => {
             stats.transfers += 1;
@@ -350,7 +479,16 @@ fn exec_op(
             let p = pending
                 .remove(tag)
                 .ok_or_else(|| Error::Ir(format!("copy_wait: unknown tag {tag}")))?;
-            do_copy(func, mem, p.dst, p.dst_off, p.src, p.src_off, p.size)?;
+            checked_copy(
+                mem,
+                p.dst,
+                p.dst_off,
+                p.src,
+                p.src_off,
+                p.size,
+                func.buffer(p.dst).len,
+                func.buffer(p.src).len,
+            )?;
         }
         OpKind::For => {
             let lb = get(env, op.operands[0])?.as_i()?;
@@ -413,33 +551,34 @@ fn exec_op(
     Ok(None)
 }
 
-fn do_copy(
-    func: &Func,
+/// Validate + perform one bulk copy. Offsets/sizes are in bytes; elements
+/// are 4 bytes. Shared verbatim by the tree-walker and the bytecode VM so
+/// transfer semantics (including error strings) cannot diverge.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn checked_copy(
     mem: &mut Memory,
     dst: BufferId,
     dst_off: i64,
     src: BufferId,
     src_off: i64,
     size: usize,
+    dlen: usize,
+    slen: usize,
 ) -> Result<()> {
-    // Offsets/sizes are in bytes; elements are 4 bytes.
     if size % 4 != 0 || dst_off % 4 != 0 || src_off % 4 != 0 {
         return Err(Error::Ir("transfer offsets/size must be 4B-aligned".into()));
     }
     let n = size / 4;
     let d0 = (dst_off / 4) as usize;
     let s0 = (src_off / 4) as usize;
-    let dlen = func.buffer(dst).len;
-    let slen = func.buffer(src).len;
-    if d0 + n > dlen || s0 + n > slen {
+    // Overflow-safe spelling of `d0 + n > dlen || s0 + n > slen` (negative
+    // byte offsets cast to huge usizes).
+    if d0 > dlen || n > dlen - d0 || s0 > slen || n > slen - s0 {
         return Err(Error::Ir(format!(
             "transfer out of bounds: dst {d0}+{n}>{dlen} or src {s0}+{n}>{slen}"
         )));
     }
-    for i in 0..n {
-        let v = mem.get(src, (s0 + i) as i64, slen)?;
-        mem.set(dst, (d0 + i) as i64, dlen, v)?;
-    }
+    mem.bulk_copy(dst, d0, src, s0, n);
     Ok(())
 }
 
@@ -595,5 +734,35 @@ mod tests {
         let f = b.finish(&[v]);
         let mut mem = Memory::for_func(&f);
         assert!(run(&f, &[], &mut mem).is_err());
+    }
+
+    #[test]
+    fn exp_evaluates_and_counts() {
+        let mut b = FuncBuilder::new("e");
+        let x = b.const_f(1.5);
+        let e = b.exp(x);
+        let f = b.finish(&[e]);
+        let mut mem = Memory::for_func(&f);
+        let mut stats = ExecStats::default();
+        let out = run_with_stats(&f, &[], &mut mem, &mut stats).unwrap();
+        assert_eq!(out, vec![Val::F(1.5f64.exp())]);
+        assert_eq!(stats.arith_ops, 1);
+    }
+
+    #[test]
+    fn typed_views_expose_arena() {
+        let mut b = FuncBuilder::new("v");
+        let g = b.global("g", DType::F32, 4, CacheHint::Unknown);
+        let i = b.global("i", DType::I32, 4, CacheHint::Unknown);
+        let f = b.finish(&[]);
+        let mut mem = Memory::for_func(&f);
+        mem.write_f32(g, &[1.0, 2.0, 3.0, 4.0]);
+        mem.write_i32(i, &[5, 6, 7, 8]);
+        assert_eq!(mem.f64s(g).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(mem.i64s(i).unwrap(), &[5, 6, 7, 8]);
+        assert!(mem.f64s(i).is_none());
+        assert!(mem.i64s(g).is_none());
+        assert_eq!(mem.read_f32(g), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(mem.read_i32(i), vec![5, 6, 7, 8]);
     }
 }

@@ -16,7 +16,9 @@
 //!
 //! Submodules: [`types`], [`ops`], [`func`] (module/function/arena),
 //! [`builder`], [`printer`], [`verifier`], [`affine`] (index analysis),
-//! [`interp`] (reference interpreter used for HW/SW equivalence checks).
+//! [`interp`] (tree-walking reference interpreter used for HW/SW
+//! equivalence checks), [`vm`] (compile-once register-bytecode engine,
+//! differentially pinned against [`interp`]).
 
 pub mod affine;
 pub mod builder;
@@ -26,6 +28,7 @@ pub mod ops;
 pub mod printer;
 pub mod types;
 pub mod verifier;
+pub mod vm;
 
 pub use builder::FuncBuilder;
 pub use func::{BufferDecl, BufferId, BufferKind, Func, OpRef, Region, Value};

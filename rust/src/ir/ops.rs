@@ -50,6 +50,9 @@ pub enum OpKind {
     Select,
     /// Square root (Float).
     Sqrt,
+    /// Natural exponential (Float) — the softmax/SwiGLU primitive that
+    /// lets attention run fully in-IR (see `workloads::llm`).
+    Exp,
     /// Power with constant integer exponent (graphics: shininess).
     Powi(u32),
     /// Int -> Float.
@@ -186,6 +189,7 @@ impl OpKind {
             OpKind::Cmp(_) => "cmp",
             OpKind::Select => "select",
             OpKind::Sqrt => "sqrt",
+            OpKind::Exp => "exp",
             OpKind::Powi(_) => "powi",
             OpKind::ToFloat => "to_float",
             OpKind::ToInt => "to_int",

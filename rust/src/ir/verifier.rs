@@ -125,7 +125,12 @@ fn check_arity(f: &Func, op: &Op) -> Result<()> {
         | OpKind::Min
         | OpKind::Max
         | OpKind::Cmp(_) => (2, 1),
-        OpKind::Neg | OpKind::Sqrt | OpKind::Powi(_) | OpKind::ToFloat | OpKind::ToInt => (1, 1),
+        OpKind::Neg
+        | OpKind::Sqrt
+        | OpKind::Exp
+        | OpKind::Powi(_)
+        | OpKind::ToFloat
+        | OpKind::ToInt => (1, 1),
         OpKind::Select => (3, 1),
         OpKind::Load(_) | OpKind::Fetch(_) | OpKind::ReadSmem(_) => (1, 1),
         OpKind::LoadItfc { .. } => (1, 1),

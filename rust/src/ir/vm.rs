@@ -1,0 +1,1168 @@
+//! Register-bytecode VM for Aquas-IR: compile a [`Func`] once, execute
+//! many times at near-native speed.
+//!
+//! The tree-walking reference interpreter ([`crate::ir::interp`])
+//! re-dispatches on `OpKind` per executed op and keeps SSA values in a
+//! `HashMap<Value, Val>`. That is the right shape for an oracle, but it
+//! bounds every interp-backed workload (differential tests, proptests,
+//! interp-driven serving validation) at tens of nanoseconds *per op per
+//! iteration*. This module pays the analysis cost once per function
+//! instead:
+//!
+//! - **Dense typed register files.** One `i64` and one `f64` slot per SSA
+//!   value (value ids are already dense), indexed directly — no hashing,
+//!   no enum tag. Every instruction is monomorphized to its operand type
+//!   at compile time (`BinI` vs `BinF`, `LoadI` vs `LoadF`, …); the
+//!   tree-walker's runtime "mixed types" dispatch becomes a compile-time
+//!   check.
+//! - **Constants folded at compile time.** `const.i`/`const.f` ops emit
+//!   no instructions at all: they are preloaded into the register image
+//!   before execution, so a constant inside a hot loop costs nothing per
+//!   iteration.
+//! - **Structured control flow lowered to branch targets.** `for` becomes
+//!   head-check / body / increment / back-edge; `if` becomes a
+//!   conditional branch over two straight-line arms. Loop-carried values
+//!   are parallel-moved through scratch registers on the back edge.
+//! - **Bulk memory ops.** `transfer`/`copy`/`copy_issue`+`copy_wait`
+//!   lower to the same `checked_copy` slice operation the tree-walker
+//!   uses (one call per transfer, not one tagged element move per word),
+//!   charging identical [`ExecStats`].
+//!
+//! Semantics are *bit-identical* to the tree-walker by construction: both
+//! engines share [`Memory`]'s typed arena and the transfer helper, float
+//! math is `f64` in both, int math wraps in both, and every error string
+//! and stats increment is mirrored (including order relative to the
+//! failure point). `rust/tests/vm_diff.rs` fuzzes this equivalence with
+//! seeded random programs and `cargo bench --bench interp -- --check`
+//! gates it over every AOT kernel in CI.
+//!
+//! Traced execution (cache-model traces) stays on the tree-walker: the
+//! VM's [`run_traced`] delegates whenever a live trace sink is passed.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::ir::func::{BufferId, Func, Region};
+use crate::ir::interp::{checked_copy, ExecStats, MemAccess, Memory, Val};
+use crate::ir::ops::{CmpPred, OpKind};
+use crate::ir::types::Type;
+use crate::runtime::DType;
+
+/// Integer binary opcodes (operate on the `i64` register file).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum IBin {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Shl,
+    Shr,
+    And,
+    Or,
+    Xor,
+    Min,
+    Max,
+}
+
+/// Float binary opcodes (operate on the `f64` register file).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FBin {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+/// One bytecode instruction. Registers are `u32` indices into the typed
+/// register files; buffer ids / lengths are resolved at compile time.
+#[derive(Debug, Clone)]
+enum Insn {
+    BinI { op: IBin, d: u32, a: u32, b: u32 },
+    BinF { op: FBin, d: u32, a: u32, b: u32 },
+    CmpI { pred: CmpPred, d: u32, a: u32, b: u32 },
+    CmpF { pred: CmpPred, d: u32, a: u32, b: u32 },
+    SelI { d: u32, c: u32, a: u32, b: u32 },
+    SelF { d: u32, c: u32, a: u32, b: u32 },
+    NegI { d: u32, a: u32 },
+    NegF { d: u32, a: u32 },
+    Sqrt { d: u32, a: u32 },
+    Exp { d: u32, a: u32 },
+    Powi { d: u32, a: u32, e: u32 },
+    ToFloat { d: u32, a: u32 },
+    ToInt { d: u32, a: u32 },
+    MovI { d: u32, a: u32 },
+    MovF { d: u32, a: u32 },
+    LoadF { d: u32, idx: u32, buf: u32, len: u32 },
+    LoadI { d: u32, idx: u32, buf: u32, len: u32 },
+    StoreF { idx: u32, val: u32, buf: u32, len: u32 },
+    StoreI { idx: u32, val: u32, buf: u32, len: u32 },
+    ReadIrf { d: u32, r: u8 },
+    WriteIrf { a: u32, r: u8 },
+    Copy { dst: u32, src: u32, d_off: u32, s_off: u32, size: u32, dlen: u32, slen: u32 },
+    Issue { dst: u32, src: u32, d_off: u32, s_off: u32, size: u32, dlen: u32, slen: u32, tag: u32 },
+    Wait { tag: u32 },
+    /// `for` prologue: error on non-positive step (before the first
+    /// head check, matching the tree-walker's evaluation order).
+    StepCheck { step: u32 },
+    /// `for` head: fall through into an iteration (counting it) while
+    /// `iv < ub`, else jump to `exit`.
+    ForHead { iv: u32, ub: u32, exit: u32 },
+    /// `iv += step` on the back edge (loop machinery: no stats).
+    IvInc { iv: u32, step: u32 },
+    Jump { pc: u32 },
+    /// `if` dispatch: counts one branch, falls through when the condition
+    /// register is non-zero, jumps to `else_pc` otherwise.
+    Branch { c: u32, else_pc: u32 },
+    /// An unlowered ISAX intrinsic: counts the call, then errors exactly
+    /// like the tree-walker (`name` indexes the compiled name table).
+    Intrinsic { name: u32 },
+    Halt,
+}
+
+/// An issued-but-not-awaited bulk copy (temporal level).
+#[derive(Debug, Clone, Copy)]
+struct VmPending {
+    dst: u32,
+    src: u32,
+    d_off: i64,
+    s_off: i64,
+    size: u32,
+    dlen: u32,
+    slen: u32,
+}
+
+/// A function compiled to register bytecode. Create once with
+/// [`compile`], execute many times with [`CompiledFunc::run`] /
+/// [`CompiledFunc::run_with_stats`] — executions are independent (fresh
+/// register files each call) and `&self`, so a compiled kernel can be
+/// replayed concurrently.
+#[derive(Debug, Clone)]
+pub struct CompiledFunc {
+    name: String,
+    insns: Vec<Insn>,
+    /// Register-file size (SSA values + compiler temporaries).
+    n_regs: u32,
+    /// Constant register image, applied before execution.
+    init_i: Vec<(u32, i64)>,
+    init_f: Vec<(u32, f64)>,
+    /// Parameter registers in declaration order.
+    params: Vec<(u32, Type)>,
+    /// Return-value registers, filled by the entry terminator.
+    ret: Vec<(u32, Type)>,
+    /// Intrinsic name table (referenced by `Insn::Intrinsic`).
+    intrinsics: Vec<String>,
+}
+
+/// Compile `func` into register bytecode. Fails (with a tree-walker-style
+/// diagnostic) on IR the typed register machine cannot host: mixed-type
+/// arithmetic, float indices, region terminators missing or with the
+/// wrong arity — programs on which the tree-walker would error at
+/// runtime anyway. Two deliberate tightenings over the walker: ill-typed
+/// ops are rejected even when control flow would never reach them, and
+/// scalar args whose `Val` variant does not match the declared param
+/// type are rejected at call time (the walker inserts the mismatched
+/// value and only faults if an op actually consumes it).
+pub fn compile(func: &Func) -> Result<CompiledFunc> {
+    let mut c = Compiler {
+        func,
+        insns: Vec::new(),
+        n_regs: func.num_values() as u32,
+        init_i: Vec::new(),
+        init_f: Vec::new(),
+        ret: Vec::new(),
+        intrinsics: Vec::new(),
+    };
+    let sink = TermSink::Return;
+    c.region(&func.entry, &sink)?;
+    c.insns.push(Insn::Halt);
+    Ok(CompiledFunc {
+        name: func.name.clone(),
+        insns: c.insns,
+        n_regs: c.n_regs,
+        init_i: c.init_i,
+        init_f: c.init_f,
+        params: func.params.iter().map(|&p| (p.0, func.value_type(p))).collect(),
+        ret: c.ret,
+        intrinsics: c.intrinsics,
+    })
+}
+
+/// Compile + execute in one call (the tree-walker-compatible surface).
+pub fn run(func: &Func, args: &[Val], mem: &mut Memory) -> Result<Vec<Val>> {
+    let mut stats = ExecStats::default();
+    run_with_stats(func, args, mem, &mut stats)
+}
+
+/// Compile + execute, collecting [`ExecStats`].
+pub fn run_with_stats(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+) -> Result<Vec<Val>> {
+    compile(func)?.run_with_stats(args, mem, stats)
+}
+
+/// Traced surface: a live trace sink needs per-access callbacks the
+/// bytecode deliberately elides, so tracing falls back to the
+/// tree-walking oracle; without a sink this is the compiled fast path.
+pub fn run_traced(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    trace: &mut Option<Vec<MemAccess>>,
+) -> Result<Vec<Val>> {
+    if trace.is_some() {
+        crate::ir::interp::run_traced(func, args, mem, stats, trace)
+    } else {
+        run_with_stats(func, args, mem, stats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compilation
+// ---------------------------------------------------------------------------
+
+/// What a region terminator feeds.
+enum TermSink {
+    /// Entry region: operands become the function's return values.
+    Return,
+    /// `for` body: operands parallel-move through `temps` into the
+    /// carried registers on the back edge.
+    Loop { temps: Vec<u32>, carried: Vec<u32>, tys: Vec<Type> },
+    /// `if` arm: operands move straight into the result registers.
+    Arm { dests: Vec<u32>, tys: Vec<Type> },
+}
+
+struct Compiler<'a> {
+    func: &'a Func,
+    insns: Vec<Insn>,
+    n_regs: u32,
+    init_i: Vec<(u32, i64)>,
+    init_f: Vec<(u32, f64)>,
+    ret: Vec<(u32, Type)>,
+    intrinsics: Vec<String>,
+}
+
+impl<'a> Compiler<'a> {
+    fn temp(&mut self) -> u32 {
+        let r = self.n_regs;
+        self.n_regs += 1;
+        r
+    }
+
+    fn ty(&self, v: crate::ir::func::Value) -> Type {
+        self.func.value_type(v)
+    }
+
+    fn want(&self, v: crate::ir::func::Value, ty: Type, what: &str) -> Result<u32> {
+        if self.ty(v) != ty {
+            return Err(Error::Ir(format!(
+                "vm compile: {what} expects {ty} operand, got {} ({v})",
+                self.ty(v)
+            )));
+        }
+        Ok(v.0)
+    }
+
+    fn mov(&mut self, ty: Type, d: u32, a: u32) -> Result<()> {
+        match ty {
+            Type::Int => self.insns.push(Insn::MovI { d, a }),
+            Type::Float => self.insns.push(Insn::MovF { d, a }),
+            Type::None => {
+                return Err(Error::Ir("vm compile: cannot move a none-typed value".into()))
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile a region into the instruction stream; returns whether a
+    /// terminator (Yield/Return) was reached. Ops after the terminator
+    /// are unreachable in the tree-walker and are not compiled.
+    fn region(&mut self, region: &Region, sink: &TermSink) -> Result<bool> {
+        // Copy the `&'a Func` out of `self` so op borrows are independent
+        // of the `&mut self` emission calls (no per-op cloning).
+        let func = self.func;
+        for &opref in &region.ops {
+            let op = func.op(opref);
+            match &op.kind {
+                OpKind::Yield | OpKind::Return => {
+                    self.terminator(&op.operands, sink)?;
+                    return Ok(true);
+                }
+                _ => self.op(op)?,
+            }
+        }
+        match sink {
+            TermSink::Return => Ok(false),
+            TermSink::Loop { .. } => Err(Error::Ir("for body missing yield".into())),
+            TermSink::Arm { .. } => Err(Error::Ir("if arm missing yield".into())),
+        }
+    }
+
+    fn terminator(&mut self, operands: &[crate::ir::func::Value], sink: &TermSink) -> Result<()> {
+        match sink {
+            TermSink::Return => {
+                let mut ret = Vec::with_capacity(operands.len());
+                for &v in operands {
+                    let ty = self.ty(v);
+                    let t = self.temp();
+                    self.mov(ty, t, v.0)?;
+                    ret.push((t, ty));
+                }
+                self.ret = ret;
+                self.insns.push(Insn::Halt);
+                Ok(())
+            }
+            TermSink::Loop { temps, carried, tys } => {
+                if operands.len() != carried.len() {
+                    return Err(Error::Ir("for: yield arity != iter_args arity".into()));
+                }
+                for i in 0..operands.len() {
+                    let v = operands[i];
+                    if self.ty(v) != tys[i] {
+                        return Err(Error::Ir(format!(
+                            "vm compile: for yield value {v} type {} != carried type {}",
+                            self.ty(v),
+                            tys[i]
+                        )));
+                    }
+                    self.mov(tys[i], temps[i], v.0)?;
+                }
+                for i in 0..carried.len() {
+                    self.mov(tys[i], carried[i], temps[i])?;
+                }
+                Ok(())
+            }
+            TermSink::Arm { dests, tys } => {
+                if operands.len() != dests.len() {
+                    return Err(Error::Ir("if: arm yield arity mismatch".into()));
+                }
+                for i in 0..operands.len() {
+                    let v = operands[i];
+                    if self.ty(v) != tys[i] {
+                        return Err(Error::Ir(format!(
+                            "vm compile: if yield value {v} type {} != result type {}",
+                            self.ty(v),
+                            tys[i]
+                        )));
+                    }
+                    self.mov(tys[i], dests[i], v.0)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn buf_len(&self, b: BufferId) -> u32 {
+        self.func.buffer(b).len as u32
+    }
+
+    fn buf_elem(&self, b: BufferId) -> Type {
+        match self.func.buffer(b).elem {
+            DType::F32 => Type::Float,
+            DType::I32 => Type::Int,
+        }
+    }
+
+    /// Emit the instruction(s) for one non-terminator op.
+    fn op(&mut self, op: &crate::ir::ops::Op) -> Result<()> {
+        let kind = &op.kind;
+        match kind {
+            OpKind::ConstI(c) => {
+                self.init_i.push((op.results[0].0, *c));
+            }
+            OpKind::ConstF(c) => {
+                self.init_f.push((op.results[0].0, *c));
+            }
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Min | OpKind::Max => {
+                let (a, b, d) = (op.operands[0], op.operands[1], op.results[0]);
+                let ta = self.ty(a);
+                if ta != self.ty(b) || ta != self.ty(d) {
+                    return Err(Error::Ir(format!("{}: mixed types", kind.mnemonic())));
+                }
+                match ta {
+                    Type::Int => {
+                        let iop = match kind {
+                            OpKind::Add => IBin::Add,
+                            OpKind::Sub => IBin::Sub,
+                            OpKind::Mul => IBin::Mul,
+                            OpKind::Div => IBin::Div,
+                            OpKind::Min => IBin::Min,
+                            OpKind::Max => IBin::Max,
+                            _ => unreachable!(),
+                        };
+                        self.insns.push(Insn::BinI { op: iop, d: d.0, a: a.0, b: b.0 });
+                    }
+                    Type::Float => {
+                        let fop = match kind {
+                            OpKind::Add => FBin::Add,
+                            OpKind::Sub => FBin::Sub,
+                            OpKind::Mul => FBin::Mul,
+                            OpKind::Div => FBin::Div,
+                            OpKind::Min => FBin::Min,
+                            OpKind::Max => FBin::Max,
+                            _ => unreachable!(),
+                        };
+                        self.insns.push(Insn::BinF { op: fop, d: d.0, a: a.0, b: b.0 });
+                    }
+                    Type::None => {
+                        return Err(Error::Ir(format!("{}: none-typed operand", kind.mnemonic())))
+                    }
+                }
+            }
+            OpKind::Rem | OpKind::Shl | OpKind::Shr | OpKind::And | OpKind::Or | OpKind::Xor => {
+                let a = self.want(op.operands[0], Type::Int, kind.mnemonic())?;
+                let b = self.want(op.operands[1], Type::Int, kind.mnemonic())?;
+                let d = self.want(op.results[0], Type::Int, kind.mnemonic())?;
+                let iop = match kind {
+                    OpKind::Rem => IBin::Rem,
+                    OpKind::Shl => IBin::Shl,
+                    OpKind::Shr => IBin::Shr,
+                    OpKind::And => IBin::And,
+                    OpKind::Or => IBin::Or,
+                    OpKind::Xor => IBin::Xor,
+                    _ => unreachable!(),
+                };
+                self.insns.push(Insn::BinI { op: iop, d, a, b });
+            }
+            OpKind::Neg => {
+                let a = op.operands[0];
+                let d = op.results[0];
+                match self.ty(a) {
+                    Type::Int => self.insns.push(Insn::NegI { d: d.0, a: a.0 }),
+                    Type::Float => self.insns.push(Insn::NegF { d: d.0, a: a.0 }),
+                    Type::None => return Err(Error::Ir("neg: none-typed operand".into())),
+                }
+            }
+            OpKind::Sqrt => {
+                let a = self.want(op.operands[0], Type::Float, "sqrt")?;
+                self.insns.push(Insn::Sqrt { d: op.results[0].0, a });
+            }
+            OpKind::Exp => {
+                let a = self.want(op.operands[0], Type::Float, "exp")?;
+                self.insns.push(Insn::Exp { d: op.results[0].0, a });
+            }
+            OpKind::Powi(e) => {
+                let a = self.want(op.operands[0], Type::Float, "powi")?;
+                self.insns.push(Insn::Powi { d: op.results[0].0, a, e: *e });
+            }
+            OpKind::ToFloat => {
+                let a = self.want(op.operands[0], Type::Int, "to_float")?;
+                self.insns.push(Insn::ToFloat { d: op.results[0].0, a });
+            }
+            OpKind::ToInt => {
+                let a = self.want(op.operands[0], Type::Float, "to_int")?;
+                self.insns.push(Insn::ToInt { d: op.results[0].0, a });
+            }
+            OpKind::Cmp(pred) => {
+                let (a, b, d) = (op.operands[0], op.operands[1], op.results[0]);
+                if self.ty(a) != self.ty(b) {
+                    return Err(Error::Ir("cmp: mixed types".into()));
+                }
+                match self.ty(a) {
+                    Type::Int => {
+                        self.insns.push(Insn::CmpI { pred: *pred, d: d.0, a: a.0, b: b.0 })
+                    }
+                    Type::Float => {
+                        self.insns.push(Insn::CmpF { pred: *pred, d: d.0, a: a.0, b: b.0 })
+                    }
+                    Type::None => return Err(Error::Ir("cmp: none-typed operand".into())),
+                }
+            }
+            OpKind::Select => {
+                let c = self.want(op.operands[0], Type::Int, "select")?;
+                let (a, b, d) = (op.operands[1], op.operands[2], op.results[0]);
+                let ta = self.ty(a);
+                if ta != self.ty(b) || ta != self.ty(d) {
+                    return Err(Error::Ir("select: mixed types".into()));
+                }
+                match ta {
+                    Type::Int => self.insns.push(Insn::SelI { d: d.0, c, a: a.0, b: b.0 }),
+                    Type::Float => self.insns.push(Insn::SelF { d: d.0, c, a: a.0, b: b.0 }),
+                    Type::None => return Err(Error::Ir("select: none-typed operand".into())),
+                }
+            }
+            OpKind::Load(b) | OpKind::Fetch(b) | OpKind::ReadSmem(b) => {
+                self.load(*b, op, kind.mnemonic())?;
+            }
+            OpKind::LoadItfc { buf, .. } => {
+                self.load(*buf, op, kind.mnemonic())?;
+            }
+            OpKind::Store(b) | OpKind::WriteSmem(b) => {
+                self.store(*b, op, kind.mnemonic())?;
+            }
+            OpKind::StoreItfc { buf, .. } => {
+                self.store(*buf, op, kind.mnemonic())?;
+            }
+            OpKind::ReadIrf(r) => {
+                let d = self.want(op.results[0], Type::Int, "read_irf")?;
+                self.insns.push(Insn::ReadIrf { d, r: *r });
+            }
+            OpKind::WriteIrf(r) => {
+                let a = self.want(op.operands[0], Type::Int, "write_irf")?;
+                self.insns.push(Insn::WriteIrf { a, r: *r });
+            }
+            OpKind::Transfer { dst, src, size } | OpKind::Copy { dst, src, size, .. } => {
+                let d_off = self.want(op.operands[0], Type::Int, "transfer offset")?;
+                let s_off = self.want(op.operands[1], Type::Int, "transfer offset")?;
+                self.insns.push(Insn::Copy {
+                    dst: dst.0,
+                    src: src.0,
+                    d_off,
+                    s_off,
+                    size: *size as u32,
+                    dlen: self.buf_len(*dst),
+                    slen: self.buf_len(*src),
+                });
+            }
+            OpKind::CopyIssue { dst, src, size, tag, .. } => {
+                let d_off = self.want(op.operands[0], Type::Int, "copy_issue offset")?;
+                let s_off = self.want(op.operands[1], Type::Int, "copy_issue offset")?;
+                self.insns.push(Insn::Issue {
+                    dst: dst.0,
+                    src: src.0,
+                    d_off,
+                    s_off,
+                    size: *size as u32,
+                    dlen: self.buf_len(*dst),
+                    slen: self.buf_len(*src),
+                    tag: *tag,
+                });
+            }
+            OpKind::CopyWait { tag } => {
+                self.insns.push(Insn::Wait { tag: *tag });
+            }
+            OpKind::For => self.for_op(op)?,
+            OpKind::If => self.if_op(op)?,
+            OpKind::Yield | OpKind::Return => unreachable!("handled by region()"),
+            OpKind::Intrinsic(name) => {
+                let idx = self.intrinsics.len() as u32;
+                self.intrinsics.push(name.clone());
+                self.insns.push(Insn::Intrinsic { name: idx });
+            }
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, b: BufferId, op: &crate::ir::ops::Op, what: &str) -> Result<()> {
+        let idx = self.want(op.operands[0], Type::Int, what)?;
+        let d = op.results[0];
+        let elem = self.buf_elem(b);
+        if self.ty(d) != elem {
+            return Err(Error::Ir(format!(
+                "vm compile: {what} result {d} type {} != buffer elem {elem}",
+                self.ty(d)
+            )));
+        }
+        let len = self.buf_len(b);
+        match elem {
+            Type::Float => self.insns.push(Insn::LoadF { d: d.0, idx, buf: b.0, len }),
+            _ => self.insns.push(Insn::LoadI { d: d.0, idx, buf: b.0, len }),
+        }
+        Ok(())
+    }
+
+    fn store(&mut self, b: BufferId, op: &crate::ir::ops::Op, what: &str) -> Result<()> {
+        let idx = self.want(op.operands[0], Type::Int, what)?;
+        let v = op.operands[1];
+        let elem = self.buf_elem(b);
+        let len = self.buf_len(b);
+        // The arena coerces on store; mirror that with an explicit cast
+        // into a temp when the value's type differs from the element.
+        let val = match (elem, self.ty(v)) {
+            (Type::Float, Type::Float) | (Type::Int, Type::Int) => v.0,
+            (Type::Float, Type::Int) => {
+                let t = self.temp();
+                self.insns.push(Insn::ToFloat { d: t, a: v.0 });
+                t
+            }
+            (Type::Int, Type::Float) => {
+                let t = self.temp();
+                self.insns.push(Insn::ToInt { d: t, a: v.0 });
+                t
+            }
+            _ => return Err(Error::Ir(format!("vm compile: {what} of none-typed value"))),
+        };
+        match elem {
+            Type::Float => self.insns.push(Insn::StoreF { idx, val, buf: b.0, len }),
+            _ => self.insns.push(Insn::StoreI { idx, val, buf: b.0, len }),
+        }
+        Ok(())
+    }
+
+    fn for_op(&mut self, op: &crate::ir::ops::Op) -> Result<()> {
+        let lb = self.want(op.operands[0], Type::Int, "for bound")?;
+        let ub = self.want(op.operands[1], Type::Int, "for bound")?;
+        let step = self.want(op.operands[2], Type::Int, "for step")?;
+        let region = &op.regions[0];
+        let iv = self.want(region.params[0], Type::Int, "for iv")?;
+        let carried_vals = &region.params[1..];
+        let inits = &op.operands[3..];
+        if carried_vals.len() != inits.len() {
+            return Err(Error::Ir("for: iter_args arity != region carried params".into()));
+        }
+        if op.results.len() != carried_vals.len() {
+            return Err(Error::Ir("for results != carried count".into()));
+        }
+        self.insns.push(Insn::StepCheck { step });
+        let mut tys = Vec::with_capacity(carried_vals.len());
+        let mut carried = Vec::with_capacity(carried_vals.len());
+        for (&cv, &init) in carried_vals.iter().zip(inits) {
+            let ty = self.ty(cv);
+            if ty != self.ty(init) {
+                return Err(Error::Ir(format!(
+                    "vm compile: for init {init} type {} != carried {cv} type {ty}",
+                    self.ty(init)
+                )));
+            }
+            self.mov(ty, cv.0, init.0)?;
+            tys.push(ty);
+            carried.push(cv.0);
+        }
+        self.insns.push(Insn::MovI { d: iv, a: lb });
+        let head = self.insns.len();
+        self.insns.push(Insn::ForHead { iv, ub, exit: 0 });
+        let temps: Vec<u32> = (0..carried.len()).map(|_| self.temp()).collect();
+        let sink = TermSink::Loop { temps, carried: carried.clone(), tys: tys.clone() };
+        self.region(region, &sink)?;
+        self.insns.push(Insn::IvInc { iv, step });
+        self.insns.push(Insn::Jump { pc: head as u32 });
+        let exit = self.insns.len() as u32;
+        if let Insn::ForHead { exit: e, .. } = &mut self.insns[head] {
+            *e = exit;
+        }
+        for (i, &r) in op.results.iter().enumerate() {
+            if self.ty(r) != tys[i] {
+                return Err(Error::Ir(format!(
+                    "vm compile: for result {r} type {} != carried type {}",
+                    self.ty(r),
+                    tys[i]
+                )));
+            }
+            self.mov(tys[i], r.0, carried[i])?;
+        }
+        Ok(())
+    }
+
+    fn if_op(&mut self, op: &crate::ir::ops::Op) -> Result<()> {
+        let c = self.want(op.operands[0], Type::Int, "if condition")?;
+        let dests: Vec<u32> = op.results.iter().map(|r| r.0).collect();
+        let tys: Vec<Type> = op.results.iter().map(|&r| self.ty(r)).collect();
+        let branch_at = self.insns.len();
+        self.insns.push(Insn::Branch { c, else_pc: 0 });
+        let sink = TermSink::Arm { dests: dests.clone(), tys: tys.clone() };
+        self.region(&op.regions[0], &sink)?;
+        let jump_at = self.insns.len();
+        self.insns.push(Insn::Jump { pc: 0 });
+        let else_pc = self.insns.len() as u32;
+        if let Insn::Branch { else_pc: e, .. } = &mut self.insns[branch_at] {
+            *e = else_pc;
+        }
+        self.region(&op.regions[1], &sink)?;
+        let end = self.insns.len() as u32;
+        if let Insn::Jump { pc } = &mut self.insns[jump_at] {
+            *pc = end;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+impl CompiledFunc {
+    /// Function name (diagnostics).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of bytecode instructions.
+    pub fn num_insns(&self) -> usize {
+        self.insns.len()
+    }
+
+    /// Register-file size (SSA values + compiler temporaries).
+    pub fn num_regs(&self) -> usize {
+        self.n_regs as usize
+    }
+
+    /// Execute against `mem`; returns the function's `return` values.
+    pub fn run(&self, args: &[Val], mem: &mut Memory) -> Result<Vec<Val>> {
+        let mut stats = ExecStats::default();
+        self.run_with_stats(args, mem, &mut stats)
+    }
+
+    /// Execute and collect [`ExecStats`] — identical counts to the
+    /// tree-walking interpreter on the same program and inputs.
+    pub fn run_with_stats(
+        &self,
+        args: &[Val],
+        mem: &mut Memory,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<Val>> {
+        if args.len() != self.params.len() {
+            return Err(Error::Ir(format!(
+                "expected {} args, got {}",
+                self.params.len(),
+                args.len()
+            )));
+        }
+        let mut ri = vec![0i64; self.n_regs as usize];
+        let mut rf = vec![0f64; self.n_regs as usize];
+        for &(r, v) in &self.init_i {
+            ri[r as usize] = v;
+        }
+        for &(r, v) in &self.init_f {
+            rf[r as usize] = v;
+        }
+        for (&(r, ty), a) in self.params.iter().zip(args) {
+            match (ty, a) {
+                (Type::Int, Val::I(v)) => ri[r as usize] = *v,
+                (Type::Float, Val::F(v)) => rf[r as usize] = *v,
+                (_, other) => {
+                    return Err(Error::Ir(format!(
+                        "vm: arg {other:?} does not match declared param type {ty}"
+                    )))
+                }
+            }
+        }
+        let mut pending: HashMap<u32, VmPending> = HashMap::new();
+
+        let oob = |i: i64, len: u32| {
+            Error::Ir(format!("index {i} out of bounds (len {len})", len = len as usize))
+        };
+
+        let mut pc = 0usize;
+        loop {
+            match &self.insns[pc] {
+                Insn::BinI { op, d, a, b } => {
+                    stats.arith_ops += 1;
+                    let x = ri[*a as usize];
+                    let y = ri[*b as usize];
+                    ri[*d as usize] = match op {
+                        IBin::Add => x.wrapping_add(y),
+                        IBin::Sub => x.wrapping_sub(y),
+                        IBin::Mul => x.wrapping_mul(y),
+                        IBin::Div => {
+                            if y == 0 {
+                                return Err(Error::Ir("division by zero".into()));
+                            }
+                            x / y
+                        }
+                        IBin::Rem => {
+                            if y == 0 {
+                                return Err(Error::Ir("remainder by zero".into()));
+                            }
+                            x % y
+                        }
+                        IBin::Shl => x.wrapping_shl(y as u32),
+                        IBin::Shr => x.wrapping_shr(y as u32),
+                        IBin::And => x & y,
+                        IBin::Or => x | y,
+                        IBin::Xor => x ^ y,
+                        IBin::Min => x.min(y),
+                        IBin::Max => x.max(y),
+                    };
+                }
+                Insn::BinF { op, d, a, b } => {
+                    stats.arith_ops += 1;
+                    let x = rf[*a as usize];
+                    let y = rf[*b as usize];
+                    rf[*d as usize] = match op {
+                        FBin::Add => x + y,
+                        FBin::Sub => x - y,
+                        FBin::Mul => x * y,
+                        FBin::Div => x / y,
+                        FBin::Min => x.min(y),
+                        FBin::Max => x.max(y),
+                    };
+                }
+                Insn::CmpI { pred, d, a, b } => {
+                    stats.arith_ops += 1;
+                    let ord = ri[*a as usize].cmp(&ri[*b as usize]);
+                    ri[*d as usize] = cmp_result(*pred, ord) as i64;
+                }
+                Insn::CmpF { pred, d, a, b } => {
+                    stats.arith_ops += 1;
+                    let ord = rf[*a as usize]
+                        .partial_cmp(&rf[*b as usize])
+                        .ok_or_else(|| Error::Ir("cmp: unordered (NaN)".into()))?;
+                    ri[*d as usize] = cmp_result(*pred, ord) as i64;
+                }
+                Insn::SelI { d, c, a, b } => {
+                    stats.arith_ops += 1;
+                    ri[*d as usize] =
+                        if ri[*c as usize] != 0 { ri[*a as usize] } else { ri[*b as usize] };
+                }
+                Insn::SelF { d, c, a, b } => {
+                    stats.arith_ops += 1;
+                    rf[*d as usize] =
+                        if ri[*c as usize] != 0 { rf[*a as usize] } else { rf[*b as usize] };
+                }
+                Insn::NegI { d, a } => {
+                    stats.arith_ops += 1;
+                    ri[*d as usize] = -ri[*a as usize];
+                }
+                Insn::NegF { d, a } => {
+                    stats.arith_ops += 1;
+                    rf[*d as usize] = -rf[*a as usize];
+                }
+                Insn::Sqrt { d, a } => {
+                    stats.arith_ops += 1;
+                    rf[*d as usize] = rf[*a as usize].sqrt();
+                }
+                Insn::Exp { d, a } => {
+                    stats.arith_ops += 1;
+                    rf[*d as usize] = rf[*a as usize].exp();
+                }
+                Insn::Powi { d, a, e } => {
+                    stats.arith_ops += *e as u64;
+                    rf[*d as usize] = rf[*a as usize].powi(*e as i32);
+                }
+                Insn::ToFloat { d, a } => {
+                    rf[*d as usize] = ri[*a as usize] as f64;
+                }
+                Insn::ToInt { d, a } => {
+                    ri[*d as usize] = rf[*a as usize] as i64;
+                }
+                Insn::MovI { d, a } => {
+                    ri[*d as usize] = ri[*a as usize];
+                }
+                Insn::MovF { d, a } => {
+                    rf[*d as usize] = rf[*a as usize];
+                }
+                Insn::LoadF { d, idx, buf, len } => {
+                    stats.loads += 1;
+                    let i = ri[*idx as usize];
+                    if i < 0 || i as u64 >= *len as u64 {
+                        return Err(oob(i, *len));
+                    }
+                    rf[*d as usize] = match &mem.bufs[*buf as usize] {
+                        crate::ir::interp::BufData::F(v) => v[i as usize],
+                        crate::ir::interp::BufData::I(v) => v[i as usize] as f64,
+                    };
+                }
+                Insn::LoadI { d, idx, buf, len } => {
+                    stats.loads += 1;
+                    let i = ri[*idx as usize];
+                    if i < 0 || i as u64 >= *len as u64 {
+                        return Err(oob(i, *len));
+                    }
+                    ri[*d as usize] = match &mem.bufs[*buf as usize] {
+                        crate::ir::interp::BufData::I(v) => v[i as usize],
+                        crate::ir::interp::BufData::F(v) => v[i as usize] as i64,
+                    };
+                }
+                Insn::StoreF { idx, val, buf, len } => {
+                    stats.stores += 1;
+                    let i = ri[*idx as usize];
+                    if i < 0 || i as u64 >= *len as u64 {
+                        return Err(oob(i, *len));
+                    }
+                    let x = rf[*val as usize];
+                    match &mut mem.bufs[*buf as usize] {
+                        crate::ir::interp::BufData::F(v) => v[i as usize] = x,
+                        crate::ir::interp::BufData::I(v) => v[i as usize] = x as i64,
+                    }
+                }
+                Insn::StoreI { idx, val, buf, len } => {
+                    stats.stores += 1;
+                    let i = ri[*idx as usize];
+                    if i < 0 || i as u64 >= *len as u64 {
+                        return Err(oob(i, *len));
+                    }
+                    let x = ri[*val as usize];
+                    match &mut mem.bufs[*buf as usize] {
+                        crate::ir::interp::BufData::I(v) => v[i as usize] = x,
+                        crate::ir::interp::BufData::F(v) => v[i as usize] = x as f64,
+                    }
+                }
+                Insn::ReadIrf { d, r } => {
+                    ri[*d as usize] = mem.irf[*r as usize];
+                }
+                Insn::WriteIrf { a, r } => {
+                    mem.irf[*r as usize] = ri[*a as usize];
+                }
+                Insn::Copy { dst, src, d_off, s_off, size, dlen, slen } => {
+                    stats.transfers += 1;
+                    stats.transfer_bytes += *size as u64;
+                    let doff = ri[*d_off as usize];
+                    let soff = ri[*s_off as usize];
+                    checked_copy(
+                        mem,
+                        BufferId(*dst),
+                        doff,
+                        BufferId(*src),
+                        soff,
+                        *size as usize,
+                        *dlen as usize,
+                        *slen as usize,
+                    )?;
+                }
+                Insn::Issue { dst, src, d_off, s_off, size, dlen, slen, tag } => {
+                    stats.transfers += 1;
+                    stats.transfer_bytes += *size as u64;
+                    pending.insert(
+                        *tag,
+                        VmPending {
+                            dst: *dst,
+                            src: *src,
+                            d_off: ri[*d_off as usize],
+                            s_off: ri[*s_off as usize],
+                            size: *size,
+                            dlen: *dlen,
+                            slen: *slen,
+                        },
+                    );
+                }
+                Insn::Wait { tag } => {
+                    let p = pending
+                        .remove(tag)
+                        .ok_or_else(|| Error::Ir(format!("copy_wait: unknown tag {tag}")))?;
+                    checked_copy(
+                        mem,
+                        BufferId(p.dst),
+                        p.d_off,
+                        BufferId(p.src),
+                        p.s_off,
+                        p.size as usize,
+                        p.dlen as usize,
+                        p.slen as usize,
+                    )?;
+                }
+                Insn::StepCheck { step } => {
+                    let s = ri[*step as usize];
+                    if s <= 0 {
+                        return Err(Error::Ir(format!("for: non-positive step {s}")));
+                    }
+                }
+                Insn::ForHead { iv, ub, exit } => {
+                    if ri[*iv as usize] < ri[*ub as usize] {
+                        stats.loop_iterations += 1;
+                        stats.branches += 1;
+                    } else {
+                        pc = *exit as usize;
+                        continue;
+                    }
+                }
+                Insn::IvInc { iv, step } => {
+                    let s = ri[*step as usize];
+                    ri[*iv as usize] += s;
+                }
+                Insn::Jump { pc: t } => {
+                    pc = *t as usize;
+                    continue;
+                }
+                Insn::Branch { c, else_pc } => {
+                    stats.branches += 1;
+                    if ri[*c as usize] == 0 {
+                        pc = *else_pc as usize;
+                        continue;
+                    }
+                }
+                Insn::Intrinsic { name } => {
+                    stats.intrinsic_calls += 1;
+                    return Err(Error::Ir(format!(
+                        "intrinsic `{}` reached the reference interpreter; lower it or \
+                         execute through the ISAX engine",
+                        self.intrinsics[*name as usize]
+                    )));
+                }
+                Insn::Halt => break,
+            }
+            pc += 1;
+        }
+
+        let mut out = Vec::with_capacity(self.ret.len());
+        for &(r, ty) in &self.ret {
+            out.push(match ty {
+                Type::Float => Val::F(rf[r as usize]),
+                _ => Val::I(ri[r as usize]),
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn cmp_result(pred: CmpPred, ord: std::cmp::Ordering) -> bool {
+    match pred {
+        CmpPred::Eq => ord.is_eq(),
+        CmpPred::Ne => ord.is_ne(),
+        CmpPred::Lt => ord.is_lt(),
+        CmpPred::Le => ord.is_le(),
+        CmpPred::Gt => ord.is_gt(),
+        CmpPred::Ge => ord.is_ge(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::ir::interp;
+
+    fn diff(f: &Func, args: &[Val]) -> (Vec<Val>, Memory) {
+        let mut m1 = Memory::for_func(f);
+        let mut m2 = Memory::for_func(f);
+        let mut s1 = ExecStats::default();
+        let mut s2 = ExecStats::default();
+        let o1 = interp::run_with_stats(f, args, &mut m1, &mut s1).expect("tree-walker");
+        let o2 = compile(f).expect("compile").run_with_stats(args, &mut m2, &mut s2).expect("vm");
+        assert_eq!(o1, o2, "{}: outputs diverge", f.name);
+        assert_eq!(s1, s2, "{}: stats diverge", f.name);
+        (o2, m2)
+    }
+
+    #[test]
+    fn sum_loop_matches_tree_walker() {
+        let mut b = FuncBuilder::new("sum");
+        let buf = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let lb = b.const_i(0);
+        let ub = b.const_i(8);
+        let one = b.const_i(1);
+        let sums = b.for_loop(lb, ub, one, &[zero], |b, iv, carried| {
+            let x = b.load(buf, iv);
+            vec![b.add(carried[0], x)]
+        });
+        let f = b.finish(&sums);
+        let mut mem = Memory::for_func(&f);
+        mem.write_i32(BufferId(0), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let out = compile(&f).unwrap().run(&[], &mut mem).unwrap();
+        assert_eq!(out, vec![Val::I(36)]);
+        diff(&f, &[]);
+    }
+
+    #[test]
+    fn carried_swap_parallel_moves() {
+        // yield [b, a] — the back edge must move through temps, not
+        // clobber sequentially.
+        let mut b = FuncBuilder::new("swap");
+        let x0 = b.const_i(1);
+        let y0 = b.const_i(100);
+        let lb = b.const_i(0);
+        let ub = b.const_i(5);
+        let one = b.const_i(1);
+        let outs = b.for_loop(lb, ub, one, &[x0, y0], |b, _iv, carried| {
+            let sum = b.add(carried[0], carried[1]);
+            vec![carried[1], sum]
+        });
+        let f = b.finish(&outs);
+        let (vals, _) = diff(&f, &[]);
+        // Fibonacci-style recurrence seeded (1, 100).
+        let (mut a, mut c) = (1i64, 100i64);
+        for _ in 0..5 {
+            let s = a + c;
+            a = c;
+            c = s;
+        }
+        assert_eq!(vals, vec![Val::I(a), Val::I(c)]);
+    }
+
+    #[test]
+    fn if_else_and_float_math() {
+        use crate::ir::types::Type;
+        let mut b = FuncBuilder::new("sel");
+        let p = b.param(Type::Int);
+        let zero = b.const_i(0);
+        let c = b.cmp(CmpPred::Gt, p, zero);
+        let r = b.if_else(
+            c,
+            |b| {
+                let x = b.const_f(2.0);
+                vec![b.exp(x)]
+            },
+            |b| {
+                let x = b.const_f(9.0);
+                vec![b.sqrt(x)]
+            },
+        );
+        let f = b.finish(&r);
+        let mut mem = Memory::for_func(&f);
+        let out = compile(&f).unwrap().run(&[Val::I(5)], &mut mem).unwrap();
+        assert_eq!(out, vec![Val::F(2.0f64.exp())]);
+        let out = compile(&f).unwrap().run(&[Val::I(-5)], &mut mem).unwrap();
+        assert_eq!(out, vec![Val::F(3.0)]);
+        diff(&f, &[Val::I(5)]);
+        diff(&f, &[Val::I(-5)]);
+    }
+
+    #[test]
+    fn transfer_and_stats_match() {
+        let mut b = FuncBuilder::new("t");
+        let g = b.global("g", DType::F32, 16, CacheHint::Cold);
+        let s = b.scratchpad("s", DType::F32, 16, 1);
+        let zero = b.const_i(0);
+        b.transfer(s, zero, g, zero, 16 * 4);
+        let f = b.finish(&[]);
+        let mut m1 = Memory::for_func(&f);
+        let mut m2 = Memory::for_func(&f);
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        m1.write_f32(BufferId(0), &data);
+        m2.write_f32(BufferId(0), &data);
+        let mut s1 = ExecStats::default();
+        let mut s2 = ExecStats::default();
+        interp::run_with_stats(&f, &[], &mut m1, &mut s1).unwrap();
+        compile(&f).unwrap().run_with_stats(&[], &mut m2, &mut s2).unwrap();
+        assert_eq!(m2.read_f32(BufferId(1)), data);
+        assert_eq!(s1, s2);
+        assert_eq!(s2.transfers, 1);
+        assert_eq!(s2.transfer_bytes, 64);
+    }
+
+    #[test]
+    fn non_positive_step_rejected_like_tree_walker() {
+        let mut b = FuncBuilder::new("bad");
+        let lb = b.const_i(0);
+        let ub = b.const_i(4);
+        let step = b.const_i(0);
+        b.for_loop(lb, ub, step, &[], |_, _, _| vec![]);
+        let f = b.finish(&[]);
+        let mut m1 = Memory::for_func(&f);
+        let mut m2 = Memory::for_func(&f);
+        let e1 = interp::run(&f, &[], &mut m1).unwrap_err().to_string();
+        let e2 = compile(&f).unwrap().run(&[], &mut m2).unwrap_err().to_string();
+        assert_eq!(e1, e2);
+        assert!(e1.contains("non-positive step"));
+    }
+
+    #[test]
+    fn out_of_bounds_error_matches() {
+        let mut b = FuncBuilder::new("oob");
+        let buf = b.global("x", DType::I32, 2, CacheHint::Unknown);
+        let idx = b.const_i(5);
+        let v = b.load(buf, idx);
+        let f = b.finish(&[v]);
+        let mut m1 = Memory::for_func(&f);
+        let mut m2 = Memory::for_func(&f);
+        let e1 = interp::run(&f, &[], &mut m1).unwrap_err().to_string();
+        let e2 = compile(&f).unwrap().run(&[], &mut m2).unwrap_err().to_string();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn consts_are_preloaded_not_executed() {
+        let mut b = FuncBuilder::new("c");
+        let x = b.global("x", DType::I32, 64, CacheHint::Unknown);
+        b.for_range(0, 64, 1, |b, iv| {
+            let k = b.const_i(3);
+            let v = b.load(x, iv);
+            let w = b.mul(v, k);
+            b.store(x, iv, w);
+        });
+        let f = b.finish(&[]);
+        let c = compile(&f).unwrap();
+        // The loop-body constant contributes zero instructions: only
+        // head/load/mul/store/inc/jump remain inside the loop.
+        let body_insns = c.num_insns();
+        assert!(body_insns <= 12, "expected compact bytecode, got {body_insns}");
+        diff(&f, &[]);
+    }
+}

@@ -22,7 +22,7 @@ COMMANDS:
                                vfsmax vmadot vmvar mphong vrgb2yuv)
     bench <what>              regenerate a table/figure:
                               table2 | table3 | fig2 | fig3 | fig6 | fig7 | fig8 | all
-                              (engine microbenches: egraph | serve)
+                              (engine microbenches: egraph | serve | interp)
     serve [OPTIONS]           run the paged-KV continuous-batching LLM
                               serving engine over the AOT artifacts:
                               --policy decode-first|prefill-first|fair
@@ -125,6 +125,7 @@ fn cmd_bench(args: &[String]) -> aquas::Result<()> {
             "fig8" => println!("{}", bh::fig8().render()),
             "egraph" => println!("{}", bh::egraph::report(false).render()),
             "serve" => println!("{}", bh::serve::report(false).render()),
+            "interp" => println!("{}", bh::interp::report(false).render()),
             other => eprintln!("unknown bench `{other}`"),
         };
     };

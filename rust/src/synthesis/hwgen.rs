@@ -176,7 +176,7 @@ fn census(func: &Func) -> FuCount {
         OpKind::Shl | OpKind::Shr => fus.shifters += 1,
         OpKind::And | OpKind::Or | OpKind::Xor | OpKind::Select => fus.logic += 1,
         OpKind::Min | OpKind::Max | OpKind::Cmp(_) => fus.comparators += 1,
-        OpKind::Sqrt | OpKind::Powi(_) => fus.fp_units += 1,
+        OpKind::Sqrt | OpKind::Exp | OpKind::Powi(_) => fus.fp_units += 1,
         _ => {}
     });
     fus
@@ -198,7 +198,7 @@ fn datapath_depth(func: &Func) -> u64 {
             | OpKind::And | OpKind::Or | OpKind::Xor | OpKind::Select | OpKind::Shl
             | OpKind::Shr => 1,
             OpKind::Mul => 2,
-            OpKind::Div | OpKind::Rem | OpKind::Sqrt => 8,
+            OpKind::Div | OpKind::Rem | OpKind::Sqrt | OpKind::Exp => 8,
             OpKind::Powi(e) => 2 * (*e as u64).max(1),
             _ => 0,
         };

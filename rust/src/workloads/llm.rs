@@ -10,8 +10,11 @@
 //! `examples/llm_serve.rs`).
 
 use crate::area::{FpgaModel, FpgaUsage};
+use crate::interface::cache::CacheHint;
 use crate::interface::latency::{sequence_latency, TransactionKind};
 use crate::interface::model::MemInterface;
+use crate::ir::{Func, FuncBuilder};
+use crate::runtime::DType;
 use crate::synthesis::hwgen::{FuCount, MemEngineDesc, PipelineDesc, SramDesc, StageDesc};
 
 /// Llama-2-110M-class architecture (matches `python/compile/model.py`'s
@@ -300,6 +303,100 @@ pub fn figure8_resources() -> (FpgaUsage, (f64, f64, f64, f64)) {
     (usage, util)
 }
 
+/// The numeric attention kernel **fully in Aquas-IR** — including the
+/// causal softmax, which needs the `exp` op. Layout matches the AOT
+/// `attention` entry with the leading batch-1 axis dropped: `q`/`k`/`v`/
+/// `o` are `[heads, seq, head_dim]` row-major f32 buffers; `srow` is a
+/// one-row score scratch.
+///
+/// Per `(head, i)` query row the kernel runs the same two-pass stable
+/// softmax as `runtime::sim::attend`: (1) scaled scores over the causal
+/// window `j ≤ i` with a loop-carried running max, (2) `exp(s - max)`
+/// with a carried denominator, (3) the probability-weighted value sum.
+/// Before the `exp` op existed the softmax had to be staged on the host
+/// between two interpreted GEMM stages (see `tests/golden_diff.rs`
+/// history); this closes that ROADMAP item.
+pub fn ir_causal_attention(heads: i64, seq: i64, head_dim: i64) -> Func {
+    let n = (heads * seq * head_dim) as usize;
+    let mut b = FuncBuilder::new("attention_ir");
+    let q = b.global("q", DType::F32, n, CacheHint::Warm);
+    let k = b.global("k", DType::F32, n, CacheHint::Warm);
+    let v = b.global("v", DType::F32, n, CacheHint::Warm);
+    let o = b.global("o", DType::F32, n, CacheHint::Warm);
+    let srow = b.global("srow", DType::F32, seq as usize, CacheHint::Warm);
+    let scale = 1.0 / (head_dim as f64).sqrt();
+    b.for_range(0, heads, 1, |b, h| {
+        let td = b.const_i(seq * head_dim);
+        let hbase = b.mul(h, td);
+        b.for_range(0, seq, 1, |b, i| {
+            let dd = b.const_i(head_dim);
+            let irow = b.mul(i, dd);
+            let qrow = b.add(hbase, irow);
+            let one = b.const_i(1);
+            let vis = b.add(i, one); // causal window: j in 0..=i
+            let lb = b.const_i(0);
+            let step = b.const_i(1);
+            // Pass 1: scaled scores into srow, running max carried.
+            let neg = b.const_f(-1e30);
+            let m = b.for_loop(lb, vis, step, &[neg], |b, j, carried| {
+                let dd2 = b.const_i(head_dim);
+                let jrow = b.mul(j, dd2);
+                let krow = b.add(hbase, jrow);
+                let zero_f = b.const_f(0.0);
+                let lbd = b.const_i(0);
+                let ubd = b.const_i(head_dim);
+                let stepd = b.const_i(1);
+                let dot = b.for_loop(lbd, ubd, stepd, &[zero_f], |b, d, acc| {
+                    let qi = b.add(qrow, d);
+                    let qv = b.load(q, qi);
+                    let ki = b.add(krow, d);
+                    let kv = b.load(k, ki);
+                    let p = b.mul(qv, kv);
+                    vec![b.add(acc[0], p)]
+                });
+                let sc = b.const_f(scale);
+                let s = b.mul(dot[0], sc);
+                b.store(srow, j, s);
+                vec![b.max(carried[0], s)]
+            });
+            // Pass 2: exponentials + denominator.
+            let lb2 = b.const_i(0);
+            let step2 = b.const_i(1);
+            let zero_f2 = b.const_f(0.0);
+            let den = b.for_loop(lb2, vis, step2, &[zero_f2], |b, j, carried| {
+                let s = b.load(srow, j);
+                let sm = b.sub(s, m[0]);
+                let e = b.exp(sm);
+                b.store(srow, j, e);
+                vec![b.add(carried[0], e)]
+            });
+            // Pass 3: probability-weighted value sum per output lane.
+            b.for_range(0, head_dim, 1, |b, d| {
+                let lb3 = b.const_i(0);
+                let step3 = b.const_i(1);
+                let zero_f3 = b.const_f(0.0);
+                let acc = b.for_loop(lb3, vis, step3, &[zero_f3], |b, j, carried| {
+                    let e = b.load(srow, j);
+                    let dd3 = b.const_i(head_dim);
+                    let jrow = b.mul(j, dd3);
+                    let vrow = b.add(hbase, jrow);
+                    let vi = b.add(vrow, d);
+                    let vv = b.load(v, vi);
+                    let p = b.mul(e, vv);
+                    vec![b.add(carried[0], p)]
+                });
+                let out = b.div(acc[0], den[0]);
+                let dd4 = b.const_i(head_dim);
+                let ibase = b.mul(i, dd4);
+                let orow = b.add(hbase, ibase);
+                let oi = b.add(orow, d);
+                b.store(o, oi, out);
+            });
+        });
+    });
+    b.finish(&[])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -393,6 +490,55 @@ mod tests {
         }
         assert!(tiled < walked, "tiled {tiled} vs walked {walked}");
         assert!(tiled > 0.0);
+    }
+
+    #[test]
+    fn ir_attention_verifies_and_engines_agree() {
+        use crate::ir::interp::{ExecStats, Memory};
+        use crate::ir::{interp, verifier, vm};
+        let f = ir_causal_attention(2, 8, 4);
+        verifier::verify(&f).expect("attention IR verifies");
+        assert!(f.count_ops(|k| matches!(k, crate::ir::OpKind::Exp)) > 0, "softmax is in-IR");
+
+        let mut rng = crate::util::rng::Rng::new(0xA77E);
+        let n = 2 * 8 * 4;
+        let data: Vec<f32> = (0..3 * n).map(|_| rng.normal() as f32).collect();
+        let mut m1 = Memory::for_func(&f);
+        for (name, chunk) in ["q", "k", "v"].iter().zip(data.chunks(n)) {
+            m1.write_f32(f.buffer_by_name(name).unwrap(), chunk);
+        }
+        let mut m2 = m1.clone();
+        let mut s1 = ExecStats::default();
+        let mut s2 = ExecStats::default();
+        interp::run_with_stats(&f, &[], &mut m1, &mut s1).unwrap();
+        vm::compile(&f).unwrap().run_with_stats(&[], &mut m2, &mut s2).unwrap();
+        assert_eq!(s1, s2, "stats diverge");
+        let o = f.buffer_by_name("o").unwrap();
+        assert_eq!(m1.read_f32(o), m2.read_f32(o), "outputs diverge");
+
+        // Row 0 attends only to itself: o[h, 0, :] == v[h, 0, :].
+        let out = m1.read_f32(o);
+        let vbuf = m1.read_f32(f.buffer_by_name("v").unwrap());
+        for h in 0..2usize {
+            for d in 0..4usize {
+                let idx = h * 8 * 4 + d;
+                assert!(
+                    (out[idx] - vbuf[idx]).abs() < 1e-5,
+                    "row 0 must pass v through: {} vs {}",
+                    out[idx],
+                    vbuf[idx]
+                );
+            }
+        }
+        // Probabilities sum to 1: uniform v ⇒ output equals v everywhere.
+        let mut m3 = Memory::for_func(&f);
+        m3.write_f32(f.buffer_by_name("q").unwrap(), &data[..n]);
+        m3.write_f32(f.buffer_by_name("k").unwrap(), &data[n..2 * n]);
+        m3.write_f32(f.buffer_by_name("v").unwrap(), &vec![0.5f32; n]);
+        interp::run(&f, &[], &mut m3).unwrap();
+        for x in m3.read_f32(o) {
+            assert!((x - 0.5).abs() < 1e-5, "softmax rows must normalize: {x}");
+        }
     }
 
     #[test]

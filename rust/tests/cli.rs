@@ -19,6 +19,7 @@ fn help_exits_zero_with_usage() {
     assert!(text.contains("USAGE"), "no usage in: {text}");
     assert!(text.contains("synth"), "missing synth in: {text}");
     assert!(text.contains("serve"), "missing serve in: {text}");
+    assert!(text.contains("interp"), "missing interp bench in: {text}");
 }
 
 #[test]
