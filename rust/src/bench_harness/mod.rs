@@ -4,6 +4,7 @@
 //! numbers, so `cargo bench` targets, the `aquas bench` CLI, and
 //! EXPERIMENTS.md all draw from one source of truth.
 
+pub mod dma;
 pub mod egraph;
 pub mod fir7;
 pub mod interp;

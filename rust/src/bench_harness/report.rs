@@ -1,4 +1,11 @@
 //! Tabular report container shared by all bench targets.
+//!
+//! A [`Report`] couples the human-facing table (`render`) with the raw
+//! numeric metrics (`metrics_json`) so each bench's terminal output and
+//! its `BENCH_*.json` artifact cannot drift apart: the CLI, the
+//! `cargo bench` mains, and the CI gates all read the same
+//! `BTreeMap<String, f64>`. Metric names and units are documented in
+//! `docs/bench-schemas.md`; booleans are encoded as `1.0` / `0.0`.
 
 use std::collections::BTreeMap;
 

@@ -18,8 +18,11 @@
 //!    (recompute-style, as in vLLM) when the pool is dry.
 //!
 //! The engine runs entirely on the *modelled SoC clock*: every tick is
-//! charged batch-aware cycle + DMA-burst costs from
-//! [`crate::workloads::llm`] / [`crate::interface::latency`], so TTFT /
+//! charged batch-aware cycle costs from [`crate::workloads::llm`], and
+//! the batch's paged-KV block gathers are staged through the
+//! event-driven burst-DMA engine ([`crate::interface::dmasim`]) — one
+//! §4.1 queue per interface, so concurrent gathers observe real
+//! queueing rather than a per-block closed form — so TTFT /
 //! ITL / throughput metrics are deterministic across replays (no host
 //! wall-clock anywhere). A batched tick streams the weight tiles once for
 //! the whole batch — that amortization is what turns the single-stream
@@ -31,7 +34,7 @@ mod trace;
 pub use kv::{BlockTable, KvPool, KvStats, PagedKvConfig};
 pub use trace::{TraceRequest, TraceSpec};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::error::{Error, Result};
 use crate::interface::model::MemInterface;
@@ -166,8 +169,11 @@ pub struct Coordinator<'rt> {
     bus: MemInterface,
     /// Simulated SoC clock, in Aquas-core cycles.
     clock_cycles: f64,
-    /// DMA cycles for one paged KV block (precomputed).
-    block_dma_cycles: f64,
+    /// Memoized event-simulated gather makespans: total KV blocks staged
+    /// in one tick → cycles through the burst engine
+    /// ([`crate::interface::dmasim`]). Deterministic, so memoization
+    /// cannot perturb replay-identical metrics.
+    gather_cycles_memo: HashMap<usize, f64>,
     /// Ideal (un-paged) KV stream rate, bytes/cycle.
     kv_stream_rate: f64,
     /// Persistent gather/scatter working sets (batch × kv_elems each),
@@ -182,7 +188,6 @@ impl<'rt> Coordinator<'rt> {
         assert!(cfg.max_active >= 1, "max_active must be positive");
         let bus = MemInterface::system_bus();
         let isax_model = IsaxLlmModel::default();
-        let block_dma_cycles = isax_model.kv_block_dma_cycles(&cfg.llm, &bus, cfg.kv.block_slots);
         let kv_stream_rate = isax_model.mem_bytes_per_cycle(&bus);
         let pool = KvPool::new(&rt.manifest().model, cfg.kv);
         Self {
@@ -199,7 +204,7 @@ impl<'rt> Coordinator<'rt> {
             isax_model,
             bus,
             clock_cycles: 0.0,
-            block_dma_cycles,
+            gather_cycles_memo: HashMap::new(),
             kv_stream_rate,
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
@@ -379,14 +384,34 @@ impl<'rt> Coordinator<'rt> {
 
     // ----- internals -------------------------------------------------------
 
+    /// Event-simulated DMA cycles to stage `total_blocks` whole KV blocks
+    /// through the bus in one tick (memoized per distinct count — the
+    /// replay itself is deterministic). A *batched* tick stages every
+    /// sequence's blocks back-to-back through one burst queue, so this is
+    /// where gathers observe real §4.1 queueing instead of a per-block
+    /// closed form.
+    fn gather_cycles(&mut self, total_blocks: usize) -> f64 {
+        if let Some(&c) = self.gather_cycles_memo.get(&total_blocks) {
+            return c;
+        }
+        let c = self.isax_model.kv_gather_dma_cycles(
+            &self.cfg.llm,
+            &self.bus,
+            self.pool.block_slots(),
+            total_blocks,
+        );
+        self.gather_cycles_memo.insert(total_blocks, c);
+        c
+    }
+
     /// Block-granular KV paging cost beyond the ideal contiguous stream
     /// (already charged inside the batched tick) for one sequence at
     /// context length `ctx`: whole blocks are DMA-staged per tick, so the
     /// partially-filled tail block costs real burst cycles.
-    fn paging_overhead_cycles(&self, ctx: usize) -> f64 {
-        let blocks = self.pool.blocks_for(ctx) as f64;
+    fn paging_overhead_cycles(&mut self, ctx: usize) -> f64 {
+        let blocks = self.pool.blocks_for(ctx);
         let ideal = self.cfg.llm.kv_bytes(ctx) as f64 / self.kv_stream_rate;
-        (blocks * self.block_dma_cycles - ideal).max(0.0)
+        (self.gather_cycles(blocks) - ideal).max(0.0)
     }
 
     fn fast_forward_to(&mut self, t_ms: f64) {
@@ -577,8 +602,8 @@ impl<'rt> Coordinator<'rt> {
             );
             // Same pricing as the regular decode path: batched tick plus
             // the block-granular paging DMA overhead.
-            isax += self.isax_model.batch_tick_cycles(&self.cfg.llm, &[act.len], &self.bus)
-                + self.paging_overhead_cycles(act.len);
+            isax += self.isax_model.batch_tick_cycles(&self.cfg.llm, &[act.len], &self.bus);
+            isax += self.paging_overhead_cycles(act.len);
         }
         self.clock_cycles += isax;
         act.sim_isax_cycles += isax;
@@ -680,12 +705,16 @@ impl<'rt> Coordinator<'rt> {
 
         // Charge the modelled clock: one batched tick (weights streamed
         // once across the batch) + the paged-KV DMA-burst overhead of
-        // reading whole blocks instead of an ideal contiguous stream.
+        // staging every sequence's whole blocks through one event-
+        // simulated burst queue instead of an ideal contiguous stream —
+        // the batch's gathers contend for the same bus, and the §4.1
+        // in-flight window pipelines across block boundaries.
         let ctxs: Vec<usize> = feeds.iter().map(|&(_, pos)| pos + 1).collect();
         let mut tick = self.isax_model.batch_tick_cycles(&self.cfg.llm, &ctxs, &self.bus);
-        for &ctx in &ctxs {
-            tick += self.paging_overhead_cycles(ctx);
-        }
+        let total_blocks: usize = ctxs.iter().map(|&c| self.pool.blocks_for(c)).sum();
+        let ideal: f64 =
+            ctxs.iter().map(|&c| self.cfg.llm.kv_bytes(c) as f64 / self.kv_stream_rate).sum();
+        tick += (self.gather_cycles(total_blocks) - ideal).max(0.0);
         self.clock_cycles += tick;
         let share = tick / batch.len() as f64;
         let now = self.sim_now_ms();

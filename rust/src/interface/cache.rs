@@ -26,8 +26,11 @@ pub enum CacheHint {
 /// `L1 < L2 < Dram` (closer to the core is "higher" / hotter).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum HierarchyLevel {
+    /// The core-coupled first-level cache.
     L1,
+    /// The shared second-level cache (system-bus attach point).
     L2,
+    /// Main memory, below every cache.
     Dram,
 }
 
@@ -127,5 +130,28 @@ mod tests {
     #[test]
     fn zero_bytes_zero_penalty() {
         assert_eq!(cache_penalty(0, 64, 4, CacheHint::Cold, HierarchyLevel::L1), 0.0);
+    }
+
+    #[test]
+    fn degenerate_geometry_is_guarded() {
+        // Zero-capacity / zero-width interfaces (no cache line, no beat
+        // width) must clamp instead of dividing by zero: the penalty
+        // stays finite and non-negative for every hint/level pair.
+        for hint in [CacheHint::Warm, CacheHint::Cold, CacheHint::Unknown] {
+            for level in [HierarchyLevel::L1, HierarchyLevel::L2, HierarchyLevel::Dram] {
+                let no_line = cache_penalty(128, 0, 4, hint, level);
+                let no_width = cache_penalty(128, 64, 0, hint, level);
+                assert!(no_line.is_finite() && no_line >= 0.0, "{hint:?}/{level:?}: {no_line}");
+                assert!(
+                    no_width.is_finite() && no_width >= 0.0,
+                    "{hint:?}/{level:?}: {no_width}"
+                );
+            }
+        }
+        // A zero-byte line refills no bytes: the penalty term vanishes
+        // instead of exploding.
+        assert_eq!(cache_penalty(128, 0, 4, CacheHint::Unknown, HierarchyLevel::L2), 0.0);
+        // Zero width clamps to one byte per beat: the full line traffic.
+        assert_eq!(cache_penalty(128, 64, 0, CacheHint::Unknown, HierarchyLevel::L2), 128.0);
     }
 }

@@ -1,0 +1,692 @@
+//! Event-driven simulator for the §4.1 burst DMA engine.
+//!
+//! [`latency`](crate::interface::latency) prices transaction sequences
+//! with the paper's *closed-form* recurrences; this module executes them
+//! as a discrete-event simulation instead, so the timing model can
+//! represent effects the closed form cannot see:
+//!
+//! - **per-interface request queues** honoring the in-flight limit `I_k`
+//!   (a transaction issues only when a structural slot frees up);
+//! - **burst splitting** at the alignment boundaries of §4.3
+//!   canonicalization ([`MemInterface::decompose`]) and **burst
+//!   coalescing** of address-contiguous runs back into maximal legal
+//!   transactions ([`coalesce`]);
+//! - **multi-banked scratchpad conflicts**: each interface delivers one
+//!   beat per cycle, and an SRAM with `B` banks accepts at most `B` beats
+//!   per cycle across *all* interfaces — beats that find every bank port
+//!   busy slip to later cycles (the arbitration `hwgen` inserts; bank
+//!   counts come from its [`SramDesc`](crate::synthesis::hwgen::SramDesc)
+//!   census).
+//!
+//! **Uncontended equivalence.** With a single traffic stream and no
+//! oversubscribed SRAM, the event engine reproduces
+//! [`sequence_latency`](crate::interface::latency::sequence_latency) /
+//! the mixed-kind §4.1 recurrence *exactly*, cycle for cycle — issue
+//! cycles follow `a_j = 1 + max(a_{j-1}, b_{j-I_k})` and beat delivery
+//! starts the cycle after `max(b_{j-1}, a_j + L_k - 1)` (loads) or
+//! `max(b_{j-1}, a_j - 1)` (stores). `rust/tests/proptests.rs` and
+//! `rust/tests/dmasim_diff.rs` pin this, which turns the documented §4.3
+//! `T_k` error bound (store form exact, load form within 50%) into an
+//! executable claim against the simulator instead of a comment.
+//!
+//! Determinism: transactions are dispatched strictly by tentative issue
+//! cycle (ties go to the lower interface id), and bank ports are claimed
+//! first-fit in time in that dispatch order, so every replay of the same
+//! input is cycle-identical.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::error::{Error, Result};
+use crate::interface::latency::TransactionKind;
+use crate::interface::model::{InterfaceId, InterfaceSet, MemInterface};
+
+/// One *already decomposed* (legal-size) transaction fed to the engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimTxn {
+    /// Memory-op id this transaction belongs to (caller-defined grouping).
+    pub op: usize,
+    /// Interface the transaction is bound to.
+    pub itfc: InterfaceId,
+    /// Transfer direction.
+    pub kind: TransactionKind,
+    /// Start byte address (used by [`coalesce`] to detect contiguity).
+    pub addr: u64,
+    /// Transaction size in bytes.
+    pub size: usize,
+    /// Index into the simulation's SRAM table when the transaction drains
+    /// into (or out of) a banked scratchpad; `None` opts out of bank
+    /// conflict modelling.
+    pub sram: Option<usize>,
+}
+
+/// One un-split request: `bytes` starting at `addr`, decomposed into
+/// legal transactions by [`simulate`] exactly as §4.3 canonicalization
+/// would ([`MemInterface::decompose`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimRequest {
+    /// Memory-op id (carried through to the emitted transactions).
+    pub op: usize,
+    /// Interface the request is bound to.
+    pub itfc: InterfaceId,
+    /// Transfer direction.
+    pub kind: TransactionKind,
+    /// Start byte address.
+    pub addr: u64,
+    /// Total bytes to move.
+    pub bytes: usize,
+    /// Target scratchpad (index into the SRAM table), if bank conflicts
+    /// should be modelled for this request.
+    pub sram: Option<usize>,
+}
+
+/// One banked scratchpad port group visible to the simulation (the bank
+/// census `hwgen` computes per surviving scratchpad).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SramSpec {
+    /// Scratchpad name (diagnostics only).
+    pub name: String,
+    /// Number of banks = beats the SRAM accepts per cycle. Clamped to a
+    /// minimum of 1.
+    pub banks: usize,
+}
+
+/// Timing record of one simulated transaction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TxnRecord {
+    /// Memory-op id from the input.
+    pub op: usize,
+    /// Interface the transaction ran on.
+    pub itfc: InterfaceId,
+    /// Transfer direction.
+    pub kind: TransactionKind,
+    /// Transaction size in bytes.
+    pub size: usize,
+    /// Issue cycle `a_j`.
+    pub issue: u64,
+    /// Completion cycle `b_j`.
+    pub complete: u64,
+    /// Cycles this transaction lost to SRAM bank-port conflicts.
+    pub conflict_cycles: u64,
+}
+
+/// Everything one simulation run produced.
+#[derive(Debug, Clone, Default)]
+pub struct SimOutcome {
+    /// Per-transaction records in dispatch order.
+    pub txns: Vec<TxnRecord>,
+    /// Final completion cycle per interface that saw traffic.
+    pub per_itfc: Vec<(InterfaceId, u64)>,
+    /// Completion cycle of the last transaction across all interfaces.
+    pub makespan: u64,
+    /// Total cycles lost to bank conflicts across all transactions.
+    pub conflict_cycles: u64,
+}
+
+impl SimOutcome {
+    /// Final completion cycle on one interface (0 when it saw no traffic).
+    pub fn itfc_cycles(&self, id: InterfaceId) -> u64 {
+        self.per_itfc.iter().find(|&&(k, _)| k == id).map(|&(_, c)| c).unwrap_or(0)
+    }
+}
+
+/// Per-interface §4.1 recurrence state: last issue cycle, last
+/// completion, and the ring of the last `I_k` completions (`b_{j-I_k}`
+/// is the front of a full ring). The `-1` values are the paper's initial
+/// conditions for `j ≤ 0`.
+#[derive(Debug, Clone)]
+struct ChanState {
+    a_prev: i64,
+    b_prev: i64,
+    ring: VecDeque<i64>,
+}
+
+impl ChanState {
+    fn new() -> Self {
+        Self { a_prev: -1, b_prev: -1, ring: VecDeque::new() }
+    }
+
+    /// `a_j = 1 + max(a_{j-1}, b_{j-I_k})`.
+    fn tentative_issue(&self, i_k: usize) -> i64 {
+        let blocked = if self.ring.len() >= i_k { *self.ring.front().expect("non-empty") } else { -1 };
+        1 + self.a_prev.max(blocked)
+    }
+
+    /// Issue cycle `a_j` and the first unobstructed data-beat cycle `s0`
+    /// for the channel's next transaction — the single in-crate home of
+    /// the event-side §4.1 recurrence. (The closed forms in `latency.rs`
+    /// / `scheduling.rs` are deliberately *independent* implementations:
+    /// the equivalence property tests compare the two, which would be
+    /// tautological if they shared this code.)
+    fn begin(&self, m: &MemInterface, kind: TransactionKind) -> (i64, i64) {
+        let a = self.tentative_issue(m.in_flight.max(1));
+        let s0 = match kind {
+            TransactionKind::Load => self.b_prev.max(a + m.read_lead as i64 - 1) + 1,
+            TransactionKind::Store => self.b_prev.max(a - 1) + 1,
+        };
+        (a, s0)
+    }
+
+    /// Unobstructed advance (no SRAM contention): beats land back to
+    /// back from `s0`, stores pay `E_k` after the last beat. Returns the
+    /// completion cycle.
+    fn advance(&mut self, m: &MemInterface, kind: TransactionKind, size: usize) -> i64 {
+        let (a, s0) = self.begin(m, kind);
+        let last = s0 + beats_of(m, size) - 1;
+        let b = match kind {
+            TransactionKind::Load => last,
+            TransactionKind::Store => last + m.write_cost as i64,
+        };
+        self.commit(m.in_flight.max(1), a, b);
+        b
+    }
+
+    fn commit(&mut self, i_k: usize, a: i64, b: i64) {
+        self.a_prev = a;
+        self.b_prev = b;
+        self.ring.push_back(b);
+        while self.ring.len() > i_k {
+            self.ring.pop_front();
+        }
+    }
+}
+
+/// Beat count of a transaction (runts round up to one beat — the
+/// hardware's padded-beat fallback, mirroring `sequence_latency`).
+fn beats_of(itfc: &MemInterface, size: usize) -> i64 {
+    (size.div_ceil(itfc.width) as i64).max(1)
+}
+
+/// Claim `beats` one-per-cycle SRAM port slots at cycles `>= s0`,
+/// skipping cycles where all `banks` ports are taken. Returns the cycle
+/// of the last delivered beat and the conflict delay vs an unobstructed
+/// run.
+fn place_beats(occ: &mut HashMap<i64, u32>, banks: u32, s0: i64, beats: i64) -> (i64, u64) {
+    let mut placed = 0i64;
+    let mut c = s0;
+    let mut last = s0;
+    while placed < beats {
+        let used = occ.entry(c).or_insert(0);
+        if *used < banks {
+            *used += 1;
+            placed += 1;
+            last = c;
+        }
+        c += 1;
+    }
+    (last, (last - (s0 + beats - 1)).max(0) as u64)
+}
+
+/// Run the event engine over already-decomposed transactions.
+///
+/// Transactions execute FIFO *per interface* (input order); interfaces
+/// run in parallel and interact only through shared SRAM bank ports.
+/// Zero-size transactions are skipped.
+pub fn simulate_txns(
+    itfcs: &InterfaceSet,
+    srams: &[SramSpec],
+    txns: &[SimTxn],
+) -> Result<SimOutcome> {
+    let n_chan = itfcs.len();
+    let mut queues: Vec<VecDeque<SimTxn>> = vec![VecDeque::new(); n_chan];
+    for t in txns {
+        if t.itfc.0 >= n_chan {
+            return Err(Error::Interface(format!(
+                "dmasim: transaction bound to unknown interface {} ({} declared)",
+                t.itfc, n_chan
+            )));
+        }
+        if let Some(s) = t.sram {
+            if s >= srams.len() {
+                return Err(Error::Interface(format!(
+                    "dmasim: transaction targets unknown sram index {s} ({} declared)",
+                    srams.len()
+                )));
+            }
+        }
+        if t.size == 0 {
+            continue;
+        }
+        queues[t.itfc.0].push_back(*t);
+    }
+
+    let mut chans: Vec<ChanState> = (0..n_chan).map(|_| ChanState::new()).collect();
+    let mut occ: Vec<HashMap<i64, u32>> = vec![HashMap::new(); srams.len()];
+    let mut had_traffic = vec![false; n_chan];
+    let mut out = SimOutcome::default();
+
+    loop {
+        // Dispatch: the pending transaction with the earliest tentative
+        // issue cycle goes next (ties: lowest interface id).
+        let mut pick: Option<(usize, i64)> = None;
+        for (k, q) in queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let i_k = itfcs.get(InterfaceId(k)).in_flight.max(1);
+            let a = chans[k].tentative_issue(i_k);
+            if pick.map_or(true, |(_, best)| a < best) {
+                pick = Some((k, a));
+            }
+        }
+        let Some((k, a)) = pick else { break };
+        let itfc = itfcs.get(InterfaceId(k));
+        let t = queues[k].pop_front().expect("picked channel has work");
+        let beats = beats_of(itfc, t.size);
+        // First data beat lands the cycle after the §4.1 max() term.
+        let (a, s0) = {
+            let (a2, s0) = chans[k].begin(itfc, t.kind);
+            debug_assert_eq!(a, a2, "dispatch used a stale issue cycle");
+            (a2, s0)
+        };
+        let (last_beat, conflict) = match t.sram {
+            Some(s) => place_beats(&mut occ[s], srams[s].banks.max(1) as u32, s0, beats),
+            None => (s0 + beats - 1, 0),
+        };
+        let b = match t.kind {
+            TransactionKind::Load => last_beat,
+            TransactionKind::Store => last_beat + itfc.write_cost as i64,
+        };
+        let i_k = itfc.in_flight.max(1);
+        chans[k].commit(i_k, a, b);
+        had_traffic[k] = true;
+        out.conflict_cycles += conflict;
+        out.txns.push(TxnRecord {
+            op: t.op,
+            itfc: t.itfc,
+            kind: t.kind,
+            size: t.size,
+            issue: a.max(0) as u64,
+            complete: b.max(0) as u64,
+            conflict_cycles: conflict,
+        });
+    }
+
+    for k in 0..n_chan {
+        if had_traffic[k] {
+            let c = chans[k].b_prev.max(0) as u64;
+            out.per_itfc.push((InterfaceId(k), c));
+            out.makespan = out.makespan.max(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Split every request into legal transactions (§4.3 canonicalization)
+/// and run the event engine.
+pub fn simulate(
+    itfcs: &InterfaceSet,
+    srams: &[SramSpec],
+    requests: &[SimRequest],
+) -> Result<SimOutcome> {
+    let mut txns = Vec::new();
+    for r in requests {
+        if r.itfc.0 >= itfcs.len() {
+            return Err(Error::Interface(format!(
+                "dmasim: request bound to unknown interface {} ({} declared)",
+                r.itfc,
+                itfcs.len()
+            )));
+        }
+        let itfc = itfcs.get(r.itfc);
+        let mut addr = r.addr;
+        for m in itfc.decompose(r.addr, r.bytes) {
+            txns.push(SimTxn {
+                op: r.op,
+                itfc: r.itfc,
+                kind: r.kind,
+                addr,
+                size: m,
+                sram: r.sram,
+            });
+            addr += m as u64;
+        }
+    }
+    simulate_txns(itfcs, srams, &txns)
+}
+
+/// Single-interface, same-kind convenience replay: the event-engine
+/// counterpart of [`sequence_latency`](crate::interface::latency::sequence_latency),
+/// and provably equal to it on traces of non-zero sizes (no contention
+/// is possible on one stream). Zero-size entries are *skipped* by every
+/// dmasim entry point, whereas the closed form still spends an issue
+/// slot on them — `decompose` never emits zeros, so real traces cannot
+/// observe the difference.
+pub fn simulate_sizes(itfc: &MemInterface, kind: TransactionKind, sizes: &[usize]) -> u64 {
+    let set = InterfaceSet::new(vec![itfc.clone()]);
+    let txns: Vec<SimTxn> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &size)| SimTxn {
+            op: i,
+            itfc: InterfaceId(0),
+            kind,
+            addr: 0,
+            size,
+            sram: None,
+        })
+        .collect();
+    simulate_txns(&set, &[], &txns).expect("single-interface replay cannot fail").makespan
+}
+
+/// Allocation-free single-stream replay: advance one channel's §4.1
+/// recurrence state over a same-kind size stream and return the final
+/// completion cycle. Identical to [`simulate_sizes`] by construction
+/// (same channel-state code path, no per-transaction records) — this is
+/// the hot-path entry the serving coordinator prices per-tick KV block
+/// gathers with, where materializing `SimTxn`/[`TxnRecord`]s for tens of
+/// thousands of uniform transactions would be pure overhead.
+pub fn stream_makespan(
+    itfc: &MemInterface,
+    kind: TransactionKind,
+    sizes: impl Iterator<Item = usize>,
+) -> u64 {
+    let mut ch = ChanState::new();
+    for size in sizes {
+        if size == 0 {
+            continue;
+        }
+        ch.advance(itfc, kind, size);
+    }
+    ch.b_prev.max(0) as u64
+}
+
+/// Merge runs of address-contiguous, same-direction, same-target
+/// transactions and re-split them into maximal legal bursts on `itfc` —
+/// the coalescing a burst engine performs when small requests line up.
+///
+/// Models **one** engine: every transaction must be bound to the
+/// interface whose geometry `itfc` describes, since merged runs are
+/// re-decomposed against it (debug-asserted; a mixed-interface trace
+/// would be re-split into sizes the other interfaces cannot issue).
+/// Coalesce per interface before merging streams.
+pub fn coalesce(itfc: &MemInterface, txns: &[SimTxn]) -> Vec<SimTxn> {
+    debug_assert!(
+        txns.windows(2).all(|w| w[0].itfc == w[1].itfc),
+        "coalesce models a single interface's engine; split the trace per interface first"
+    );
+    let mut out = Vec::new();
+    let mut run: Option<(SimTxn, u64, usize)> = None; // (head, end addr, bytes)
+    let mut flush = |run: &mut Option<(SimTxn, u64, usize)>, out: &mut Vec<SimTxn>| {
+        if let Some((head, _, bytes)) = run.take() {
+            let mut addr = head.addr;
+            for m in itfc.decompose(head.addr, bytes) {
+                out.push(SimTxn { addr, size: m, ..head });
+                addr += m as u64;
+            }
+        }
+    };
+    for t in txns {
+        match &mut run {
+            Some((head, end, bytes))
+                if head.itfc == t.itfc
+                    && head.kind == t.kind
+                    && head.sram == t.sram
+                    && *end == t.addr =>
+            {
+                *end += t.size as u64;
+                *bytes += t.size;
+            }
+            _ => {
+                flush(&mut run, &mut out);
+                run = Some((*t, t.addr + t.size as u64, t.size));
+            }
+        }
+    }
+    flush(&mut run, &mut out);
+    out
+}
+
+/// Incremental issue-stream pricer used by the IR engines to charge
+/// temporal-level `copy_issue` ops
+/// ([`ExecStats::dma_cycles`](crate::ir::interp::ExecStats)): the same
+/// per-channel §4.1 recurrence as the event engine, advanced one
+/// transaction at a time in program order, without SRAM modelling.
+///
+/// Both the tree-walking interpreter and the bytecode VM drive one of
+/// these with the identical issue sequence, so the charged cycles are
+/// bit-identical across engines by construction.
+#[derive(Debug, Clone)]
+pub struct IssueClock {
+    itfcs: InterfaceSet,
+    chans: Vec<ChanState>,
+}
+
+impl IssueClock {
+    /// A clock over the given interface set.
+    pub fn new(itfcs: InterfaceSet) -> Self {
+        let chans = (0..itfcs.len().max(1)).map(|_| ChanState::new()).collect();
+        Self { itfcs, chans }
+    }
+
+    /// A clock over the default §6.1 Rocket interface pair — what the IR
+    /// engines use, since Aquas-IR carries only interface *ids*.
+    pub fn rocket_default() -> Self {
+        Self::new(InterfaceSet::rocket_default())
+    }
+
+    /// Price one issued transaction; returns its completion cycle.
+    /// Interface ids beyond the configured set clamp to the last channel
+    /// (see the ROADMAP open item on threading the real `InterfaceSet`
+    /// through the IR engines). Zero-size issues are no-ops completing
+    /// at the channel's current completion cycle — the same skip rule
+    /// the event engine applies.
+    pub fn issue(&mut self, itfc: InterfaceId, kind: TransactionKind, size: usize) -> u64 {
+        if self.itfcs.is_empty() {
+            return 0;
+        }
+        let k = itfc.0.min(self.itfcs.len() - 1);
+        if size == 0 {
+            return self.chans[k].b_prev.max(0) as u64;
+        }
+        let m = self.itfcs.get(InterfaceId(k));
+        self.chans[k].advance(m, kind, size).max(0) as u64
+    }
+
+    /// Latest completion cycle across all channels so far.
+    pub fn makespan(&self) -> u64 {
+        self.chans.iter().map(|c| c.b_prev.max(0) as u64).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::latency::sequence_latency;
+
+    fn itfc1() -> MemInterface {
+        MemInterface { read_lead: 2, ..MemInterface::cpu_port() }
+    }
+
+    fn itfc2() -> MemInterface {
+        MemInterface { read_lead: 6, ..MemInterface::system_bus() }
+    }
+
+    #[test]
+    fn single_stream_matches_recurrence_exactly() {
+        for itfc in [itfc1(), itfc2()] {
+            for kind in [TransactionKind::Load, TransactionKind::Store] {
+                for sizes in [vec![4usize], vec![64, 32, 8, 4], vec![8; 16], vec![4, 64, 4]] {
+                    let sim = simulate_sizes(&itfc, kind, &sizes);
+                    let closed = sequence_latency(&itfc, kind, &sizes);
+                    assert_eq!(sim, closed, "{kind:?} {sizes:?} on {}", itfc.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        assert_eq!(simulate_sizes(&itfc1(), TransactionKind::Load, &[]), 0);
+        assert_eq!(stream_makespan(&itfc1(), TransactionKind::Load, std::iter::empty()), 0);
+    }
+
+    #[test]
+    fn stream_makespan_equals_recorded_replay() {
+        for itfc in [itfc1(), itfc2()] {
+            for kind in [TransactionKind::Load, TransactionKind::Store] {
+                for sizes in [vec![4usize], vec![64, 32, 8, 4], vec![8; 32], vec![0, 8, 8]] {
+                    assert_eq!(
+                        stream_makespan(&itfc, kind, sizes.iter().copied()),
+                        simulate_sizes(&itfc, kind, &sizes),
+                        "{kind:?} {sizes:?} on {}",
+                        itfc.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_requests_equal_presplit_transactions() {
+        let set = InterfaceSet::new(vec![itfc2()]);
+        let req = SimRequest {
+            op: 0,
+            itfc: InterfaceId(0),
+            kind: TransactionKind::Load,
+            addr: 0,
+            bytes: 108,
+            sram: None,
+        };
+        let by_req = simulate(&set, &[], &[req]).unwrap();
+        let sizes = itfc2().decompose(0, 108);
+        assert_eq!(sizes, vec![64, 32, 8, 4]);
+        assert_eq!(by_req.makespan, simulate_sizes(&itfc2(), TransactionKind::Load, &sizes));
+        assert_eq!(by_req.txns.len(), 4);
+    }
+
+    #[test]
+    fn parallel_interfaces_do_not_serialize() {
+        // Two independent streams finish in max() time, not sum().
+        let set = InterfaceSet::new(vec![itfc1(), itfc2()]);
+        let txns = [
+            SimTxn { op: 0, itfc: InterfaceId(0), kind: TransactionKind::Load, addr: 0, size: 4, sram: None },
+            SimTxn { op: 1, itfc: InterfaceId(1), kind: TransactionKind::Load, addr: 0, size: 64, sram: None },
+        ];
+        let out = simulate_txns(&set, &[], &txns).unwrap();
+        let solo0 = simulate_sizes(&itfc1(), TransactionKind::Load, &[4]);
+        let solo1 = simulate_sizes(&itfc2(), TransactionKind::Load, &[64]);
+        assert_eq!(out.itfc_cycles(InterfaceId(0)), solo0);
+        assert_eq!(out.itfc_cycles(InterfaceId(1)), solo1);
+        assert_eq!(out.makespan, solo0.max(solo1));
+    }
+
+    #[test]
+    fn single_banked_sram_conflicts_and_banking_resolves_them() {
+        // A word stream on the core port and a burst stream on the bus
+        // drain into the same scratchpad: with one bank the beat windows
+        // collide; with two banks (one port per interface) they cannot.
+        let set = InterfaceSet::new(vec![itfc1(), itfc2()]);
+        let mut txns = Vec::new();
+        for i in 0..16usize {
+            txns.push(SimTxn {
+                op: i,
+                itfc: InterfaceId(0),
+                kind: TransactionKind::Load,
+                addr: (i * 4) as u64,
+                size: 4,
+                sram: Some(0),
+            });
+        }
+        for i in 0..4usize {
+            txns.push(SimTxn {
+                op: 100 + i,
+                itfc: InterfaceId(1),
+                kind: TransactionKind::Load,
+                addr: (i * 64) as u64,
+                size: 64,
+                sram: Some(0),
+            });
+        }
+        let run = |banks: usize| {
+            let srams = [SramSpec { name: "tile".into(), banks }];
+            simulate_txns(&set, &srams, &txns).unwrap()
+        };
+        let contended = run(1);
+        let banked = run(2);
+        assert!(contended.conflict_cycles > 0, "single bank must conflict");
+        assert_eq!(banked.conflict_cycles, 0, "two banks fit two interfaces");
+        assert!(contended.makespan >= banked.makespan);
+        // The banked run is conflict-free, so it equals the closed form.
+        assert_eq!(
+            banked.itfc_cycles(InterfaceId(0)),
+            simulate_sizes(&itfc1(), TransactionKind::Load, &vec![4; 16])
+        );
+        assert_eq!(
+            banked.itfc_cycles(InterfaceId(1)),
+            simulate_sizes(&itfc2(), TransactionKind::Load, &vec![64; 4])
+        );
+    }
+
+    #[test]
+    fn conflicts_never_reduce_latency() {
+        let set = InterfaceSet::new(vec![itfc1(), itfc2()]);
+        let txns: Vec<SimTxn> = (0..8)
+            .map(|i| SimTxn {
+                op: i,
+                itfc: InterfaceId(i % 2),
+                kind: if i % 3 == 0 { TransactionKind::Store } else { TransactionKind::Load },
+                addr: (i * 64) as u64,
+                size: if i % 2 == 0 { 4 } else { 64 },
+                sram: Some(0),
+            })
+            .collect();
+        let free = simulate_txns(&set, &[SramSpec { name: "s".into(), banks: 8 }], &txns).unwrap();
+        let tight = simulate_txns(&set, &[SramSpec { name: "s".into(), banks: 1 }], &txns).unwrap();
+        // Conflicts may reorder dispatch, so compare completions per op.
+        let unobstructed: HashMap<usize, u64> =
+            free.txns.iter().map(|t| (t.op, t.complete)).collect();
+        for t in &tight.txns {
+            assert!(t.complete >= unobstructed[&t.op], "conflict made op {} faster", t.op);
+        }
+        assert!(tight.makespan >= free.makespan);
+    }
+
+    #[test]
+    fn coalesce_merges_contiguous_words_into_bursts() {
+        let bus = itfc2();
+        let words: Vec<SimTxn> = (0..16)
+            .map(|i| SimTxn {
+                op: 0,
+                itfc: InterfaceId(0),
+                kind: TransactionKind::Load,
+                addr: (i * 8) as u64,
+                size: 8,
+                sram: None,
+            })
+            .collect();
+        let merged = coalesce(&bus, &words);
+        // 128 contiguous bytes at 0 -> two 64B bursts.
+        assert_eq!(merged.iter().map(|t| t.size).collect::<Vec<_>>(), vec![64, 64]);
+        let set = InterfaceSet::new(vec![bus.clone()]);
+        let before = simulate_txns(&set, &[], &words).unwrap().makespan;
+        let after = simulate_txns(&set, &[], &merged).unwrap().makespan;
+        assert!(after < before, "coalescing must win: {after} !< {before}");
+    }
+
+    #[test]
+    fn coalesce_respects_kind_and_gaps() {
+        let bus = itfc2();
+        let txns = [
+            SimTxn { op: 0, itfc: InterfaceId(0), kind: TransactionKind::Load, addr: 0, size: 8, sram: None },
+            SimTxn { op: 0, itfc: InterfaceId(0), kind: TransactionKind::Store, addr: 8, size: 8, sram: None },
+            SimTxn { op: 0, itfc: InterfaceId(0), kind: TransactionKind::Load, addr: 64, size: 8, sram: None },
+        ];
+        let merged = coalesce(&bus, &txns);
+        assert_eq!(merged.len(), 3, "direction change and address gap both break runs");
+    }
+
+    #[test]
+    fn issue_clock_tracks_the_recurrence() {
+        let mut clk = IssueClock::new(InterfaceSet::new(vec![itfc1(), itfc2()]));
+        let sizes = [64usize, 32, 8, 4];
+        let mut last = 0;
+        for &s in &sizes {
+            last = clk.issue(InterfaceId(1), TransactionKind::Load, s);
+        }
+        assert_eq!(last, sequence_latency(&itfc2(), TransactionKind::Load, &sizes));
+        assert_eq!(clk.makespan(), last);
+        // Out-of-range interface ids clamp instead of panicking.
+        let more = clk.issue(InterfaceId(9), TransactionKind::Store, 8);
+        assert!(more > 0);
+    }
+}

@@ -18,15 +18,20 @@ use crate::interface::model::MemInterface;
 /// Load or store; the paper's model treats the two directions separately.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TransactionKind {
+    /// Memory → ISAX (pays the read lead-off latency `L_k`).
     Load,
+    /// ISAX → memory (pays the write completion cost `E_k`).
     Store,
 }
 
 /// Exact sequence latency `b_N` (in cycles) for same-kind transactions of
 /// `sizes` bytes issued back-to-back on `itfc`, per the §4.1 recurrences.
 ///
-/// Panics in debug builds if any size is not a legal transaction; release
-/// builds round beats up (the hardware's runtime fallback path).
+/// Sizes need not be legal single transactions: beat counts round up
+/// (`⌈m / W_k⌉`, the hardware's padded-beat runtime fallback path), the
+/// same rule the event-driven simulator
+/// ([`crate::interface::dmasim`]) applies — so the two stay comparable
+/// on any trace.
 pub fn sequence_latency(itfc: &MemInterface, kind: TransactionKind, sizes: &[usize]) -> u64 {
     if sizes.is_empty() {
         return 0;

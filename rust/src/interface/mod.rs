@@ -9,10 +9,16 @@
 //! (legal transaction sizes are `m = W·2^t ≤ W·M`, aligned to `m`);
 //! [`latency`] implements the paper's issue/completion recurrences and the
 //! closed-form `T_k` approximation used by interface selection;
+//! [`dmasim`] executes the same transactions through an event-driven
+//! burst-DMA engine (queueing, in-flight limits, bank conflicts) that the
+//! closed form can only approximate;
 //! [`cache`] models hierarchy levels, `cache_hint` labels and the
 //! line-synchronization penalty term.
 
+#![warn(missing_docs)]
+
 pub mod cache;
+pub mod dmasim;
 pub mod latency;
 pub mod model;
 

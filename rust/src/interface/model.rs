@@ -139,10 +139,12 @@ impl MemInterface {
 /// symbols in Aquas-IR terms).
 #[derive(Debug, Clone, Default)]
 pub struct InterfaceSet {
+    /// The declared interfaces, indexed by [`InterfaceId`].
     pub interfaces: Vec<MemInterface>,
 }
 
 impl InterfaceSet {
+    /// Build a set from explicit interface declarations.
     pub fn new(interfaces: Vec<MemInterface>) -> Self {
         Self { interfaces }
     }
@@ -158,14 +160,17 @@ impl InterfaceSet {
         Self::new(vec![MemInterface::cpu_port(), MemInterface::system_bus_128()])
     }
 
+    /// Look an interface up by id (panics on out-of-range ids).
     pub fn get(&self, id: InterfaceId) -> &MemInterface {
         &self.interfaces[id.0]
     }
 
+    /// Number of declared interfaces.
     pub fn len(&self) -> usize {
         self.interfaces.len()
     }
 
+    /// True when no interfaces are declared.
     pub fn is_empty(&self) -> bool {
         self.interfaces.is_empty()
     }

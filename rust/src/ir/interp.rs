@@ -22,6 +22,7 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+use crate::interface::dmasim::IssueClock;
 use crate::ir::func::{BufferId, Func, Region, Value};
 use crate::ir::ops::{CmpPred, Op, OpKind};
 use crate::runtime::DType;
@@ -230,6 +231,22 @@ pub struct ExecStats {
     pub transfers: u64,
     pub transfer_bytes: u64,
     pub intrinsic_calls: u64,
+    /// Issue-stream DMA makespan: the maximum simulated completion
+    /// cycle across every temporal-level `copy_issue` executed so far
+    /// (not the most recent one — a later issue on a fast channel can
+    /// complete before an earlier burst), priced by the incremental
+    /// §4.1 DMA clock
+    /// ([`crate::interface::dmasim::IssueClock`]) against the default
+    /// §6.1 interface pair — an *approximation*: Aquas-IR carries only
+    /// interface ids, not the `InterfaceSet` the program was synthesized
+    /// against, so programs lowered for other sets (e.g. the §6.3
+    /// 128-bit wide bus) are billed at the default widths, and ids
+    /// beyond the pair clamp to the last channel (see the ROADMAP open
+    /// item on threading the real set through the engines). Timing-only:
+    /// functional results are unaffected, and both IR engines charge
+    /// bit-identical values. 0 when the program issues no DMA
+    /// transactions.
+    pub dma_cycles: u64,
 }
 
 /// One memory access in a trace (consumed by the cache model).
@@ -277,9 +294,12 @@ pub fn run_traced(
     for (&p, &a) in func.params.iter().zip(args) {
         env.insert(p, a);
     }
-    // Temporal level: issued-but-not-awaited transactions.
+    // Temporal level: issued-but-not-awaited transactions, plus the
+    // incremental DMA clock that prices them (lazily built — programs
+    // without issue ops never pay for it).
     let mut pending: HashMap<u32, PendingCopy> = HashMap::new();
-    let out = exec_region(func, &func.entry, &mut env, mem, stats, &mut pending, trace)?;
+    let mut dma: Option<IssueClock> = None;
+    let out = exec_region(func, &func.entry, &mut env, mem, stats, &mut pending, &mut dma, trace)?;
     Ok(out.unwrap_or_default())
 }
 
@@ -293,6 +313,7 @@ struct PendingCopy {
 }
 
 /// Execute a region; `Some(values)` when a Yield/Return fired.
+#[allow(clippy::too_many_arguments)]
 fn exec_region(
     func: &Func,
     region: &Region,
@@ -300,17 +321,19 @@ fn exec_region(
     mem: &mut Memory,
     stats: &mut ExecStats,
     pending: &mut HashMap<u32, PendingCopy>,
+    dma: &mut Option<IssueClock>,
     trace: &mut Option<Vec<MemAccess>>,
 ) -> Result<Option<Vec<Val>>> {
     for &opref in &region.ops {
         let op = func.op(opref);
-        if let Some(vals) = exec_op(func, op, env, mem, stats, pending, trace)? {
+        if let Some(vals) = exec_op(func, op, env, mem, stats, pending, dma, trace)? {
             return Ok(Some(vals));
         }
     }
     Ok(None)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn exec_op(
     func: &Func,
     op: &Op,
@@ -318,6 +341,7 @@ fn exec_op(
     mem: &mut Memory,
     stats: &mut ExecStats,
     pending: &mut HashMap<u32, PendingCopy>,
+    dma: &mut Option<IssueClock>,
     trace: &mut Option<Vec<MemAccess>>,
 ) -> Result<Option<Vec<Val>>> {
     let get = |env: &HashMap<Value, Val>, v: Value| -> Result<Val> {
@@ -465,9 +489,14 @@ fn exec_op(
                 func.buffer(*src).len,
             )?;
         }
-        OpKind::CopyIssue { dst, src, size, tag, .. } => {
+        OpKind::CopyIssue { dst, src, size, tag, itfc, kind, .. } => {
             stats.transfers += 1;
             stats.transfer_bytes += *size as u64;
+            // Timing only: charge the simulated §4.1 completion cycle of
+            // this transaction; data still moves at the matching wait.
+            let clk = dma.get_or_insert_with(IssueClock::rocket_default);
+            let done = clk.issue(*itfc, *kind, *size);
+            stats.dma_cycles = stats.dma_cycles.max(done);
             let dst_off = get(env, op.operands[0])?.as_i()?;
             let src_off = get(env, op.operands[1])?.as_i()?;
             pending.insert(
@@ -512,7 +541,7 @@ fn exec_op(
                 for (&cv, &val) in carried.iter().zip(&vals) {
                     env.insert(cv, val);
                 }
-                match exec_region(func, region, env, mem, stats, pending, trace)? {
+                match exec_region(func, region, env, mem, stats, pending, dma, trace)? {
                     Some(y) => vals = y,
                     None => return Err(Error::Ir("for body missing yield".into())),
                 }
@@ -526,7 +555,7 @@ fn exec_op(
             stats.branches += 1;
             let c = get(env, op.operands[0])?.as_i()?;
             let region = if c != 0 { &op.regions[0] } else { &op.regions[1] };
-            match exec_region(func, region, env, mem, stats, pending, trace)? {
+            match exec_region(func, region, env, mem, stats, pending, dma, trace)? {
                 Some(vals) => {
                     for (&res, &val) in op.results.iter().zip(&vals) {
                         env.insert(res, val);

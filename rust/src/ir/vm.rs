@@ -42,6 +42,9 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+use crate::interface::dmasim::IssueClock;
+use crate::interface::latency::TransactionKind;
+use crate::interface::model::InterfaceId;
 use crate::ir::func::{BufferId, Func, Region};
 use crate::ir::interp::{checked_copy, ExecStats, MemAccess, Memory, Val};
 use crate::ir::ops::{CmpPred, OpKind};
@@ -102,7 +105,21 @@ enum Insn {
     ReadIrf { d: u32, r: u8 },
     WriteIrf { a: u32, r: u8 },
     Copy { dst: u32, src: u32, d_off: u32, s_off: u32, size: u32, dlen: u32, slen: u32 },
-    Issue { dst: u32, src: u32, d_off: u32, s_off: u32, size: u32, dlen: u32, slen: u32, tag: u32 },
+    /// Temporal-level `copy_issue`: stages the transfer under `tag` and
+    /// charges its simulated §4.1 completion cycle (`itfc`/`kind` feed
+    /// the DMA clock — timing only, data moves at the matching `Wait`).
+    Issue {
+        dst: u32,
+        src: u32,
+        d_off: u32,
+        s_off: u32,
+        size: u32,
+        dlen: u32,
+        slen: u32,
+        tag: u32,
+        itfc: u32,
+        kind: TransactionKind,
+    },
     Wait { tag: u32 },
     /// `for` prologue: error on non-positive step (before the first
     /// head check, matching the tree-walker's evaluation order).
@@ -520,7 +537,7 @@ impl<'a> Compiler<'a> {
                     slen: self.buf_len(*src),
                 });
             }
-            OpKind::CopyIssue { dst, src, size, tag, .. } => {
+            OpKind::CopyIssue { dst, src, size, tag, itfc, kind, .. } => {
                 let d_off = self.want(op.operands[0], Type::Int, "copy_issue offset")?;
                 let s_off = self.want(op.operands[1], Type::Int, "copy_issue offset")?;
                 self.insns.push(Insn::Issue {
@@ -532,6 +549,8 @@ impl<'a> Compiler<'a> {
                     dlen: self.buf_len(*dst),
                     slen: self.buf_len(*src),
                     tag: *tag,
+                    itfc: itfc.0 as u32,
+                    kind: *kind,
                 });
             }
             OpKind::CopyWait { tag } => {
@@ -733,6 +752,8 @@ impl CompiledFunc {
             }
         }
         let mut pending: HashMap<u32, VmPending> = HashMap::new();
+        // Lazily-built DMA clock (mirrors the tree-walker bit-for-bit).
+        let mut dma: Option<IssueClock> = None;
 
         let oob = |i: i64, len: u32| {
             Error::Ir(format!("index {i} out of bounds (len {len})", len = len as usize))
@@ -905,9 +926,12 @@ impl CompiledFunc {
                         *slen as usize,
                     )?;
                 }
-                Insn::Issue { dst, src, d_off, s_off, size, dlen, slen, tag } => {
+                Insn::Issue { dst, src, d_off, s_off, size, dlen, slen, tag, itfc, kind } => {
                     stats.transfers += 1;
                     stats.transfer_bytes += *size as u64;
+                    let clk = dma.get_or_insert_with(IssueClock::rocket_default);
+                    let done = clk.issue(InterfaceId(*itfc as usize), *kind, *size as usize);
+                    stats.dma_cycles = stats.dma_cycles.max(done);
                     pending.insert(
                         *tag,
                         VmPending {

@@ -24,6 +24,7 @@ use crate::synthesis::SynthResult;
 /// One pipeline stage of the generated execution unit.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageDesc {
+    /// Stage name (decode / stage_in / compute / stage_out / writeback).
     pub name: String,
     /// Functional units instantiated in this stage.
     pub fus: FuCount,
@@ -34,16 +35,24 @@ pub struct StageDesc {
 /// Functional-unit census of a stage (drives the area model).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct FuCount {
+    /// Integer/float adders (also used for subtraction).
     pub adders: usize,
+    /// Multiplier instances.
     pub multipliers: usize,
+    /// Divider/remainder units.
     pub dividers: usize,
+    /// Barrel shifters.
     pub shifters: usize,
+    /// Bitwise-logic / select muxes.
     pub logic: usize,
+    /// Comparators (min/max/cmp).
     pub comparators: usize,
+    /// Transcendental FP helpers (sqrt/exp/powi).
     pub fp_units: usize,
 }
 
 impl FuCount {
+    /// Total functional units across all classes.
     pub fn total(&self) -> usize {
         self.adders + self.multipliers + self.dividers + self.shifters + self.logic
             + self.comparators
@@ -54,16 +63,23 @@ impl FuCount {
 /// A synthesized scratchpad memory.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SramDesc {
+    /// Scratchpad name from the IR buffer declaration.
     pub name: String,
+    /// Capacity in bytes.
     pub bytes: usize,
+    /// Bank count (= beats accepted per cycle; see
+    /// [`crate::interface::dmasim`] for the conflict model it feeds).
     pub banks: usize,
 }
 
 /// A memory-access engine for one interface.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemEngineDesc {
+    /// Name of the interface this engine drives.
     pub itfc_name: String,
+    /// Beat width in bytes.
     pub width: usize,
+    /// Whether the engine issues multi-beat bursts.
     pub burst: bool,
     /// Outstanding-transaction tracker depth.
     pub tracker_depth: usize,
@@ -74,9 +90,13 @@ pub struct MemEngineDesc {
 /// The generated execution unit, structurally.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PipelineDesc {
+    /// Unit name (derived from the ISAX function).
     pub name: String,
+    /// Pipeline stages in execution order.
     pub stages: Vec<StageDesc>,
+    /// Synthesized scratchpad memories.
     pub srams: Vec<SramDesc>,
+    /// Per-interface memory-access engines.
     pub engines: Vec<MemEngineDesc>,
     /// Pipeline initiation interval of the compute loop (II).
     pub initiation_interval: u64,

@@ -40,6 +40,7 @@ pub struct MemOp {
 /// compute model.
 #[derive(Debug, Clone, Default)]
 pub struct MemProbe {
+    /// Every memory operation found, in walk order (dense ids).
     pub ops: Vec<MemOp>,
     /// Total loop iterations across the (possibly nested) compute loops.
     pub total_iterations: u64,

@@ -15,6 +15,8 @@
 //! against (blind elision, everything on the core port, FIFO order).
 //! [`memprobe`] extracts the memory-operation view both flows share.
 
+#![warn(missing_docs)]
+
 pub mod elision;
 pub mod hwgen;
 pub mod memprobe;

@@ -30,7 +30,9 @@ use crate::synthesis::SynthOptions;
 /// The chosen interface + canonicalized segment sizes for one memory op.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Assignment {
+    /// Memory-op id (index into [`MemProbe::ops`]).
     pub op: usize,
+    /// The chosen interface.
     pub itfc: InterfaceId,
     /// Legal transfer sizes in issue order (decreasing, §4.3) for one
     /// execution of the op.

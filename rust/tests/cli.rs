@@ -60,6 +60,18 @@ fn synth_demo_fir7_shows_all_refinement_levels() {
 }
 
 #[test]
+fn synth_demo_timing_sim_reports_deltas() {
+    let out = aquas(&["synth", "--demo", "fir7", "--timing", "sim"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("--timing sim"), "timing section missing: {text}");
+    assert!(text.contains("closed-form"), "no closed-form column: {text}");
+    assert!(text.contains("simulated"), "no simulated column: {text}");
+    // Uncontended fir7 replays agree with the closed form exactly.
+    assert!(text.contains("delta +0"), "expected a zero delta row: {text}");
+}
+
+#[test]
 fn compile_vmadot_reports_match() {
     let out = aquas(&["compile", "vmadot"]);
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));

@@ -111,6 +111,20 @@ fn issue_wait_equivalent_and_completes_at_wait() {
     assert_eq!(mem.read_i32(BufferId(1)), vec![1, 2, 3, 4, 5, 6, 7, 8]);
     assert_eq!(stats.transfers, 1);
     assert_eq!(stats.transfer_bytes, 32);
+    // Issue ops charge the simulated §4.1 completion cycle (timing-only
+    // stat, identical across engines — check_equivalent above pinned the
+    // equality; here pin the value against the closed-form recurrence).
+    let expect = aquas::interface::latency::sequence_latency(
+        &aquas::interface::model::MemInterface::cpu_port(),
+        TransactionKind::Load,
+        &[32],
+    );
+    assert_eq!(stats.dma_cycles, expect);
+    let mut m2 = Memory::for_func(&f);
+    m2.write_i32(BufferId(0), &[1, 2, 3, 4, 5, 6, 7, 8]);
+    let mut s2 = ExecStats::default();
+    interp::run_with_stats(&f, &[], &mut m2, &mut s2).unwrap();
+    assert_eq!(s2.dma_cycles, expect, "tree-walker charges the same DMA clock");
 }
 
 #[test]
