@@ -12,6 +12,17 @@
 //! - batched aggregate throughput at least `min_batch4_throughput_x`
 //!   times the single-stream baseline recorded in the baseline file.
 //!
+//! The report also carries the multi-core SoC core-scaling curves
+//! (1/2/4/8 cores on the heavy-tailed `soc_spec` trace), gated on:
+//!
+//! - the 1-core SoC bitwise-reproducing the plain engine;
+//! - SoC replay determinism and core counts never perturbing tokens;
+//! - per-shard KV accounting leak-free at every core count;
+//! - 4-core throughput at least `min_cores4_throughput_x` times the
+//!   1-core SoC, but scaling strictly sublinear at 2/4/8 cores;
+//! - a nonzero shared-DDR contention delta (`dma_cycles`) once the
+//!   8-core fleet oversubscribes the DDR port group.
+//!
 //! `-- --test` is the CI smoke mode (shorter trace).
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
@@ -65,12 +76,60 @@ fn main() {
             );
             failed = true;
         }
+        // Gate 3: multi-core SoC scaling invariants.
+        for (metric, why) in [
+            ("soc1_bitwise_match_engine", "1-core SoC diverged from the engine"),
+            ("soc_replay_deterministic", "SoC replay must be deterministic"),
+            ("cores2_tokens_match_1core", "sharding perturbed greedy tokens"),
+            ("cores4_tokens_match_1core", "sharding perturbed greedy tokens"),
+            ("cores8_tokens_match_1core", "sharding perturbed greedy tokens"),
+            ("cores1_kv_leak_free", "KV shard leaked"),
+            ("cores2_kv_leak_free", "KV shard leaked"),
+            ("cores4_kv_leak_free", "KV shard leaked"),
+            ("cores8_kv_leak_free", "KV shard leaked"),
+        ] {
+            if report.metrics.get(metric) != Some(&1.0) {
+                eprintln!("GATE FAILED: {metric} != 1 ({why}); see {out_path}");
+                failed = true;
+            }
+        }
+        let min_soc_x = j
+            .get("min_cores4_throughput_x")
+            .and_then(|v| v.as_f64())
+            .expect("baseline has min_cores4_throughput_x");
+        let soc_x4 = report.metrics["cores4_throughput_x"];
+        if soc_x4 < min_soc_x {
+            eprintln!(
+                "REGRESSION: 4-core SoC throughput {soc_x4:.2}x the 1-core SoC is \
+                 below the recorded floor {min_soc_x:.2}x"
+            );
+            failed = true;
+        }
+        for (cores, linear) in [(2usize, 2.0), (4, 4.0), (8, 8.0)] {
+            let x = report.metrics[&format!("cores{cores}_throughput_x")];
+            if x >= linear {
+                eprintln!(
+                    "GATE FAILED: {cores}-core scaling {x:.2}x is not strictly \
+                     sublinear (contention/imbalance must be visible)"
+                );
+                failed = true;
+            }
+        }
+        if report.metrics["cores8_contention_dma_cycles"] <= 0.0 {
+            eprintln!(
+                "GATE FAILED: 8-core run recorded no shared-DDR contention delta \
+                 in dma_cycles"
+            );
+            failed = true;
+        }
         if failed {
             std::process::exit(1);
         }
         println!(
             "checks ok: deterministic + leak-free + token-stable; batch-4 throughput \
-             {measured:.2}x single-stream (floor {min_x:.2}x)"
+             {measured:.2}x single-stream (floor {min_x:.2}x); 4-core SoC {soc_x4:.2}x \
+             1-core (floor {min_soc_x:.2}x), sublinear with a nonzero 8-core \
+             contention delta"
         );
     }
 }

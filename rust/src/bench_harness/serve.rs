@@ -13,9 +13,20 @@
 //! (peak blocks, preemptions, leak check), cross-width token equality
 //! (scheduling must never perturb greedy numerics) and a replay
 //! determinism check. The bench target gates on these in CI.
+//!
+//! The second half of the report is the **multi-core SoC scaling
+//! section**: the heavy-tailed [`soc_spec`] trace replayed on 1/2/4/8
+//! cores through [`crate::coordinator::SocCoordinator`] (sharded KV,
+//! async admission, migration + stealing, measured shared-DDR
+//! contention). Recorded per core count: throughput and speedup vs the
+//! 1-core SoC, latency percentiles, migration/steal/preemption
+//! counters, the contention delta in DMA cycles, and per-shard leak
+//! checks — plus a bitwise check that the 1-core SoC reproduces the
+//! plain engine and a 4-core replay-determinism check.
 
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, KvStats, RequestMetrics, SchedulePolicy, TraceSpec,
+    Coordinator, CoordinatorConfig, KvStats, RequestMetrics, SchedulePolicy, SocConfig,
+    SocCoordinator, SocStats, TraceSpec,
 };
 use crate::error::Result;
 use crate::runtime::Runtime;
@@ -28,7 +39,33 @@ use super::Report;
 /// throughput comparison measures the engine, not idle gaps between
 /// arrivals.
 pub fn default_spec(quick: bool) -> TraceSpec {
-    TraceSpec { n: if quick { 12 } else { 32 }, seed: 7, rate: 16.0, plen: (4, 12), gen: (8, 16) }
+    TraceSpec {
+        n: if quick { 12 } else { 32 },
+        seed: 7,
+        rate: 16.0,
+        plen: (4, 12),
+        gen: (8, 16),
+        ..Default::default()
+    }
+}
+
+/// The SoC core-scaling workload: bursty arrivals (geometric bursts of
+/// mean 4), a heavy generation-length tail (25% of requests draw from
+/// the stretched range) and a mixed interactive/batch SLO population —
+/// the churn the multi-core scheduler exists to absorb. Offered load
+/// saturates even the 8-core SoC, so the curves measure service
+/// capacity, not arrival gaps.
+pub fn soc_spec(quick: bool) -> TraceSpec {
+    TraceSpec {
+        n: if quick { 32 } else { 64 },
+        seed: 11,
+        rate: 24.0,
+        plen: (4, 12),
+        gen: (6, 16),
+        burst: 4.0,
+        tail: 0.25,
+        mix: 0.5,
+    }
 }
 
 /// Outcome of one trace replay.
@@ -83,6 +120,54 @@ pub fn run_trace(
         kv: coord.kv_stats(),
         preemptions: coord.preemptions(),
     })
+}
+
+/// Outcome of one N-core SoC trace replay.
+pub struct SocTraceRun {
+    /// Per-request metrics, merged across cores and sorted by SoC id.
+    pub metrics: Vec<RequestMetrics>,
+    /// Simulated end-to-end time on the slowest core's clock, ms.
+    pub elapsed_ms: f64,
+    /// SoC counters + per-shard allocator accounting.
+    pub stats: SocStats,
+}
+
+impl SocTraceRun {
+    /// Total generated tokens across the trace.
+    pub fn total_tokens(&self) -> usize {
+        self.metrics.iter().map(|m| m.generated.len()).sum()
+    }
+
+    /// Aggregate generated-token throughput on the simulated clock.
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.total_tokens() as f64 / (self.elapsed_ms / 1e3).max(1e-12)
+    }
+
+    fn ttft_ms(&self) -> Vec<f64> {
+        self.metrics.iter().map(|m| m.ttft_us as f64 / 1e3).collect()
+    }
+
+    fn itl_ms(&self) -> Vec<f64> {
+        self.metrics
+            .iter()
+            .flat_map(|m| m.itl_us.iter().map(|&x| x as f64 / 1e3))
+            .collect()
+    }
+}
+
+/// Replay `spec` on an N-core SoC with the default shard geometry,
+/// dispatch policy and DDR port group (see
+/// [`crate::coordinator::SocConfig`]). Generation lengths are capped to
+/// the serving window so heavy-tail draws stay admissible.
+pub fn run_soc_trace(rt: &Runtime, spec: &TraceSpec, cores: usize) -> Result<SocTraceRun> {
+    let model = rt.manifest().model.clone();
+    let reqs = spec.generate_capped(model.vocab, model.prefill_len, model.max_seq);
+    let mut soc = SocCoordinator::new(rt, SocConfig { cores, ..Default::default() });
+    soc.submit_trace(&reqs)?;
+    let metrics = soc.run_to_completion()?;
+    let elapsed_ms = soc.sim_elapsed_ms();
+    let stats = soc.stats();
+    Ok(SocTraceRun { metrics, elapsed_ms, stats })
 }
 
 /// Build the serving report (the `BENCH_serve.json` source of truth).
@@ -163,6 +248,90 @@ pub fn report(quick: bool) -> Report {
     let deterministic = tok_a == tok_b && a.elapsed_ms == b.elapsed_ms;
     r.metric("replay_deterministic", if deterministic { 1.0 } else { 0.0 });
 
+    // ----- multi-core SoC: core-scaling curves (1/2/4/8 cores) ----------
+    let sspec = soc_spec(quick);
+    r.metric("soc_trace_requests", sspec.n as f64);
+    let mut core1_tok_s = 0.0;
+    let mut core1_tokens: Vec<(u64, Vec<i32>)> = Vec::new();
+    for cores in [1usize, 2, 4, 8] {
+        let label = format!("cores{cores}");
+        let run = run_soc_trace(&rt, &sspec, cores)
+            .unwrap_or_else(|e| panic!("{label} replay failed: {e}"));
+        let tok_s = run.throughput_tok_s();
+        let tokens: Vec<(u64, Vec<i32>)> =
+            run.metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+        if cores == 1 {
+            core1_tok_s = tok_s;
+            core1_tokens = tokens;
+        } else {
+            // Sharding, migration and stealing move *where* a sequence
+            // runs, never *what* it generates.
+            r.metric(
+                &format!("{label}_tokens_match_1core"),
+                if tokens == core1_tokens { 1.0 } else { 0.0 },
+            );
+        }
+        let speedup = tok_s / core1_tok_s.max(1e-12);
+        let ttft = summarize(run.ttft_ms());
+        let itl = summarize(run.itl_ms());
+        let peak =
+            run.stats.per_core_kv.iter().map(|k| k.peak_in_use).max().unwrap_or(0);
+        let leak_free = run.stats.per_core_kv.iter().all(|k| k.leak_free());
+        r.row(vec![
+            label.clone(),
+            run.total_tokens().to_string(),
+            format!("{:.1}", run.elapsed_ms / 1e3),
+            format!("{tok_s:.2}"),
+            format!("{speedup:.2}x"),
+            format!("{:.0}/{:.0}", ttft.p50, ttft.p95),
+            format!("{:.0}/{:.0}", itl.p50, itl.p95),
+            peak.to_string(),
+            run.stats.preemptions.to_string(),
+        ]);
+        r.metric(&format!("{label}_throughput_tok_s"), tok_s);
+        r.metric(&format!("{label}_throughput_x"), speedup);
+        r.metric(&format!("{label}_ttft_p50_ms"), ttft.p50);
+        r.metric(&format!("{label}_ttft_p95_ms"), ttft.p95);
+        r.metric(&format!("{label}_itl_p50_ms"), itl.p50);
+        r.metric(&format!("{label}_itl_p95_ms"), itl.p95);
+        r.metric(&format!("{label}_peak_blocks"), peak as f64);
+        r.metric(&format!("{label}_preemptions"), run.stats.preemptions as f64);
+        r.metric(
+            &format!("{label}_contention_dma_cycles"),
+            run.stats.contention_dma_cycles,
+        );
+        r.metric(&format!("{label}_migrations"), run.stats.migrations as f64);
+        r.metric(&format!("{label}_steals"), run.stats.steals as f64);
+        r.metric(&format!("{label}_kv_leak_free"), if leak_free { 1.0 } else { 0.0 });
+    }
+
+    // A 1-core SoC is the PR 3 engine, bitwise: same trace through
+    // `SocCoordinator { cores: 1 }` must reproduce run `a` exactly —
+    // ids, token streams, TTFT/ITL on the clock, and elapsed time.
+    let soc1 = run_soc_trace(&rt, &spec, 1).expect("1-core SoC replay");
+    let bitwise = soc1.elapsed_ms == a.elapsed_ms
+        && soc1.metrics.len() == a.metrics.len()
+        && soc1.metrics.iter().zip(&a.metrics).all(|(x, y)| {
+            x.id == y.id
+                && x.generated == y.generated
+                && x.ttft_us == y.ttft_us
+                && x.itl_us == y.itl_us
+        });
+    r.metric("soc1_bitwise_match_engine", if bitwise { 1.0 } else { 0.0 });
+
+    // SoC replay determinism at 4 cores: identical trace spec →
+    // identical tokens, clock and contention accounting.
+    let sa = run_soc_trace(&rt, &sspec, 4).expect("soc replay a");
+    let sb = run_soc_trace(&rt, &sspec, 4).expect("soc replay b");
+    let stok_a: Vec<(u64, Vec<i32>)> =
+        sa.metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+    let stok_b: Vec<(u64, Vec<i32>)> =
+        sb.metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+    let soc_det = stok_a == stok_b
+        && sa.elapsed_ms == sb.elapsed_ms
+        && sa.stats.contention_dma_cycles == sb.stats.contention_dma_cycles;
+    r.metric("soc_replay_deterministic", if soc_det { 1.0 } else { 0.0 });
+
     r
 }
 
@@ -184,5 +353,36 @@ mod tests {
         let x4 = r.metrics["batch4_throughput_x"];
         assert!(x4 >= 2.0, "batch-4 throughput only {x4:.2}x the single-stream baseline");
         assert!(r.metrics["batch8_throughput_x"] >= x4 * 0.9, "batch-8 collapsed");
+
+        // ----- multi-core SoC scaling gates ----------------------------
+        assert_eq!(r.metrics["soc1_bitwise_match_engine"], 1.0, "1-core SoC diverged");
+        assert_eq!(r.metrics["soc_replay_deterministic"], 1.0);
+        for cores in [2, 4, 8] {
+            assert_eq!(
+                r.metrics[&format!("cores{cores}_tokens_match_1core")],
+                1.0,
+                "sharding perturbed tokens at {cores} cores"
+            );
+        }
+        for cores in [1, 2, 4, 8] {
+            assert_eq!(
+                r.metrics[&format!("cores{cores}_kv_leak_free")],
+                1.0,
+                "shard leaked at {cores} cores"
+            );
+        }
+        // Scaling is real but strictly sublinear: per-shard queue tails
+        // bound 2/4 cores below linear, and the shared-DDR port group
+        // walls the 8-core point (nonzero contention delta).
+        let sx2 = r.metrics["cores2_throughput_x"];
+        let sx4 = r.metrics["cores4_throughput_x"];
+        let sx8 = r.metrics["cores8_throughput_x"];
+        assert!(sx2 > 1.0 && sx2 < 2.0, "2-core speedup {sx2:.2}x out of range");
+        assert!(sx4 >= 2.0 && sx4 < 4.0, "4-core speedup {sx4:.2}x out of range");
+        assert!(sx8 > 1.5 && sx8 < 8.0, "8-core speedup {sx8:.2}x out of range");
+        assert!(
+            r.metrics["cores8_contention_dma_cycles"] > 0.0,
+            "8-core run saw no shared-DDR contention"
+        );
     }
 }

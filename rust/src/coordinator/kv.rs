@@ -56,6 +56,7 @@ impl BlockTable {
         self.blocks.len()
     }
 
+    /// True when the table holds no blocks.
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty()
     }
@@ -69,13 +70,18 @@ impl BlockTable {
 /// Pool statistics (leak checking + bench reporting).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct KvStats {
+    /// Pool size, blocks.
     pub total_blocks: usize,
     /// Token positions per block (the pool's actual geometry, so
     /// reporting never has to re-derive it from a config default).
     pub block_slots: usize,
+    /// Blocks currently on the free list.
     pub free_blocks: usize,
+    /// High-water mark of blocks simultaneously allocated.
     pub peak_in_use: usize,
+    /// Lifetime block allocations.
     pub allocs: u64,
+    /// Lifetime block frees.
     pub frees: u64,
 }
 
@@ -106,6 +112,7 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// Build a pool sized for `model`'s cache geometry per `cfg`.
     pub fn new(model: &ModelSpec, cfg: PagedKvConfig) -> Self {
         assert!(cfg.block_slots > 0, "zero-slot blocks");
         assert!(cfg.num_blocks > 0, "empty pool");
@@ -127,18 +134,22 @@ impl KvPool {
         }
     }
 
+    /// Token positions per block.
     pub fn block_slots(&self) -> usize {
         self.block_slots
     }
 
+    /// Pool size, blocks.
     pub fn total_blocks(&self) -> usize {
         self.num_blocks
     }
 
+    /// Blocks currently on the free list.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Accounting snapshot (leak checking + bench reporting).
     pub fn stats(&self) -> KvStats {
         KvStats {
             total_blocks: self.total_blocks(),

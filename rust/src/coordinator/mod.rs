@@ -27,10 +27,44 @@
 //! wall-clock anywhere). A batched tick streams the weight tiles once for
 //! the whole batch — that amortization is what turns the single-stream
 //! coordinator of the original study into a servable system.
+//!
+//! # Multi-core SoC serving
+//!
+//! [`SocCoordinator`] scales this engine to N ASIP cores on one SoC:
+//! each core runs its own pipeline over its own
+//! paged-KV *shard*, requests are dispatched to the least-loaded run
+//! queue, idle cores steal queued work, sequences migrate off dry
+//! shards, and every core's weight/KV streams contend for the shared
+//! DDR controller through the same event-driven burst engine (the
+//! slowdown is *measured* by replaying concurrent streams through
+//! [`crate::interface::dmasim`], not modelled by a second formula). A
+//! 1-core SoC is bitwise-identical to driving [`Coordinator`] directly.
+//!
+//! ```
+//! use aquas::coordinator::{SocConfig, SocCoordinator, TraceSpec};
+//! use aquas::runtime::Runtime;
+//!
+//! // Build a deterministic trace and serve it on a 2-core SoC (the
+//! // runtime falls back to its simulated model without artifacts).
+//! let rt = Runtime::load("artifacts").unwrap();
+//! let model = rt.manifest().model.clone();
+//! let spec = TraceSpec::parse("n=4,seed=7,rate=8,plen=2..6,gen=2..4").unwrap();
+//! let mut soc = SocCoordinator::new(&rt, SocConfig { cores: 2, ..Default::default() });
+//! soc.submit_trace(&spec.generate(model.vocab, model.prefill_len)).unwrap();
+//! let done = soc.run_to_completion().unwrap();
+//! assert_eq!(done.len(), 4);
+//! let stats = soc.stats();
+//! assert_eq!(stats.cores, 2);
+//! assert!(stats.per_core_kv.iter().all(|kv| kv.leak_free()));
+//! ```
 
+#![warn(missing_docs)]
+
+mod cores;
 mod kv;
 mod trace;
 
+pub use cores::{DispatchPolicy, SocConfig, SocCoordinator, SocStats};
 pub use kv::{BlockTable, KvPool, KvStats, PagedKvConfig};
 pub use trace::{TraceRequest, TraceSpec};
 
@@ -60,6 +94,7 @@ pub enum SchedulePolicy {
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Scheduling policy for mixed prefill/decode load.
     pub policy: SchedulePolicy,
     /// Max concurrently active sequences == decode batch width.
     pub max_active: usize,
@@ -87,16 +122,22 @@ impl Default for CoordinatorConfig {
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Engine-assigned request id (submission order).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget.
     pub max_new_tokens: usize,
 }
 
 /// Per-request lifecycle metrics, all on the simulated SoC clock.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
+    /// Request id (matches the submit-time id).
     pub id: u64,
+    /// Prompt length, tokens.
     pub prompt_len: usize,
+    /// Greedily generated token ids.
     pub generated: Vec<i32>,
     /// Simulated µs from arrival to first generated token.
     pub ttft_us: u128,
@@ -152,14 +193,27 @@ impl WaitItem {
     }
 }
 
+/// One modelled execution burst: the `(compute, mem)` cycle demands of a
+/// prefill pass, replay step, or batched decode tick *before* the
+/// double-buffering max and pipeline-fill factor — what the multi-core
+/// SoC layer needs to re-price the memory leg under shared-DDR
+/// contention (see `cores.rs`).
+#[derive(Debug, Clone, Copy)]
+struct TickDemand {
+    compute: f64,
+    mem: f64,
+}
+
 /// The serving engine.
 pub struct Coordinator<'rt> {
     rt: &'rt Runtime,
     cfg: CoordinatorConfig,
     next_id: u64,
     next_admit: u64,
-    /// Trace requests not yet arrived (sorted by arrival time).
-    pending: VecDeque<(f64, Request)>,
+    /// Trace requests not yet arrived, as `(arrive_ms, deadline_ms,
+    /// request)` sorted by arrival time. The TTFT deadline is fixed at
+    /// submit so per-request SLO classes survive queueing.
+    pending: VecDeque<(f64, f64, Request)>,
     waiting: VecDeque<WaitItem>,
     active: Vec<Active>,
     done: Vec<RequestMetrics>,
@@ -181,9 +235,18 @@ pub struct Coordinator<'rt> {
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
     preemptions: u64,
+    /// When set (by the SoC layer), every charged execution burst also
+    /// pushes its [`TickDemand`] onto `step_demand` for contention
+    /// re-pricing. Off by default: the single-core engine never pays for
+    /// the recording.
+    record_demand: bool,
+    /// Demands accumulated since the SoC layer last drained them.
+    step_demand: Vec<TickDemand>,
 }
 
 impl<'rt> Coordinator<'rt> {
+    /// Build an engine over `rt`'s AOT artifacts (or their simulated
+    /// fallback) with its own paged-KV pool per `cfg`.
     pub fn new(rt: &'rt Runtime, cfg: CoordinatorConfig) -> Self {
         assert!(cfg.max_active >= 1, "max_active must be positive");
         let bus = MemInterface::system_bus();
@@ -209,6 +272,16 @@ impl<'rt> Coordinator<'rt> {
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
             preemptions: 0,
+            record_demand: false,
+            step_demand: Vec::new(),
+        }
+    }
+
+    /// Record one execution burst for the SoC contention layer (no-op
+    /// unless recording was enabled by `SocCoordinator`).
+    fn note_demand(&mut self, compute: f64, mem: f64) {
+        if self.record_demand {
+            self.step_demand.push(TickDemand { compute, mem });
         }
     }
 
@@ -278,8 +351,22 @@ impl<'rt> Coordinator<'rt> {
         max_new_tokens: usize,
         arrive_ms: f64,
     ) -> Result<u64> {
+        let slo = self.cfg.slo_ttft_ms;
+        self.submit_at_with_slo(prompt, max_new_tokens, arrive_ms, slo)
+    }
+
+    /// Enqueue a prompt with an explicit arrival time *and* TTFT SLO
+    /// (simulated ms) — trace replay with per-request SLO classes (see
+    /// [`TraceRequest::slo_factor`]).
+    pub fn submit_at_with_slo(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        arrive_ms: f64,
+        slo_ttft_ms: f64,
+    ) -> Result<u64> {
         self.validate(&prompt, max_new_tokens)?;
-        if let Some((last, _)) = self.pending.back() {
+        if let Some((last, _, _)) = self.pending.back() {
             if arrive_ms < *last {
                 return Err(Error::Coordinator("trace arrivals must be sorted".into()));
             }
@@ -287,14 +374,17 @@ impl<'rt> Coordinator<'rt> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request { id, prompt, max_new_tokens };
-        self.pending.push_back((arrive_ms, req));
+        self.pending.push_back((arrive_ms, arrive_ms + slo_ttft_ms, req));
         Ok(id)
     }
 
     /// Enqueue a whole trace; returns the request ids.
     pub fn submit_trace(&mut self, reqs: &[TraceRequest]) -> Result<Vec<u64>> {
         reqs.iter()
-            .map(|r| self.submit_at(r.prompt.clone(), r.max_new_tokens, r.arrive_ms))
+            .map(|r| {
+                let slo = self.cfg.slo_ttft_ms * r.slo_factor;
+                self.submit_at_with_slo(r.prompt.clone(), r.max_new_tokens, r.arrive_ms, slo)
+            })
             .collect()
     }
 
@@ -308,7 +398,7 @@ impl<'rt> Coordinator<'rt> {
         self.release_arrivals();
         // Idle with only future arrivals: fast-forward the clock.
         if self.active.is_empty() && self.waiting.is_empty() {
-            match self.pending.front().map(|(t, _)| *t) {
+            match self.pending.front().map(|(t, _, _)| *t) {
                 Some(t) => {
                     self.fast_forward_to(t);
                     self.release_arrivals();
@@ -355,7 +445,7 @@ impl<'rt> Coordinator<'rt> {
             // admission is gated on future arrivals (waiting empty) — or a
             // scheduler bug. Fast-forward if we can; run_to_completion
             // turns a persistent stall into an error.
-            if let Some(t) = self.pending.front().map(|(t, _)| *t) {
+            if let Some(t) = self.pending.front().map(|(t, _, _)| *t) {
                 self.fast_forward_to(t);
                 self.release_arrivals();
                 ran = true;
@@ -426,12 +516,12 @@ impl<'rt> Coordinator<'rt> {
 
     fn release_arrivals(&mut self) {
         let now = self.sim_now_ms();
-        while let Some((t, _)) = self.pending.front() {
+        while let Some((t, _, _)) = self.pending.front() {
             if *t > now {
                 break;
             }
-            let (arrive_ms, req) = self.pending.pop_front().expect("checked non-empty");
-            let deadline_ms = arrive_ms + self.cfg.slo_ttft_ms;
+            let (arrive_ms, deadline_ms, req) =
+                self.pending.pop_front().expect("checked non-empty");
             self.waiting.push_back(WaitItem::Fresh { req, arrive_ms, deadline_ms });
         }
     }
@@ -504,7 +594,9 @@ impl<'rt> Coordinator<'rt> {
         // Charge the modelled clock: the ISAX tiles the whole prompt
         // through one weight stream; the scalar baseline walks it
         // token-by-token (weights re-streamed each time).
-        let isax = self.isax_model.prefill_cycles(&self.cfg.llm, plen, &self.bus);
+        let (pc, pm) = self.isax_model.prefill_parts(&self.cfg.llm, plen, &self.bus);
+        self.note_demand(pc, pm);
+        let isax = pc.max(pm) * 1.05;
         let mut base = 0.0;
         for t in 0..plen {
             base += self.base_model.token_cycles(&self.cfg.llm, t + 1);
@@ -555,7 +647,9 @@ impl<'rt> Coordinator<'rt> {
             return Err(e);
         }
         act.len = plen;
-        let mut isax = self.isax_model.prefill_cycles(&self.cfg.llm, plen, &self.bus);
+        let (pc, pm) = self.isax_model.prefill_parts(&self.cfg.llm, plen, &self.bus);
+        self.note_demand(pc, pm);
+        let mut isax = pc.max(pm) * 1.05;
 
         // Replay all but the last generated token through single decode
         // steps (the last one is the pending input of the next tick).
@@ -602,7 +696,9 @@ impl<'rt> Coordinator<'rt> {
             );
             // Same pricing as the regular decode path: batched tick plus
             // the block-granular paging DMA overhead.
-            isax += self.isax_model.batch_tick_cycles(&self.cfg.llm, &[act.len], &self.bus);
+            let (tc, tm) = self.isax_model.batch_tick_parts(&self.cfg.llm, &[act.len], &self.bus);
+            self.note_demand(tc, tm);
+            isax += tc.max(tm) * 1.05;
             isax += self.paging_overhead_cycles(act.len);
         }
         self.clock_cycles += isax;
@@ -710,7 +806,9 @@ impl<'rt> Coordinator<'rt> {
         // the batch's gathers contend for the same bus, and the §4.1
         // in-flight window pipelines across block boundaries.
         let ctxs: Vec<usize> = feeds.iter().map(|&(_, pos)| pos + 1).collect();
-        let mut tick = self.isax_model.batch_tick_cycles(&self.cfg.llm, &ctxs, &self.bus);
+        let (tc, tm) = self.isax_model.batch_tick_parts(&self.cfg.llm, &ctxs, &self.bus);
+        self.note_demand(tc, tm);
+        let mut tick = tc.max(tm) * 1.05;
         let total_blocks: usize = ctxs.iter().map(|&c| self.pool.blocks_for(c)).sum();
         let ideal: f64 =
             ctxs.iter().map(|&c| self.cfg.llm.kv_bytes(c) as f64 / self.kv_stream_rate).sum();

@@ -3,9 +3,24 @@
 //! A [`TraceSpec`] describes a synthetic arrival process compactly enough
 //! to put on a CLI (`aquas serve --trace n=16,seed=7,rate=4,plen=4..12,
 //! gen=6..14`); [`TraceSpec::generate`] expands it into concrete
-//! [`TraceRequest`]s with exponential inter-arrival times and uniform
-//! prompt/generation lengths, all drawn from the seeded in-crate PRNG so
-//! two replays of the same spec are byte-identical.
+//! [`TraceRequest`]s, all drawn from the seeded in-crate PRNG so two
+//! replays of the same spec are byte-identical.
+//!
+//! Grammar (comma-separated `key=value` over the defaults):
+//!
+//! | key     | meaning                                                    |
+//! |---------|------------------------------------------------------------|
+//! | `n`     | request count                                              |
+//! | `seed`  | PRNG seed                                                  |
+//! | `rate`  | mean offered load, requests per simulated second (0 = all at t0) |
+//! | `plen`  | prompt-length range `lo..hi`, inclusive                    |
+//! | `gen`   | generation-length range `lo..hi`, inclusive                |
+//! | `burst` | mean arrival-burst size (≥ 1; 1 = plain Poisson)           |
+//! | `tail`  | heavy-tail probability: gen drawn from `gen.hi+1..=4·gen.hi` |
+//! | `mix`   | interactive fraction: tagged with a 4× tighter TTFT SLO    |
+//!
+//! `burst`/`tail`/`mix` at their defaults draw *nothing* from the PRNG,
+//! so every pre-SoC spec still expands to a byte-identical trace.
 
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
@@ -15,8 +30,15 @@ use crate::util::rng::Rng;
 pub struct TraceRequest {
     /// Arrival time on the simulated SoC clock, in milliseconds.
     pub arrive_ms: f64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget (the sequence retires after this many tokens).
     pub max_new_tokens: usize,
+    /// Multiplier on the engine's TTFT SLO for this request: `1.0` for
+    /// batch-class traffic, `< 1` for interactive-class traffic whose
+    /// deadline is tighter (see [`TraceSpec`]'s `mix` knob and
+    /// [`super::SchedulePolicy::Fair`]).
+    pub slo_factor: f64,
 }
 
 /// A compact, deterministic trace description.
@@ -33,17 +55,42 @@ pub struct TraceSpec {
     pub plen: (usize, usize),
     /// Generation length range (inclusive).
     pub gen: (usize, usize),
+    /// Mean burst size, ≥ 1. Arrivals come in geometric bursts of this
+    /// mean, back-to-back within a burst, separated by exponential gaps
+    /// of mean `burst/rate` — the long-run offered load stays `rate`,
+    /// but queues see the heavy-tailed churn real front-ends produce.
+    /// `1.0` is the plain Poisson process of the pre-SoC grammar.
+    pub burst: f64,
+    /// Heavy-tail probability in `[0, 1]`: with this probability a
+    /// request's generation length is drawn from the stretched range
+    /// `gen.1+1 ..= 4·gen.1` instead of `gen` (always clamped to the
+    /// serving window by [`TraceSpec::generate_capped`]). `0` disables.
+    pub tail: f64,
+    /// Interactive-class probability in `[0, 1]`: with this probability
+    /// a request is tagged with `slo_factor = 0.25` (a 4× tighter TTFT
+    /// deadline under [`super::SchedulePolicy::Fair`]). `0` disables.
+    pub mix: f64,
 }
 
 impl Default for TraceSpec {
     fn default() -> Self {
-        Self { n: 16, seed: 7, rate: 2.0, plen: (4, 12), gen: (6, 14) }
+        Self {
+            n: 16,
+            seed: 7,
+            rate: 2.0,
+            plen: (4, 12),
+            gen: (6, 14),
+            burst: 1.0,
+            tail: 0.0,
+            mix: 0.0,
+        }
     }
 }
 
 impl TraceSpec {
     /// Parse the CLI form: comma-separated `key=value` pairs over the
-    /// defaults, e.g. `n=16,seed=7,rate=4,plen=4..12,gen=6..14`.
+    /// defaults, e.g. `n=16,seed=7,rate=4,plen=4..12,gen=6..14,burst=4,
+    /// tail=0.25,mix=0.5`.
     pub fn parse(text: &str) -> Result<Self> {
         let mut spec = Self::default();
         for part in text.split(',').filter(|p| !p.is_empty()) {
@@ -57,6 +104,9 @@ impl TraceSpec {
                 "rate" => spec.rate = val.parse().map_err(|_| bad("not a number"))?,
                 "plen" => spec.plen = parse_range(val).ok_or_else(|| bad("expected lo..hi"))?,
                 "gen" => spec.gen = parse_range(val).ok_or_else(|| bad("expected lo..hi"))?,
+                "burst" => spec.burst = val.parse().map_err(|_| bad("not a number"))?,
+                "tail" => spec.tail = val.parse().map_err(|_| bad("not a number"))?,
+                "mix" => spec.mix = val.parse().map_err(|_| bad("not a number"))?,
                 _ => return Err(Error::Coordinator(format!("trace spec: unknown key `{key}`"))),
             }
         }
@@ -66,24 +116,69 @@ impl TraceSpec {
         if spec.plen.0 == 0 || spec.plen.0 > spec.plen.1 || spec.gen.0 == 0 || spec.gen.0 > spec.gen.1 {
             return Err(Error::Coordinator("trace spec: empty plen/gen range".into()));
         }
+        if !spec.burst.is_finite() || spec.burst < 1.0 {
+            return Err(Error::Coordinator("trace spec: burst must be >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&spec.tail) || !(0.0..=1.0).contains(&spec.mix) {
+            return Err(Error::Coordinator("trace spec: tail/mix must be in 0..=1".into()));
+        }
         Ok(spec)
     }
 
     /// Expand into concrete requests. `vocab`/`prefill_len` come from the
     /// serving model so generated prompts are always admissible.
     pub fn generate(&self, vocab: usize, prefill_len: usize) -> Vec<TraceRequest> {
+        self.generate_capped(vocab, prefill_len, usize::MAX)
+    }
+
+    /// Like [`TraceSpec::generate`], but clamp each request's generation
+    /// budget so `prompt + max_new ≤ max_total_slots` (the serving KV
+    /// window) — heavy-tailed draws stay admissible instead of being
+    /// rejected at submit. The PRNG draw sequence is unchanged, so a
+    /// capped trace differs from the uncapped one only in the clamp.
+    pub fn generate_capped(
+        &self,
+        vocab: usize,
+        prefill_len: usize,
+        max_total_slots: usize,
+    ) -> Vec<TraceRequest> {
         let mut rng = Rng::new(self.seed);
         let mut t_ms = 0.0f64;
         let (plo, phi) = (self.plen.0.min(prefill_len), self.plen.1.min(prefill_len));
+        let mut burst_left = 0usize;
         let mut out = Vec::with_capacity(self.n);
         for _ in 0..self.n {
             if self.rate > 0.0 {
-                t_ms += rng.exponential(self.rate) * 1e3;
+                if self.burst > 1.0 {
+                    if burst_left > 0 {
+                        // Back-to-back arrival inside the current burst.
+                        burst_left -= 1;
+                    } else {
+                        t_ms += rng.exponential(self.rate / self.burst) * 1e3;
+                        // Geometric burst size with mean `burst` (capped
+                        // so one pathological draw cannot outlast the
+                        // trace).
+                        let cont = 1.0 - 1.0 / self.burst;
+                        let mut size = 1usize;
+                        while size < self.n && rng.f64() < cont {
+                            size += 1;
+                        }
+                        burst_left = size - 1;
+                    }
+                } else {
+                    t_ms += rng.exponential(self.rate) * 1e3;
+                }
             }
             let len = rng.range(plo, phi + 1);
             let prompt = (0..len).map(|_| rng.below(vocab as u64) as i32).collect();
-            let max_new = rng.range(self.gen.0, self.gen.1 + 1);
-            out.push(TraceRequest { arrive_ms: t_ms, prompt, max_new_tokens: max_new });
+            let drawn = if self.tail > 0.0 && rng.f64() < self.tail {
+                rng.range(self.gen.1 + 1, 4 * self.gen.1 + 1)
+            } else {
+                rng.range(self.gen.0, self.gen.1 + 1)
+            };
+            let max_new = drawn.min(max_total_slots.saturating_sub(len)).max(1);
+            let slo_factor = if self.mix > 0.0 && rng.f64() < self.mix { 0.25 } else { 1.0 };
+            out.push(TraceRequest { arrive_ms: t_ms, prompt, max_new_tokens: max_new, slo_factor });
         }
         out
     }
@@ -106,10 +201,16 @@ mod tests {
         assert_eq!(s.rate, 0.0);
         assert_eq!(s.plen, (2, 4));
         assert_eq!(s.gen, (1, 2));
+        assert_eq!((s.burst, s.tail, s.mix), (1.0, 0.0, 0.0));
+        let h = TraceSpec::parse("burst=4,tail=0.25,mix=0.5").unwrap();
+        assert_eq!((h.burst, h.tail, h.mix), (4.0, 0.25, 0.5));
         assert!(TraceSpec::parse("bogus").is_err());
         assert!(TraceSpec::parse("n=0").is_err());
         assert!(TraceSpec::parse("plen=9..4").is_err());
         assert!(TraceSpec::parse("warp=9").is_err());
+        assert!(TraceSpec::parse("burst=0.5").is_err());
+        assert!(TraceSpec::parse("tail=1.5").is_err());
+        assert!(TraceSpec::parse("mix=-0.1").is_err());
     }
 
     #[test]
@@ -122,14 +223,74 @@ mod tests {
             assert_eq!(x.arrive_ms, y.arrive_ms);
             assert_eq!(x.prompt, y.prompt);
             assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.slo_factor, y.slo_factor);
         }
         let mut last = 0.0;
         for r in &a {
             assert!(!r.prompt.is_empty() && r.prompt.len() <= 16);
             assert!(r.prompt.iter().all(|&t| (0..256).contains(&t)));
             assert!((spec.gen.0..=spec.gen.1).contains(&r.max_new_tokens));
+            assert_eq!(r.slo_factor, 1.0, "mix=0 must not tag anything");
             assert!(r.arrive_ms >= last, "arrivals must be sorted");
             last = r.arrive_ms;
+        }
+    }
+
+    #[test]
+    fn default_knobs_leave_old_traces_byte_identical() {
+        // A spec with burst/tail/mix at their defaults must draw exactly
+        // the PRNG sequence the pre-SoC generator drew — the old CLI
+        // strings replay the very same traces.
+        let old = TraceSpec { n: 12, seed: 3, rate: 4.0, plen: (2, 6), gen: (2, 5), ..Default::default() };
+        let a = old.generate(64, 8);
+        let b = old.generate_capped(64, 8, usize::MAX);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrive_ms, y.arrive_ms);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_but_keep_the_offered_load() {
+        let plain = TraceSpec { n: 200, seed: 9, rate: 8.0, ..Default::default() };
+        let bursty = TraceSpec { burst: 4.0, ..plain.clone() };
+        let a = plain.generate(64, 8);
+        let b = bursty.generate(64, 8);
+        // Bursts: many zero gaps between consecutive arrivals.
+        let zero_gaps =
+            b.windows(2).filter(|w| w[1].arrive_ms == w[0].arrive_ms).count();
+        assert!(zero_gaps > b.len() / 4, "only {zero_gaps} back-to-back arrivals");
+        assert!(
+            a.windows(2).filter(|w| w[1].arrive_ms == w[0].arrive_ms).count() == 0,
+            "Poisson arrivals must not collide"
+        );
+        // Long-run offered load within a factor-ish of the plain process.
+        let span = |t: &[TraceRequest]| t.last().unwrap().arrive_ms - t[0].arrive_ms;
+        assert!(span(&b) > span(&a) * 0.3 && span(&b) < span(&a) * 3.0);
+    }
+
+    #[test]
+    fn heavy_tail_and_mix_draw_as_specified() {
+        let spec = TraceSpec {
+            n: 300,
+            seed: 5,
+            rate: 0.0,
+            gen: (2, 4),
+            tail: 0.3,
+            mix: 0.5,
+            ..Default::default()
+        };
+        let reqs = spec.generate_capped(64, 8, 12);
+        let tails = reqs.iter().filter(|r| r.max_new_tokens > spec.gen.1).count();
+        assert!(tails > 30 && tails < 200, "tail draws off-distribution: {tails}");
+        let interactive = reqs.iter().filter(|r| r.slo_factor < 1.0).count();
+        assert!(interactive > 80 && interactive < 250, "mix draws off: {interactive}");
+        for r in &reqs {
+            assert!(r.prompt.len() + r.max_new_tokens <= 12, "cap violated");
+            assert!(r.max_new_tokens >= 1);
+            assert!(r.slo_factor == 1.0 || r.slo_factor == 0.25);
         }
     }
 

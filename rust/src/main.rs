@@ -4,7 +4,10 @@
 //! see DESIGN.md).
 
 use aquas::bench_harness as bh;
-use aquas::coordinator::{Coordinator, CoordinatorConfig, SchedulePolicy, TraceSpec};
+use aquas::coordinator::{
+    Coordinator, CoordinatorConfig, SchedulePolicy, SocConfig, SocCoordinator, TraceRequest,
+    TraceSpec,
+};
 use aquas::runtime::Runtime;
 
 const USAGE: &str = "\
@@ -31,9 +34,17 @@ COMMANDS:
                               serving engine over the AOT artifacts:
                               --policy decode-first|prefill-first|fair
                               --batch N      decode batch width (default 4)
+                              --cores N      ASIP serving cores on the SoC
+                                             (default 1; >1 shards the KV
+                                             pool per core with migration,
+                                             work stealing and shared-DDR
+                                             contention)
                               -n N           ad-hoc request count (default 4)
                               --trace SPEC   deterministic trace replay,
                                              e.g. n=16,seed=7,rate=4,plen=4..12,gen=6..14
+                                             (+ burst=B mean burst size,
+                                              tail=P heavy-tail prob,
+                                              mix=P interactive-SLO prob)
     ir-levels                 print the Aquas-IR level summary (Table 1)
     help                      this text
 ";
@@ -173,6 +184,7 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
     let mut policy = SchedulePolicy::DecodeFirst;
     let mut n_requests = 4usize;
     let mut batch = 4usize;
+    let mut cores = 1usize;
     let mut trace: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
@@ -193,6 +205,10 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
                 i += 1;
                 batch = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
             }
+            "--cores" => {
+                i += 1;
+                cores = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+            }
             "--trace" => {
                 i += 1;
                 trace = args.get(i).cloned();
@@ -203,6 +219,9 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
     }
     let rt = Runtime::load("artifacts")?;
     println!("platform: {} | entries: {:?}", rt.platform(), rt.entry_names());
+    if cores > 1 {
+        return cmd_serve_soc(&rt, cores, policy, batch, n_requests, trace.as_deref());
+    }
     let mut coord = Coordinator::new(
         &rt,
         CoordinatorConfig { policy, max_active: batch, ..Default::default() },
@@ -257,6 +276,86 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
         coord.preemptions(),
         kv.leak_free(),
     );
+    Ok(())
+}
+
+/// `aquas serve --cores N` (N > 1): the same request stream through the
+/// N-core SoC — sharded KV pools, async dispatch, cross-core migration
+/// and work stealing, with shared-DDR contention on the modelled clock.
+fn cmd_serve_soc(
+    rt: &Runtime,
+    cores: usize,
+    policy: SchedulePolicy,
+    batch: usize,
+    n_requests: usize,
+    trace: Option<&str>,
+) -> aquas::Result<()> {
+    let model = rt.manifest().model.clone();
+    let reqs: Vec<TraceRequest> = if let Some(text) = trace {
+        let spec = TraceSpec::parse(text)?;
+        spec.generate_capped(model.vocab, model.prefill_len, model.max_seq)
+    } else {
+        // Same ad-hoc workload as the single-core path (seed 7), all
+        // arriving at t = 0 with the default SLO class.
+        let mut rng = aquas::util::rng::Rng::new(7);
+        (0..n_requests)
+            .map(|_| {
+                let len = rng.range(4, model.prefill_len);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| rng.below(model.vocab as u64) as i32).collect();
+                TraceRequest { arrive_ms: 0.0, prompt, max_new_tokens: 8, slo_factor: 1.0 }
+            })
+            .collect()
+    };
+    let mut soc = SocCoordinator::new(
+        rt,
+        SocConfig {
+            cores,
+            per_core: CoordinatorConfig { policy, max_active: batch, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    soc.submit_trace(&reqs)?;
+    let metrics = soc.run_to_completion()?;
+    for m in &metrics {
+        println!(
+            "req {}: prompt {} -> {} tokens | ttft {} us | mean itl {} us | preempted {} | sim speedup {:.2}x",
+            m.id,
+            m.prompt_len,
+            m.generated.len(),
+            m.ttft_us,
+            if m.itl_us.is_empty() {
+                0
+            } else {
+                m.itl_us.iter().sum::<u128>() / m.itl_us.len() as u128
+            },
+            m.preemptions,
+            m.sim_base_cycles / m.sim_isax_cycles.max(1.0),
+        );
+    }
+    let total_tokens: usize = metrics.iter().map(|m| m.generated.len()).sum();
+    let elapsed_s = soc.sim_elapsed_ms() / 1e3;
+    let stats = soc.stats();
+    println!(
+        "total: {} requests, {} tokens in {:.3} sim s -> {:.2} tok/s ({cores} cores x batch {batch})",
+        metrics.len(),
+        total_tokens,
+        elapsed_s,
+        total_tokens as f64 / elapsed_s.max(1e-12),
+    );
+    println!(
+        "soc: migrations {} | steals {} | preemptions {} | contention dma cycles {:.0}",
+        stats.migrations, stats.steals, stats.preemptions, stats.contention_dma_cycles,
+    );
+    for (k, kv) in stats.per_core_kv.iter().enumerate() {
+        println!(
+            "core {k} kv: {} blocks x {} slots | peak in use {} | leak-free {}",
+            kv.total_blocks,
+            kv.block_slots,
+            kv.peak_in_use,
+            kv.leak_free(),
+        );
+    }
     Ok(())
 }
 

@@ -18,11 +18,15 @@ use crate::workloads::Kernel;
 pub const NPIX: i64 = 64;
 /// vmvar: ROWS vectors of width W.
 pub const ROWS: i64 = 16;
+/// vmvar row width (elements per vector).
 pub const W: i64 = 16;
 /// Phong material constants (shininess kept small so `powi` stays cheap).
 pub const KA: f64 = 0.1;
+/// Phong diffuse coefficient.
 pub const KD: f64 = 0.7;
+/// Phong specular coefficient.
 pub const KS: f64 = 0.4;
+/// Phong specular exponent.
 pub const SHININESS: u32 = 4;
 
 fn write_unit_vectors(func: &Func, mem: &mut Memory, name: &str, seed: u64, n: i64) {

@@ -13,7 +13,7 @@ use crate::area::{FpgaModel, FpgaUsage};
 use crate::interface::cache::CacheHint;
 use crate::interface::dmasim;
 use crate::interface::latency::{sequence_latency, TransactionKind};
-use crate::interface::model::MemInterface;
+use crate::interface::model::{InterfaceId, InterfaceSet, MemInterface};
 use crate::ir::{Func, FuncBuilder};
 use crate::runtime::DType;
 use crate::synthesis::hwgen::{FuCount, MemEngineDesc, PipelineDesc, SramDesc, StageDesc};
@@ -22,10 +22,15 @@ use crate::synthesis::hwgen::{FuCount, MemEngineDesc, PipelineDesc, SramDesc, St
 /// PAPER_CONFIG scaled to the paper's quoted 110M).
 #[derive(Debug, Clone, Copy)]
 pub struct LlmConfig {
+    /// Model (embedding) dimension.
     pub dim: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention heads per layer.
     pub n_heads: usize,
+    /// MLP hidden dimension.
     pub hidden: usize,
+    /// Vocabulary size (drives the LM-head GEMV term).
     pub vocab: usize,
     /// Prompt length used for TTFT.
     pub prompt_len: usize,
@@ -51,6 +56,7 @@ impl Default for LlmConfig {
 }
 
 impl LlmConfig {
+    /// Per-head dimension (`dim / n_heads`).
     pub fn head_dim(&self) -> usize {
         self.dim / self.n_heads
     }
@@ -86,6 +92,7 @@ impl LlmConfig {
 /// pipeline with a 32-bit DDR3 front end).
 #[derive(Debug, Clone, Copy)]
 pub struct BaseCpuModel {
+    /// Amortized cycles per int8 MAC on the scalar pipeline.
     pub cycles_per_mac: f64,
     /// Sustainable DRAM bytes/cycle through the cached 32-bit port.
     pub mem_bytes_per_cycle: f64,
@@ -116,6 +123,7 @@ impl BaseCpuModel {
 /// "highly efficient memory accesses").
 #[derive(Debug, Clone, Copy)]
 pub struct IsaxLlmModel {
+    /// Sustained int8 MACs/cycle of a lone GEMV stream on the MAC row.
     pub macs_per_cycle: f64,
     /// Tile size staged per burst run (bytes).
     pub tile_bytes: usize,
@@ -167,8 +175,24 @@ impl IsaxLlmModel {
     /// [`IsaxLlmModel::token_cycles`] exactly, so a batch-1 engine *is*
     /// the single-stream baseline.
     pub fn batch_tick_cycles(&self, cfg: &LlmConfig, ctxs: &[usize], bus: &MemInterface) -> f64 {
+        let (compute, mem) = self.batch_tick_parts(cfg, ctxs, bus);
+        compute.max(mem) * 1.05
+    }
+
+    /// The `(compute, mem)` cycle demands of one batched tick *before*
+    /// the double-buffering max and pipeline-fill factor are applied:
+    /// `batch_tick_cycles == compute.max(mem) * 1.05` exactly. Exposed so
+    /// the multi-core SoC layer can re-price the memory leg under shared-
+    /// DDR contention (see [`IsaxLlmModel::shared_stream_slowdown`])
+    /// without duplicating the demand model.
+    pub fn batch_tick_parts(
+        &self,
+        cfg: &LlmConfig,
+        ctxs: &[usize],
+        bus: &MemInterface,
+    ) -> (f64, f64) {
         if ctxs.is_empty() {
-            return 0.0;
+            return (0.0, 0.0);
         }
         let per_token_fixed = (cfg.vocab * cfg.dim) as u64;
         let macs: u64 = ctxs
@@ -181,15 +205,28 @@ impl IsaxLlmModel {
         let compute = macs as f64 / self.batch_macs_per_cycle(ctxs.len());
         let kv: u64 = ctxs.iter().map(|&c| cfg.kv_bytes(c)).sum();
         let mem = (cfg.weight_bytes_per_token() + kv) as f64 / self.mem_bytes_per_cycle(bus);
-        compute.max(mem) * 1.05
+        (compute, mem)
     }
 
     /// Cycles for one tiled prefill pass over a `prompt_len`-token
     /// prompt: all positions share one weight stream (prefill is a GEMM),
     /// each position pays its causal attention + KV traffic.
     pub fn prefill_cycles(&self, cfg: &LlmConfig, prompt_len: usize, bus: &MemInterface) -> f64 {
+        let (compute, mem) = self.prefill_parts(cfg, prompt_len, bus);
+        compute.max(mem) * 1.05
+    }
+
+    /// The `(compute, mem)` demands of one tiled prefill pass, split like
+    /// [`IsaxLlmModel::batch_tick_parts`] (`prefill_cycles ==
+    /// compute.max(mem) * 1.05` exactly).
+    pub fn prefill_parts(
+        &self,
+        cfg: &LlmConfig,
+        prompt_len: usize,
+        bus: &MemInterface,
+    ) -> (f64, f64) {
         let ctxs: Vec<usize> = (1..=prompt_len).collect();
-        self.batch_tick_cycles(cfg, &ctxs, bus)
+        self.batch_tick_parts(cfg, &ctxs, bus)
     }
 
     /// DMA cycles to stage one paged KV block (K *and* V, every layer)
@@ -242,12 +279,70 @@ impl IsaxLlmModel {
             (0..n_slabs).flat_map(|_| slab.iter().copied()),
         ) as f64
     }
+
+    /// Per-stream slowdown factors when `streams` cores' DMA engines pull
+    /// concurrent weight/KV streams through a shared DDR controller that
+    /// sustains `ddr_banks` beats per cycle across the whole SoC.
+    ///
+    /// Measured, not modelled: a steady-state calibration replay through
+    /// the event-driven burst engine ([`crate::interface::dmasim`]) — one
+    /// §4.1 queue per core's bus engine, beat-level arbitration at the
+    /// shared port group (an [`dmasim::SramSpec`] with `ddr_banks` ports)
+    /// — so the multi-core serving layer reuses the existing contention
+    /// substrate instead of inventing a second timing model. Entry `i`
+    /// applies to the i-th concurrently-streaming core; all entries are
+    /// ≥ 1 and equal 1 exactly when the port group covers the aggregate
+    /// demand (each engine sustains at most one beat per cycle, so
+    /// `streams ≤ ddr_banks` never contends).
+    pub fn shared_stream_slowdown(
+        &self,
+        bus: &MemInterface,
+        streams: usize,
+        ddr_banks: usize,
+    ) -> Vec<f64> {
+        if streams == 0 {
+            return Vec::new();
+        }
+        if streams == 1 {
+            // A lone stream has the controller to itself by construction.
+            return vec![1.0];
+        }
+        // Enough back-to-back max-size transactions per stream to amortize
+        // the lead-off and reach the steady-state service rate.
+        const TXNS_PER_STREAM: usize = 192;
+        let size = bus.max_transaction();
+        let solo =
+            dmasim::simulate_sizes(bus, TransactionKind::Load, &vec![size; TXNS_PER_STREAM]);
+        let itfcs = InterfaceSet::new(vec![bus.clone(); streams]);
+        let srams =
+            [dmasim::SramSpec { name: "shared_ddr".into(), banks: ddr_banks.max(1) }];
+        let mut txns = Vec::with_capacity(streams * TXNS_PER_STREAM);
+        for k in 0..streams {
+            for j in 0..TXNS_PER_STREAM {
+                txns.push(dmasim::SimTxn {
+                    op: k * TXNS_PER_STREAM + j,
+                    itfc: InterfaceId(k),
+                    kind: TransactionKind::Load,
+                    addr: (j * size) as u64,
+                    size,
+                    sram: Some(0),
+                });
+            }
+        }
+        let out = dmasim::simulate_txns(&itfcs, &srams, &txns)
+            .expect("calibration replay over a well-formed trace cannot fail");
+        (0..streams)
+            .map(|k| (out.itfc_cycles(InterfaceId(k)) as f64 / solo as f64).max(1.0))
+            .collect()
+    }
 }
 
 /// TTFT / ITL figures (§6.5 Figure 8(c)).
 #[derive(Debug, Clone, Copy)]
 pub struct LlmLatency {
+    /// Time to first token, milliseconds.
     pub ttft_ms: f64,
+    /// Inter-token latency, milliseconds.
     pub itl_ms: f64,
 }
 
@@ -575,6 +670,47 @@ mod tests {
         for x in m3.read_f32(o) {
             assert!((x - 0.5).abs() < 1e-5, "softmax rows must normalize: {x}");
         }
+    }
+
+    #[test]
+    fn tick_parts_compose_to_tick_cycles_exactly() {
+        // The SoC contention layer re-prices the memory leg from the
+        // parts; the composition must be bitwise-identical so a 1-core
+        // SoC replay cannot drift from the single-engine clock.
+        let cfg = LlmConfig::default();
+        let bus = MemInterface::system_bus();
+        let isax = IsaxLlmModel::default();
+        for ctxs in [vec![], vec![7usize], vec![16, 32, 64], vec![64; 8]] {
+            let (c, m) = isax.batch_tick_parts(&cfg, &ctxs, &bus);
+            assert_eq!(c.max(m) * 1.05, isax.batch_tick_cycles(&cfg, &ctxs, &bus));
+        }
+        let (c, m) = isax.prefill_parts(&cfg, 16, &bus);
+        assert_eq!(c.max(m) * 1.05, isax.prefill_cycles(&cfg, 16, &bus));
+    }
+
+    #[test]
+    fn shared_stream_slowdown_tracks_the_port_group() {
+        let bus = MemInterface::system_bus();
+        let isax = IsaxLlmModel::default();
+        assert_eq!(isax.shared_stream_slowdown(&bus, 0, 3), Vec::<f64>::new());
+        assert_eq!(isax.shared_stream_slowdown(&bus, 1, 3), vec![1.0]);
+        // Covered demand: each engine sustains at most one beat per
+        // cycle, so `streams <= ddr_banks` never contends.
+        for f in isax.shared_stream_slowdown(&bus, 2, 3) {
+            assert!((f - 1.0).abs() < 0.02, "2 streams over 3 ports contended: {f}");
+        }
+        // Oversubscribed: 4 engines share 3 beat ports, so each sustains
+        // ~3/4 of its solo rate.
+        let f4 = isax.shared_stream_slowdown(&bus, 4, 3);
+        assert_eq!(f4.len(), 4);
+        for &f in &f4 {
+            assert!(f > 1.1 && f < 1.7, "4-over-3 oversubscription factor {f}");
+        }
+        // Deeper oversubscription can only slow streams further.
+        let f8 = isax.shared_stream_slowdown(&bus, 8, 3);
+        let worst4 = f4.iter().cloned().fold(0.0f64, f64::max);
+        let worst8 = f8.iter().cloned().fold(0.0f64, f64::max);
+        assert!(worst8 > worst4, "8-over-3 must contend harder: {worst4} vs {worst8}");
     }
 
     #[test]

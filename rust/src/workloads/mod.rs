@@ -10,6 +10,7 @@
 //!
 //! Everything is deterministic (seeded [`crate::util::rng::Rng`]) so
 //! benches reproduce run-to-run.
+#![warn(missing_docs)]
 
 pub mod graphics;
 pub mod llm;
@@ -26,6 +27,7 @@ use crate::synthesis::SynthOptions;
 
 /// A complete case-study kernel.
 pub struct Kernel {
+    /// Kernel name, as used in bench tables and error messages.
     pub name: &'static str,
     /// Canonical software implementation.
     pub software: Func,

@@ -25,6 +25,7 @@ use crate::workloads::Kernel;
 pub const N: i64 = 32;
 /// vmadot dims.
 pub const MR: i64 = 16;
+/// vmadot column count.
 pub const MC: i64 = 16;
 
 fn write_points(func: &Func, mem: &mut Memory, name: &str, seed: u64, n: i64) {

@@ -21,11 +21,15 @@ use crate::synthesis::SynthOptions;
 use crate::util::rng::Rng;
 use crate::workloads::Kernel;
 
+/// vdecomp: number of unpacked bits produced.
 pub const NBITS: i64 = 512;
+/// vdecomp: number of packed 32-bit input words.
 pub const NWORDS: i64 = NBITS / 32;
 /// mgf2mm dims: S[R×C] = H[R×K] · E[K×C] over GF(2).
 pub const R: i64 = 16;
+/// mgf2mm inner (reduction) dimension.
 pub const K: i64 = 32;
+/// mgf2mm column count (packed user requests).
 pub const C: i64 = 8;
 
 // ---------------------------------------------------------------------------

@@ -132,6 +132,37 @@ fn serve_trace_replay_is_deterministic() {
 }
 
 #[test]
+fn serve_multicore_trace_smoke() {
+    let out = aquas(&[
+        "serve", "--cores", "2", "--trace",
+        "n=6,seed=11,rate=8,plen=4..8,gen=3..6,burst=3,tail=0.25,mix=0.5",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for req in ["req 0:", "req 1:", "req 5:"] {
+        assert!(text.contains(req), "missing {req}: {text}");
+    }
+    assert!(text.contains("2 cores x batch 4"), "no SoC aggregate line: {text}");
+    assert!(text.contains("soc: migrations"), "no SoC counter line: {text}");
+    assert!(text.contains("core 0 kv:"), "no core-0 shard line: {text}");
+    assert!(text.contains("core 1 kv:"), "no core-1 shard line: {text}");
+    assert!(!text.contains("leak-free false"), "a shard leaked: {text}");
+}
+
+#[test]
+fn serve_multicore_replay_is_deterministic() {
+    let args = [
+        "serve", "--cores", "4", "--trace",
+        "n=8,seed=5,rate=16,plen=4..10,gen=4..8,burst=4,tail=0.2,mix=0.5",
+    ];
+    let a = aquas(&args);
+    let b = aquas(&args);
+    assert!(a.status.success(), "stderr: {}", String::from_utf8_lossy(&a.stderr));
+    assert_eq!(a.stdout, b.stdout, "SoC trace replay diverged between runs");
+    assert_eq!(a.stderr, b.stderr);
+}
+
+#[test]
 fn serve_rejects_bad_trace_spec() {
     let out = aquas(&["serve", "--trace", "n=0"]);
     assert_eq!(out.status.code(), Some(1));

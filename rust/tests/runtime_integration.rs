@@ -410,7 +410,8 @@ fn trace_arrivals_gate_admission_and_ttft_accounts_queueing() {
     use aquas::coordinator::TraceSpec;
     let rt = runtime();
     let m = rt.manifest().model.clone();
-    let spec = TraceSpec { n: 6, seed: 5, rate: 1.0, plen: (4, 8), gen: (4, 6) };
+    let spec =
+        TraceSpec { n: 6, seed: 5, rate: 1.0, plen: (4, 8), gen: (4, 6), ..Default::default() };
     let reqs = spec.generate(m.vocab, m.prefill_len);
     let mut c = Coordinator::new(&rt, CoordinatorConfig::default());
     let ids = c.submit_trace(&reqs).unwrap();

@@ -1,0 +1,203 @@
+//! Multi-core SoC serving integration: sharded KV migration, work
+//! stealing, mass-queue draining and the 1-core bitwise guarantee.
+//!
+//! Works on a clean checkout (simulated-manifest fallback), like
+//! `runtime_integration.rs`. The scheduling properties checked here are
+//! the serving-layer invariants `docs/serving.md` documents: moving a
+//! sequence between cores (migration or stealing) may change *when* it
+//! runs but never *what* it generates, and every shard's block
+//! accounting returns to empty once the trace drains.
+
+use aquas::coordinator::{
+    Coordinator, CoordinatorConfig, DispatchPolicy, PagedKvConfig, SchedulePolicy, SocConfig,
+    SocCoordinator, TraceRequest, TraceSpec,
+};
+use aquas::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::load(&dir).expect("runtime load (simulated fallback) cannot fail")
+}
+
+fn request(prompt_len: usize, max_new: usize, seed: u64, vocab: usize) -> TraceRequest {
+    let mut rng = aquas::util::rng::Rng::new(seed);
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab as u64) as i32).collect();
+    TraceRequest { arrive_ms: 0.0, prompt, max_new_tokens: max_new, slo_factor: 1.0 }
+}
+
+/// Replay the same requests through a plain single engine with an ample
+/// KV pool and return the per-id token streams — the ground truth any
+/// SoC schedule must reproduce bitwise.
+fn ample_1core_tokens(rt: &Runtime, reqs: &[TraceRequest]) -> Vec<(u64, Vec<i32>)> {
+    let mut c = Coordinator::new(rt, CoordinatorConfig::default());
+    c.submit_trace(reqs).expect("1-core submit");
+    let metrics = c.run_to_completion().expect("1-core replay");
+    metrics.iter().map(|m| (m.id, m.generated.clone())).collect()
+}
+
+#[test]
+fn migration_storm_preserves_tokens_and_leaks_nothing() {
+    let rt = runtime();
+    let vocab = rt.manifest().model.vocab;
+    // Tiny 6-block shards (4 slots each). Even-index requests need 5
+    // blocks — a shard fits exactly one — while odd-index requests are
+    // one-block quickies. Round-robin dispatch pins the big ones to
+    // core 0, so its shard runs dry with work queued while core 1
+    // drains and frees its whole shard: the dry-shard migration path
+    // must carry core 0's queue over, one sequence at a time.
+    let reqs: Vec<TraceRequest> = (0..8)
+        .map(|i| {
+            if i % 2 == 0 {
+                request(8, 12, 100 + i, vocab)
+            } else {
+                request(2, 2, 100 + i, vocab)
+            }
+        })
+        .collect();
+    let per_core = CoordinatorConfig {
+        max_active: 2,
+        kv: PagedKvConfig { block_slots: 4, num_blocks: 6 },
+        ..Default::default()
+    };
+    let mut soc = SocCoordinator::new(
+        &rt,
+        SocConfig {
+            cores: 2,
+            per_core,
+            dispatch: DispatchPolicy::RoundRobin,
+            ..Default::default()
+        },
+    );
+    soc.submit_trace(&reqs).expect("soc submit");
+    let metrics = soc.run_to_completion().expect("soc replay");
+    let stats = soc.stats();
+    assert_eq!(metrics.len(), reqs.len());
+    assert!(stats.migrations > 0, "storm never exercised migration: {stats:?}");
+    for (k, kv) in stats.per_core_kv.iter().enumerate() {
+        assert!(kv.leak_free(), "core {k} shard leaked under migration: {kv:?}");
+    }
+    // Migration moves *where* a sequence decodes, never *what* it
+    // decodes: token streams match an ample single-engine replay
+    // bitwise, id by id.
+    let got: Vec<(u64, Vec<i32>)> =
+        metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+    assert_eq!(got, ample_1core_tokens(&rt, &reqs), "migration perturbed token streams");
+}
+
+#[test]
+fn drained_core_steals_work_and_tokens_survive() {
+    let rt = runtime();
+    let vocab = rt.manifest().model.vocab;
+    // Round-robin lands three long jobs on core 0 and three quickies on
+    // core 1; with one active slot per core, core 1 drains while core 0
+    // still has two queued — the steal path must raid core 0's queue
+    // (its depth-2 tail) instead of idling.
+    let reqs: Vec<TraceRequest> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                request(6, 24, 200 + i, vocab)
+            } else {
+                request(2, 1, 200 + i, vocab)
+            }
+        })
+        .collect();
+    let per_core = CoordinatorConfig { max_active: 1, ..Default::default() };
+    let mut soc = SocCoordinator::new(
+        &rt,
+        SocConfig {
+            cores: 2,
+            per_core,
+            dispatch: DispatchPolicy::RoundRobin,
+            ..Default::default()
+        },
+    );
+    soc.submit_trace(&reqs).expect("soc submit");
+    let metrics = soc.run_to_completion().expect("soc replay");
+    let stats = soc.stats();
+    assert!(stats.steals > 0, "drained core never stole: {stats:?}");
+    for kv in &stats.per_core_kv {
+        assert!(kv.leak_free(), "shard leaked under stealing: {kv:?}");
+    }
+    let got: Vec<(u64, Vec<i32>)> =
+        metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+    assert_eq!(got, ample_1core_tokens(&rt, &reqs), "stealing perturbed token streams");
+}
+
+#[test]
+fn thousands_of_queued_sequences_drain_leak_free() {
+    let rt = runtime();
+    let model = rt.manifest().model.clone();
+    // 1500 tiny sequences, all arriving at t = 0, across 4 shards: the
+    // async-admission queues must drain completely with exact block
+    // accounting on every shard and one metric per SoC-wide id.
+    let spec = TraceSpec {
+        n: 1500,
+        seed: 13,
+        rate: 0.0,
+        plen: (2, 4),
+        gen: (1, 2),
+        ..Default::default()
+    };
+    let reqs = spec.generate_capped(model.vocab, model.prefill_len, model.max_seq);
+    let mut soc = SocCoordinator::new(&rt, SocConfig { cores: 4, ..Default::default() });
+    soc.submit_trace(&reqs).expect("soc submit");
+    let metrics = soc.run_to_completion().expect("soc replay");
+    assert_eq!(metrics.len(), 1500);
+    for (i, m) in metrics.iter().enumerate() {
+        assert_eq!(m.id, i as u64, "metrics not dense in SoC id space");
+        assert_eq!(
+            m.generated.len(),
+            reqs[i].max_new_tokens,
+            "request {i} retired early"
+        );
+    }
+    let stats = soc.stats();
+    assert_eq!(stats.cores, 4);
+    for (k, kv) in stats.per_core_kv.iter().enumerate() {
+        assert!(kv.leak_free(), "core {k} shard leaked after drain: {kv:?}");
+    }
+}
+
+#[test]
+fn one_core_soc_is_bitwise_the_plain_engine() {
+    let rt = runtime();
+    let model = rt.manifest().model.clone();
+    // Heavy-tailed bursty trace with a mixed SLO population, replayed
+    // through the Fair (EDF) policy both ways: the 1-core SoC must be
+    // the plain engine bitwise — ids, tokens, TTFT/ITL and the clock.
+    let spec = TraceSpec {
+        n: 12,
+        seed: 21,
+        rate: 4.0,
+        plen: (4, 10),
+        gen: (4, 8),
+        burst: 2.0,
+        tail: 0.2,
+        mix: 0.5,
+    };
+    let reqs = spec.generate_capped(model.vocab, model.prefill_len, model.max_seq);
+    let cfg = CoordinatorConfig { policy: SchedulePolicy::Fair, ..Default::default() };
+
+    let mut plain = Coordinator::new(&rt, cfg.clone());
+    plain.submit_trace(&reqs).expect("plain submit");
+    let pm = plain.run_to_completion().expect("plain replay");
+
+    let mut soc =
+        SocCoordinator::new(&rt, SocConfig { cores: 1, per_core: cfg, ..Default::default() });
+    soc.submit_trace(&reqs).expect("soc submit");
+    let sm = soc.run_to_completion().expect("soc replay");
+
+    assert_eq!(soc.sim_elapsed_ms(), plain.sim_now_ms(), "clocks diverged");
+    assert_eq!(sm.len(), pm.len());
+    for (s, p) in sm.iter().zip(&pm) {
+        assert_eq!(s.id, p.id);
+        assert_eq!(s.generated, p.generated, "req {} tokens diverged", s.id);
+        assert_eq!(s.ttft_us, p.ttft_us, "req {} TTFT diverged", s.id);
+        assert_eq!(s.itl_us, p.itl_us, "req {} ITL diverged", s.id);
+        assert_eq!(s.preemptions, p.preemptions, "req {} preemptions diverged", s.id);
+    }
+    let stats = soc.stats();
+    assert_eq!(stats.migrations, 0);
+    assert_eq!(stats.steals, 0);
+    assert_eq!(stats.contention_dma_cycles, 0.0, "a lone core cannot contend");
+}
