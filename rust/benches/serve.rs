@@ -23,6 +23,15 @@
 //! - a nonzero shared-DDR contention delta (`dma_cycles`) once the
 //!   8-core fleet oversubscribes the DDR port group.
 //!
+//! And the chaos degradation gates (PR 7):
+//!
+//! - the empty fault plan is bitwise the plain 4-core run;
+//! - with 1 / 2 of 4 cores killed mid-trace, survivors stay leak-free,
+//!   lose no requests, keep token streams bitwise, replay
+//!   deterministically, and hold throughput above the
+//!   `min_deg_dead1_frac` / `min_deg_dead2_frac` floors (fractions of
+//!   the healthy 4-core run).
+//!
 //! `-- --test` is the CI smoke mode (shorter trace).
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
@@ -122,6 +131,40 @@ fn main() {
             );
             failed = true;
         }
+        // Gate 4: chaos — fault-free purity and graceful degradation.
+        for (metric, why) in [
+            ("faults_empty_bitwise", "the empty fault plan perturbed serving"),
+            ("deg_dead1_kv_leak_free", "KV shard leaked under a core death"),
+            ("deg_dead2_kv_leak_free", "KV shard leaked under two core deaths"),
+            ("deg_dead1_accounted", "requests lost under a core death"),
+            ("deg_dead2_accounted", "requests lost under two core deaths"),
+            ("deg_dead1_tokens_preserved", "failover perturbed surviving tokens"),
+            ("deg_dead2_tokens_preserved", "failover perturbed surviving tokens"),
+            ("deg_dead1_replay_deterministic", "chaos replay must be deterministic"),
+            ("deg_dead2_replay_deterministic", "chaos replay must be deterministic"),
+        ] {
+            if report.metrics.get(metric) != Some(&1.0) {
+                eprintln!("GATE FAILED: {metric} != 1 ({why}); see {out_path}");
+                failed = true;
+            }
+        }
+        let mut deg_fracs = [0.0f64; 2];
+        for dead in [1usize, 2] {
+            let key = format!("min_deg_dead{dead}_frac");
+            let floor = j
+                .get(&key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("baseline has {key}"));
+            let frac = report.metrics[&format!("deg_dead{dead}_throughput_frac")];
+            deg_fracs[dead - 1] = frac;
+            if frac < floor {
+                eprintln!(
+                    "REGRESSION: {dead} dead of 4 cores holds only {frac:.2}x of the \
+                     healthy 4-core throughput, below the recorded floor {floor:.2}x"
+                );
+                failed = true;
+            }
+        }
         if failed {
             std::process::exit(1);
         }
@@ -129,7 +172,9 @@ fn main() {
             "checks ok: deterministic + leak-free + token-stable; batch-4 throughput \
              {measured:.2}x single-stream (floor {min_x:.2}x); 4-core SoC {soc_x4:.2}x \
              1-core (floor {min_soc_x:.2}x), sublinear with a nonzero 8-core \
-             contention delta"
+             contention delta; chaos degradation {:.2}x / {:.2}x of healthy at 1 / 2 \
+             dead cores with bitwise-clean failover",
+            deg_fracs[0], deg_fracs[1]
         );
     }
 }

@@ -23,10 +23,17 @@
 //! counters, the contention delta in DMA cycles, and per-shard leak
 //! checks — plus a bitwise check that the 1-core SoC reproduces the
 //! plain engine and a 4-core replay-determinism check.
+//!
+//! The final section is the **chaos degradation curve**: the 4-core SoC
+//! re-run with 1 and 2 cores killed mid-trace via [`FaultPlan`].
+//! Recorded per point: surviving throughput as a fraction of the
+//! healthy 4-core run, evacuation/shed counters, leak checks, survivor
+//! token preservation and seeded-replay determinism — and a bitwise
+//! check that the *empty* fault plan changes nothing at all.
 
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, KvStats, RequestMetrics, SchedulePolicy, SocConfig,
-    SocCoordinator, SocStats, TraceSpec,
+    Coordinator, CoordinatorConfig, FaultPlan, KvStats, RequestMetrics, SchedulePolicy,
+    SocConfig, SocCoordinator, SocStats, TraceSpec,
 };
 use crate::error::Result;
 use crate::runtime::Runtime;
@@ -160,9 +167,24 @@ impl SocTraceRun {
 /// [`crate::coordinator::SocConfig`]). Generation lengths are capped to
 /// the serving window so heavy-tail draws stay admissible.
 pub fn run_soc_trace(rt: &Runtime, spec: &TraceSpec, cores: usize) -> Result<SocTraceRun> {
+    run_soc_trace_with_faults(rt, spec, cores, &FaultPlan::default())
+}
+
+/// [`run_soc_trace`] under a deterministic fault plan (core deaths,
+/// stall windows, DMA error injection, load surges). The empty plan is
+/// bitwise the plain run — the report gates on that below.
+pub fn run_soc_trace_with_faults(
+    rt: &Runtime,
+    spec: &TraceSpec,
+    cores: usize,
+    faults: &FaultPlan,
+) -> Result<SocTraceRun> {
     let model = rt.manifest().model.clone();
     let reqs = spec.generate_capped(model.vocab, model.prefill_len, model.max_seq);
-    let mut soc = SocCoordinator::new(rt, SocConfig { cores, ..Default::default() });
+    let mut soc = SocCoordinator::new(
+        rt,
+        SocConfig { cores, faults: faults.clone(), ..Default::default() },
+    );
     soc.submit_trace(&reqs)?;
     let metrics = soc.run_to_completion()?;
     let elapsed_ms = soc.sim_elapsed_ms();
@@ -332,6 +354,66 @@ pub fn report(quick: bool) -> Report {
         && sa.stats.contention_dma_cycles == sb.stats.contention_dma_cycles;
     r.metric("soc_replay_deterministic", if soc_det { 1.0 } else { 0.0 });
 
+    // ----- chaos: degradation curves under dead cores -------------------
+    // The 4-core SoC with 0/1/2 cores killed mid-trace. Gate inputs: the
+    // empty fault plan is bitwise the plain 4-core run, survivors keep
+    // throughput above a proportional-minus-margin floor, every shard
+    // stays leak-free, no request is lost (completed + shed == offered),
+    // completed streams match the 1-core ground truth, and a seeded
+    // fault schedule replays deterministically.
+    let empty = run_soc_trace_with_faults(&rt, &sspec, 4, &FaultPlan::default())
+        .expect("empty-plan replay");
+    let etok: Vec<(u64, Vec<i32>)> =
+        empty.metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+    let empty_bitwise = etok == stok_a
+        && empty.elapsed_ms == sa.elapsed_ms
+        && empty.stats.contention_dma_cycles == sa.stats.contention_dma_cycles;
+    r.metric("faults_empty_bitwise", if empty_bitwise { 1.0 } else { 0.0 });
+
+    for (dead, plan_text) in [(1usize, "coredown=1@40"), (2, "coredown=1@40,coredown=3@60")] {
+        let plan = FaultPlan::parse(plan_text).expect("degradation plan parses");
+        let label = format!("deg_dead{dead}");
+        let run = run_soc_trace_with_faults(&rt, &sspec, 4, &plan)
+            .unwrap_or_else(|e| panic!("{label} replay failed: {e}"));
+        let frac = run.throughput_tok_s() / sa.throughput_tok_s().max(1e-12);
+        let leak_free = run.stats.per_core_kv.iter().all(|k| k.leak_free());
+        let accounted =
+            run.metrics.len() as u64 + run.stats.shed_requests == sspec.n as u64;
+        // Survivor streams must be the 1-core streams bitwise, id by id
+        // (shed requests simply have no stream to compare).
+        let preserved = run.metrics.iter().all(|m| {
+            core1_tokens.iter().any(|(id, toks)| *id == m.id && *toks == m.generated)
+        });
+        let rerun = run_soc_trace_with_faults(&rt, &sspec, 4, &plan)
+            .unwrap_or_else(|e| panic!("{label} rerun failed: {e}"));
+        let det = run.elapsed_ms == rerun.elapsed_ms
+            && run.metrics.len() == rerun.metrics.len()
+            && run
+                .metrics
+                .iter()
+                .zip(&rerun.metrics)
+                .all(|(x, y)| x.id == y.id && x.generated == y.generated);
+        r.row(vec![
+            format!("4cores-{dead}dead"),
+            run.total_tokens().to_string(),
+            format!("{:.1}", run.elapsed_ms / 1e3),
+            format!("{:.2}", run.throughput_tok_s()),
+            format!("{frac:.2}x of 4c"),
+            String::new(),
+            String::new(),
+            run.stats.evacuated_seqs.to_string(),
+            run.stats.preemptions.to_string(),
+        ]);
+        r.metric(&format!("{label}_throughput_frac"), frac);
+        r.metric(&format!("{label}_kv_leak_free"), if leak_free { 1.0 } else { 0.0 });
+        r.metric(&format!("{label}_accounted"), if accounted { 1.0 } else { 0.0 });
+        r.metric(&format!("{label}_tokens_preserved"), if preserved { 1.0 } else { 0.0 });
+        r.metric(&format!("{label}_evacuated"), run.stats.evacuated_seqs as f64);
+        r.metric(&format!("{label}_faults_injected"), run.stats.faults_injected as f64);
+        r.metric(&format!("{label}_shed"), run.stats.shed_requests as f64);
+        r.metric(&format!("{label}_replay_deterministic"), if det { 1.0 } else { 0.0 });
+    }
+
     r
 }
 
@@ -384,5 +466,33 @@ mod tests {
             r.metrics["cores8_contention_dma_cycles"] > 0.0,
             "8-core run saw no shared-DDR contention"
         );
+
+        // ----- chaos degradation gates ---------------------------------
+        assert_eq!(r.metrics["faults_empty_bitwise"], 1.0, "empty plan not bitwise");
+        for (dead, floor) in [(1, 0.5), (2, 0.25)] {
+            let label = format!("deg_dead{dead}");
+            let frac = r.metrics[&format!("{label}_throughput_frac")];
+            assert!(
+                frac >= floor,
+                "{dead} dead of 4: throughput {frac:.2}x of healthy, floor {floor}"
+            );
+            assert!(frac <= 1.05, "{dead} dead of 4 sped the SoC up?! {frac:.2}x");
+            assert_eq!(r.metrics[&format!("{label}_kv_leak_free")], 1.0, "{label} leaked");
+            assert_eq!(r.metrics[&format!("{label}_accounted")], 1.0, "{label} lost requests");
+            assert_eq!(
+                r.metrics[&format!("{label}_tokens_preserved")],
+                1.0,
+                "{label} perturbed surviving token streams"
+            );
+            assert!(
+                r.metrics[&format!("{label}_evacuated")] > 0.0,
+                "{label}: dead cores held no work?"
+            );
+            assert_eq!(
+                r.metrics[&format!("{label}_replay_deterministic")],
+                1.0,
+                "{label} chaos replay diverged"
+            );
+        }
     }
 }

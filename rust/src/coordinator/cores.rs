@@ -22,6 +22,14 @@
 //!   an event-driven [`crate::interface::dmasim`] replay — no second
 //!   timing model). The slip lands on the owning core's clock and is
 //!   totalled in [`SocStats::contention_dma_cycles`].
+//! - **Fault injection & failover** — an optional deterministic
+//!   [`FaultPlan`] ([`SocConfig::faults`]) kills or stalls cores on a
+//!   seeded schedule, injects per-transaction DMA errors, and surges
+//!   load; a watchdog detects frozen cores by clock non-progress and
+//!   evacuates their sequences to surviving shards via the recompute
+//!   path, while per-core engines degrade gracefully under sustained
+//!   overload (backpressure → load shedding → batch halving). An empty
+//!   plan is guaranteed bitwise-inert.
 //!
 //! Each core keeps its own simulated clock; the SoC's elapsed time is
 //! the slowest core's clock ([`SocCoordinator::sim_elapsed_ms`]). With
@@ -33,11 +41,24 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+use crate::interface::dmasim::DmaFaultInjector;
 use crate::runtime::Runtime;
 
 use super::{
-    Coordinator, CoordinatorConfig, KvStats, RequestMetrics, TickDemand, TraceRequest,
+    Coordinator, CoordinatorConfig, DegradeState, FaultPlan, KvStats, RequestMetrics,
+    TickDemand, TraceRequest, WaitItem,
 };
+
+/// Health of one serving core as seen by the SoC watchdog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CoreHealth {
+    /// Running normally.
+    Up,
+    /// Frozen by an active `corestall` fault window; recovers.
+    Stalled,
+    /// Killed by a `coredown` fault; never recovers.
+    Down,
+}
 
 /// How arriving requests are dispatched to core run queues.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +91,10 @@ pub struct SocConfig {
     pub dispatch: DispatchPolicy,
     /// Enable work stealing into fully drained cores.
     pub steal: bool,
+    /// Deterministic fault schedule to inject ([`FaultPlan::parse`]).
+    /// The default (empty) plan arms nothing and leaves every serving
+    /// output bitwise identical to a fault-free build.
+    pub faults: FaultPlan,
 }
 
 impl Default for SocConfig {
@@ -86,6 +111,7 @@ impl Default for SocConfig {
             ddr_banks: 4,
             dispatch: DispatchPolicy::LeastLoaded,
             steal: true,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -104,6 +130,18 @@ pub struct SocStats {
     /// Extra cycles shared-DDR contention added across all cores (zero
     /// when the port group covers the aggregate stream demand).
     pub contention_dma_cycles: f64,
+    /// Fault events the active [`FaultPlan`] has applied so far (core
+    /// deaths, stall onsets, surge onsets).
+    pub faults_injected: u64,
+    /// Total DMA retry attempts across all cores' fault injectors.
+    pub dma_retries: u64,
+    /// Sequences and queued requests evacuated off dead/stalled cores
+    /// by the watchdog.
+    pub evacuated_seqs: u64,
+    /// Waiting requests shed by the graceful-degradation ladder.
+    pub shed_requests: u64,
+    /// Retired requests whose first token missed its TTFT deadline.
+    pub slo_violations: u64,
     /// Per-shard allocator accounting, indexed by core.
     pub per_core_kv: Vec<KvStats>,
 }
@@ -123,6 +161,23 @@ pub struct SocCoordinator<'rt> {
     contention_dma_cycles: f64,
     /// Memoized calibration factors per concurrent-stream count.
     slowdown_memo: HashMap<usize, Vec<f64>>,
+    /// Watchdog view of each core, indexed by core id.
+    health: Vec<CoreHealth>,
+    /// Last observed per-core clock (watchdog non-progress detection).
+    watch_clock: Vec<f64>,
+    /// Consecutive rounds each core held work without clock progress.
+    watch_stuck: Vec<u32>,
+    /// Which `coredown` events have fired, indexed like the plan.
+    down_applied: Vec<bool>,
+    /// `corestall` window state, indexed like the plan: 0 pending,
+    /// 1 active, 2 done.
+    stall_state: Vec<u8>,
+    /// `surge` window state, same encoding as `stall_state`.
+    surge_state: Vec<u8>,
+    /// Fault-plan core indices checked against the core count (once).
+    plan_validated: bool,
+    faults_injected: u64,
+    evacuated: u64,
 }
 
 impl<'rt> SocCoordinator<'rt> {
@@ -130,17 +185,30 @@ impl<'rt> SocCoordinator<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: SocConfig) -> Self {
         assert!(cfg.cores >= 1, "a SoC needs at least one core");
         assert!(cfg.ddr_banks >= 1, "shared memory needs at least one beat port");
-        let cores: Vec<Coordinator<'rt>> = (0..cfg.cores)
+        let mut cores: Vec<Coordinator<'rt>> = (0..cfg.cores)
             .map(|_| {
                 let mut c = Coordinator::new(rt, cfg.per_core.clone());
                 c.record_demand = true;
                 c
             })
             .collect();
+        // A non-empty fault plan arms the per-core degradation ladder
+        // and (when requested) seeded DMA error injectors; an empty plan
+        // leaves every core exactly as a fault-free build would.
+        if !cfg.faults.is_empty() {
+            for (k, c) in cores.iter_mut().enumerate() {
+                c.degrade = Some(DegradeState::default());
+                if cfg.faults.dma_err > 0.0 {
+                    c.dma_faults = Some(DmaFaultInjector::new(
+                        cfg.faults.dma_err,
+                        cfg.faults.seed.wrapping_add(k as u64),
+                    ));
+                }
+            }
+        }
         let n = cores.len();
         Self {
             cores,
-            cfg,
             dispatched_load: vec![0; n],
             rr_next: 0,
             next_id: 0,
@@ -148,6 +216,16 @@ impl<'rt> SocCoordinator<'rt> {
             steals: 0,
             contention_dma_cycles: 0.0,
             slowdown_memo: HashMap::new(),
+            health: vec![CoreHealth::Up; n],
+            watch_clock: vec![0.0; n],
+            watch_stuck: vec![0; n],
+            down_applied: vec![false; cfg.faults.core_down.len()],
+            stall_state: vec![0; cfg.faults.core_stall.len()],
+            surge_state: vec![0; cfg.faults.surge.len()],
+            plan_validated: false,
+            faults_injected: 0,
+            evacuated: 0,
+            cfg,
         }
     }
 
@@ -217,6 +295,11 @@ impl<'rt> SocCoordinator<'rt> {
             steals: self.steals,
             preemptions: self.cores.iter().map(|c| c.preemptions()).sum(),
             contention_dma_cycles: self.contention_dma_cycles,
+            faults_injected: self.faults_injected,
+            dma_retries: self.cores.iter().map(|c| c.dma_fault_counts().1).sum(),
+            evacuated_seqs: self.evacuated,
+            shed_requests: self.cores.iter().map(|c| c.shed_requests()).sum(),
+            slo_violations: self.cores.iter().map(|c| c.slo_violations()).sum(),
             per_core_kv: self.cores.iter().map(|c| c.kv_stats()).collect(),
         }
     }
@@ -247,15 +330,19 @@ impl<'rt> SocCoordinator<'rt> {
 
     // ----- internals -------------------------------------------------------
 
-    /// One SoC round: rebalance queues, step every core that has work,
-    /// then charge shared-memory contention for the streams that ran
-    /// concurrently. Returns whether any core made progress.
+    /// One SoC round: apply any due fault events, rebalance queues, step
+    /// every healthy core that has work, run the watchdog, then charge
+    /// shared-memory contention for the streams that ran concurrently.
+    /// Returns whether any core made progress — fault applications,
+    /// watchdog ticks and evacuations count as (bounded) progress, so
+    /// recovery never reads as a stall.
     fn round(&mut self) -> Result<bool> {
-        self.rebalance();
+        let mut acted = self.apply_faults()?;
+        self.rebalance()?;
         let mut ran_any = false;
         let mut demands: Vec<(usize, Vec<TickDemand>)> = Vec::new();
         for k in 0..self.cores.len() {
-            if !self.cores[k].has_work() {
+            if self.health[k] != CoreHealth::Up || !self.cores[k].has_work() {
                 continue;
             }
             ran_any |= self.cores[k].step()?;
@@ -264,15 +351,229 @@ impl<'rt> SocCoordinator<'rt> {
                 demands.push((k, d));
             }
         }
+        // Watchdog: a core holding work whose clock made no progress for
+        // WATCHDOG_ROUNDS consecutive rounds is treated as failed and
+        // its work evacuated to surviving shards. Healthy cores always
+        // advance their clocks when they hold work (every step either
+        // charges cycles or fast-forwards), so this only ever fires on
+        // fault-frozen cores. Gated on the plan so fault-free runs never
+        // even read the clocks.
+        if !self.cfg.faults.is_empty() {
+            const WATCHDOG_ROUNDS: u32 = 3;
+            for k in 0..self.cores.len() {
+                let clk = self.cores[k].clock_cycles;
+                if self.cores[k].has_work() && clk <= self.watch_clock[k] {
+                    self.watch_stuck[k] += 1;
+                    acted = true;
+                } else {
+                    self.watch_stuck[k] = 0;
+                }
+                self.watch_clock[k] = clk;
+                if self.watch_stuck[k] >= WATCHDOG_ROUNDS {
+                    self.watch_stuck[k] = 0;
+                    if self.evacuate(k)? > 0 {
+                        acted = true;
+                    }
+                }
+            }
+        }
         self.charge_contention(&demands);
-        Ok(ran_any)
+        Ok(ran_any || acted)
     }
 
-    /// Cross-core migration + work stealing, once per round.
-    fn rebalance(&mut self) {
+    /// Apply every fault event whose simulated time has come. Returns
+    /// whether any state changed (bounded: each event fires once).
+    fn apply_faults(&mut self) -> Result<bool> {
+        if self.cfg.faults.is_empty() {
+            return Ok(false);
+        }
+        if !self.plan_validated {
+            for &(k, _) in &self.cfg.faults.core_down {
+                if k >= self.cores.len() {
+                    return Err(Error::Coordinator(format!(
+                        "fault plan: coredown targets core {k} but the SoC has {} cores",
+                        self.cores.len()
+                    )));
+                }
+            }
+            for &(k, _, _) in &self.cfg.faults.core_stall {
+                if k >= self.cores.len() {
+                    return Err(Error::Coordinator(format!(
+                        "fault plan: corestall targets core {k} but the SoC has {} cores",
+                        self.cores.len()
+                    )));
+                }
+            }
+            self.plan_validated = true;
+        }
+        let now = self.sim_elapsed_ms();
+        let mut acted = false;
+        // Permanent core deaths.
+        for i in 0..self.cfg.faults.core_down.len() {
+            let (k, t) = self.cfg.faults.core_down[i];
+            if !self.down_applied[i] && t <= now {
+                self.down_applied[i] = true;
+                self.health[k] = CoreHealth::Down;
+                self.faults_injected += 1;
+                acted = true;
+            }
+        }
+        // Transient stall windows.
+        for i in 0..self.cfg.faults.core_stall.len() {
+            let (k, t0, t1) = self.cfg.faults.core_stall[i];
+            match self.stall_state[i] {
+                0 if t0 <= now => {
+                    self.stall_state[i] = 1;
+                    let h = self.stall_health(k);
+                    self.health[k] = h;
+                    self.faults_injected += 1;
+                    acted = true;
+                }
+                1 if t1 <= now => {
+                    self.stall_state[i] = 2;
+                    let h = self.stall_health(k);
+                    self.health[k] = h;
+                    if h == CoreHealth::Up {
+                        // Rejoin the SoC timeline forward-only so the
+                        // recovered core's clock stays monotone.
+                        self.cores[k].fast_forward_to(now);
+                    }
+                    acted = true;
+                }
+                _ => {}
+            }
+        }
+        // Deadlock release: if every core is stalled or dead while work
+        // remains, simulated time can no longer advance and no stall
+        // window would ever expire. Retire the earliest-ending active
+        // stall by decree, fast-forwarding its core past the window.
+        if self.has_work() && !self.health.iter().any(|&h| h == CoreHealth::Up) {
+            let mut pick: Option<(usize, f64)> = None;
+            for i in 0..self.cfg.faults.core_stall.len() {
+                if self.stall_state[i] == 1 {
+                    let t1 = self.cfg.faults.core_stall[i].2;
+                    if pick.map_or(true, |(_, best)| t1 < best) {
+                        pick = Some((i, t1));
+                    }
+                }
+            }
+            if let Some((i, t1)) = pick {
+                let k = self.cfg.faults.core_stall[i].0;
+                self.stall_state[i] = 2;
+                let h = self.stall_health(k);
+                self.health[k] = h;
+                if h == CoreHealth::Up {
+                    self.cores[k].fast_forward_to(t1.max(now));
+                }
+                acted = true;
+            }
+        }
+        // Surge windows: the product of all active factors lands on
+        // every core's load multiplier (guarded out of the charge sites
+        // when it is exactly 1.0).
+        if !self.cfg.faults.surge.is_empty() {
+            for i in 0..self.cfg.faults.surge.len() {
+                let (_, t0, t1) = self.cfg.faults.surge[i];
+                match self.surge_state[i] {
+                    0 if t0 <= now => {
+                        self.surge_state[i] = 1;
+                        self.faults_injected += 1;
+                        acted = true;
+                    }
+                    1 if t1 <= now => {
+                        self.surge_state[i] = 2;
+                        acted = true;
+                    }
+                    _ => {}
+                }
+            }
+            let mut f = 1.0;
+            for i in 0..self.cfg.faults.surge.len() {
+                if self.surge_state[i] == 1 {
+                    f *= self.cfg.faults.surge[i].0;
+                }
+            }
+            for c in &mut self.cores {
+                c.load_factor = f;
+            }
+        }
+        Ok(acted)
+    }
+
+    /// Health core `k` should report from stall windows alone: `Down`
+    /// is permanent, otherwise `Stalled` iff any stall window targeting
+    /// it is still active.
+    fn stall_health(&self, k: usize) -> CoreHealth {
+        if self.health[k] == CoreHealth::Down {
+            return CoreHealth::Down;
+        }
+        let stalled = self
+            .cfg
+            .faults
+            .core_stall
+            .iter()
+            .enumerate()
+            .any(|(i, &(c, _, _))| c == k && self.stall_state[i] == 1);
+        if stalled {
+            CoreHealth::Stalled
+        } else {
+            CoreHealth::Up
+        }
+    }
+
+    /// Evacuate everything core `k` holds onto surviving (`Up`) cores:
+    /// active sequences convert to recompute resumes (their emitted
+    /// tokens ride along bitwise and are never re-emitted), queued items
+    /// follow in order, and not-yet-arrived dispatches re-dispatch into
+    /// the targets' sorted pending queues. The dead core's shard blocks
+    /// are released first, so its pool stays leak-free. Returns how many
+    /// items moved.
+    fn evacuate(&mut self, k: usize) -> Result<usize> {
+        let targets: Vec<usize> = (0..self.cores.len())
+            .filter(|&j| j != k && self.health[j] == CoreHealth::Up)
+            .collect();
+        if targets.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "core {k} failed with work outstanding and no surviving core to absorb it"
+            )));
+        }
+        let mut moved = 0usize;
+        let mut rr = 0usize;
+        let actives: Vec<_> = self.cores[k].active.drain(..).collect();
+        for mut act in actives {
+            self.cores[k].pool.release(&mut act.table);
+            act.len = 0;
+            act.preemptions += 1;
+            let j = targets[rr % targets.len()];
+            rr += 1;
+            self.cores[j].waiting.push_back(WaitItem::Resume(Box::new(act)));
+            moved += 1;
+        }
+        while let Some(item) = self.cores[k].waiting.pop_front() {
+            let j = targets[rr % targets.len()];
+            rr += 1;
+            self.cores[j].waiting.push_back(item);
+            moved += 1;
+        }
+        while let Some((t_ms, d_ms, req)) = self.cores[k].pending.pop_front() {
+            let j = targets[rr % targets.len()];
+            rr += 1;
+            let q = &mut self.cores[j].pending;
+            let pos = q.iter().position(|&(pt, _, _)| pt > t_ms).unwrap_or(q.len());
+            q.insert(pos, (t_ms, d_ms, req));
+            moved += 1;
+        }
+        self.evacuated += moved as u64;
+        Ok(moved)
+    }
+
+    /// Cross-core migration + work stealing, once per round. Dead or
+    /// stalled cores take no part: not as migration source or target,
+    /// not as thief, not as victim (the watchdog owns their work).
+    fn rebalance(&mut self) -> Result<()> {
         let n = self.cores.len();
         if n <= 1 {
-            return;
+            return Ok(());
         }
         // Migration: a core whose next queued item cannot get blocks out
         // of its own dry shard hands it to the core with the most free
@@ -281,6 +582,9 @@ impl<'rt> SocCoordinator<'rt> {
         // a preempted sequence is rebuilt on the target by the regular
         // recompute re-admission.
         for k in 0..n {
+            if self.health[k] != CoreHealth::Up {
+                continue;
+            }
             let needed = {
                 let Some(head) = self.cores[k].waiting.front() else { continue };
                 self.cores[k].pool.blocks_for(head.needed_slots())
@@ -290,7 +594,7 @@ impl<'rt> SocCoordinator<'rt> {
             }
             let mut target: Option<usize> = None;
             for j in 0..n {
-                if j == k {
+                if j == k || self.health[j] != CoreHealth::Up {
                     continue;
                 }
                 let cj = &self.cores[j];
@@ -306,7 +610,11 @@ impl<'rt> SocCoordinator<'rt> {
                 }
             }
             if let Some(j) = target {
-                let item = self.cores[k].waiting.pop_front().expect("head checked above");
+                let Some(item) = self.cores[k].waiting.pop_front() else {
+                    return Err(Error::Coordinator(
+                        "migration source queue emptied underneath the scheduler".into(),
+                    ));
+                };
                 // The item keeps its absolute arrival/deadline; the
                 // target admits on its own monotone clock (TTFT deltas
                 // clamp at zero if the target's clock trails).
@@ -319,6 +627,9 @@ impl<'rt> SocCoordinator<'rt> {
         // leaving the head for the victim's own next admission.
         if self.cfg.steal {
             for k in 0..n {
+                if self.health[k] != CoreHealth::Up {
+                    continue;
+                }
                 let drained = {
                     let c = &self.cores[k];
                     c.active.is_empty() && c.waiting.is_empty() && c.pending.is_empty()
@@ -328,7 +639,10 @@ impl<'rt> SocCoordinator<'rt> {
                 }
                 let mut victim: Option<usize> = None;
                 for j in 0..n {
-                    if j == k || self.cores[j].waiting.len() < 2 {
+                    if j == k
+                        || self.health[j] != CoreHealth::Up
+                        || self.cores[j].waiting.len() < 2
+                    {
                         continue;
                     }
                     let better = match victim {
@@ -341,7 +655,11 @@ impl<'rt> SocCoordinator<'rt> {
                 }
                 if let Some(j) = victim {
                     let from_now = self.cores[j].sim_now_ms();
-                    let item = self.cores[j].waiting.pop_back().expect("depth checked above");
+                    let Some(item) = self.cores[j].waiting.pop_back() else {
+                        return Err(Error::Coordinator(
+                            "steal victim queue emptied underneath the scheduler".into(),
+                        ));
+                    };
                     // The thief was idle: joining the victim's timeline
                     // forward-only keeps its clock monotone and the
                     // replay deterministic.
@@ -351,6 +669,7 @@ impl<'rt> SocCoordinator<'rt> {
                 }
             }
         }
+        Ok(())
     }
 
     /// Re-price the round's execution bursts under shared-DDR

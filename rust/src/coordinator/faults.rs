@@ -1,0 +1,205 @@
+//! Deterministic fault plans for chaos-testing the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string using the same
+//! `key=value,key=value` grammar as [`super::TraceSpec`]:
+//!
+//! | key | form | meaning |
+//! |-----|------|---------|
+//! | `coredown` | `coredown=k@t` | core `k` dies permanently at `t` ms |
+//! | `corestall` | `corestall=k@t0..t1` | core `k` freezes over `[t0, t1)` ms |
+//! | `dmaerr` | `dmaerr=p` | each DMA transaction fails with probability `p` |
+//! | `seed` | `seed=s` | PRNG seed for the DMA error draws |
+//! | `surge` | `surge=x@t0..t1` | compute demand multiplied by `x` over `[t0, t1)` ms |
+//!
+//! Repeated `coredown`/`corestall`/`surge` keys append additional events.
+//! All faults are deterministic: the same plan (including `seed`) replayed
+//! against the same trace produces bitwise-identical serving output, which
+//! is what makes chaos schedules assertable in tests and CI.
+
+use crate::error::{Error, Result};
+
+/// A deterministic, seeded schedule of faults to inject into an SoC
+/// serving run.
+///
+/// The default (empty) plan injects nothing and is guaranteed not to
+/// perturb any serving output: every fault hook early-returns when the
+/// plan is empty, so zero-fault runs stay bitwise identical to a build
+/// without fault injection at all.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Permanent core deaths as `(core, t_ms)` pairs.
+    pub core_down: Vec<(usize, f64)>,
+    /// Transient core stalls as `(core, t0_ms, t1_ms)` windows.
+    pub core_stall: Vec<(usize, f64, f64)>,
+    /// Per-transaction DMA error probability in `[0, 1]`.
+    pub dma_err: f64,
+    /// Seed for the deterministic DMA error draws.
+    pub seed: u64,
+    /// Compute surges as `(factor, t0_ms, t1_ms)` windows; overlapping
+    /// windows multiply.
+    pub surge: Vec<(f64, f64, f64)>,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing (a bare `seed=` does not count
+    /// as a fault).
+    pub fn is_empty(&self) -> bool {
+        self.core_down.is_empty()
+            && self.core_stall.is_empty()
+            && self.surge.is_empty()
+            && self.dma_err == 0.0
+    }
+
+    /// Parse a fault spec string such as
+    /// `coredown=1@40,corestall=2@30..120,dmaerr=0.05,seed=9,surge=2@0..50`.
+    ///
+    /// Every malformed part — unknown key, missing `@`, non-numeric
+    /// field, reversed time range, out-of-range probability, or an empty
+    /// spec — yields a diagnostic [`Error::Coordinator`]; parsing never
+    /// panics and never silently falls back to a default.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        let mut any = false;
+        for part in text.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                Error::Coordinator(format!("fault spec `{part}`: expected key=value"))
+            })?;
+            let bad =
+                |what: &str| Error::Coordinator(format!("fault spec {key}={val}: {what}"));
+            match key {
+                "coredown" => {
+                    let (core, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected core@t_ms"))?;
+                    let core: usize =
+                        core.parse().map_err(|_| bad("core index must be an integer"))?;
+                    let t: f64 = at.parse().map_err(|_| bad("time must be a number"))?;
+                    if !t.is_finite() || t < 0.0 {
+                        return Err(bad("time must be finite and non-negative"));
+                    }
+                    plan.core_down.push((core, t));
+                }
+                "corestall" => {
+                    let (core, window) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected core@t0..t1"))?;
+                    let core: usize =
+                        core.parse().map_err(|_| bad("core index must be an integer"))?;
+                    let (t0, t1) = parse_ms_range(window)
+                        .ok_or_else(|| bad("expected a t0..t1 millisecond range"))?;
+                    if t1 < t0 {
+                        return Err(bad("reversed time range"));
+                    }
+                    plan.core_stall.push((core, t0, t1));
+                }
+                "dmaerr" => {
+                    let p: f64 = val.parse().map_err(|_| bad("must be a number"))?;
+                    if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                        return Err(bad("probability must be in 0..=1"));
+                    }
+                    plan.dma_err = p;
+                }
+                "seed" => {
+                    plan.seed =
+                        val.parse().map_err(|_| bad("must be an unsigned integer"))?;
+                }
+                "surge" => {
+                    let (factor, window) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected factor@t0..t1"))?;
+                    let x: f64 =
+                        factor.parse().map_err(|_| bad("factor must be a number"))?;
+                    if !x.is_finite() || x < 1.0 {
+                        return Err(bad("surge factor must be finite and >= 1"));
+                    }
+                    let (t0, t1) = parse_ms_range(window)
+                        .ok_or_else(|| bad("expected a t0..t1 millisecond range"))?;
+                    if t1 < t0 {
+                        return Err(bad("reversed time range"));
+                    }
+                    plan.surge.push((x, t0, t1));
+                }
+                _ => {
+                    return Err(Error::Coordinator(format!(
+                        "fault spec: unknown key `{key}`"
+                    )));
+                }
+            }
+            any = true;
+        }
+        if !any {
+            return Err(Error::Coordinator("fault spec: empty spec".into()));
+        }
+        Ok(plan)
+    }
+}
+
+/// Parse `t0..t1` into a pair of finite non-negative milliseconds.
+fn parse_ms_range(text: &str) -> Option<(f64, f64)> {
+    let (lo, hi) = text.split_once("..")?;
+    let lo: f64 = lo.parse().ok()?;
+    let hi: f64 = hi.parse().ok()?;
+    if !lo.is_finite() || !hi.is_finite() || lo < 0.0 {
+        return None;
+    }
+    Some((lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_key_and_appends_repeats() {
+        let plan = FaultPlan::parse(
+            "coredown=1@40,coredown=3@60,corestall=2@30..120,dmaerr=0.05,seed=9,surge=2@0..50",
+        )
+        .unwrap();
+        assert_eq!(plan.core_down, vec![(1, 40.0), (3, 60.0)]);
+        assert_eq!(plan.core_stall, vec![(2, 30.0, 120.0)]);
+        assert_eq!(plan.dma_err, 0.05);
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.surge, vec![(2.0, 0.0, 50.0)]);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn bare_seed_still_counts_as_empty_plan() {
+        let plan = FaultPlan::parse("seed=42").unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan.seed, 42);
+    }
+
+    #[test]
+    fn every_malformed_spec_is_a_diagnostic_error() {
+        // (spec, substring expected in the diagnostic)
+        let cases = [
+            ("", "empty spec"),
+            (",", "empty spec"),
+            ("coredown", "expected key=value"),
+            ("coredown=1", "expected core@t_ms"),
+            ("coredown=x@40", "core index must be an integer"),
+            ("coredown=1@fast", "time must be a number"),
+            ("coredown=1@-5", "finite and non-negative"),
+            ("corestall=2@30", "expected core@t0..t1"),
+            ("corestall=2@120..30", "reversed time range"),
+            ("corestall=2@a..b", "t0..t1 millisecond range"),
+            ("dmaerr=maybe", "must be a number"),
+            ("dmaerr=1.5", "probability must be in 0..=1"),
+            ("seed=-1", "unsigned integer"),
+            ("surge=0.5@0..10", "must be finite and >= 1"),
+            ("surge=2@10..5", "reversed time range"),
+            ("surge=2", "expected factor@t0..t1"),
+            ("warp=9", "unknown key"),
+            ("=", "expected key=value"),
+        ];
+        for (spec, needle) in cases {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains(needle),
+                "spec `{spec}` gave `{msg}`, expected it to mention `{needle}`"
+            );
+        }
+    }
+}

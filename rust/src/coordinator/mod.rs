@@ -61,16 +61,19 @@
 #![warn(missing_docs)]
 
 mod cores;
+mod faults;
 mod kv;
 mod trace;
 
 pub use cores::{DispatchPolicy, SocConfig, SocCoordinator, SocStats};
+pub use faults::FaultPlan;
 pub use kv::{BlockTable, KvPool, KvStats, PagedKvConfig};
 pub use trace::{TraceRequest, TraceSpec};
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::error::{Error, Result};
+use crate::interface::dmasim::DmaFaultInjector;
 use crate::interface::model::MemInterface;
 use crate::runtime::{DecodeSlot, Runtime, Tensor};
 use crate::workloads::llm::{BaseCpuModel, IsaxLlmModel, LlmConfig};
@@ -204,6 +207,21 @@ struct TickDemand {
     mem: f64,
 }
 
+/// Graceful-degradation ladder state (armed only by the SoC layer when a
+/// fault plan is active; `None` on the plain engine keeps the zero-fault
+/// path bitwise identical). Levels: 0 = normal, 1 = admission
+/// backpressure (fresh admissions must leave one spare KV block),
+/// 2 = + deadline-based load shedding of hopelessly-late waiting
+/// requests, 3 = + batch-width halving.
+#[derive(Debug, Clone, Copy, Default)]
+struct DegradeState {
+    level: u8,
+    /// Consecutive overloaded ticks; escalates the ladder at 3.
+    hot_rounds: u32,
+    /// Consecutive calm ticks; de-escalates the ladder at 6.
+    calm_rounds: u32,
+}
+
 /// The serving engine.
 pub struct Coordinator<'rt> {
     rt: &'rt Runtime,
@@ -242,6 +260,21 @@ pub struct Coordinator<'rt> {
     record_demand: bool,
     /// Demands accumulated since the SoC layer last drained them.
     step_demand: Vec<TickDemand>,
+    /// Seeded per-transaction DMA error model, armed by a fault plan
+    /// with `dmaerr > 0`. `None` (the default) leaves every gather on
+    /// the clean memoized path.
+    dma_faults: Option<DmaFaultInjector>,
+    /// Compute-demand multiplier from active `surge` fault windows; 1.0
+    /// (the default) is guarded out of every charge site, so unfaulted
+    /// runs never even multiply by it.
+    load_factor: f64,
+    /// Degradation-ladder state; `None` (the default) disables the
+    /// ladder entirely.
+    degrade: Option<DegradeState>,
+    /// Waiting requests shed by the degradation ladder.
+    shed: u64,
+    /// Retired requests whose first token missed its TTFT deadline.
+    slo_violations: u64,
 }
 
 impl<'rt> Coordinator<'rt> {
@@ -274,6 +307,11 @@ impl<'rt> Coordinator<'rt> {
             preemptions: 0,
             record_demand: false,
             step_demand: Vec::new(),
+            dma_faults: None,
+            load_factor: 1.0,
+            degrade: None,
+            shed: 0,
+            slo_violations: 0,
         }
     }
 
@@ -298,6 +336,26 @@ impl<'rt> Coordinator<'rt> {
     /// Total preemption events so far.
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// Waiting requests shed by the graceful-degradation ladder (always
+    /// 0 unless the SoC layer armed the ladder via a fault plan).
+    pub fn shed_requests(&self) -> u64 {
+        self.shed
+    }
+
+    /// Retired requests whose first token landed past its TTFT deadline.
+    pub fn slo_violations(&self) -> u64 {
+        self.slo_violations
+    }
+
+    /// DMA fault accounting as `(retried_bursts, total_retries)`;
+    /// `(0, 0)` when no injector is armed.
+    pub fn dma_fault_counts(&self) -> (u64, u64) {
+        match &self.dma_faults {
+            Some(inj) => (inj.retried_bursts(), inj.retries()),
+            None => (0, 0),
+        }
     }
 
     fn validate(&self, prompt: &[i32], max_new_tokens: usize) -> Result<()> {
@@ -395,16 +453,19 @@ impl<'rt> Coordinator<'rt> {
 
     /// One scheduling tick; returns whether anything ran.
     pub fn step(&mut self) -> Result<bool> {
-        self.release_arrivals();
+        self.release_arrivals()?;
         // Idle with only future arrivals: fast-forward the clock.
         if self.active.is_empty() && self.waiting.is_empty() {
             match self.pending.front().map(|(t, _, _)| *t) {
                 Some(t) => {
                     self.fast_forward_to(t);
-                    self.release_arrivals();
+                    self.release_arrivals()?;
                 }
                 None => return Ok(false),
             }
+        }
+        if self.degrade.is_some() {
+            self.degrade_tick();
         }
         let mut ran = false;
         match self.cfg.policy {
@@ -447,7 +508,7 @@ impl<'rt> Coordinator<'rt> {
             // turns a persistent stall into an error.
             if let Some(t) = self.pending.front().map(|(t, _, _)| *t) {
                 self.fast_forward_to(t);
-                self.release_arrivals();
+                self.release_arrivals()?;
                 ran = true;
             }
         }
@@ -481,6 +542,20 @@ impl<'rt> Coordinator<'rt> {
     /// where gathers observe real §4.1 queueing instead of a per-block
     /// closed form.
     fn gather_cycles(&mut self, total_blocks: usize) -> f64 {
+        // An active DMA fault injector consumes PRNG state per priced
+        // transaction, so gather costs are call-order-dependent (still
+        // seeded-deterministic across replays) and must bypass the memo;
+        // the clean path below stays untouched so zero-fault runs remain
+        // bitwise identical.
+        if let Some(inj) = self.dma_faults.as_mut().filter(|i| i.is_active()) {
+            return self.isax_model.kv_gather_dma_cycles_faulty(
+                &self.cfg.llm,
+                &self.bus,
+                self.pool.block_slots(),
+                total_blocks,
+                inj,
+            );
+        }
         if let Some(&c) = self.gather_cycles_memo.get(&total_blocks) {
             return c;
         }
@@ -514,22 +589,81 @@ impl<'rt> Coordinator<'rt> {
         }
     }
 
-    fn release_arrivals(&mut self) {
+    fn release_arrivals(&mut self) -> Result<()> {
         let now = self.sim_now_ms();
-        while let Some((t, _, _)) = self.pending.front() {
-            if *t > now {
-                break;
-            }
-            let (arrive_ms, deadline_ms, req) =
-                self.pending.pop_front().expect("checked non-empty");
+        while self.pending.front().is_some_and(|&(t, _, _)| t <= now) {
+            let Some((arrive_ms, deadline_ms, req)) = self.pending.pop_front() else {
+                return Err(Error::Coordinator("arrival queue drained mid-release".into()));
+            };
             self.waiting.push_back(WaitItem::Fresh { req, arrive_ms, deadline_ms });
+        }
+        Ok(())
+    }
+
+    /// Advance the graceful-degradation ladder one tick: sustained
+    /// overload (full batch plus already-overdue waiters) escalates,
+    /// sustained calm de-escalates, and at level ≥ 2 hopelessly-late
+    /// fresh waiters are shed. Only ever called when the SoC layer armed
+    /// the ladder.
+    fn degrade_tick(&mut self) {
+        let now = self.sim_now_ms();
+        let overloaded = self.active.len() >= self.effective_max_active()
+            && self.waiting.iter().any(|w| w.deadline_ms() < now);
+        let level = match &mut self.degrade {
+            Some(d) => {
+                if overloaded {
+                    d.hot_rounds += 1;
+                    d.calm_rounds = 0;
+                    if d.hot_rounds >= 3 && d.level < 3 {
+                        d.level += 1;
+                        d.hot_rounds = 0;
+                    }
+                } else {
+                    d.calm_rounds += 1;
+                    d.hot_rounds = 0;
+                    if d.calm_rounds >= 6 && d.level > 0 {
+                        d.level -= 1;
+                        d.calm_rounds = 0;
+                    }
+                }
+                d.level
+            }
+            None => return,
+        };
+        if level >= 2 {
+            // Shed fresh waiters that are hopelessly late: past their
+            // deadline by more than 3x their whole SLO window. Preempted
+            // sequences are never shed — their tokens are already owed.
+            let mut k = 0;
+            while k < self.waiting.len() {
+                let hopeless = match &self.waiting[k] {
+                    WaitItem::Fresh { arrive_ms, deadline_ms, .. } => {
+                        now > *deadline_ms + 3.0 * (deadline_ms - arrive_ms).max(0.0)
+                    }
+                    WaitItem::Resume(_) => false,
+                };
+                if hopeless {
+                    self.waiting.remove(k);
+                    self.shed += 1;
+                } else {
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Batch width after degradation: level 3 halves it (min 1).
+    fn effective_max_active(&self) -> usize {
+        match &self.degrade {
+            Some(d) if d.level >= 3 => (self.cfg.max_active / 2).max(1),
+            _ => self.cfg.max_active,
         }
     }
 
     /// Pick and admit one waiting item. With `overdue_only`, admits only
     /// items whose deadline has already passed. Returns whether one ran.
     fn try_admit(&mut self, order: AdmitOrder, overdue_only: bool) -> Result<bool> {
-        if self.waiting.is_empty() || self.active.len() >= self.cfg.max_active {
+        if self.waiting.is_empty() || self.active.len() >= self.effective_max_active() {
             return Ok(false);
         }
         let idx = match order {
@@ -551,7 +685,22 @@ impl<'rt> Coordinator<'rt> {
         if needed > self.pool.free_blocks() {
             return Ok(false);
         }
-        let item = self.waiting.remove(idx).expect("index in range");
+        // Degradation level >= 1: admission backpressure. Fresh work must
+        // leave one spare KV block for the sequences already running (a
+        // lone engine with nothing active still admits, or it would
+        // deadlock an evacuated shard).
+        if let Some(d) = &self.degrade {
+            if d.level >= 1
+                && !self.active.is_empty()
+                && matches!(&self.waiting[idx], WaitItem::Fresh { .. })
+                && needed + 1 > self.pool.free_blocks()
+            {
+                return Ok(false);
+            }
+        }
+        let Some(item) = self.waiting.remove(idx) else {
+            return Err(Error::Coordinator("admission picked an out-of-range queue index".into()));
+        };
         match item {
             WaitItem::Fresh { req, arrive_ms, deadline_ms } => {
                 self.admit_fresh(req, arrive_ms, deadline_ms)?;
@@ -596,7 +745,12 @@ impl<'rt> Coordinator<'rt> {
         // token-by-token (weights re-streamed each time).
         let (pc, pm) = self.isax_model.prefill_parts(&self.cfg.llm, plen, &self.bus);
         self.note_demand(pc, pm);
-        let isax = pc.max(pm) * 1.05;
+        let mut isax = pc.max(pm) * 1.05;
+        // Surge fault windows inflate demand; guarded so unfaulted runs
+        // never multiply (bitwise-identity, not just value-identity).
+        if self.load_factor != 1.0 {
+            isax *= self.load_factor;
+        }
         let mut base = 0.0;
         for t in 0..plen {
             base += self.base_model.token_cycles(&self.cfg.llm, t + 1);
@@ -624,7 +778,7 @@ impl<'rt> Coordinator<'rt> {
         // A max_new_tokens == 1 request is satisfied by the prefill token
         // alone — retire it now rather than overshoot by a decode round.
         if satisfied {
-            self.retire(id);
+            self.retire(id)?;
         }
         Ok(())
     }
@@ -701,6 +855,9 @@ impl<'rt> Coordinator<'rt> {
             isax += tc.max(tm) * 1.05;
             isax += self.paging_overhead_cycles(act.len);
         }
+        if self.load_factor != 1.0 {
+            isax *= self.load_factor;
+        }
         self.clock_cycles += isax;
         act.sim_isax_cycles += isax;
         act.admitted_order = self.next_admit;
@@ -775,18 +932,23 @@ impl<'rt> Coordinator<'rt> {
         }
         let mut feeds: Vec<(i32, usize)> = Vec::with_capacity(n);
         for (bi, id) in batch.iter().enumerate() {
-            let act = self
-                .active
-                .iter()
-                .find(|a| a.req.id == *id)
-                .expect("batch members are active");
+            let Some(act) = self.active.iter().find(|a| a.req.id == *id) else {
+                return Err(Error::Coordinator(format!(
+                    "batch member {id} vanished before gather"
+                )));
+            };
             self.pool.gather(
                 &act.table,
                 act.len,
                 &mut self.scratch_k[bi * kvn..(bi + 1) * kvn],
                 &mut self.scratch_v[bi * kvn..(bi + 1) * kvn],
             );
-            feeds.push((*act.generated.last().expect("prefill emitted a token"), act.len));
+            let Some(&last_tok) = act.generated.last() else {
+                return Err(Error::Coordinator(format!(
+                    "sequence {id} has no pending token"
+                )));
+            };
+            feeds.push((last_tok, act.len));
         }
         let logits = {
             let mut slots: Vec<DecodeSlot<'_>> = self
@@ -813,6 +975,9 @@ impl<'rt> Coordinator<'rt> {
         let ideal: f64 =
             ctxs.iter().map(|&c| self.cfg.llm.kv_bytes(c) as f64 / self.kv_stream_rate).sum();
         tick += (self.gather_cycles(total_blocks) - ideal).max(0.0);
+        if self.load_factor != 1.0 {
+            tick *= self.load_factor;
+        }
         self.clock_cycles += tick;
         let share = tick / batch.len() as f64;
         let now = self.sim_now_ms();
@@ -822,11 +987,11 @@ impl<'rt> Coordinator<'rt> {
         let mut retired = Vec::new();
         for (i, id) in batch.iter().enumerate() {
             let next = argmax_row(&logits[i]);
-            let idx = self
-                .active
-                .iter()
-                .position(|a| a.req.id == *id)
-                .expect("batch members are active");
+            let Some(idx) = self.active.iter().position(|a| a.req.id == *id) else {
+                return Err(Error::Coordinator(format!(
+                    "batch member {id} vanished before commit"
+                )));
+            };
             self.pool.scatter_slot(
                 &self.active[idx].table,
                 self.active[idx].len,
@@ -845,20 +1010,26 @@ impl<'rt> Coordinator<'rt> {
             }
         }
         for id in retired {
-            self.retire(id);
+            self.retire(id)?;
         }
         Ok(())
     }
 
-    fn retire(&mut self, id: u64) {
-        let idx = self
-            .active
-            .iter()
-            .position(|a| a.req.id == id)
-            .expect("retiring an unknown sequence");
+    fn retire(&mut self, id: u64) -> Result<()> {
+        let Some(idx) = self.active.iter().position(|a| a.req.id == id) else {
+            return Err(Error::Coordinator(format!("retiring unknown sequence {id}")));
+        };
         let mut act = self.active.remove(idx);
         self.pool.release(&mut act.table);
-        let first = act.first_token_ms.expect("prefill emitted a token");
+        let Some(first) = act.first_token_ms else {
+            return Err(Error::Coordinator(format!(
+                "sequence {id} retired before its first token"
+            )));
+        };
+        // Observational SLO accounting — never changes scheduling.
+        if first > act.deadline_ms {
+            self.slo_violations += 1;
+        }
         self.done.push(RequestMetrics {
             id: act.req.id,
             prompt_len: act.req.prompt.len(),
@@ -869,6 +1040,7 @@ impl<'rt> Coordinator<'rt> {
             sim_isax_cycles: act.sim_isax_cycles,
             preemptions: act.preemptions,
         });
+        Ok(())
     }
 }
 

@@ -92,6 +92,11 @@ impl TraceSpec {
     /// defaults, e.g. `n=16,seed=7,rate=4,plen=4..12,gen=6..14,burst=4,
     /// tail=0.25,mix=0.5`.
     pub fn parse(text: &str) -> Result<Self> {
+        if text.split(',').all(|p| p.is_empty()) {
+            // An empty spec is almost certainly a quoting mistake on the
+            // CLI; silently replaying the defaults would hide it.
+            return Err(Error::Coordinator("trace spec: empty spec".into()));
+        }
         let mut spec = Self::default();
         for part in text.split(',').filter(|p| !p.is_empty()) {
             let (key, val) = part
@@ -211,6 +216,30 @@ mod tests {
         assert!(TraceSpec::parse("burst=0.5").is_err());
         assert!(TraceSpec::parse("tail=1.5").is_err());
         assert!(TraceSpec::parse("mix=-0.1").is_err());
+    }
+
+    #[test]
+    fn every_malformed_spec_is_a_diagnostic_error() {
+        // Every malformed spec must produce a diagnostic error carrying
+        // the `trace spec` prefix — never a panic, never a silent
+        // fall-back to the defaults.
+        for bad in [
+            "",          // empty spec (likely a CLI quoting mistake)
+            ",",         // only separators — still an empty spec
+            "n",         // bare key, no `=`
+            "n=",        // empty value
+            "n=abc",     // non-numeric integer
+            "rate=fast", // non-numeric float
+            "plen=4",    // range key without `..`
+            "plen=a..b", // non-numeric range bounds
+            "gen=0..4",  // zero-length generations are meaningless
+            "=",         // empty key and value
+        ] {
+            let err = TraceSpec::parse(bad)
+                .expect_err(&format!("spec `{bad}` must be rejected"))
+                .to_string();
+            assert!(err.contains("trace spec"), "spec `{bad}` -> `{err}`");
+        }
     }
 
     #[test]

@@ -39,6 +39,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::error::{Error, Result};
 use crate::interface::latency::TransactionKind;
 use crate::interface::model::{InterfaceId, InterfaceSet, MemInterface};
+use crate::util::rng::Rng;
 
 /// One *already decomposed* (legal-size) transaction fed to the engine.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -390,6 +391,110 @@ pub fn stream_makespan(
     ch.b_prev.max(0) as u64
 }
 
+/// Deterministic per-transaction DMA error model: each transaction fails
+/// independently with a seeded probability and is retried ECC-style with
+/// bounded exponential backoff, billed in simulated beats.
+///
+/// A failed attempt costs the transaction's full beat count (the burst
+/// must be replayed) plus a backoff of `2^attempt` beats; after
+/// `max_retries` consecutive failures the engine gives up and lets the
+/// original (clean) transfer stand — the model prices *transient* ECC
+/// errors, not hard faults. With `prob == 0` the injector is inert and
+/// every priced stream is bitwise identical to [`stream_makespan`].
+#[derive(Debug, Clone)]
+pub struct DmaFaultInjector {
+    prob: f64,
+    rng: Rng,
+    max_retries: u32,
+    retried_bursts: u64,
+    retries: u64,
+    penalty_beats: u64,
+}
+
+impl DmaFaultInjector {
+    /// An injector failing each transaction with probability `prob`
+    /// (clamped to `[0, 1]`), drawing from a PRNG seeded with `seed`.
+    pub fn new(prob: f64, seed: u64) -> Self {
+        Self {
+            prob: prob.clamp(0.0, 1.0),
+            rng: Rng::new(seed),
+            max_retries: 4,
+            retried_bursts: 0,
+            retries: 0,
+            penalty_beats: 0,
+        }
+    }
+
+    /// True when the injector can actually perturb timing (`prob > 0`).
+    /// Inactive injectors must not be consulted at all on hot paths, so
+    /// that zero-probability plans never touch the PRNG.
+    pub fn is_active(&self) -> bool {
+        self.prob > 0.0
+    }
+
+    /// Number of transactions that needed at least one retry.
+    pub fn retried_bursts(&self) -> u64 {
+        self.retried_bursts
+    }
+
+    /// Total retry attempts across all transactions.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Total beats billed to retries and backoff so far.
+    pub fn penalty_beats(&self) -> u64 {
+        self.penalty_beats
+    }
+
+    /// Extra beats charged to one transaction: each failed attempt
+    /// replays the burst (`beats`) after an exponential backoff, up to
+    /// `max_retries` attempts.
+    fn txn_penalty(&mut self, itfc: &MemInterface, size: usize) -> u64 {
+        if self.prob <= 0.0 {
+            return 0;
+        }
+        let beats = beats_of(itfc, size) as u64;
+        let mut penalty = 0u64;
+        let mut backoff = 1u64;
+        let mut attempts = 0u64;
+        while attempts < self.max_retries as u64 && self.rng.bool(self.prob) {
+            penalty += backoff + beats;
+            backoff *= 2;
+            attempts += 1;
+        }
+        if attempts > 0 {
+            self.retried_bursts += 1;
+            self.retries += attempts;
+            self.penalty_beats += penalty;
+        }
+        penalty
+    }
+}
+
+/// [`stream_makespan`] with a fault injector in the datapath: every
+/// transaction advances the clean §4.1 recurrence, then pays its retry
+/// penalty (if any) as extra completion cycles. With an inactive
+/// injector the result equals [`stream_makespan`] exactly and the PRNG
+/// is never consulted.
+pub fn stream_makespan_faulty(
+    itfc: &MemInterface,
+    kind: TransactionKind,
+    sizes: impl Iterator<Item = usize>,
+    faults: &mut DmaFaultInjector,
+) -> u64 {
+    let mut ch = ChanState::new();
+    let mut penalty = 0u64;
+    for size in sizes {
+        if size == 0 {
+            continue;
+        }
+        ch.advance(itfc, kind, size);
+        penalty += faults.txn_penalty(itfc, size);
+    }
+    ch.b_prev.max(0) as u64 + penalty
+}
+
 /// Merge runs of address-contiguous, same-direction, same-target
 /// transactions and re-split them into maximal legal bursts on `itfc` —
 /// the coalescing a burst engine performs when small requests line up.
@@ -465,21 +570,30 @@ impl IssueClock {
     }
 
     /// Price one issued transaction; returns its completion cycle.
-    /// Interface ids beyond the configured set clamp to the last channel
-    /// (see the ROADMAP open item on threading the real `InterfaceSet`
-    /// through the IR engines). Zero-size issues are no-ops completing
-    /// at the channel's current completion cycle — the same skip rule
-    /// the event engine applies.
-    pub fn issue(&mut self, itfc: InterfaceId, kind: TransactionKind, size: usize) -> u64 {
-        if self.itfcs.is_empty() {
-            return 0;
-        }
-        let k = itfc.0.min(self.itfcs.len() - 1);
+    /// Interface ids beyond the configured set are a hard
+    /// [`Error::Interface`] — the silent clamp this used to apply was a
+    /// wrong-answer debt (a program priced against the wrong channel),
+    /// closed now that the IR engines can bind a real `InterfaceSet` via
+    /// `run_with_itfcs`. Zero-size issues are no-ops completing at the
+    /// channel's current completion cycle — the same skip rule the event
+    /// engine applies.
+    pub fn issue(
+        &mut self,
+        itfc: InterfaceId,
+        kind: TransactionKind,
+        size: usize,
+    ) -> Result<u64> {
+        let Some(m) = self.itfcs.interfaces.get(itfc.0) else {
+            return Err(Error::Interface(format!(
+                "issue clock: transaction bound to unknown interface {} ({} declared)",
+                itfc.0,
+                self.itfcs.len()
+            )));
+        };
         if size == 0 {
-            return self.chans[k].b_prev.max(0) as u64;
+            return Ok(self.chans[itfc.0].b_prev.max(0) as u64);
         }
-        let m = self.itfcs.get(InterfaceId(k));
-        self.chans[k].advance(m, kind, size).max(0) as u64
+        Ok(self.chans[itfc.0].advance(m, kind, size).max(0) as u64)
     }
 
     /// Latest completion cycle across all channels so far.
@@ -681,12 +795,52 @@ mod tests {
         let sizes = [64usize, 32, 8, 4];
         let mut last = 0;
         for &s in &sizes {
-            last = clk.issue(InterfaceId(1), TransactionKind::Load, s);
+            last = clk.issue(InterfaceId(1), TransactionKind::Load, s).unwrap();
         }
         assert_eq!(last, sequence_latency(&itfc2(), TransactionKind::Load, &sizes));
         assert_eq!(clk.makespan(), last);
-        // Out-of-range interface ids clamp instead of panicking.
-        let more = clk.issue(InterfaceId(9), TransactionKind::Store, 8);
-        assert!(more > 0);
+        // Out-of-range interface ids are a hard error, not a clamp.
+        let err = clk.issue(InterfaceId(9), TransactionKind::Store, 8).unwrap_err();
+        assert!(err.to_string().contains("unknown interface"));
+    }
+
+    #[test]
+    fn fault_injector_is_deterministic_and_bounded() {
+        let itfc = itfc2();
+        let sizes = vec![64usize; 200];
+
+        // Zero probability: bitwise identical to the clean path, PRNG
+        // untouched, nothing counted.
+        let mut inert = DmaFaultInjector::new(0.0, 7);
+        assert!(!inert.is_active());
+        let clean = stream_makespan(&itfc, TransactionKind::Load, sizes.iter().copied());
+        let priced =
+            stream_makespan_faulty(&itfc, TransactionKind::Load, sizes.iter().copied(), &mut inert);
+        assert_eq!(priced, clean);
+        assert_eq!(inert.retries(), 0);
+        assert_eq!(inert.retried_bursts(), 0);
+
+        // Same seed replays identically, and faults always cost cycles.
+        let run = |seed: u64| {
+            let mut inj = DmaFaultInjector::new(0.25, seed);
+            let t = stream_makespan_faulty(
+                &itfc,
+                TransactionKind::Load,
+                sizes.iter().copied(),
+                &mut inj,
+            );
+            (t, inj.retries(), inj.penalty_beats())
+        };
+        let a = run(9);
+        let b = run(9);
+        assert_eq!(a, b, "same seed must replay bitwise");
+        assert!(a.0 > clean, "injected faults must cost cycles");
+        assert_eq!(a.0, clean + a.2, "penalty is billed exactly once");
+
+        // Certain failure hits the retry bound on every transaction.
+        let mut always = DmaFaultInjector::new(1.0, 3);
+        stream_makespan_faulty(&itfc, TransactionKind::Load, sizes.iter().copied(), &mut always);
+        assert_eq!(always.retried_bursts(), sizes.len() as u64);
+        assert_eq!(always.retries(), 4 * sizes.len() as u64);
     }
 }

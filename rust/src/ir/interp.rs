@@ -23,6 +23,7 @@ use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::interface::dmasim::IssueClock;
+use crate::interface::model::InterfaceSet;
 use crate::ir::func::{BufferId, Func, Region, Value};
 use crate::ir::ops::{CmpPred, Op, OpKind};
 use crate::runtime::DType;
@@ -236,16 +237,16 @@ pub struct ExecStats {
     /// (not the most recent one — a later issue on a fast channel can
     /// complete before an earlier burst), priced by the incremental
     /// §4.1 DMA clock
-    /// ([`crate::interface::dmasim::IssueClock`]) against the default
-    /// §6.1 interface pair — an *approximation*: Aquas-IR carries only
-    /// interface ids, not the `InterfaceSet` the program was synthesized
-    /// against, so programs lowered for other sets (e.g. the §6.3
-    /// 128-bit wide bus) are billed at the default widths, and ids
-    /// beyond the pair clamp to the last channel (see the ROADMAP open
-    /// item on threading the real set through the engines). Timing-only:
-    /// functional results are unaffected, and both IR engines charge
-    /// bit-identical values. 0 when the program issues no DMA
-    /// transactions.
+    /// ([`crate::interface::dmasim::IssueClock`]). By default the clock
+    /// binds the §6.1 Rocket interface pair (Aquas-IR carries only
+    /// interface *ids*); [`run_with_itfcs`] binds the real
+    /// `InterfaceSet` the program was synthesized against (e.g. the
+    /// §6.3 128-bit wide bus) so the billing matches the hardware.
+    /// Interface ids beyond the bound set are a hard
+    /// [`Error::Interface`](crate::error::Error) — the old silent clamp
+    /// priced the wrong channel. Timing-only: functional results are
+    /// unaffected, and both IR engines charge bit-identical values. 0
+    /// when the program issues no DMA transactions.
     pub dma_cycles: u64,
 }
 
@@ -283,6 +284,34 @@ pub fn run_traced(
     stats: &mut ExecStats,
     trace: &mut Option<Vec<MemAccess>>,
 ) -> Result<Vec<Val>> {
+    run_traced_from(func, args, mem, stats, trace, None)
+}
+
+/// Interpret with DMA issue ops priced against a *specific*
+/// [`InterfaceSet`] — the set the program was synthesized for — instead
+/// of the default §6.1 Rocket pair. Functional results are bit-identical
+/// to [`run`]; only [`ExecStats::dma_cycles`] (and the hard-error range
+/// check on interface ids) observe the bound set.
+pub fn run_with_itfcs(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    itfcs: &InterfaceSet,
+) -> Result<Vec<Val>> {
+    run_traced_from(func, args, mem, stats, &mut None, Some(IssueClock::new(itfcs.clone())))
+}
+
+/// Shared interpreter entry: `dma0` pre-binds the issue clock (`None`
+/// lazily builds the Rocket-default clock on first `copy_issue`).
+fn run_traced_from(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    trace: &mut Option<Vec<MemAccess>>,
+    dma0: Option<IssueClock>,
+) -> Result<Vec<Val>> {
     if args.len() != func.params.len() {
         return Err(Error::Ir(format!(
             "expected {} args, got {}",
@@ -296,9 +325,9 @@ pub fn run_traced(
     }
     // Temporal level: issued-but-not-awaited transactions, plus the
     // incremental DMA clock that prices them (lazily built — programs
-    // without issue ops never pay for it).
+    // without issue ops never pay for it — unless a caller bound one).
     let mut pending: HashMap<u32, PendingCopy> = HashMap::new();
-    let mut dma: Option<IssueClock> = None;
+    let mut dma: Option<IssueClock> = dma0;
     let out = exec_region(func, &func.entry, &mut env, mem, stats, &mut pending, &mut dma, trace)?;
     Ok(out.unwrap_or_default())
 }
@@ -495,7 +524,7 @@ fn exec_op(
             // Timing only: charge the simulated §4.1 completion cycle of
             // this transaction; data still moves at the matching wait.
             let clk = dma.get_or_insert_with(IssueClock::rocket_default);
-            let done = clk.issue(*itfc, *kind, *size);
+            let done = clk.issue(*itfc, *kind, *size)?;
             stats.dma_cycles = stats.dma_cycles.max(done);
             let dst_off = get(env, op.operands[0])?.as_i()?;
             let src_off = get(env, op.operands[1])?.as_i()?;
@@ -719,6 +748,25 @@ mod tests {
         mem.write_i32(crate::ir::func::BufferId(0), &[9, 8, 7, 6]);
         run(&f, &[], &mut mem).unwrap();
         assert_eq!(mem.read_i32(crate::ir::func::BufferId(1)), vec![9, 8, 7, 6]);
+
+        // Binding a real interface set: same data movement, and the DMA
+        // billing follows the bound geometry instead of the default pair.
+        let set = InterfaceSet::rocket_default();
+        let mut mem2 = Memory::for_func(&f);
+        mem2.write_i32(crate::ir::func::BufferId(0), &[9, 8, 7, 6]);
+        let mut stats = ExecStats::default();
+        run_with_itfcs(&f, &[], &mut mem2, &mut stats, &set).unwrap();
+        assert_eq!(mem2.read_i32(crate::ir::func::BufferId(1)), vec![9, 8, 7, 6]);
+        assert!(stats.dma_cycles > 0);
+
+        // An id beyond the bound set is a hard error, not a clamp: bind
+        // an empty set so the op's InterfaceId(0) has no channel.
+        let empty = InterfaceSet::new(vec![]);
+        let mut mem3 = Memory::for_func(&f);
+        mem3.write_i32(crate::ir::func::BufferId(0), &[9, 8, 7, 6]);
+        let mut stats3 = ExecStats::default();
+        let err = run_with_itfcs(&f, &[], &mut mem3, &mut stats3, &empty).unwrap_err();
+        assert!(err.to_string().contains("unknown interface"), "{err}");
     }
 
     #[test]

@@ -44,7 +44,7 @@ use std::collections::HashMap;
 use crate::error::{Error, Result};
 use crate::interface::dmasim::IssueClock;
 use crate::interface::latency::TransactionKind;
-use crate::interface::model::InterfaceId;
+use crate::interface::model::{InterfaceId, InterfaceSet};
 use crate::ir::func::{BufferId, Func, Region};
 use crate::ir::interp::{checked_copy, ExecStats, MemAccess, Memory, Val};
 use crate::ir::ops::{CmpPred, OpKind};
@@ -169,6 +169,9 @@ pub struct CompiledFunc {
     params: Vec<(u32, Type)>,
     /// Return-value registers, filled by the entry terminator.
     ret: Vec<(u32, Type)>,
+    /// Interface set DMA issues are priced against; `None` binds the
+    /// default §6.1 Rocket pair lazily (see [`CompiledFunc::with_itfcs`]).
+    itfcs: Option<InterfaceSet>,
     /// Intrinsic name table (referenced by `Insn::Intrinsic`).
     intrinsics: Vec<String>,
 }
@@ -204,6 +207,7 @@ pub fn compile(func: &Func) -> Result<CompiledFunc> {
         params: func.params.iter().map(|&p| (p.0, func.value_type(p))).collect(),
         ret: c.ret,
         intrinsics: c.intrinsics,
+        itfcs: None,
     })
 }
 
@@ -221,6 +225,20 @@ pub fn run_with_stats(
     stats: &mut ExecStats,
 ) -> Result<Vec<Val>> {
     compile(func)?.run_with_stats(args, mem, stats)
+}
+
+/// Compile + execute with DMA issues priced against a *specific*
+/// [`InterfaceSet`] instead of the default §6.1 Rocket pair — the VM
+/// counterpart of [`crate::ir::interp::run_with_itfcs`], bit-identical
+/// to it on the same program, inputs and set.
+pub fn run_with_itfcs(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    itfcs: &InterfaceSet,
+) -> Result<Vec<Val>> {
+    compile(func)?.with_itfcs(itfcs.clone()).run_with_stats(args, mem, stats)
 }
 
 /// Traced surface: a live trace sink needs per-access callbacks the
@@ -717,6 +735,14 @@ impl CompiledFunc {
         self.run_with_stats(args, mem, &mut stats)
     }
 
+    /// Bind the interface set DMA issues are priced against (replacing
+    /// the default §6.1 Rocket pair). Timing-only: functional results
+    /// are unaffected; ids beyond the set become hard errors.
+    pub fn with_itfcs(mut self, itfcs: InterfaceSet) -> Self {
+        self.itfcs = Some(itfcs);
+        self
+    }
+
     /// Execute and collect [`ExecStats`] — identical counts to the
     /// tree-walking interpreter on the same program and inputs.
     pub fn run_with_stats(
@@ -752,8 +778,11 @@ impl CompiledFunc {
             }
         }
         let mut pending: HashMap<u32, VmPending> = HashMap::new();
-        // Lazily-built DMA clock (mirrors the tree-walker bit-for-bit).
-        let mut dma: Option<IssueClock> = None;
+        // DMA clock: pre-bound when the compiled function carries an
+        // interface set, otherwise lazily built on first issue (mirrors
+        // the tree-walker bit-for-bit in both modes).
+        let mut dma: Option<IssueClock> =
+            self.itfcs.as_ref().map(|s| IssueClock::new(s.clone()));
 
         let oob = |i: i64, len: u32| {
             Error::Ir(format!("index {i} out of bounds (len {len})", len = len as usize))
@@ -930,7 +959,7 @@ impl CompiledFunc {
                     stats.transfers += 1;
                     stats.transfer_bytes += *size as u64;
                     let clk = dma.get_or_insert_with(IssueClock::rocket_default);
-                    let done = clk.issue(InterfaceId(*itfc as usize), *kind, *size as usize);
+                    let done = clk.issue(InterfaceId(*itfc as usize), *kind, *size as usize)?;
                     stats.dma_cycles = stats.dma_cycles.max(done);
                     pending.insert(
                         *tag,
@@ -1139,6 +1168,78 @@ mod tests {
         assert_eq!(s1, s2);
         assert_eq!(s2.transfers, 1);
         assert_eq!(s2.transfer_bytes, 64);
+    }
+
+    #[test]
+    fn bound_interface_set_matches_tree_walker_and_rejects_bad_ids() {
+        use crate::interface::model::{InterfaceId, InterfaceSet};
+        use crate::interface::TransactionKind;
+        use crate::ir::func::Value;
+        use crate::ir::ops::Op;
+        let mut b = FuncBuilder::new("t");
+        let g = b.global("g", DType::I32, 4, CacheHint::Unknown);
+        let s = b.scratchpad("s", DType::I32, 4, 1);
+        let zero = b.const_i(0);
+        let mut f = {
+            b.transfer(s, zero, g, zero, 0); // placeholder replaced below
+            b.finish(&[])
+        };
+        let issue = f.add_op(Op::new(
+            OpKind::CopyIssue {
+                itfc: InterfaceId(1),
+                dst: BufferId(1),
+                src: BufferId(0),
+                size: 16,
+                kind: TransactionKind::Load,
+                tag: 3,
+                after: vec![],
+            },
+            vec![Value(0), Value(0)],
+            vec![],
+        ));
+        let wait = f.add_op(Op::new(OpKind::CopyWait { tag: 3 }, vec![], vec![]));
+        let ret = f.entry.ops.pop().unwrap();
+        f.entry.ops.pop(); // placeholder transfer
+        f.entry.ops.push(issue);
+        f.entry.ops.push(wait);
+        f.entry.ops.push(ret);
+
+        // Both engines, same bound set: bit-identical data and stats,
+        // and the wide-bus billing differs from the default pair.
+        let wide = InterfaceSet::rocket_wide_bus();
+        let run_one = |set: Option<&InterfaceSet>, engine_vm: bool| {
+            let mut m = Memory::for_func(&f);
+            m.write_i32(BufferId(0), &[9, 8, 7, 6]);
+            let mut st = ExecStats::default();
+            match (set, engine_vm) {
+                (Some(s), true) => run_with_itfcs(&f, &[], &mut m, &mut st, s).unwrap(),
+                (Some(s), false) => {
+                    interp::run_with_itfcs(&f, &[], &mut m, &mut st, s).unwrap()
+                }
+                (None, true) => run_with_stats(&f, &[], &mut m, &mut st).unwrap(),
+                (None, false) => interp::run_with_stats(&f, &[], &mut m, &mut st).unwrap(),
+            };
+            assert_eq!(m.read_i32(BufferId(1)), vec![9, 8, 7, 6]);
+            st
+        };
+        let vm_wide = run_one(Some(&wide), true);
+        let walker_wide = run_one(Some(&wide), false);
+        assert_eq!(vm_wide, walker_wide, "engines diverge on the bound set");
+        let vm_default = run_one(None, true);
+        assert_eq!(vm_default, run_one(None, false));
+        assert_ne!(
+            vm_wide.dma_cycles, vm_default.dma_cycles,
+            "the wide bus must be billed differently from the default pair"
+        );
+
+        // A one-interface set leaves the op's InterfaceId(1) unbound:
+        // hard error from both engines.
+        let narrow = InterfaceSet::new(vec![wide.interfaces[0].clone()]);
+        let mut m = Memory::for_func(&f);
+        m.write_i32(BufferId(0), &[9, 8, 7, 6]);
+        let mut st = ExecStats::default();
+        let err = run_with_itfcs(&f, &[], &mut m, &mut st, &narrow).unwrap_err();
+        assert!(err.to_string().contains("unknown interface"), "{err}");
     }
 
     #[test]

@@ -5,8 +5,8 @@
 
 use aquas::bench_harness as bh;
 use aquas::coordinator::{
-    Coordinator, CoordinatorConfig, SchedulePolicy, SocConfig, SocCoordinator, TraceRequest,
-    TraceSpec,
+    Coordinator, CoordinatorConfig, FaultPlan, SchedulePolicy, SocConfig, SocCoordinator,
+    TraceRequest, TraceSpec,
 };
 use aquas::runtime::Runtime;
 
@@ -45,6 +45,12 @@ COMMANDS:
                                              (+ burst=B mean burst size,
                                               tail=P heavy-tail prob,
                                               mix=P interactive-SLO prob)
+                              --faults SPEC  deterministic fault injection,
+                                             e.g. coredown=1@40,dmaerr=0.02,seed=3
+                                             (keys: coredown=k@t corestall=k@t..t2
+                                              dmaerr=p seed=s surge=x@t..t2;
+                                              forces the SoC path, replays
+                                              byte-identically for one seed)
     ir-levels                 print the Aquas-IR level summary (Table 1)
     help                      this text
 ";
@@ -186,6 +192,7 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
     let mut batch = 4usize;
     let mut cores = 1usize;
     let mut trace: Option<String> = None;
+    let mut faults: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -213,14 +220,26 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
                 i += 1;
                 trace = args.get(i).cloned();
             }
+            "--faults" => {
+                i += 1;
+                faults = args.get(i).cloned();
+            }
             _ => {}
         }
         i += 1;
     }
+    // Fault specs are parsed before touching the runtime so a malformed
+    // spec fails fast with a diagnostic rather than after artifact load.
+    let fault_plan = match &faults {
+        Some(text) => Some(FaultPlan::parse(text)?),
+        None => None,
+    };
     let rt = Runtime::load("artifacts")?;
     println!("platform: {} | entries: {:?}", rt.platform(), rt.entry_names());
-    if cores > 1 {
-        return cmd_serve_soc(&rt, cores, policy, batch, n_requests, trace.as_deref());
+    if cores > 1 || fault_plan.is_some() {
+        // Fault injection lives in the SoC coordinator, so `--faults`
+        // routes through it even for a single core.
+        return cmd_serve_soc(&rt, cores, policy, batch, n_requests, trace.as_deref(), fault_plan);
     }
     let mut coord = Coordinator::new(
         &rt,
@@ -279,9 +298,10 @@ fn cmd_serve(args: &[String]) -> aquas::Result<()> {
     Ok(())
 }
 
-/// `aquas serve --cores N` (N > 1): the same request stream through the
-/// N-core SoC — sharded KV pools, async dispatch, cross-core migration
-/// and work stealing, with shared-DDR contention on the modelled clock.
+/// `aquas serve --cores N` (N > 1) or `--faults SPEC`: the same request
+/// stream through the N-core SoC — sharded KV pools, async dispatch,
+/// cross-core migration and work stealing, with shared-DDR contention on
+/// the modelled clock, plus optional deterministic fault injection.
 fn cmd_serve_soc(
     rt: &Runtime,
     cores: usize,
@@ -289,6 +309,7 @@ fn cmd_serve_soc(
     batch: usize,
     n_requests: usize,
     trace: Option<&str>,
+    faults: Option<FaultPlan>,
 ) -> aquas::Result<()> {
     let model = rt.manifest().model.clone();
     let reqs: Vec<TraceRequest> = if let Some(text) = trace {
@@ -307,11 +328,14 @@ fn cmd_serve_soc(
             })
             .collect()
     };
+    let plan = faults.unwrap_or_default();
+    let chaos = !plan.is_empty();
     let mut soc = SocCoordinator::new(
         rt,
         SocConfig {
             cores,
             per_core: CoordinatorConfig { policy, max_active: batch, ..Default::default() },
+            faults: plan,
             ..Default::default()
         },
     );
@@ -347,6 +371,18 @@ fn cmd_serve_soc(
         "soc: migrations {} | steals {} | preemptions {} | contention dma cycles {:.0}",
         stats.migrations, stats.steals, stats.preemptions, stats.contention_dma_cycles,
     );
+    // Only printed under an active fault plan so the zero-fault serving
+    // output stays byte-identical to the pre-chaos CLI.
+    if chaos {
+        println!(
+            "faults: injected {} | dma retries {} | evacuated {} | shed {} | slo violations {}",
+            stats.faults_injected,
+            stats.dma_retries,
+            stats.evacuated_seqs,
+            stats.shed_requests,
+            stats.slo_violations,
+        );
+    }
     for (k, kv) in stats.per_core_kv.iter().enumerate() {
         println!(
             "core {k} kv: {} blocks x {} slots | peak in use {} | leak-free {}",

@@ -280,6 +280,35 @@ impl IsaxLlmModel {
         ) as f64
     }
 
+    /// [`IsaxLlmModel::kv_gather_dma_cycles`] with a DMA fault injector
+    /// in the datapath: the same slab stream, with ECC-style retry
+    /// penalties billed per transaction
+    /// ([`dmasim::stream_makespan_faulty`]). With an inactive injector
+    /// the result is bitwise identical to the clean gather and the PRNG
+    /// is never consulted — the chaos serving path calls this only when
+    /// a fault plan arms DMA errors.
+    pub fn kv_gather_dma_cycles_faulty(
+        &self,
+        cfg: &LlmConfig,
+        bus: &MemInterface,
+        block_slots: usize,
+        n_blocks: usize,
+        faults: &mut dmasim::DmaFaultInjector,
+    ) -> f64 {
+        if n_blocks == 0 {
+            return 0.0;
+        }
+        let slab_bytes = block_slots * cfg.dim * cfg.weight_bytes;
+        let slab = bus.decompose(0, slab_bytes);
+        let n_slabs = n_blocks * 2 * cfg.n_layers;
+        dmasim::stream_makespan_faulty(
+            bus,
+            TransactionKind::Load,
+            (0..n_slabs).flat_map(|_| slab.iter().copied()),
+            faults,
+        ) as f64
+    }
+
     /// Per-stream slowdown factors when `streams` cores' DMA engines pull
     /// concurrent weight/KV streams through a shared DDR controller that
     /// sustains `ddr_banks` beats per cycle across the whole SoC.
@@ -739,6 +768,26 @@ mod tests {
             );
         }
         assert_eq!(isax.kv_gather_dma_cycles(&cfg, &bus, block_slots, 0), 0.0);
+    }
+
+    #[test]
+    fn faulty_gather_is_clean_at_zero_prob_and_dearer_under_faults() {
+        let cfg = LlmConfig::default();
+        let bus = MemInterface::system_bus();
+        let isax = IsaxLlmModel::default();
+        let block_slots = 8;
+        for n_blocks in [1usize, 3] {
+            let clean = isax.kv_gather_dma_cycles(&cfg, &bus, block_slots, n_blocks);
+            let mut inert = dmasim::DmaFaultInjector::new(0.0, 7);
+            let same = isax
+                .kv_gather_dma_cycles_faulty(&cfg, &bus, block_slots, n_blocks, &mut inert);
+            assert_eq!(same, clean, "inactive injector must be bitwise inert");
+            let mut hot = dmasim::DmaFaultInjector::new(1.0, 7);
+            let dear =
+                isax.kv_gather_dma_cycles_faulty(&cfg, &bus, block_slots, n_blocks, &mut hot);
+            assert!(dear > clean, "certain faults must cost cycles");
+            assert!(hot.retries() > 0);
+        }
     }
 
     #[test]

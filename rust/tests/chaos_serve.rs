@@ -1,0 +1,207 @@
+//! Chaos-hardened serving: deterministic fault injection through the
+//! SoC coordinator — core deaths, stall windows, DMA error retries and
+//! load surges — checked against the serving-layer invariants:
+//!
+//! - an **empty** fault plan is bitwise invisible (every metric, clock
+//!   and counter identical to a fault-free build);
+//! - faults change *when* and *where* sequences run, never *what* they
+//!   generate — surviving token streams match an ample single-engine
+//!   replay bitwise, id by id;
+//! - every shard's block accounting returns to empty (evacuation frees
+//!   the dead core's blocks);
+//! - a seeded fault schedule replays byte-identically;
+//! - unservable plans surface as diagnostic errors, never hangs.
+//!
+//! Works on a clean checkout (simulated-manifest fallback), like
+//! `soc_serve.rs`.
+
+use aquas::coordinator::{
+    Coordinator, CoordinatorConfig, FaultPlan, SocConfig, SocCoordinator, TraceRequest, TraceSpec,
+};
+use aquas::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::load(&dir).expect("runtime load (simulated fallback) cannot fail")
+}
+
+fn trace(rt: &Runtime, n: usize, seed: u64) -> Vec<TraceRequest> {
+    let model = rt.manifest().model.clone();
+    let spec = TraceSpec {
+        n,
+        seed,
+        rate: 0.0, // everything at t = 0: every core holds work when faults land
+        plen: (3, 6),
+        gen: (2, 5),
+        ..Default::default()
+    };
+    spec.generate_capped(model.vocab, model.prefill_len, model.max_seq)
+}
+
+/// Ground truth: the same requests through a plain single engine with an
+/// ample KV pool — per-id token streams any chaos schedule must
+/// reproduce bitwise for every sequence it completes.
+fn ample_tokens(rt: &Runtime, reqs: &[TraceRequest]) -> Vec<(u64, Vec<i32>)> {
+    let mut c = Coordinator::new(rt, CoordinatorConfig::default());
+    c.submit_trace(reqs).expect("1-core submit");
+    let metrics = c.run_to_completion().expect("1-core replay");
+    metrics.iter().map(|m| (m.id, m.generated.clone())).collect()
+}
+
+/// Run `reqs` through a `cores`-wide SoC under `plan`; returns
+/// `(per-id tokens, Debug-rendered stats, elapsed ms, full metrics debug)`.
+fn run_chaos(
+    rt: &Runtime,
+    cores: usize,
+    plan: FaultPlan,
+    reqs: &[TraceRequest],
+) -> (Vec<(u64, Vec<i32>)>, String, f64, String) {
+    let mut soc =
+        SocCoordinator::new(rt, SocConfig { cores, faults: plan, ..Default::default() });
+    soc.submit_trace(reqs).expect("soc submit");
+    let metrics = soc.run_to_completion().expect("soc replay");
+    let stats = soc.stats();
+    let n = reqs.len() as u64;
+    // Accounting: every submitted request either completed or was shed
+    // by graceful degradation — nothing lost, nothing duplicated.
+    assert_eq!(metrics.len() as u64 + stats.shed_requests, n, "requests lost: {stats:?}");
+    for w in metrics.windows(2) {
+        assert!(w[0].id < w[1].id, "duplicate or unsorted SoC ids");
+    }
+    for (k, kv) in stats.per_core_kv.iter().enumerate() {
+        assert!(kv.leak_free(), "core {k} shard leaked under chaos: {kv:?}");
+    }
+    let toks = metrics.iter().map(|m| (m.id, m.generated.clone())).collect();
+    (toks, format!("{stats:?}"), soc.sim_elapsed_ms(), format!("{metrics:?}"))
+}
+
+/// Assert each completed stream matches the ample ground truth bitwise.
+fn assert_tokens_preserved(got: &[(u64, Vec<i32>)], truth: &[(u64, Vec<i32>)]) {
+    for (id, toks) in got {
+        let t = truth
+            .iter()
+            .find(|(tid, _)| tid == id)
+            .unwrap_or_else(|| panic!("chaos invented sequence id {id}"));
+        assert_eq!(toks, &t.1, "req {id} token stream perturbed by faults");
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_bitwise_invisible() {
+    let rt = runtime();
+    let reqs = trace(&rt, 16, 31);
+    // A bare seed with no fault events is still the empty plan: nothing
+    // is armed, and the run must be byte-for-byte the fault-free run —
+    // same metrics, same counters, same clock.
+    let bare_seed = FaultPlan { seed: 42, ..Default::default() };
+    assert!(bare_seed.is_empty());
+    let (toks_a, stats_a, t_a, metrics_a) = run_chaos(&rt, 4, FaultPlan::default(), &reqs);
+    let (toks_b, stats_b, t_b, metrics_b) = run_chaos(&rt, 4, bare_seed, &reqs);
+    assert_eq!(toks_a, toks_b);
+    assert_eq!(metrics_a, metrics_b, "empty plan perturbed metrics");
+    assert_eq!(stats_a, stats_b, "empty plan perturbed counters");
+    assert_eq!(t_a, t_b, "empty plan perturbed the clock");
+    assert!(stats_a.contains("faults_injected: 0"));
+}
+
+#[test]
+fn killing_a_core_preserves_every_surviving_token_bitwise() {
+    let rt = runtime();
+    let reqs = trace(&rt, 16, 5);
+    let truth = ample_tokens(&rt, &reqs);
+    let plan = FaultPlan::parse("coredown=1@0").expect("plan parses");
+    let (toks, stats, _, _) = run_chaos(&rt, 4, plan, &reqs);
+    assert_tokens_preserved(&toks, &truth);
+    // The death itself is one injected fault, and round-robin dispatch
+    // put a quarter of the trace on core 1 — the watchdog must have
+    // evacuated it (leak-free shards are asserted inside run_chaos).
+    assert!(stats.contains("faults_injected: 1"), "death not recorded: {stats}");
+    assert!(!stats.contains("evacuated_seqs: 0"), "nothing evacuated: {stats}");
+}
+
+#[test]
+fn chaos_replay_is_bitwise_deterministic() {
+    let rt = runtime();
+    let reqs = trace(&rt, 12, 17);
+    let plan = FaultPlan::parse("coredown=1@0,corestall=2@0..30,dmaerr=0.05,seed=11,surge=1.5@0..60")
+        .expect("plan parses");
+    let a = run_chaos(&rt, 4, plan.clone(), &reqs);
+    let b = run_chaos(&rt, 4, plan, &reqs);
+    assert_eq!(a.0, b.0, "token streams diverged across replays");
+    assert_eq!(a.3, b.3, "metrics diverged across replays");
+    assert_eq!(a.1, b.1, "fault counters diverged across replays");
+    assert_eq!(a.2, b.2, "clocks diverged across replays");
+}
+
+#[test]
+fn dma_errors_retry_on_the_simulated_clock_without_corrupting_tokens() {
+    let rt = runtime();
+    let reqs = trace(&rt, 10, 23);
+    let truth = ample_tokens(&rt, &reqs);
+    let plan = FaultPlan::parse("dmaerr=0.25,seed=3").expect("plan parses");
+    let (toks, stats, elapsed, _) = run_chaos(&rt, 2, plan, &reqs);
+    // ECC retries are billed in simulated beats, not data: streams stay
+    // bitwise intact while the retry counter shows the plan was live.
+    assert_tokens_preserved(&toks, &truth);
+    assert!(!stats.contains("dma_retries: 0"), "p=0.25 never retried: {stats}");
+    assert!(elapsed.is_finite() && elapsed > 0.0);
+}
+
+#[test]
+fn a_fully_stalled_soc_recovers_instead_of_deadlocking() {
+    let rt = runtime();
+    let reqs = trace(&rt, 8, 41);
+    let truth = ample_tokens(&rt, &reqs);
+    // Both cores stalled from t = 0 with all work queued: simulated time
+    // cannot advance, so the deadlock release must retire the
+    // earliest-ending window (core 0 at 40 ms) by decree and let the
+    // watchdog shuffle the rest.
+    let plan = FaultPlan::parse("corestall=0@0..40,corestall=1@0..80").expect("plan parses");
+    let (toks, stats, elapsed, _) = run_chaos(&rt, 2, plan, &reqs);
+    assert_tokens_preserved(&toks, &truth);
+    assert!(stats.contains("faults_injected: 2"), "both stalls must fire: {stats}");
+    assert!(elapsed >= 40.0, "release must fast-forward past the window: {elapsed}");
+}
+
+#[test]
+fn load_surge_inflates_the_clock_but_not_the_tokens() {
+    let rt = runtime();
+    // 4 requests over 2 cores fit one decode batch each: no queueing, no
+    // degradation ladder — the surged run does exactly the clean run's
+    // work at twice the modelled cost, so its clock is strictly slower.
+    let reqs = trace(&rt, 4, 29);
+    let truth = ample_tokens(&rt, &reqs);
+    let (_, _, clean_ms, _) = run_chaos(&rt, 2, FaultPlan::default(), &reqs);
+    let plan = FaultPlan::parse("surge=2@0..1000000").expect("plan parses");
+    let (toks, stats, surged_ms, _) = run_chaos(&rt, 2, plan, &reqs);
+    assert_tokens_preserved(&toks, &truth);
+    assert!(stats.contains("faults_injected: 1"), "surge never armed: {stats}");
+    assert!(
+        surged_ms > clean_ms,
+        "a 2x surge over the whole run must cost time: {surged_ms} vs {clean_ms}"
+    );
+}
+
+#[test]
+fn unservable_fault_plans_error_instead_of_hanging() {
+    let rt = runtime();
+    let reqs = trace(&rt, 4, 3);
+
+    // A plan naming a core the SoC does not have is rejected on the
+    // first round, not silently ignored.
+    let plan = FaultPlan::parse("coredown=5@0").expect("spec itself is well-formed");
+    let mut soc =
+        SocCoordinator::new(&rt, SocConfig { cores: 2, faults: plan, ..Default::default() });
+    soc.submit_trace(&reqs).expect("soc submit");
+    let err = soc.run_to_completion().expect_err("5 >= 2 cores must fail").to_string();
+    assert!(err.contains("fault plan"), "wrong diagnostic: {err}");
+
+    // Killing every core with work outstanding has no recovery target:
+    // the evacuation must report the outage as an error, never spin.
+    let plan = FaultPlan::parse("coredown=0@0,coredown=1@0").expect("plan parses");
+    let mut soc =
+        SocCoordinator::new(&rt, SocConfig { cores: 2, faults: plan, ..Default::default() });
+    soc.submit_trace(&reqs).expect("soc submit");
+    let err = soc.run_to_completion().expect_err("total outage must fail").to_string();
+    assert!(err.contains("no surviving core"), "wrong diagnostic: {err}");
+}

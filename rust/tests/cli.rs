@@ -168,3 +168,47 @@ fn serve_rejects_bad_trace_spec() {
     assert_eq!(out.status.code(), Some(1));
     assert!(String::from_utf8_lossy(&out.stderr).contains("trace spec"));
 }
+
+#[test]
+fn serve_chaos_replay_is_byte_identical() {
+    // A seeded fault schedule — core death plus DMA error injection — is
+    // part of the deterministic replay contract: two runs of the same
+    // spec print the same bytes, including the fault counters.
+    let args = [
+        "serve", "--cores", "4", "--trace", "n=8,seed=5,rate=12,plen=4..8,gen=3..6",
+        "--faults", "coredown=1@0,dmaerr=0.05,seed=3",
+    ];
+    let a = aquas(&args);
+    let b = aquas(&args);
+    assert!(a.status.success(), "stderr: {}", String::from_utf8_lossy(&a.stderr));
+    let text = String::from_utf8_lossy(&a.stdout);
+    assert!(text.contains("faults: injected"), "no fault counter line: {text}");
+    assert!(!text.contains("leak-free false"), "a shard leaked under chaos: {text}");
+    assert_eq!(a.stdout, b.stdout, "chaos replay diverged between runs");
+    assert_eq!(a.stderr, b.stderr);
+}
+
+#[test]
+fn serve_faults_forces_the_soc_path_on_one_core() {
+    // `--faults` routes through the SoC coordinator even without
+    // `--cores`, so a lone core still gets the injection machinery (and
+    // the SoC-format report).
+    let out = aquas(&["serve", "-n", "2", "--faults", "dmaerr=0.1,seed=7"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("1 cores x batch"), "not on the SoC path: {text}");
+    assert!(text.contains("faults: injected"), "no fault counter line: {text}");
+}
+
+#[test]
+fn serve_rejects_bad_fault_spec() {
+    // Missing `@` in a coredown event: a diagnostic parse error before
+    // anything runs, never a panic or a silent default.
+    let out = aquas(&["serve", "--faults", "coredown=9"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fault spec"), "stderr: {err}");
+    let out = aquas(&["serve", "--faults", "blastradius=1"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fault spec"));
+}
