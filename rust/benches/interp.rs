@@ -10,14 +10,21 @@
 //! 2. a **seeded random-program fuzz sweep**: `random_program` generates
 //!    nested-loop/if/copy/irf programs and `check_equivalent` demands
 //!    bit-identical outputs, memory images, irf, `ExecStats` — or
-//!    identical failures — from both engines;
+//!    identical failures — from both engines; every seed additionally
+//!    goes through the full `ir::passes` pipeline and
+//!    `check_opt_equivalent` demands the optimized program stay
+//!    observationally identical (outputs/memory/irf/errors) on both
+//!    engines;
 //! 3. the JSON report (`--out <path>`, default `BENCH_interp.json`) and
-//!    the CI gate (`--check`): fails on ANY divergence (kernels or fuzz
-//!    seeds) or a geo-mean speedup below 5x.
+//!    the CI gate (`--check`): fails on ANY divergence (kernels, fuzz
+//!    seeds, or optimized variants of either), a geo-mean speedup below
+//!    5x, or a mid-end dynamic-op reduction below 20% on `attention` /
+//!    `gf2mm`.
 //!
 //! `-- --test` is the CI smoke mode (fewer reps / seeds).
 
-use aquas::bench_harness::interp::{check_equivalent, random_program};
+use aquas::bench_harness::interp::{check_equivalent, check_opt_equivalent, random_program};
+use aquas::ir::passes::{optimize, OptLevel};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
@@ -33,24 +40,41 @@ fn main() {
     // 1. Kernel replay through both engines.
     let mut report = aquas::bench_harness::interp::report(quick);
 
-    // 2. Fuzz sweep: seeded random programs, exact equivalence demanded.
+    // 2. Fuzz sweep: seeded random programs, exact equivalence demanded —
+    //    both between the two engines and across the pass pipeline.
     let n_seeds: u64 = if quick { 32 } else { 128 };
     let mut failures: Vec<String> = Vec::new();
+    let mut opt_failures: Vec<String> = Vec::new();
     for seed in 0..n_seeds {
         let f = random_program(seed);
         if let Err(e) = check_equivalent(&f, seed) {
             failures.push(e);
         }
+        match optimize(&f, OptLevel::O2) {
+            Ok((opt, _)) => {
+                if let Err(e) = check_opt_equivalent(&f, &opt, seed) {
+                    opt_failures.push(e);
+                }
+            }
+            Err(e) => opt_failures.push(format!("seed {seed}: pipeline failed: {e}")),
+        }
     }
     println!(
-        "fuzz: {n_seeds} seeded random programs through both engines, {} divergence(s)",
-        failures.len()
+        "fuzz: {n_seeds} seeded random programs through both engines, {} divergence(s); \
+         optimized variants, {} divergence(s)",
+        failures.len(),
+        opt_failures.len()
     );
     for e in &failures {
         eprintln!("FUZZ DIVERGENCE: {e}");
     }
+    for e in &opt_failures {
+        eprintln!("OPT FUZZ DIVERGENCE: {e}");
+    }
     report.metric("fuzz_seeds", n_seeds as f64);
     report.metric("fuzz_agree", if failures.is_empty() { 1.0 } else { 0.0 });
+    report.metric("opt_fuzz_seeds", n_seeds as f64);
+    report.metric("opt_fuzz_agree", if opt_failures.is_empty() { 1.0 } else { 0.0 });
 
     println!("\n{}", report.render());
 
@@ -79,12 +103,27 @@ fn main() {
             );
             failed = true;
         }
+        // Gate 3: the mid-end must actually pay for itself — at least a
+        // 20% dynamic-op reduction on the two index-math-heavy kernels.
+        for kernel in ["attention", "gf2mm"] {
+            let key = format!("{kernel}_dynop_reduction");
+            let red = report.metrics[key.as_str()];
+            if red < 0.20 {
+                eprintln!(
+                    "REGRESSION: {kernel} dynamic-op reduction {:.1}% is below the \
+                     20% acceptance bar",
+                    red * 100.0
+                );
+                failed = true;
+            }
+        }
         if failed {
             std::process::exit(1);
         }
         println!(
             "checks ok: VM ≡ tree-walker on all kernels + {n_seeds} fuzz seeds; \
-             geo-mean speedup {geomean:.2}x (gate: 5x)"
+             pipeline ≡ identity on all kernels + fuzz seeds; geo-mean speedup \
+             {geomean:.2}x (gate: 5x); attention/gf2mm dynamic ops cut ≥20%"
         );
     }
 }

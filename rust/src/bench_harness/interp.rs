@@ -21,7 +21,10 @@
 //!   on identically seeded memories and compares return values, the full
 //!   memory image (bit-exact, via the typed arena views), the irf, and
 //!   [`ExecStats`] — or, for failing programs, that both engines fail
-//!   identically.
+//!   identically;
+//! - [`check_opt_equivalent`] and [`dynamic_ops`], the mid-end
+//!   (`ir::passes`) observational-equivalence check and the dynamic
+//!   op-count metric the `--check` optimization gates ride on.
 
 use std::time::Instant;
 
@@ -32,6 +35,7 @@ use crate::ir::builder::FuncBuilder;
 use crate::ir::func::BufferId;
 use crate::ir::interp::{self, ExecStats, Memory, Val};
 use crate::ir::ops::CmpPred;
+use crate::ir::passes::{self, OptLevel, Pass};
 use crate::ir::types::Type;
 use crate::ir::{vm, Func, Value};
 use crate::runtime::DType;
@@ -422,15 +426,7 @@ pub fn memories_equal(
 /// seeded memories; `Err(diagnosis)` on any divergence in return values,
 /// memory image (bit-exact), irf, [`ExecStats`], or error verdict.
 pub fn check_equivalent(func: &Func, seed: u64) -> std::result::Result<(), String> {
-    let args: Vec<Val> = func
-        .params
-        .iter()
-        .enumerate()
-        .map(|(i, &p)| match func.value_type(p) {
-            Type::Float => Val::F(0.25 + i as f64),
-            _ => Val::I(2 + i as i64),
-        })
-        .collect();
+    let args = default_args(func);
     let mut m1 = Memory::for_func(func);
     seed_memory(func, &mut m1, seed);
     let mut m2 = m1.clone();
@@ -462,6 +458,78 @@ pub fn check_equivalent(func: &Func, seed: u64) -> std::result::Result<(), Strin
         return Err(format!("{}: stats diverge: {s1:?} vs {s2:?}", func.name));
     }
     memories_equal(func, &m1, &m2)
+}
+
+/// Deterministic argument vector shared by every differential check:
+/// float params get `0.25 + i`, int params get `2 + i`.
+pub fn default_args(func: &Func) -> Vec<Val> {
+    func.params
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| match func.value_type(p) {
+            Type::Float => Val::F(0.25 + i as f64),
+            _ => Val::I(2 + i as i64),
+        })
+        .collect()
+}
+
+/// Prove an optimized function observationally equivalent to its
+/// unoptimized original: `opt` must agree with itself across both
+/// engines (including [`ExecStats`], via [`check_equivalent`]), and the
+/// tree-walker must produce identical return values, memory image, irf,
+/// and error verdict for `unopt` and `opt`. Stats between `unopt` and
+/// `opt` are deliberately *not* compared — changing them is the mid-end's
+/// entire job.
+pub fn check_opt_equivalent(
+    unopt: &Func,
+    opt: &Func,
+    seed: u64,
+) -> std::result::Result<(), String> {
+    check_equivalent(opt, seed)?;
+    let args = default_args(unopt);
+    let mut m1 = Memory::for_func(unopt);
+    seed_memory(unopt, &mut m1, seed);
+    let mut m2 = m1.clone();
+    let r1 = interp::run(unopt, &args, &mut m1);
+    let r2 = interp::run(opt, &args, &mut m2);
+    match (&r1, &r2) {
+        (Ok(a), Ok(b)) => {
+            if a.len() != b.len() || !a.iter().zip(b.iter()).all(|(x, y)| vals_equal(x, y)) {
+                return Err(format!(
+                    "{}: unopt vs opt outputs diverge: {a:?} vs {b:?}",
+                    unopt.name
+                ));
+            }
+        }
+        (Err(e1), Err(e2)) => {
+            if e1.to_string() != e2.to_string() {
+                return Err(format!(
+                    "{}: unopt vs opt errors diverge: `{e1}` vs `{e2}`",
+                    unopt.name
+                ));
+            }
+        }
+        _ => {
+            return Err(format!(
+                "{}: unopt vs opt verdicts diverge: {r1:?} vs {r2:?}",
+                unopt.name
+            ))
+        }
+    }
+    memories_equal(unopt, &m1, &m2)
+}
+
+/// Dynamic op count of one seeded execution: arithmetic + loads + stores
+/// + branches + transfers (the work the mid-end can actually remove;
+/// consts, casts and yields are free in both engines).
+pub fn dynamic_ops(func: &Func, seed: u64) -> std::result::Result<u64, String> {
+    let args = default_args(func);
+    let mut m = Memory::for_func(func);
+    seed_memory(func, &mut m, seed);
+    let mut st = ExecStats::default();
+    interp::run_with_stats(func, &args, &mut m, &mut st)
+        .map_err(|e| format!("{}: {e}", func.name))?;
+    Ok(st.arith_ops + st.loads + st.stores + st.branches + st.transfers)
 }
 
 // ---------------------------------------------------------------------------
@@ -826,6 +894,7 @@ pub fn report(quick: bool) -> Report {
     );
     let mut speedups = Vec::new();
     let mut all_agree = true;
+    let mut opt_all_agree = true;
     for (name, func) in aot_cases() {
         let agree = match check_equivalent(&func, name_seed(name)) {
             Ok(()) => true,
@@ -865,10 +934,37 @@ pub fn report(quick: bool) -> Report {
         r.metric(&format!("{name}_vm_compile_ms"), compile_ms);
         r.metric(&format!("{name}_speedup_vs_legacy"), speedup);
         r.metric(&format!("{name}_agree"), if agree { 1.0 } else { 0.0 });
+
+        // Mid-end: full pipeline equivalence + dynamic-op deltas, plus the
+        // per-pass breakdown (each pass alone on a fresh clone).
+        let (opt, _) = passes::optimize(&func, OptLevel::O2)
+            .expect("pass pipeline on AOT kernel");
+        let opt_agree = match check_opt_equivalent(&func, &opt, name_seed(name)) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("OPT DIVERGENCE: {e}");
+                false
+            }
+        };
+        opt_all_agree &= opt_agree;
+        let seed = name_seed(name) ^ 0xD1F0;
+        let d0 = dynamic_ops(&func, seed).expect("unopt kernel runs") as f64;
+        let d1 = dynamic_ops(&opt, seed).expect("opt kernel runs") as f64;
+        r.metric(&format!("{name}_dynops_unopt"), d0);
+        r.metric(&format!("{name}_dynops_opt"), d1);
+        r.metric(&format!("{name}_dynop_reduction"), 1.0 - d1 / d0.max(1.0));
+        r.metric(&format!("{name}_opt_agree"), if opt_agree { 1.0 } else { 0.0 });
+        for pass in Pass::ALL {
+            let mut fp = func.clone();
+            passes::run_pass(&mut fp, pass).expect("single pass on AOT kernel");
+            let dp = dynamic_ops(&fp, seed).expect("single-pass kernel runs") as f64;
+            r.metric(&format!("{name}_dynops_{}", pass.name()), dp);
+        }
     }
     r.metric("kernels", speedups.len() as f64);
     r.metric("geomean_speedup_vs_legacy", geomean(&speedups));
     r.metric("all_agree", if all_agree { 1.0 } else { 0.0 });
+    r.metric("opt_all_agree", if opt_all_agree { 1.0 } else { 0.0 });
     r
 }
 
@@ -909,5 +1005,26 @@ mod tests {
             let f = random_program(seed);
             check_equivalent(&f, seed).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
         }
+    }
+
+    #[test]
+    fn optimized_fuzz_programs_agree_in_unit_tests() {
+        for seed in 0..12 {
+            let f = random_program(seed);
+            let (opt, _) = passes::optimize(&f, OptLevel::O2)
+                .unwrap_or_else(|e| panic!("seed {seed}: pipeline failed: {e}"));
+            check_opt_equivalent(&f, &opt, seed)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn pipeline_cuts_dynamic_ops_on_gf2mm() {
+        let f = ir_gf2mm(8);
+        let (opt, _) = passes::optimize(&f, OptLevel::O2).unwrap();
+        check_opt_equivalent(&f, &opt, 7).unwrap();
+        let d0 = dynamic_ops(&f, 7).unwrap();
+        let d1 = dynamic_ops(&opt, 7).unwrap();
+        assert!(d1 < d0, "pipeline left gf2mm's dynamic ops flat: {d0} -> {d1}");
     }
 }

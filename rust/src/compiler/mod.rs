@@ -72,11 +72,15 @@ pub struct CompileOptions {
     pub node_limit: usize,
     /// Maximum external (loop-pass) rewrites to attempt per ISAX.
     pub external_budget: usize,
+    /// Mid-end effort applied to the lowered program after matching:
+    /// `0` leaves the extracted IR untouched, `2` runs the full
+    /// `ir::passes` pipeline (SCCP/CSE/LICM/sink/DCE) to a fixpoint.
+    pub opt_level: u8,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { iter_limit: 12, node_limit: 100_000, external_budget: 6 }
+        Self { iter_limit: 12, node_limit: 100_000, external_budget: 6, opt_level: 0 }
     }
 }
 
@@ -103,6 +107,13 @@ pub fn compile(
             current = lower::replace_loop_with_intrinsic(&current, loop_ref, &isax.name)?;
             stats.matched.push(isax.name.clone());
         }
+    }
+    // Mid-end: the extracted program reaches the VM through the pass
+    // pipeline when requested. Matching already happened, so this only
+    // cleans the residual software portions around the intrinsics.
+    if opts.opt_level >= 2 {
+        let (optimized, _) = crate::ir::passes::optimize(&current, crate::ir::passes::OptLevel::O2)?;
+        current = optimized;
     }
     Ok(CompileResult { func: current, stats })
 }

@@ -172,6 +172,35 @@ impl Func {
         n
     }
 
+    /// Rewrite every operand of every op through `map`, resolving chains
+    /// (`a -> b`, `b -> c` sends uses of `a` to `c`). Results and region
+    /// params are never rewritten — the map replaces *uses*, so the
+    /// mid-end passes can retire an op by mapping its results to an
+    /// equivalent value and dropping its `OpRef` from the owning region.
+    pub fn replace_uses(&mut self, map: &std::collections::HashMap<Value, Value>) {
+        if map.is_empty() {
+            return;
+        }
+        let resolve = |mut v: Value| {
+            // Chains are short (CSE/SCCP build them one hop at a time);
+            // bound the walk by the map size to stay safe on cycles.
+            let mut hops = 0;
+            while let Some(&n) = map.get(&v) {
+                v = n;
+                hops += 1;
+                if hops > map.len() {
+                    break;
+                }
+            }
+            v
+        };
+        for op in &mut self.ops {
+            for operand in &mut op.operands {
+                *operand = resolve(*operand);
+            }
+        }
+    }
+
     /// Producer map: which op defines each value (region params map to the
     /// op owning the region; function params map to None).
     pub fn def_map(&self) -> Vec<Option<OpRef>> {

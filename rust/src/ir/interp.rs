@@ -419,7 +419,10 @@ fn exec_op(
         OpKind::Neg => {
             stats.arith_ops += 1;
             let r = match get(env, op.operands[0])? {
-                Val::I(x) => Val::I(-x),
+                // Wrapping, like every other int op: `-i64::MIN` must not
+                // panic under debug overflow checks (the mid-end may
+                // speculate `neg` — `analysis::can_trap` calls it safe).
+                Val::I(x) => Val::I(x.wrapping_neg()),
                 Val::F(x) => Val::F(-x),
             };
             set1!(r)

@@ -18,13 +18,16 @@
 //! [`builder`], [`printer`], [`verifier`], [`affine`] (index analysis),
 //! [`interp`] (tree-walking reference interpreter used for HW/SW
 //! equivalence checks), [`vm`] (compile-once register-bytecode engine,
-//! differentially pinned against [`interp`]).
+//! differentially pinned against [`interp`]), [`passes`] (the mid-end:
+//! SCCP/CSE/LICM/sink/DCE over cached analyses, every pass
+//! differentially proven semantics-preserving).
 
 pub mod affine;
 pub mod builder;
 pub mod func;
 pub mod interp;
 pub mod ops;
+pub mod passes;
 pub mod printer;
 pub mod types;
 pub mod verifier;

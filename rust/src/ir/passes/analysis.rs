@@ -1,0 +1,634 @@
+//! Analyses backing the mid-end passes: def-use chains, lexical
+//! dominance, the loop forest, and a dense integer-interval dataflow
+//! solver that powers the trap-safety oracle ([`can_trap`]).
+//!
+//! All results are owned (ids only, no borrows into the [`Func`]), so a
+//! pass can hold an analysis while it mutates the function, and the
+//! [`Analyses`] cache can keep results alive across passes until a pass
+//! actually changes something.
+
+use std::collections::HashMap;
+
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::ops::{Op, OpKind};
+use crate::ir::types::Type;
+
+// ---------------------------------------------------------------------------
+// Def-use chains
+// ---------------------------------------------------------------------------
+
+/// Def-use chains over the *reachable* ops (region walk, not the raw
+/// arena — ops retired by a pass drop out automatically).
+#[derive(Debug, Clone, Default)]
+pub struct DefUse {
+    /// Number of reachable uses per value.
+    uses: HashMap<Value, u32>,
+    /// Defining op per value (results, plus region params mapping to the
+    /// op owning the region). Function params have no entry.
+    defs: HashMap<Value, OpRef>,
+}
+
+impl DefUse {
+    /// Compute def-use chains for `f`.
+    pub fn compute(f: &Func) -> Self {
+        let mut du = DefUse::default();
+        f.walk(|opref, op| {
+            for &v in &op.operands {
+                *du.uses.entry(v).or_insert(0) += 1;
+            }
+            for &v in &op.results {
+                du.defs.insert(v, opref);
+            }
+            for region in &op.regions {
+                for &p in &region.params {
+                    du.defs.insert(p, opref);
+                }
+            }
+        });
+        du
+    }
+
+    /// Reachable use count of `v`.
+    pub fn use_count(&self, v: Value) -> u32 {
+        self.uses.get(&v).copied().unwrap_or(0)
+    }
+
+    /// The op defining `v` (region params map to the owning op); `None`
+    /// for function parameters.
+    pub fn def(&self, v: Value) -> Option<OpRef> {
+        self.defs.get(&v).copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexical dominance
+// ---------------------------------------------------------------------------
+
+/// Dominance for the structured IR. Regions are single-block and nest
+/// lexically, so op `A` dominates op `B` exactly when, at the deepest
+/// region containing both, `A`'s subtree position is strictly before the
+/// subtree containing `B` — no CFG iteration needed. Sibling `if` arms
+/// never dominate each other; an op never dominates into its own body
+/// (a `for`'s results are defined only after the body).
+#[derive(Debug, Clone, Default)]
+pub struct Dominance {
+    /// Path of op indices from the entry region down to each op.
+    path: HashMap<OpRef, Vec<u32>>,
+}
+
+impl Dominance {
+    /// Compute positions for every reachable op of `f`.
+    pub fn compute(f: &Func) -> Self {
+        let mut dom = Dominance::default();
+        let mut prefix = Vec::new();
+        dom.index_region(f, &f.entry, &mut prefix);
+        dom
+    }
+
+    fn index_region(&mut self, f: &Func, region: &Region, prefix: &mut Vec<u32>) {
+        for (i, &opref) in region.ops.iter().enumerate() {
+            prefix.push(i as u32);
+            self.path.insert(opref, prefix.clone());
+            for r in &f.op(opref).regions {
+                self.index_region(f, r, prefix);
+            }
+            prefix.pop();
+        }
+    }
+
+    /// Does `a` strictly dominate `b` (execute-before on every path that
+    /// reaches `b`)?
+    pub fn dominates(&self, a: OpRef, b: OpRef) -> bool {
+        let (Some(pa), Some(pb)) = (self.path.get(&a), self.path.get(&b)) else {
+            return false;
+        };
+        if pa.len() > pb.len() || pa.is_empty() {
+            return false;
+        }
+        let k = pa.len() - 1;
+        pa[..k] == pb[..k] && pa[k] < pb[k]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loop forest
+// ---------------------------------------------------------------------------
+
+/// One `for` op in the loop forest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoopInfo {
+    /// The `for` op.
+    pub op: OpRef,
+    /// Nesting depth (1 = outermost).
+    pub depth: u32,
+    /// Innermost enclosing `for`, if any.
+    pub parent: Option<OpRef>,
+}
+
+/// All `for` loops of a function with their nesting structure.
+#[derive(Debug, Clone, Default)]
+pub struct LoopForest {
+    /// Loops in pre-order.
+    pub loops: Vec<LoopInfo>,
+}
+
+impl LoopForest {
+    /// Compute the loop forest of `f`.
+    pub fn compute(f: &Func) -> Self {
+        let mut forest = LoopForest::default();
+        let mut stack: Vec<OpRef> = Vec::new();
+        forest.visit(f, &f.entry, &mut stack);
+        forest
+    }
+
+    fn visit(&mut self, f: &Func, region: &Region, stack: &mut Vec<OpRef>) {
+        for &opref in &region.ops {
+            let op = f.op(opref);
+            let is_for = matches!(op.kind, OpKind::For);
+            if is_for {
+                self.loops.push(LoopInfo {
+                    op: opref,
+                    depth: stack.len() as u32 + 1,
+                    parent: stack.last().copied(),
+                });
+                stack.push(opref);
+            }
+            for r in &op.regions {
+                self.visit(f, r, stack);
+            }
+            if is_for {
+                stack.pop();
+            }
+        }
+    }
+
+    /// Deepest nesting level (0 for a loop-free function).
+    pub fn max_depth(&self) -> u32 {
+        self.loops.iter().map(|l| l.depth).max().unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Integer intervals (dense forward dataflow)
+// ---------------------------------------------------------------------------
+
+/// A conservative `[lo, hi]` range for an integer SSA value, tracked in
+/// `i128` so `i64` corner arithmetic cannot overflow the analysis
+/// itself. Absence from [`Intervals`] means unknown (top).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Iv {
+    /// Inclusive lower bound.
+    pub lo: i128,
+    /// Inclusive upper bound.
+    pub hi: i128,
+}
+
+impl Iv {
+    fn cst(c: i64) -> Self {
+        Iv { lo: c as i128, hi: c as i128 }
+    }
+
+    /// Reject ranges that escape `i64` (the runtime wraps there, so any
+    /// bound past the edge is unsound to keep).
+    fn fit(self) -> Option<Self> {
+        if self.lo > self.hi {
+            return None;
+        }
+        if self.lo < i64::MIN as i128 || self.hi > i64::MAX as i128 {
+            return None;
+        }
+        Some(self)
+    }
+
+    fn hull(self, other: Self) -> Self {
+        Iv { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+}
+
+/// Dense forward interval analysis over the structured IR. Loads,
+/// parameters and loop-carried values are top; induction variables get
+/// `[lb.lo, max(lb.lo, ub.hi - 1)]` when the bounds are known and the
+/// step is provably positive. Sound under the interpreter's wrapping
+/// integer semantics because any range that could wrap is dropped to top
+/// by [`Iv::fit`].
+#[derive(Debug, Clone, Default)]
+pub struct Intervals {
+    iv: HashMap<Value, Iv>,
+}
+
+impl Intervals {
+    /// Compute intervals for every reachable integer value of `f`.
+    pub fn compute(f: &Func) -> Self {
+        let mut s = Intervals::default();
+        s.region(f, &f.entry);
+        s
+    }
+
+    /// The known range of `v`, if any.
+    pub fn get(&self, v: Value) -> Option<Iv> {
+        self.iv.get(&v).copied()
+    }
+
+    fn set(&mut self, v: Value, iv: Option<Iv>) {
+        if let Some(iv) = iv.and_then(Iv::fit) {
+            self.iv.insert(v, iv);
+        }
+    }
+
+    fn region(&mut self, f: &Func, region: &Region) {
+        for &opref in &region.ops {
+            self.op(f, f.op(opref));
+        }
+    }
+
+    fn op(&mut self, f: &Func, op: &Op) {
+        let g = |s: &Self, i: usize| op.operands.get(i).and_then(|&v| s.get(v));
+        match &op.kind {
+            OpKind::ConstI(c) => self.set(op.results[0], Some(Iv::cst(*c))),
+            OpKind::Add | OpKind::Sub | OpKind::Mul => {
+                if f.value_type(op.results[0]) == Type::Int {
+                    let r = match (g(self, 0), g(self, 1)) {
+                        (Some(a), Some(b)) => corners(&op.kind, a, b),
+                        _ => None,
+                    };
+                    self.set(op.results[0], r);
+                }
+            }
+            OpKind::Rem => {
+                // `x % L` with a known positive divisor: result in
+                // `(-L, L)`; non-negative when x provably is. This is
+                // what proves the fuzzer's `((x % L) + L) % L` in-bounds
+                // index pattern.
+                let r = match (g(self, 0), g(self, 1)) {
+                    (x, Some(l)) if l.lo >= 1 => {
+                        let mut lo = -(l.hi - 1);
+                        let mut hi = l.hi - 1;
+                        if let Some(x) = x {
+                            if x.lo >= 0 {
+                                lo = 0;
+                                hi = hi.min(x.hi);
+                            }
+                        }
+                        Some(Iv { lo, hi })
+                    }
+                    _ => None,
+                };
+                self.set(op.results[0], r);
+            }
+            OpKind::And => {
+                // Masking with a known non-negative constant bounds the
+                // result to `[0, mask]` whenever x is non-negative.
+                let r = match (g(self, 0), g(self, 1)) {
+                    (Some(x), Some(m)) if x.lo >= 0 && m.lo >= 0 => {
+                        Some(Iv { lo: 0, hi: x.hi.min(m.hi) })
+                    }
+                    (Some(x), Some(m)) if m.lo == m.hi && m.lo >= 0 && x.lo >= 0 => {
+                        Some(Iv { lo: 0, hi: m.hi })
+                    }
+                    _ => None,
+                };
+                self.set(op.results[0], r);
+            }
+            OpKind::Min => {
+                let r = match (g(self, 0), g(self, 1)) {
+                    (Some(a), Some(b)) => {
+                        Some(Iv { lo: a.lo.min(b.lo), hi: a.hi.min(b.hi) })
+                    }
+                    _ => None,
+                };
+                if f.value_type(op.results[0]) == Type::Int {
+                    self.set(op.results[0], r);
+                }
+            }
+            OpKind::Max => {
+                let r = match (g(self, 0), g(self, 1)) {
+                    (Some(a), Some(b)) => {
+                        Some(Iv { lo: a.lo.max(b.lo), hi: a.hi.max(b.hi) })
+                    }
+                    _ => None,
+                };
+                if f.value_type(op.results[0]) == Type::Int {
+                    self.set(op.results[0], r);
+                }
+            }
+            OpKind::Neg => {
+                if f.value_type(op.results[0]) == Type::Int {
+                    let r = g(self, 0).map(|a| Iv { lo: -a.hi, hi: -a.lo });
+                    self.set(op.results[0], r);
+                }
+            }
+            OpKind::Cmp(_) => self.set(op.results[0], Some(Iv { lo: 0, hi: 1 })),
+            OpKind::Select => {
+                if f.value_type(op.results[0]) == Type::Int {
+                    let r = match (g(self, 1), g(self, 2)) {
+                        (Some(a), Some(b)) => Some(a.hull(b)),
+                        _ => None,
+                    };
+                    self.set(op.results[0], r);
+                }
+            }
+            OpKind::For => {
+                // Bind the induction variable's range for the body walk
+                // (valid across every iteration), carried params stay top.
+                let region = &op.regions[0];
+                let (lb, ub) = (g(self, 0), g(self, 1));
+                let step_pos = g(self, 2).is_some_and(|s| s.lo >= 1);
+                if let (Some(lb), Some(ub), true) = (lb, ub, step_pos) {
+                    let iv = Iv { lo: lb.lo, hi: (ub.hi - 1).max(lb.lo) };
+                    self.set(region.params[0], Some(iv));
+                }
+                self.region(f, region);
+            }
+            OpKind::If => {
+                self.region(f, &op.regions[0]);
+                self.region(f, &op.regions[1]);
+                // Results: hull of the two arms' yield operands.
+                let yields: Vec<Option<&Op>> = op
+                    .regions
+                    .iter()
+                    .map(|r| r.ops.last().map(|&o| f.op(o)))
+                    .collect();
+                if let (Some(t), Some(e)) = (yields[0], yields[1]) {
+                    for (i, &res) in op.results.iter().enumerate() {
+                        if f.value_type(res) != Type::Int {
+                            continue;
+                        }
+                        let r = match (
+                            t.operands.get(i).and_then(|&v| self.get(v)),
+                            e.operands.get(i).and_then(|&v| self.get(v)),
+                        ) {
+                            (Some(a), Some(b)) => Some(a.hull(b)),
+                            _ => None,
+                        };
+                        self.set(res, r);
+                    }
+                }
+            }
+            // Loads, conversions, shifts, irf reads, everything else: top.
+            _ => {}
+        }
+    }
+}
+
+/// Corner-product interval arithmetic for add/sub/mul in `i128`.
+fn corners(kind: &OpKind, a: Iv, b: Iv) -> Option<Iv> {
+    let r = match kind {
+        OpKind::Add => Iv { lo: a.lo + b.lo, hi: a.hi + b.hi },
+        OpKind::Sub => Iv { lo: a.lo - b.hi, hi: a.hi - b.lo },
+        OpKind::Mul => {
+            let cs = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi];
+            Iv {
+                lo: cs.iter().copied().min().unwrap(),
+                hi: cs.iter().copied().max().unwrap(),
+            }
+        }
+        _ => return None,
+    };
+    Some(r)
+}
+
+// ---------------------------------------------------------------------------
+// Trap-safety oracle
+// ---------------------------------------------------------------------------
+
+/// Can executing `op` raise a runtime error (or change the error
+/// behaviour of the program if executed speculatively)?
+///
+/// This is the single predicate every pass consults before moving or
+/// deleting work: DCE only removes dead ops that provably cannot trap,
+/// LICM only hoists (and sink only sinks) trap-free ops, so the
+/// optimized program reports *bit-identical error strings at identical
+/// memory states* — part of the differential contract in
+/// `tests/vm_diff.rs`.
+///
+/// The analysis mirrors `ir::interp` exactly: wrapping integer
+/// arithmetic never traps; int `div`/`rem` trap on a zero (or `-1` with
+/// `i64::MIN`) divisor unless the divisor's interval excludes both;
+/// float `cmp` traps on NaN (always assumed possible); loads trap unless
+/// the index interval is provably inside `[0, len)`. Type mismatches the
+/// interpreter would reject at runtime also count as traps.
+pub fn can_trap(f: &Func, op: &Op, iv: &Intervals) -> bool {
+    let ty = |v: Value| f.value_type(v);
+    let same_ty2 = |op: &Op| ty(op.operands[0]) == ty(op.operands[1]);
+    match &op.kind {
+        OpKind::ConstI(_) | OpKind::ConstF(_) => false,
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Min | OpKind::Max => !same_ty2(op),
+        OpKind::Div => {
+            if !same_ty2(op) {
+                return true;
+            }
+            if ty(op.operands[0]) == Type::Float {
+                return false; // fp division yields inf/NaN, never errors
+            }
+            !divisor_is_safe(op.operands[1], iv)
+        }
+        OpKind::Rem => {
+            if ty(op.operands[0]) != Type::Int || ty(op.operands[1]) != Type::Int {
+                return true;
+            }
+            !divisor_is_safe(op.operands[1], iv)
+        }
+        OpKind::Shl | OpKind::Shr | OpKind::And | OpKind::Or | OpKind::Xor => {
+            ty(op.operands[0]) != Type::Int || ty(op.operands[1]) != Type::Int
+        }
+        OpKind::Neg => false,
+        OpKind::Sqrt | OpKind::Exp => ty(op.operands[0]) != Type::Float,
+        OpKind::Powi(_) => ty(op.operands[0]) != Type::Float,
+        OpKind::ToFloat => ty(op.operands[0]) != Type::Int,
+        OpKind::ToInt => ty(op.operands[0]) != Type::Float,
+        OpKind::Cmp(_) => {
+            // Float comparison errors on NaN ("cmp: unordered"); we never
+            // try to prove NaN-freedom, so any float cmp may trap.
+            !same_ty2(op) || ty(op.operands[0]) == Type::Float
+        }
+        OpKind::Select => ty(op.operands[0]) != Type::Int,
+        OpKind::Load(b) | OpKind::Fetch(b) | OpKind::ReadSmem(b) => {
+            !index_in_bounds(op.operands[0], f.buffer(*b).len, iv)
+        }
+        OpKind::LoadItfc { buf, .. } => {
+            !index_in_bounds(op.operands[0], f.buffer(*buf).len, iv)
+        }
+        OpKind::ReadIrf(_) => false,
+        // Anchors, writes, transfers, control flow, intrinsics: the
+        // passes never speculate these, so report them as trapping.
+        _ => true,
+    }
+}
+
+/// Divisor provably excludes 0 *and* -1 (`i64::MIN / -1` overflows).
+fn divisor_is_safe(v: Value, iv: &Intervals) -> bool {
+    match iv.get(v) {
+        Some(r) => r.lo >= 1 || r.hi <= -2,
+        None => false,
+    }
+}
+
+fn index_in_bounds(v: Value, len: usize, iv: &Intervals) -> bool {
+    match iv.get(v) {
+        Some(r) => r.lo >= 0 && r.hi < len as i128,
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analysis cache
+// ---------------------------------------------------------------------------
+
+/// Lazily-computed, invalidation-aware analysis cache shared by the pass
+/// pipeline: each analysis is computed on first request and reused until
+/// [`Analyses::invalidate`] is called (which the pass manager does after
+/// any pass that reports changes). Passes that change nothing keep every
+/// cached result warm for the next pass in the round.
+#[derive(Debug, Default)]
+pub struct Analyses {
+    defuse: Option<DefUse>,
+    dominance: Option<Dominance>,
+    loops: Option<LoopForest>,
+    intervals: Option<Intervals>,
+}
+
+impl Analyses {
+    /// Fresh, empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop every cached result (the IR changed).
+    pub fn invalidate(&mut self) {
+        *self = Self::default();
+    }
+
+    /// Def-use chains for `f` (cached).
+    pub fn defuse(&mut self, f: &Func) -> &DefUse {
+        self.defuse.get_or_insert_with(|| DefUse::compute(f))
+    }
+
+    /// Lexical dominance for `f` (cached).
+    pub fn dominance(&mut self, f: &Func) -> &Dominance {
+        self.dominance.get_or_insert_with(|| Dominance::compute(f))
+    }
+
+    /// Loop forest for `f` (cached).
+    pub fn loops(&mut self, f: &Func) -> &LoopForest {
+        self.loops.get_or_insert_with(|| LoopForest::compute(f))
+    }
+
+    /// Interval analysis for `f` (cached).
+    pub fn intervals(&mut self, f: &Func) -> &Intervals {
+        self.intervals.get_or_insert_with(|| Intervals::compute(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::runtime::DType;
+
+    fn loopy() -> Func {
+        let mut b = FuncBuilder::new("loopy");
+        let buf = b.global("x", DType::I32, 16, CacheHint::Unknown);
+        b.for_range(0, 8, 1, |b, i| {
+            b.for_range(0, 4, 1, |b, j| {
+                let s = b.add(i, j);
+                b.store(buf, i, s);
+            });
+        });
+        b.finish(&[])
+    }
+
+    #[test]
+    fn loop_forest_tracks_nesting() {
+        let f = loopy();
+        let forest = LoopForest::compute(&f);
+        assert_eq!(forest.loops.len(), 2);
+        assert_eq!(forest.max_depth(), 2);
+        assert_eq!(forest.loops[0].depth, 1);
+        assert_eq!(forest.loops[1].parent, Some(forest.loops[0].op));
+    }
+
+    #[test]
+    fn dominance_is_lexical() {
+        let f = loopy();
+        let dom = Dominance::compute(&f);
+        // The lb const (first entry op) dominates the outer for (4th).
+        let first = f.entry.ops[0];
+        let last = *f.entry.ops.last().unwrap();
+        assert!(dom.dominates(first, last));
+        assert!(!dom.dominates(last, first));
+        assert!(!dom.dominates(first, first));
+    }
+
+    #[test]
+    fn induction_variable_gets_a_range() {
+        let f = loopy();
+        let iv = Intervals::compute(&f);
+        // Find the inner add op and check both operands are bounded.
+        let mut checked = false;
+        f.walk(|_, op| {
+            if matches!(op.kind, OpKind::Add) {
+                let a = iv.get(op.operands[0]).expect("outer iv bounded");
+                let b = iv.get(op.operands[1]).expect("inner iv bounded");
+                assert_eq!((a.lo, a.hi), (0, 7));
+                assert_eq!((b.lo, b.hi), (0, 3));
+                checked = true;
+            }
+        });
+        assert!(checked);
+    }
+
+    #[test]
+    fn rem_pattern_proves_in_bounds() {
+        // ((x % 8) + 8) % 8 over an unknown x is within [0, 8).
+        let mut b = FuncBuilder::new("idx");
+        let x = b.param(Type::Int);
+        let buf = b.global("m", DType::I32, 8, CacheHint::Unknown);
+        let l = b.const_i(8);
+        let r0 = b.rem(x, l);
+        let r1 = b.add(r0, l);
+        let r2 = b.rem(r1, l);
+        let v = b.load(buf, r2);
+        let f = b.finish(&[v]);
+        let iv = Intervals::compute(&f);
+        let r = iv.get(r2).expect("final rem bounded");
+        assert_eq!((r.lo, r.hi), (0, 7));
+        // And the load is therefore trap-free while a raw-index load isn't.
+        f.walk(|_, op| {
+            if matches!(op.kind, OpKind::Load(_)) {
+                assert!(!can_trap(&f, op, &iv));
+            }
+        });
+    }
+
+    #[test]
+    fn trap_oracle_flags_unprovable_divisors_and_loads() {
+        let mut b = FuncBuilder::new("traps");
+        let x = b.param(Type::Int);
+        let y = b.param(Type::Int);
+        let buf = b.global("m", DType::I32, 8, CacheHint::Unknown);
+        let q = b.div(x, y); // unknown divisor: may trap
+        let two = b.const_i(2);
+        let q2 = b.div(x, two); // constant 2: safe
+        let ld = b.load(buf, x); // unknown index: may trap
+        let f = b.finish(&[q, q2, ld]);
+        let iv = Intervals::compute(&f);
+        let mut flags = Vec::new();
+        f.walk(|_, op| {
+            if matches!(op.kind, OpKind::Div | OpKind::Load(_)) {
+                flags.push(can_trap(&f, op, &iv));
+            }
+        });
+        assert_eq!(flags, vec![true, false, true]);
+    }
+
+    #[test]
+    fn analyses_cache_survives_until_invalidated() {
+        let f = loopy();
+        let mut an = Analyses::new();
+        let n = an.loops(&f).loops.len();
+        assert_eq!(an.loops(&f).loops.len(), n); // cached path
+        an.invalidate();
+        assert_eq!(an.loops(&f).loops.len(), n); // recomputed path
+    }
+}

@@ -1,0 +1,322 @@
+//! Common subexpression elimination with memory versioning.
+//!
+//! Pure ops are keyed on `(kind, canonical operands)` in a scoped table
+//! (each region sees its ancestors' entries, never its siblings'), so a
+//! replacement always lexically precedes — and therefore dominates — the
+//! duplicate it retires. Deduplicating a *trapping* op is still sound
+//! under that discipline: the representative executes first on every
+//! path that reaches the duplicate, so the program traps at the same
+//! point with the same message either way.
+//!
+//! Loads are deduplicated too, keyed additionally on a per-buffer
+//! version counter: every write to a buffer (store, transfer, copy,
+//! `copy_issue` landing via `copy_wait`, intrinsic) bumps its version,
+//! `for` bodies bump every buffer their subtree writes both before and
+//! after the body (iteration `n+1` observes iteration `n`'s stores), and
+//! `if` arms are versioned independently then merged. `read_irf` is
+//! versioned the same way against `write_irf`. Commutative *integer*
+//! ops sort their operands; float operands keep source order so IEEE
+//! edge cases (`NaN` payloads, signed zero in `min`/`max`) are never
+//! re-associated.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::ops::{CmpPred, OpKind};
+use crate::ir::passes::analysis::{Analyses, Dominance};
+use crate::ir::types::Type;
+
+/// Hash-cons key for a candidate op. `Load` carries the buffer's memory
+/// version at the point of the load; `Irf` the irf version.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Key {
+    CI(i64),
+    CF(u64),
+    /// (op tag, lhs, rhs) — operands pre-sorted for commutative int ops.
+    Bin(u8, Value, Value),
+    Cmp(CmpPred, Value, Value),
+    /// (op tag, operand) for unary ops.
+    Un(u8, Value),
+    Powi(u32, Value),
+    Sel(Value, Value, Value),
+    /// (load kind tag, interface id, buffer id, index, buffer version).
+    Load(u8, u32, u32, Value, u64),
+    /// (irf register, irf version).
+    Irf(u8, u64),
+}
+
+/// What a subtree may write: the buffers it stores/copies into, whether
+/// it writes the irf, and whether it clobbers everything (`copy_wait`
+/// landing a DMA, or an intrinsic).
+#[derive(Debug, Default)]
+struct WriteSet {
+    bufs: HashSet<u32>,
+    irf: bool,
+    all: bool,
+}
+
+struct Cse {
+    /// Retired value -> replacement.
+    map: HashMap<Value, Value>,
+    versions: HashMap<u32, u64>,
+    irf_version: u64,
+    clock: u64,
+    deduped: usize,
+    nbufs: u32,
+    dom: Dominance,
+}
+
+/// Run CSE on `f`; returns the number of ops deduplicated.
+pub fn run(f: &mut Func, an: &mut Analyses) -> usize {
+    let mut st = Cse {
+        map: HashMap::new(),
+        versions: HashMap::new(),
+        irf_version: 0,
+        clock: 0,
+        deduped: 0,
+        nbufs: f.buffers.len() as u32,
+        dom: an.dominance(f).clone(),
+    };
+    let mut entry = std::mem::take(&mut f.entry);
+    st.region(f, &mut entry, HashMap::new());
+    f.entry = entry;
+    f.replace_uses(&st.map);
+    if st.deduped > 0 {
+        an.invalidate();
+    }
+    st.deduped
+}
+
+impl Cse {
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn version(&self, buf: u32) -> u64 {
+        self.versions.get(&buf).copied().unwrap_or(0)
+    }
+
+    fn resolve(&self, mut v: Value) -> Value {
+        let mut hops = 0;
+        while let Some(&n) = self.map.get(&v) {
+            v = n;
+            hops += 1;
+            if hops > self.map.len() {
+                break;
+            }
+        }
+        v
+    }
+
+    fn bump(&mut self, buf: u32) {
+        let t = self.tick();
+        self.versions.insert(buf, t);
+    }
+
+    fn bump_set(&mut self, w: &WriteSet) {
+        if w.all {
+            let t = self.tick();
+            for b in 0..self.nbufs {
+                self.versions.insert(b, t);
+            }
+        } else {
+            for &b in &w.bufs {
+                self.bump(b);
+            }
+        }
+        if w.irf || w.all {
+            self.irf_version = self.tick();
+        }
+    }
+
+    /// Apply the write effect of a single (region-free) op.
+    fn apply_write(&mut self, kind: &OpKind) {
+        match kind {
+            OpKind::Store(b) | OpKind::WriteSmem(b) => self.bump(b.0),
+            OpKind::StoreItfc { buf, .. } => self.bump(buf.0),
+            OpKind::Transfer { dst, .. }
+            | OpKind::Copy { dst, .. }
+            | OpKind::CopyIssue { dst, .. } => self.bump(dst.0),
+            OpKind::WriteIrf(_) => self.irf_version = self.tick(),
+            OpKind::CopyWait { .. } => {
+                // The pending DMA lands now; we don't track which buffer
+                // it targets, so clobber all of them.
+                let w = WriteSet { bufs: HashSet::new(), irf: false, all: true };
+                self.bump_set(&w);
+            }
+            OpKind::Intrinsic(_) => {
+                let w = WriteSet { bufs: HashSet::new(), irf: true, all: true };
+                self.bump_set(&w);
+            }
+            _ => {}
+        }
+    }
+
+    fn region(&mut self, f: &mut Func, region: &mut Region, mut table: HashMap<Key, (Value, OpRef)>) {
+        let mut kept: Vec<OpRef> = Vec::with_capacity(region.ops.len());
+        for idx in 0..region.ops.len() {
+            let opref = region.ops[idx];
+            // Canonicalize operands through the replacement map so keys
+            // compare over representatives.
+            let operands: Vec<Value> = f
+                .op(opref)
+                .operands
+                .iter()
+                .map(|&v| self.resolve(v))
+                .collect();
+            f.op_mut(opref).operands = operands;
+
+            let has_regions = !f.op(opref).regions.is_empty();
+            if has_regions {
+                match f.op(opref).kind {
+                    OpKind::For => {
+                        // The body re-executes: anything its subtree
+                        // writes must look clobbered to loads inside the
+                        // body (iteration n+1 sees iteration n's stores)
+                        // and to loads after the loop.
+                        let w = subtree_writes(f, opref);
+                        self.bump_set(&w);
+                        let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+                        self.region(f, &mut regs[0], table.clone());
+                        f.op_mut(opref).regions = regs;
+                        self.bump_set(&w);
+                    }
+                    OpKind::If => {
+                        // Each arm versions memory independently from
+                        // the pre-if state; afterwards the union of both
+                        // arms' writes is clobbered.
+                        let saved = (self.versions.clone(), self.irf_version);
+                        let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+                        self.region(f, &mut regs[0], table.clone());
+                        self.versions = saved.0.clone();
+                        self.irf_version = saved.1;
+                        self.region(f, &mut regs[1], table.clone());
+                        self.versions = saved.0;
+                        self.irf_version = saved.1;
+                        f.op_mut(opref).regions = regs;
+                        let w = subtree_writes(f, opref);
+                        self.bump_set(&w);
+                    }
+                    _ => {
+                        // No other region-bearing ops exist; if one ever
+                        // does, recurse conservatively and clobber all.
+                        let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+                        for r in &mut regs {
+                            self.region(f, r, table.clone());
+                        }
+                        f.op_mut(opref).regions = regs;
+                        let w = WriteSet { bufs: HashSet::new(), irf: true, all: true };
+                        self.bump_set(&w);
+                    }
+                }
+                kept.push(opref);
+                continue;
+            }
+
+            if let Some(key) = self.key_of(f, opref) {
+                if let Some(&(rep, rep_op)) = table.get(&key) {
+                    let dup = f.op(opref).results[0];
+                    debug_assert!(
+                        self.dom.dominates(rep_op, opref),
+                        "CSE representative must dominate its duplicate"
+                    );
+                    let _ = rep_op;
+                    self.map.insert(dup, rep);
+                    self.deduped += 1;
+                    continue; // drop the duplicate from the region
+                }
+                let res = f.op(opref).results[0];
+                table.insert(key, (res, opref));
+            }
+            let kind = f.op(opref).kind.clone();
+            self.apply_write(&kind);
+            kept.push(opref);
+        }
+        region.ops = kept;
+    }
+
+    fn key_of(&self, f: &Func, opref: OpRef) -> Option<Key> {
+        let op = f.op(opref);
+        if !op.regions.is_empty() || op.results.len() != 1 {
+            return None;
+        }
+        let o = &op.operands;
+        let int2 = |a: Value, b: Value| {
+            f.value_type(a) == Type::Int && f.value_type(b) == Type::Int
+        };
+        // Sort operands only for commutative *integer* ops.
+        let comm = |tag: u8, a: Value, b: Value| {
+            let (a, b) = if int2(a, b) && a > b { (b, a) } else { (a, b) };
+            Key::Bin(tag, a, b)
+        };
+        Some(match &op.kind {
+            OpKind::ConstI(c) => Key::CI(*c),
+            OpKind::ConstF(c) => Key::CF(c.to_bits()),
+            OpKind::Add => comm(0, o[0], o[1]),
+            OpKind::Mul => comm(1, o[0], o[1]),
+            OpKind::And => comm(2, o[0], o[1]),
+            OpKind::Or => comm(3, o[0], o[1]),
+            OpKind::Xor => comm(4, o[0], o[1]),
+            OpKind::Min => comm(5, o[0], o[1]),
+            OpKind::Max => comm(6, o[0], o[1]),
+            OpKind::Sub => Key::Bin(7, o[0], o[1]),
+            OpKind::Div => Key::Bin(8, o[0], o[1]),
+            OpKind::Rem => Key::Bin(9, o[0], o[1]),
+            OpKind::Shl => Key::Bin(10, o[0], o[1]),
+            OpKind::Shr => Key::Bin(11, o[0], o[1]),
+            OpKind::Cmp(p) => Key::Cmp(*p, o[0], o[1]),
+            OpKind::Neg => Key::Un(0, o[0]),
+            OpKind::Sqrt => Key::Un(1, o[0]),
+            OpKind::Exp => Key::Un(2, o[0]),
+            OpKind::ToFloat => Key::Un(3, o[0]),
+            OpKind::ToInt => Key::Un(4, o[0]),
+            OpKind::Powi(e) => Key::Powi(*e, o[0]),
+            OpKind::Select => Key::Sel(o[0], o[1], o[2]),
+            OpKind::Load(b) => Key::Load(0, 0, b.0, o[0], self.version(b.0)),
+            OpKind::Fetch(b) => Key::Load(1, 0, b.0, o[0], self.version(b.0)),
+            OpKind::ReadSmem(b) => Key::Load(2, 0, b.0, o[0], self.version(b.0)),
+            OpKind::LoadItfc { itfc, buf } => {
+                Key::Load(3, itfc.0 as u32, buf.0, o[0], self.version(buf.0))
+            }
+            OpKind::ReadIrf(r) => Key::Irf(*r, self.irf_version),
+            _ => return None,
+        })
+    }
+}
+
+/// Everything the subtree rooted at `opref` may write.
+fn subtree_writes(f: &Func, opref: OpRef) -> WriteSet {
+    let mut w = WriteSet::default();
+    collect(f, opref, &mut w);
+    return w;
+
+    fn collect(f: &Func, opref: OpRef, w: &mut WriteSet) {
+        let op = f.op(opref);
+        match &op.kind {
+            OpKind::Store(b) | OpKind::WriteSmem(b) => {
+                w.bufs.insert(b.0);
+            }
+            OpKind::StoreItfc { buf, .. } => {
+                w.bufs.insert(buf.0);
+            }
+            OpKind::Transfer { dst, .. }
+            | OpKind::Copy { dst, .. }
+            | OpKind::CopyIssue { dst, .. } => {
+                w.bufs.insert(dst.0);
+            }
+            OpKind::WriteIrf(_) => w.irf = true,
+            OpKind::CopyWait { .. } => w.all = true,
+            OpKind::Intrinsic(_) => {
+                w.all = true;
+                w.irf = true;
+            }
+            _ => {}
+        }
+        for r in &op.regions {
+            for &o in &r.ops {
+                collect(f, o, w);
+            }
+        }
+    }
+}

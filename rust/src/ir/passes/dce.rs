@@ -1,0 +1,62 @@
+//! Dead code elimination.
+//!
+//! Removes ops whose results are never used, that have no side effects
+//! (not [`crate::ir::ops::OpKind::is_anchor`]), no regions, and that
+//! provably cannot trap ([`analysis::can_trap`]) — deleting an op that
+//! could raise a runtime error would change the program's observable
+//! error behaviour, which the differential harness treats as a
+//! semantics break. Runs to a fixpoint so chains of dead ops unravel
+//! completely. Anchors (`store`/`copy_issue`/`copy_wait`/control flow)
+//! and ops feeding terminators are structurally protected: a terminator
+//! use keeps its producer's use count non-zero.
+//!
+//! [`analysis::can_trap`]: crate::ir::passes::analysis::can_trap
+
+use crate::ir::func::{Func, Region};
+use crate::ir::passes::analysis::{can_trap, Analyses, DefUse, Intervals};
+
+/// Run DCE on `f`; returns the number of ops removed.
+pub fn run(f: &mut Func, an: &mut Analyses) -> usize {
+    // Removing ops only ever shrinks the use-graph; value ranges never
+    // widen, so one interval computation stays sound across rounds.
+    let iv = an.intervals(f).clone();
+    let mut removed = 0;
+    loop {
+        let du = an.defuse(f).clone();
+        let mut entry = std::mem::take(&mut f.entry);
+        let n = sweep_region(f, &mut entry, &du, &iv);
+        f.entry = entry;
+        if n == 0 {
+            break;
+        }
+        removed += n;
+        an.invalidate();
+    }
+    removed
+}
+
+fn sweep_region(f: &mut Func, region: &mut Region, du: &DefUse, iv: &Intervals) -> usize {
+    let mut removed = 0;
+    // Inner regions first, so inner removals surface as zero use counts
+    // at this level on the next fixpoint round.
+    for &opref in &region.ops {
+        let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+        for r in &mut regs {
+            removed += sweep_region(f, r, du, iv);
+        }
+        f.op_mut(opref).regions = regs;
+    }
+    region.ops.retain(|&opref| {
+        let op = f.op(opref);
+        let dead = op.regions.is_empty()
+            && !op.kind.is_anchor()
+            && !op.results.is_empty()
+            && op.results.iter().all(|&v| du.use_count(v) == 0)
+            && !can_trap(f, op, iv);
+        if dead {
+            removed += 1;
+        }
+        !dead
+    });
+    removed
+}

@@ -1,0 +1,95 @@
+//! Loop-invariant code motion.
+//!
+//! Hoists pure, provably trap-free, non-memory ops out of `for` bodies
+//! when every operand is defined outside the body (or by an op hoisted
+//! just before it). Loads are never hoisted — a store elsewhere in the
+//! body could change what they observe — and trapping ops are never
+//! hoisted because executing them *before* the loop would reorder an
+//! error relative to the anchors the loop has already run. Only ops
+//! sitting directly in a loop body move; ops inside `if` arms stay put
+//! (the arm may never execute, and leaving them is what keeps LICM and
+//! the sink pass from endlessly undoing each other).
+//!
+//! Recursion visits inner loops first, so invariants cascade outward —
+//! an op hoisted out of an inner loop lands in the outer body in time
+//! for the outer loop's own scan in the same call.
+
+use std::collections::HashSet;
+
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::ops::OpKind;
+use crate::ir::passes::analysis::{can_trap, Analyses, Intervals};
+
+/// Run LICM on `f`; returns the number of ops hoisted.
+pub fn run(f: &mut Func, an: &mut Analyses) -> usize {
+    if an.loops(f).loops.is_empty() {
+        return 0; // loop-free: keep every cached analysis warm
+    }
+    let mut total = 0;
+    loop {
+        let iv = an.intervals(f).clone();
+        let mut entry = std::mem::take(&mut f.entry);
+        let n = hoist_region(f, &mut entry, &iv);
+        f.entry = entry;
+        if n == 0 {
+            break;
+        }
+        total += n;
+        an.invalidate();
+    }
+    total
+}
+
+fn hoist_region(f: &mut Func, region: &mut Region, iv: &Intervals) -> usize {
+    let mut moved = 0;
+    let mut new_ops: Vec<OpRef> = Vec::with_capacity(region.ops.len());
+    for &opref in &region.ops {
+        // Inner regions first: an inner loop's invariants surface into
+        // this level before we scan it.
+        let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+        for r in &mut regs {
+            moved += hoist_region(f, r, iv);
+        }
+        f.op_mut(opref).regions = regs;
+
+        if matches!(f.op(opref).kind, OpKind::For) {
+            let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+            {
+                let body = &mut regs[0];
+                // Values defined at body level: the iv, carried params,
+                // and every direct op's results.
+                let mut body_defs: HashSet<Value> = body.params.iter().copied().collect();
+                for &o in &body.ops {
+                    body_defs.extend(f.op(o).results.iter().copied());
+                }
+                let mut hoisted: HashSet<Value> = HashSet::new();
+                let mut kept: Vec<OpRef> = Vec::with_capacity(body.ops.len());
+                for &o in &body.ops {
+                    let op = f.op(o);
+                    let invariant = op.regions.is_empty()
+                        && !op.kind.is_anchor()
+                        && !op.kind.touches_memory()
+                        && !matches!(op.kind, OpKind::ReadIrf(_))
+                        && !op.results.is_empty()
+                        && !can_trap(f, op, iv)
+                        && op
+                            .operands
+                            .iter()
+                            .all(|v| !body_defs.contains(v) || hoisted.contains(v));
+                    if invariant {
+                        new_ops.push(o); // lands just before the `for`
+                        hoisted.extend(f.op(o).results.iter().copied());
+                        moved += 1;
+                    } else {
+                        kept.push(o);
+                    }
+                }
+                body.ops = kept;
+            }
+            f.op_mut(opref).regions = regs;
+        }
+        new_ops.push(opref);
+    }
+    region.ops = new_ops;
+    moved
+}

@@ -1,0 +1,277 @@
+//! Mid-end optimization passes over Aquas-IR.
+//!
+//! The e-graph solves instruction *matching*; this module is the
+//! classical mid-end that runs between extraction and `vm::compile`:
+//! SCCP (sparse conditional constant propagation), CSE (with memory
+//! versioning), LICM, compute sink, and DCE, orchestrated by
+//! [`optimize`] as a pipeline iterated to a fixpoint. Analyses
+//! (def-use, dominance, loop forest, integer intervals) are cached in
+//! [`analysis::Analyses`] and invalidated only when a pass reports
+//! changes.
+//!
+//! The contract every pass upholds — and the differential harness in
+//! `tests/vm_diff.rs` machine-checks — is *observational equivalence*:
+//! identical outputs, final memory, irf state, and error strings as the
+//! unoptimized program, on both execution engines. Effectful anchors
+//! (`store`, `copy_issue`, `copy_wait`, `transfer`, control flow) are
+//! never deleted or reordered; pure work moves only within windows
+//! proven safe by the trap oracle ([`analysis::can_trap`]). Execution
+//! *statistics* (dynamic op counts) are exactly what the pipeline is
+//! meant to change; they are reported, not compared.
+
+#![warn(missing_docs)]
+
+pub mod analysis;
+pub mod cse;
+pub mod dce;
+pub mod licm;
+pub mod sccp;
+pub mod sink;
+
+use crate::error::Result;
+use crate::ir::func::Func;
+use crate::ir::verifier;
+
+use analysis::Analyses;
+
+/// How hard the mid-end works.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptLevel {
+    /// No optimization: the IR is passed through untouched.
+    #[default]
+    O0,
+    /// The full pipeline (SCCP, CSE, LICM, sink, DCE) to a fixpoint.
+    O2,
+}
+
+impl OptLevel {
+    /// Parse a CLI flag value (`"0"` or `"2"`).
+    pub fn from_flag(s: &str) -> Option<Self> {
+        match s {
+            "0" => Some(OptLevel::O0),
+            "2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+}
+
+/// One mid-end pass, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    /// Sparse conditional constant propagation.
+    Sccp,
+    /// Common subexpression elimination.
+    Cse,
+    /// Loop-invariant code motion.
+    Licm,
+    /// Compute sink into `if` arms.
+    Sink,
+    /// Dead code elimination.
+    Dce,
+}
+
+impl Pass {
+    /// Every pass in the order one pipeline round runs them. SCCP first
+    /// (folding exposes duplicates), CSE before LICM (fewer ops to
+    /// hoist), sink after LICM (they target disjoint region kinds, so
+    /// neither undoes the other), DCE last to sweep what the rest
+    /// orphaned.
+    pub const ALL: [Pass; 5] = [Pass::Sccp, Pass::Cse, Pass::Licm, Pass::Sink, Pass::Dce];
+
+    /// Stable lowercase name (used in error messages, benches, CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::Sccp => "sccp",
+            Pass::Cse => "cse",
+            Pass::Licm => "licm",
+            Pass::Sink => "sink",
+            Pass::Dce => "dce",
+        }
+    }
+}
+
+/// What a pipeline run did, per pass kind, plus how many rounds it took
+/// to reach the fixpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PipelineStats {
+    /// Rounds executed (the last round is the all-zero fixpoint proof).
+    pub rounds: usize,
+    /// Ops constant-folded / branches decided / zero-trip loops deleted.
+    pub folded: usize,
+    /// Ops deduplicated by CSE.
+    pub deduped: usize,
+    /// Ops hoisted out of loops.
+    pub hoisted: usize,
+    /// Ops sunk into `if` arms.
+    pub sunk: usize,
+    /// Dead ops removed.
+    pub removed: usize,
+}
+
+impl PipelineStats {
+    /// Total number of individual rewrites across all passes.
+    pub fn total(&self) -> usize {
+        self.folded + self.deduped + self.hoisted + self.sunk + self.removed
+    }
+}
+
+impl std::fmt::Display for PipelineStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rounds={} folded={} deduped={} hoisted={} sunk={} removed={}",
+            self.rounds, self.folded, self.deduped, self.hoisted, self.sunk, self.removed
+        )
+    }
+}
+
+/// Pipeline rounds are capped as a backstop; the pipeline converges long
+/// before this on real programs (each pass's rewrite count is a
+/// monotonically decreasing measure).
+const MAX_ROUNDS: usize = 32;
+
+/// Run a single pass in isolation (fresh analysis cache) and verify the
+/// result. Returns the pass's change count.
+pub fn run_pass(f: &mut Func, pass: Pass) -> Result<usize> {
+    let mut an = Analyses::new();
+    run_pass_with(f, pass, &mut an)
+}
+
+fn run_pass_with(f: &mut Func, pass: Pass, an: &mut Analyses) -> Result<usize> {
+    let n = match pass {
+        Pass::Sccp => sccp::run(f, an),
+        Pass::Cse => cse::run(f, an),
+        Pass::Licm => licm::run(f, an),
+        Pass::Sink => sink::run(f, an),
+        Pass::Dce => dce::run(f, an),
+    };
+    verifier::verify_after_pass(f, pass.name())?;
+    Ok(n)
+}
+
+/// Optimize `f` at `level`, returning the optimized function and what
+/// the pipeline did. The input is not modified. Every pass run is
+/// followed by a verifier check, so an `Ok` result is always valid IR.
+pub fn optimize(f: &Func, level: OptLevel) -> Result<(Func, PipelineStats)> {
+    let mut out = f.clone();
+    let mut stats = PipelineStats::default();
+    if level == OptLevel::O0 {
+        return Ok((out, stats));
+    }
+    let mut an = Analyses::new();
+    for round in 1..=MAX_ROUNDS {
+        stats.rounds = round;
+        let mut changed = 0;
+        for pass in Pass::ALL {
+            let n = run_pass_with(&mut out, pass, &mut an)?;
+            changed += n;
+            match pass {
+                Pass::Sccp => stats.folded += n,
+                Pass::Cse => stats.deduped += n,
+                Pass::Licm => stats.hoisted += n,
+                Pass::Sink => stats.sunk += n,
+                Pass::Dce => stats.removed += n,
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interface::cache::CacheHint;
+    use crate::ir::builder::FuncBuilder;
+    use crate::ir::interp;
+    use crate::ir::types::Type;
+    use crate::runtime::DType;
+
+    /// A function packed with one opportunity per pass: a constant
+    /// subtree (SCCP), duplicate address math (CSE), loop-invariant
+    /// arithmetic (LICM), work used in one `if` arm (sink), and a value
+    /// nobody reads (DCE).
+    fn rich_func() -> Func {
+        let mut b = FuncBuilder::new("rich");
+        let buf = b.global("data", DType::I32, 64, CacheHint::Unknown);
+        let x = b.param(Type::Int);
+        let two = b.const_i(2);
+        let three = b.const_i(3);
+        let six = b.mul(two, three); // SCCP: folds to 6
+        let dead = b.add(six, two); // DCE: never used
+        let _ = dead;
+        b.for_range(0, 8, 1, |b, i| {
+            let base = b.mul(six, two); // LICM: invariant; SCCP: const 12
+            let a1 = b.add(base, i);
+            let a2 = b.add(base, i); // CSE: duplicate of a1
+            let v = b.load(buf, a1);
+            let w = b.load(buf, a2); // CSE: duplicate load (no store between)
+            let s = b.add(v, w);
+            b.store(buf, a1, s);
+        });
+        let zero = b.const_i(0);
+        let cond = b.cmp(crate::ir::ops::CmpPred::Gt, x, zero);
+        let heavy = b.mul(x, x); // sink: only used in the then-arm
+        let y = b.if_else(cond, |_| vec![heavy], |b| {
+            let z = b.const_i(7);
+            vec![z]
+        });
+        b.finish(&[y[0]])
+    }
+
+    #[test]
+    fn pipeline_reaches_fixpoint_and_verifies() {
+        let f = rich_func();
+        let (opt, stats) = optimize(&f, OptLevel::O2).unwrap();
+        assert!(stats.total() > 0, "pipeline found nothing in a rich func");
+        assert!(stats.folded > 0, "sccp idle: {stats}");
+        assert!(stats.deduped > 0, "cse idle: {stats}");
+        assert!(stats.removed > 0, "dce idle: {stats}");
+        crate::ir::verifier::verify(&opt).unwrap();
+        // Idempotence: a second run is a no-op fixpoint.
+        let (opt2, stats2) = optimize(&opt, OptLevel::O2).unwrap();
+        assert_eq!(stats2.total(), 0, "second run not a fixpoint: {stats2}");
+        assert_eq!(opt2, opt, "fixpoint run still mutated the function");
+    }
+
+    #[test]
+    fn o0_is_identity() {
+        let f = rich_func();
+        let (same, stats) = optimize(&f, OptLevel::O0).unwrap();
+        assert_eq!(same, f);
+        assert_eq!(stats.total(), 0);
+    }
+
+    #[test]
+    fn optimized_func_agrees_with_original() {
+        let f = rich_func();
+        let (opt, _) = optimize(&f, OptLevel::O2).unwrap();
+        let buf = f.buffer_by_name("data").unwrap();
+        let seed: Vec<i32> = (0..64).map(|i| (i * 7 % 23) - 5).collect();
+        for arg in [-3i64, 0, 5] {
+            let mut m1 = interp::Memory::for_func(&f);
+            m1.write_i32(buf, &seed);
+            let mut m2 = interp::Memory::for_func(&opt);
+            m2.write_i32(buf, &seed);
+            let r1 = interp::run(&f, &[interp::Val::I(arg)], &mut m1);
+            let r2 = interp::run(&opt, &[interp::Val::I(arg)], &mut m2);
+            match (r1, r2) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a, b, "return values diverge for arg {arg}");
+                    assert_eq!(m1.read_i32(buf), m2.read_i32(buf));
+                }
+                (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+                (a, b) => panic!("engines diverge: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn opt_level_flag_parses() {
+        assert_eq!(OptLevel::from_flag("0"), Some(OptLevel::O0));
+        assert_eq!(OptLevel::from_flag("2"), Some(OptLevel::O2));
+        assert_eq!(OptLevel::from_flag("1"), None);
+    }
+}

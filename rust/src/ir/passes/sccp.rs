@@ -1,0 +1,449 @@
+//! Sparse conditional constant propagation over the i64/f64 lattice.
+//!
+//! Three-level lattice per SSA value (unknown → constant → varying),
+//! with `for`-carried values solved by a meet-to-fixpoint loop. The
+//! folder mirrors `ir::interp` *exactly* — wrapping integer arithmetic
+//! (including `neg`), checked division/remainder (a fold that the
+//! interpreter would reject at runtime is simply not performed,
+//! preserving the error), IEEE float arithmetic, and NaN-aware
+//! comparisons.
+//!
+//! Three rewrites are applied:
+//! - a pure op whose value is a known constant becomes `const_i`/
+//!   `const_f` in place (its result id is preserved, so no uses move);
+//! - an `if` with a known condition is spliced: the taken arm's ops are
+//!   inlined where the `if` stood and its results map to the arm's
+//!   yield operands (the untaken arm vanishes — it was unreachable);
+//! - a `for` with constant bounds proving zero trips is deleted and its
+//!   results map to the carried inits. A constant *non-positive* step
+//!   is left untouched: the interpreter reports an error for it, and
+//!   that error is part of the program's observable behaviour.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::interp::Val;
+use crate::ir::ops::{CmpPred, OpKind};
+use crate::ir::passes::analysis::Analyses;
+use crate::ir::types::Type;
+
+/// The constant lattice: `Unknown` (no evidence yet), a single known
+/// runtime value, or `Varying` (shown to take multiple values).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Lat {
+    Unknown,
+    Const(Val),
+    Varying,
+}
+
+fn val_eq(a: Val, b: Val) -> bool {
+    match (a, b) {
+        (Val::I(x), Val::I(y)) => x == y,
+        (Val::F(x), Val::F(y)) => x.to_bits() == y.to_bits(),
+        _ => false,
+    }
+}
+
+fn meet(a: Lat, b: Lat) -> Lat {
+    match (a, b) {
+        (Lat::Unknown, x) | (x, Lat::Unknown) => x,
+        (Lat::Const(x), Lat::Const(y)) if val_eq(x, y) => Lat::Const(x),
+        _ => Lat::Varying,
+    }
+}
+
+#[derive(Default)]
+struct Sccp {
+    lats: HashMap<Value, Lat>,
+    /// Pure ops to rewrite to constants.
+    fold: HashMap<OpRef, Val>,
+    /// `if` ops with a decided condition -> taken arm index.
+    splice: HashMap<OpRef, usize>,
+    /// Zero-trip `for` ops to delete.
+    zero_trip: HashSet<OpRef>,
+    /// Accumulated use replacements (if results, zero-trip for results).
+    map: HashMap<Value, Value>,
+    changes: usize,
+}
+
+/// Run SCCP on `f`; returns the number of rewrites (folds + splices +
+/// zero-trip deletions).
+pub fn run(f: &mut Func, an: &mut Analyses) -> usize {
+    let mut st = Sccp::default();
+    for &p in &f.params {
+        st.lats.insert(p, Lat::Varying);
+    }
+    st.eval_region(f, &f.entry);
+    st.plan(f, &f.entry);
+    if st.fold.is_empty() && st.splice.is_empty() && st.zero_trip.is_empty() {
+        return 0;
+    }
+    let mut entry = std::mem::take(&mut f.entry);
+    let mut new_ops = Vec::with_capacity(entry.ops.len());
+    st.transform_ops(f, std::mem::take(&mut entry.ops), &mut new_ops);
+    entry.ops = new_ops;
+    f.entry = entry;
+    f.replace_uses(&st.map);
+    an.invalidate();
+    st.changes
+}
+
+impl Sccp {
+    fn lat(&self, v: Value) -> Lat {
+        self.lats.get(&v).copied().unwrap_or(Lat::Unknown)
+    }
+
+    fn set(&mut self, v: Value, l: Lat) {
+        self.lats.insert(v, l);
+    }
+
+    /// Evaluate a region; returns the lattice values of its terminator's
+    /// operands (the yield/return payload).
+    fn eval_region(&mut self, f: &Func, region: &Region) -> Vec<Lat> {
+        let mut out = Vec::new();
+        for &opref in &region.ops {
+            let op = f.op(opref);
+            match &op.kind {
+                OpKind::Yield | OpKind::Return => {
+                    out = op.operands.iter().map(|&v| self.lat(v)).collect();
+                }
+                OpKind::For => self.eval_for(f, opref),
+                OpKind::If => self.eval_if(f, opref),
+                _ => {
+                    if op.results.is_empty() {
+                        continue;
+                    }
+                    let l = if is_opaque(&op.kind) {
+                        Lat::Varying
+                    } else {
+                        let mut vals = Vec::with_capacity(op.operands.len());
+                        let mut l = None;
+                        for &o in &op.operands {
+                            match self.lat(o) {
+                                Lat::Const(v) => vals.push(v),
+                                other => {
+                                    l = Some(other);
+                                    break;
+                                }
+                            }
+                        }
+                        match l {
+                            Some(other) => other,
+                            None => match eval_op(&op.kind, &vals) {
+                                Some(v) => Lat::Const(v),
+                                None => Lat::Varying,
+                            },
+                        }
+                    };
+                    for &r in &op.results {
+                        self.set(r, l);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn eval_for(&mut self, f: &Func, opref: OpRef) {
+        let op = f.op(opref);
+        let body = &op.regions[0];
+        let inits: Vec<Lat> = op.operands[3..].iter().map(|&v| self.lat(v)).collect();
+        let bounds = (
+            self.lat(op.operands[0]),
+            self.lat(op.operands[1]),
+            self.lat(op.operands[2]),
+        );
+        // Trip count when all bounds are constant and the step is valid.
+        let trips: Option<i128> = match bounds {
+            (Lat::Const(Val::I(l)), Lat::Const(Val::I(u)), Lat::Const(Val::I(s))) if s > 0 => {
+                let (l, u, s) = (l as i128, u as i128, s as i128);
+                Some(if u <= l { 0 } else { (u - l + s - 1) / s })
+            }
+            _ => None,
+        };
+        // Carried fixpoints re-evaluate enclosing bodies; a verdict from
+        // an earlier round may rest on lattice values that have since
+        // descended to Varying, so always re-derive from scratch.
+        self.zero_trip.remove(&opref);
+        if trips == Some(0) {
+            // Body never runs; results are the inits. Leave body values
+            // at Unknown — the whole op is deleted by the transform.
+            self.zero_trip.insert(opref);
+            for (i, &r) in op.results.iter().enumerate() {
+                self.set(r, inits[i]);
+            }
+            return;
+        }
+        let iv_lat = match (trips, bounds.0) {
+            (Some(1), Lat::Const(v)) => Lat::Const(v),
+            _ => Lat::Varying,
+        };
+        if trips == Some(1) {
+            // Exactly one iteration: carried params are the inits.
+            self.set(body.params[0], iv_lat);
+            for (i, &p) in body.params[1..].iter().enumerate() {
+                self.set(p, inits[i]);
+            }
+            let y = self.eval_region(f, body);
+            for (i, &r) in op.results.iter().enumerate() {
+                self.set(r, y[i]);
+            }
+            return;
+        }
+        // General case: meet the carried values to a fixpoint. The
+        // lattice has height 2, so this converges in a few rounds.
+        let mut carried = inits.clone();
+        let mut y;
+        loop {
+            self.set(body.params[0], iv_lat);
+            for (i, &p) in body.params[1..].iter().enumerate() {
+                self.set(p, carried[i]);
+            }
+            y = self.eval_region(f, body);
+            let next: Vec<Lat> = carried
+                .iter()
+                .zip(&y)
+                .map(|(&c, &yl)| meet(c, yl))
+                .collect();
+            if next == carried {
+                break;
+            }
+            carried = next;
+        }
+        for (i, &r) in op.results.iter().enumerate() {
+            // Unknown trip count includes "zero", where the init flows
+            // straight through.
+            let l = if trips.is_some() { y[i] } else { meet(inits[i], y[i]) };
+            self.set(r, l);
+        }
+    }
+
+    fn eval_if(&mut self, f: &Func, opref: OpRef) {
+        let op = f.op(opref);
+        // Same staleness discipline as `eval_for`: a condition that was
+        // Const in an earlier fixpoint round may now be Varying.
+        self.splice.remove(&opref);
+        match self.lat(op.operands[0]) {
+            Lat::Const(Val::I(c)) => {
+                let taken = if c != 0 { 0 } else { 1 };
+                let y = self.eval_region(f, &op.regions[taken]);
+                self.splice.insert(opref, taken);
+                for (i, &r) in op.results.iter().enumerate() {
+                    self.set(r, y[i]);
+                }
+            }
+            _ => {
+                // Unknown/varying/float condition (the latter errors at
+                // runtime — keep the op): evaluate both arms and meet.
+                let y0 = self.eval_region(f, &op.regions[0]);
+                let y1 = self.eval_region(f, &op.regions[1]);
+                for (i, &r) in op.results.iter().enumerate() {
+                    self.set(r, meet(y0[i], y1[i]));
+                }
+            }
+        }
+    }
+
+    /// Decide which pure ops get rewritten to constants.
+    fn plan(&mut self, f: &Func, region: &Region) {
+        for &opref in &region.ops {
+            let op = f.op(opref);
+            if let Some(&taken) = self.splice.get(&opref) {
+                // Only the surviving arm is planned/transformed.
+                self.plan(f, &op.regions[taken]);
+                continue;
+            }
+            if self.zero_trip.contains(&opref) {
+                continue;
+            }
+            for r in &op.regions {
+                self.plan(f, r);
+            }
+            let foldable = op.regions.is_empty()
+                && op.results.len() == 1
+                && !op.kind.is_anchor()
+                && !op.kind.touches_memory()
+                && !matches!(
+                    op.kind,
+                    OpKind::ConstI(_) | OpKind::ConstF(_) | OpKind::ReadIrf(_)
+                );
+            if !foldable {
+                continue;
+            }
+            if let Lat::Const(v) = self.lat(op.results[0]) {
+                let ty_ok = match v {
+                    Val::I(_) => f.value_type(op.results[0]) == Type::Int,
+                    Val::F(_) => f.value_type(op.results[0]) == Type::Float,
+                };
+                if ty_ok {
+                    self.fold.insert(opref, v);
+                }
+            }
+        }
+    }
+
+    /// Rebuild an op list applying folds, splices, and zero-trip
+    /// deletions; recurses into surviving regions.
+    fn transform_ops(&mut self, f: &mut Func, ops: Vec<OpRef>, out: &mut Vec<OpRef>) {
+        for opref in ops {
+            if self.zero_trip.contains(&opref) {
+                let op = f.op(opref);
+                let inits: Vec<Value> = op.operands[3..].to_vec();
+                for (i, &r) in op.results.iter().enumerate() {
+                    self.map.insert(r, inits[i]);
+                }
+                self.changes += 1;
+                continue; // op deleted
+            }
+            if let Some(&taken) = self.splice.get(&opref) {
+                let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+                let arm = std::mem::take(&mut regs[taken]);
+                let op = f.op(opref);
+                // Map the if's results to the taken arm's yield operands.
+                if let Some(&last) = arm.ops.last() {
+                    let yields = f.op(last).operands.clone();
+                    for (i, &r) in op.results.iter().enumerate() {
+                        self.map.insert(r, yields[i]);
+                    }
+                }
+                let mut inner = arm.ops;
+                inner.pop(); // drop the yield terminator
+                self.transform_ops(f, inner, out);
+                self.changes += 1;
+                continue; // the if itself is deleted
+            }
+            let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+            for r in &mut regs {
+                let inner = std::mem::take(&mut r.ops);
+                let mut rebuilt = Vec::with_capacity(inner.len());
+                self.transform_ops(f, inner, &mut rebuilt);
+                r.ops = rebuilt;
+            }
+            f.op_mut(opref).regions = regs;
+            if let Some(&v) = self.fold.get(&opref) {
+                let op = f.op_mut(opref);
+                op.kind = match v {
+                    Val::I(c) => OpKind::ConstI(c),
+                    Val::F(c) => OpKind::ConstF(c),
+                };
+                op.operands.clear();
+                self.changes += 1;
+            }
+            out.push(opref);
+        }
+    }
+}
+
+/// Ops whose results carry no compile-time information.
+fn is_opaque(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::Load(_)
+            | OpKind::Fetch(_)
+            | OpKind::ReadSmem(_)
+            | OpKind::LoadItfc { .. }
+            | OpKind::ReadIrf(_)
+            | OpKind::Intrinsic(_)
+    )
+}
+
+/// Fold one pure op over constant operands, mirroring `ir::interp`
+/// exactly. `None` means "the interpreter would error (or the value is
+/// not representable without changing behaviour)": no fold happens and
+/// the runtime error is preserved.
+fn eval_op(kind: &OpKind, vals: &[Val]) -> Option<Val> {
+    use Val::{F, I};
+    Some(match kind {
+        OpKind::ConstI(c) => I(*c),
+        OpKind::ConstF(c) => F(*c),
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Min | OpKind::Max => {
+            match (vals[0], vals[1]) {
+                (I(a), I(b)) => I(match kind {
+                    OpKind::Add => a.wrapping_add(b),
+                    OpKind::Sub => a.wrapping_sub(b),
+                    OpKind::Mul => a.wrapping_mul(b),
+                    OpKind::Div => a.checked_div(b)?,
+                    OpKind::Min => a.min(b),
+                    OpKind::Max => a.max(b),
+                    _ => unreachable!(),
+                }),
+                (F(a), F(b)) => F(match kind {
+                    OpKind::Add => a + b,
+                    OpKind::Sub => a - b,
+                    OpKind::Mul => a * b,
+                    OpKind::Div => a / b,
+                    OpKind::Min => a.min(b),
+                    OpKind::Max => a.max(b),
+                    _ => unreachable!(),
+                }),
+                _ => return None, // mixed types: interpreter errors
+            }
+        }
+        OpKind::Rem | OpKind::Shl | OpKind::Shr | OpKind::And | OpKind::Or | OpKind::Xor => {
+            match (vals[0], vals[1]) {
+                (I(a), I(b)) => I(match kind {
+                    OpKind::Rem => a.checked_rem(b)?,
+                    OpKind::Shl => a.wrapping_shl(b as u32),
+                    OpKind::Shr => a.wrapping_shr(b as u32),
+                    OpKind::And => a & b,
+                    OpKind::Or => a | b,
+                    OpKind::Xor => a ^ b,
+                    _ => unreachable!(),
+                }),
+                _ => return None,
+            }
+        }
+        OpKind::Neg => match vals[0] {
+            I(a) => I(a.wrapping_neg()),
+            F(a) => F(-a),
+        },
+        OpKind::Sqrt => match vals[0] {
+            F(a) => F(a.sqrt()),
+            _ => return None,
+        },
+        OpKind::Exp => match vals[0] {
+            F(a) => F(a.exp()),
+            _ => return None,
+        },
+        OpKind::Powi(e) => match vals[0] {
+            F(a) => F(a.powi(*e as i32)),
+            _ => return None,
+        },
+        OpKind::ToFloat => match vals[0] {
+            I(a) => F(a as f64),
+            _ => return None,
+        },
+        OpKind::ToInt => match vals[0] {
+            F(a) => I(a as i64),
+            _ => return None,
+        },
+        OpKind::Cmp(p) => {
+            let ord = match (vals[0], vals[1]) {
+                (I(a), I(b)) => a.cmp(&b),
+                (F(a), F(b)) => a.partial_cmp(&b)?, // NaN: interp errors
+                _ => return None,
+            };
+            use std::cmp::Ordering::*;
+            let t = match p {
+                CmpPred::Eq => ord == Equal,
+                CmpPred::Ne => ord != Equal,
+                CmpPred::Lt => ord == Less,
+                CmpPred::Le => ord != Greater,
+                CmpPred::Gt => ord == Greater,
+                CmpPred::Ge => ord != Less,
+            };
+            I(t as i64)
+        }
+        OpKind::Select => match vals[0] {
+            I(c) => {
+                if c != 0 {
+                    vals[1]
+                } else {
+                    vals[2]
+                }
+            }
+            _ => return None,
+        },
+        _ => return None,
+    })
+}

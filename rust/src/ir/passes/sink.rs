@@ -1,0 +1,178 @@
+//! Compute sink: move pure work into the `if` arm that consumes it.
+//!
+//! A pure, provably trap-free, non-memory op whose every use sits inside
+//! a single arm of a single later `if` is moved to the front of that
+//! arm, so the work only runs when the branch is actually taken. Ops are
+//! never sunk into `for` bodies (that would *multiply* the work), and
+//! trapping ops are never sunk (skipping the untaken arm would skip the
+//! trap, changing observable error behaviour). Stores and other anchors
+//! stay where they are — only value computation moves.
+//!
+//! Each region is scanned in reverse so a chain of ops feeding one arm
+//! sinks in a single round in the right order: the tail of the chain
+//! moves first, which makes its producer eligible next.
+
+use std::collections::HashMap;
+
+use crate::ir::func::{Func, OpRef, Region, Value};
+use crate::ir::ops::OpKind;
+use crate::ir::passes::analysis::{can_trap, Analyses, Intervals};
+
+/// Identity of a region: `None` is the entry, otherwise the owning op
+/// and the region's index within it.
+type RegionId = Option<(OpRef, usize)>;
+
+/// Run the sink pass on `f`; returns the number of ops moved.
+pub fn run(f: &mut Func, an: &mut Analyses) -> usize {
+    let mut total = 0;
+    loop {
+        let iv = an.intervals(f).clone();
+        let n = round(f, &iv);
+        if n == 0 {
+            break;
+        }
+        total += n;
+        an.invalidate();
+    }
+    total
+}
+
+fn round(f: &mut Func, iv: &Intervals) -> usize {
+    // Parent map: op -> (owning op, region index); absent = entry.
+    let mut parent: HashMap<OpRef, (OpRef, usize)> = HashMap::new();
+    let mut users: HashMap<Value, Vec<OpRef>> = HashMap::new();
+    build_maps(f, &f.entry, None, &mut parent, &mut users);
+    let mut entry = std::mem::take(&mut f.entry);
+    let moved = sink_region(f, &mut entry, None, &mut parent, &users, iv);
+    f.entry = entry;
+    moved
+}
+
+fn build_maps(
+    f: &Func,
+    region: &Region,
+    id: RegionId,
+    parent: &mut HashMap<OpRef, (OpRef, usize)>,
+    users: &mut HashMap<Value, Vec<OpRef>>,
+) {
+    for &opref in &region.ops {
+        if let Some(p) = id {
+            parent.insert(opref, p);
+        }
+        let op = f.op(opref);
+        for &v in &op.operands {
+            users.entry(v).or_default().push(opref);
+        }
+        for (ri, r) in op.regions.iter().enumerate() {
+            build_maps(f, r, Some((opref, ri)), parent, users);
+        }
+    }
+}
+
+/// Where do all transitive containers of `u` place it relative to the
+/// region `id`?
+enum Climb {
+    /// `u` itself sits directly in the region.
+    Direct,
+    /// `u` is nested under op `.0` (directly in the region) via its
+    /// region `.1`.
+    Into(OpRef, usize),
+    /// `u` is outside the region's subtree (cannot happen for uses of a
+    /// value defined in the region, but handled defensively).
+    Lost,
+}
+
+fn climb(u: OpRef, id: RegionId, parent: &HashMap<OpRef, (OpRef, usize)>) -> Climb {
+    let c = parent.get(&u).copied();
+    if c == id {
+        return Climb::Direct;
+    }
+    let (mut anc, mut arm) = match c {
+        Some(x) => x,
+        None => return Climb::Lost,
+    };
+    loop {
+        let pc = parent.get(&anc).copied();
+        if pc == id {
+            return Climb::Into(anc, arm);
+        }
+        match pc {
+            Some((p, ri)) => {
+                anc = p;
+                arm = ri;
+            }
+            None => return Climb::Lost,
+        }
+    }
+}
+
+fn sink_region(
+    f: &mut Func,
+    region: &mut Region,
+    id: RegionId,
+    parent: &mut HashMap<OpRef, (OpRef, usize)>,
+    users: &HashMap<Value, Vec<OpRef>>,
+    iv: &Intervals,
+) -> usize {
+    let mut moved = 0;
+    // Inner regions first, so deep chains settle before this level moves.
+    for i in 0..region.ops.len() {
+        let opref = region.ops[i];
+        let mut regs = std::mem::take(&mut f.op_mut(opref).regions);
+        for (ri, r) in regs.iter_mut().enumerate() {
+            moved += sink_region(f, r, Some((opref, ri)), parent, users, iv);
+        }
+        f.op_mut(opref).regions = regs;
+    }
+    // Reverse scan: the tail of a dependence chain sinks first.
+    let mut i = region.ops.len();
+    while i > 0 {
+        i -= 1;
+        let x = region.ops[i];
+        let op = f.op(x);
+        let candidate = op.regions.is_empty()
+            && !op.kind.is_anchor()
+            && !op.kind.touches_memory()
+            && !matches!(op.kind, OpKind::ReadIrf(_))
+            && op.results.len() == 1
+            && !can_trap(f, op, iv);
+        if !candidate {
+            continue;
+        }
+        let res = op.results[0];
+        let Some(us) = users.get(&res) else { continue };
+        if us.is_empty() {
+            continue; // dead: DCE's job, not ours
+        }
+        let mut target: Option<(OpRef, usize)> = None;
+        let mut ok = true;
+        for &u in us {
+            match climb(u, id, parent) {
+                Climb::Direct | Climb::Lost => {
+                    ok = false;
+                    break;
+                }
+                Climb::Into(t, arm) => {
+                    if let Some(prev) = target {
+                        if prev != (t, arm) {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    target = Some((t, arm));
+                }
+            }
+        }
+        let Some((t, arm)) = target else { continue };
+        if !ok || !matches!(f.op(t).kind, OpKind::If) {
+            continue;
+        }
+        region.ops.remove(i);
+        let mut regs = std::mem::take(&mut f.op_mut(t).regions);
+        regs[arm].ops.insert(0, x);
+        f.op_mut(t).regions = regs;
+        parent.insert(x, (t, arm));
+        moved += 1;
+    }
+    moved
+}

@@ -42,6 +42,15 @@ pub fn func_level(f: &Func) -> IrLevel {
     level
 }
 
+/// Verify a function after a mid-end optimization pass, wrapping any
+/// failure with the pass name so pipeline debugging points straight at
+/// the offending stage. The pass pipeline ([`crate::ir::passes`]) calls
+/// this after every pass it runs — a pass that produces un-verifiable IR
+/// is a bug in the pass, never a runtime surprise downstream.
+pub fn verify_after_pass(f: &Func, pass: &str) -> Result<()> {
+    verify(f).map_err(|e| Error::Ir(format!("post-{pass} verification failed: {e}")))
+}
+
 /// Verify a function; returns the first problem found.
 pub fn verify(f: &Func) -> Result<()> {
     let mut scope: HashSet<Value> = f.params.iter().copied().collect();

@@ -857,7 +857,8 @@ impl CompiledFunc {
                 }
                 Insn::NegI { d, a } => {
                     stats.arith_ops += 1;
-                    ri[*d as usize] = -ri[*a as usize];
+                    // Wrapping, mirroring the tree-walker (`-i64::MIN`).
+                    ri[*d as usize] = ri[*a as usize].wrapping_neg();
                 }
                 Insn::NegF { d, a } => {
                     stats.arith_ops += 1;

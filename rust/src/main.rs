@@ -27,6 +27,12 @@ COMMANDS:
                               ISAX and print the Table-3 statistics
                               (kernels: vdecomp mgf2mm vdist3.vv mcov.vs
                                vfsmax vmadot vmvar mphong vrgb2yuv)
+                              --opt-level 0|2   run the mid-end pass
+                              pipeline (SCCP/CSE/LICM/sink/DCE) on the
+                              lowered program (default 0)
+    opt --demo                show the mid-end pass pipeline on a demo
+                              function: IR before/after, per-pass rewrite
+                              counts, and the dynamic-op-count delta
     bench <what>              regenerate a table/figure:
                               table2 | table3 | fig2 | fig3 | fig6 | fig7 | fig8 | all
                               (engine microbenches: egraph | serve | interp | dma)
@@ -71,6 +77,7 @@ fn run(args: &[String]) -> aquas::Result<()> {
     match args.first().map(String::as_str) {
         Some("synth") => cmd_synth(&args[1..]),
         Some("compile") => cmd_compile(&args[1..]),
+        Some("opt") => cmd_opt(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("ir-levels") => {
@@ -130,9 +137,21 @@ fn all_kernels() -> Vec<aquas::workloads::Kernel> {
 
 fn cmd_compile(args: &[String]) -> aquas::Result<()> {
     let name = args.first().ok_or_else(|| {
-        aquas::Error::Compiler("usage: aquas compile <kernel> [--variant]".into())
+        aquas::Error::Compiler("usage: aquas compile <kernel> [--variant] [--opt-level 0|2]".into())
     })?;
     let use_variant = args.iter().any(|a| a == "--variant");
+    let opt_level = match args.windows(2).find(|w| w[0] == "--opt-level") {
+        None => 0u8,
+        Some(w) => match w[1].as_str() {
+            "0" => 0,
+            "2" => 2,
+            other => {
+                return Err(aquas::Error::Compiler(format!(
+                    "unknown opt level `{other}` (expected 0 or 2)"
+                )))
+            }
+        },
+    };
     let ks = all_kernels();
     let k = ks
         .iter()
@@ -143,7 +162,8 @@ fn cmd_compile(args: &[String]) -> aquas::Result<()> {
     } else {
         k.software.clone()
     };
-    let r = aquas::compiler::compile(&func, &[k.isax.clone()], &Default::default())?;
+    let opts = aquas::compiler::CompileOptions { opt_level, ..Default::default() };
+    let r = aquas::compiler::compile(&func, &[k.isax.clone()], &opts)?;
     println!("kernel: {}", k.name);
     println!("matched: {:?}", r.stats.matched);
     println!(
@@ -155,6 +175,65 @@ fn cmd_compile(args: &[String]) -> aquas::Result<()> {
         r.stats.initial_enodes, r.stats.saturated_enodes
     );
     println!("\nlowered program:\n{}", aquas::ir::printer::print_func(&r.func));
+    Ok(())
+}
+
+/// `aquas opt --demo`: run the mid-end pipeline on a function packed
+/// with one opportunity per pass and show its work — IR before/after,
+/// per-pass rewrite counts, and the measured dynamic-op delta (with the
+/// optimized run checked for an identical memory image).
+fn cmd_opt(args: &[String]) -> aquas::Result<()> {
+    use aquas::interface::cache::CacheHint;
+    use aquas::ir::{interp, passes, printer, CmpPred, FuncBuilder};
+    use aquas::runtime::DType;
+
+    if !args.iter().any(|a| a == "--demo") {
+        eprintln!("opt currently supports: aquas opt --demo");
+        return Ok(());
+    }
+    let mut b = FuncBuilder::new("opt_demo");
+    let buf = b.global("data", DType::I32, 64, CacheHint::Unknown);
+    b.for_range(0, 16, 1, |b, i| {
+        let two = b.const_i(2);
+        let three = b.const_i(3);
+        let six = b.mul(two, three); // sccp: folds to 6
+        let base = b.mul(six, two); // sccp: folds to 12, licm hoists it
+        let a1 = b.add(base, i);
+        let a2 = b.add(base, i); // cse: duplicate address
+        let v = b.load(buf, a1);
+        let w = b.load(buf, a2); // cse: duplicate load
+        let dead = b.mul(v, w); // dce: never used
+        let _ = dead;
+        let s = b.add(v, w);
+        let zero = b.const_i(0);
+        let c = b.cmp(CmpPred::Gt, s, zero);
+        let heavy = b.mul(s, s); // sink: only the then-arm needs it
+        let r = b.if_else(c, |_| vec![heavy], |b| vec![b.const_i(0)]);
+        b.store(buf, a1, r[0]);
+    });
+    let f = b.finish(&[]);
+
+    let (opt, stats) = passes::optimize(&f, passes::OptLevel::O2)?;
+    println!("== mid-end pass pipeline demo ==");
+    println!("\nbefore:\n{}", printer::print_func(&f));
+    println!("after:\n{}", printer::print_func(&opt));
+    println!("pipeline: {stats}");
+
+    let run_one = |f: &aquas::ir::Func| -> aquas::Result<(u64, Vec<i32>)> {
+        let mut mem = interp::Memory::for_func(f);
+        let seed: Vec<i32> = (0..64).map(|i| (i * 13 % 31) - 7).collect();
+        mem.write_i32(buf, &seed);
+        let mut st = interp::ExecStats::default();
+        interp::run_with_stats(f, &[], &mut mem, &mut st)?;
+        Ok((st.arith_ops + st.loads + st.stores + st.branches + st.transfers, mem.read_i32(buf)))
+    };
+    let (d0, m0) = run_one(&f)?;
+    let (d1, m1) = run_one(&opt)?;
+    println!(
+        "dynamic ops: {d0} -> {d1} ({:.1}% reduction) | memory image {}",
+        100.0 * (1.0 - d1 as f64 / d0 as f64),
+        if m0 == m1 { "identical" } else { "DIVERGED" },
+    );
     Ok(())
 }
 

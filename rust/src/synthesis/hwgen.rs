@@ -107,8 +107,18 @@ pub struct PipelineDesc {
 /// Generate the pipeline description from a synthesis result.
 pub fn generate(synth: &SynthResult, itfcs: &InterfaceSet) -> PipelineDesc {
     let func = &synth.temporal;
-    let fus = census(func);
-    let depth = datapath_depth(func);
+    // Dead ops must not cost silicon: the FU census and the datapath
+    // depth are taken on a DCE-swept clone of the temporal IR, so
+    // whatever dead index math survived scheduling never instantiates an
+    // FU or stretches the reported critical path. Everything else
+    // (schedule items, scratchpad liveness, interface usage) is computed
+    // from symbolic/anchor ops DCE never touches, so the original
+    // function serves those paths unchanged.
+    let mut swept = func.clone();
+    let mut an = crate::ir::passes::analysis::Analyses::new();
+    crate::ir::passes::dce::run(&mut swept, &mut an);
+    let fus = census(&swept);
+    let depth = datapath_depth(&swept);
 
     // Stage-in/out arbitration: one arbiter per interface with >1
     // transactions contending (issue slots are a shared resource).
@@ -329,6 +339,32 @@ mod tests {
         let itfcs = InterfaceSet::rocket_default();
         let r = synthesize(&f, &itfcs, &SynthOptions::default()).unwrap();
         (r, itfcs)
+    }
+
+    #[test]
+    fn census_ignores_dead_ops() {
+        use crate::ir::ops::Op;
+        use crate::ir::types::Type;
+        let (r, itfcs) = demo_synth();
+        let clean = generate(&r, &itfcs);
+        // Lard the temporal IR with a dead const/mul/div chain: none of
+        // it may instantiate an FU or stretch the datapath depth.
+        let mut dirty = r.clone();
+        let f = &mut dirty.temporal;
+        let c = f.new_value(Type::Int);
+        let cop = f.add_op(Op::new(OpKind::ConstI(6), vec![], vec![c]));
+        let m = f.new_value(Type::Int);
+        let mop = f.add_op(Op::new(OpKind::Mul, vec![c, c], vec![m]));
+        let d = f.new_value(Type::Int);
+        let dop = f.add_op(Op::new(OpKind::Div, vec![m, c], vec![d]));
+        f.entry.ops.splice(0..0, [cop, mop, dop]);
+        crate::ir::verifier::verify(&dirty.temporal).unwrap();
+        let desc = generate(&dirty, &itfcs);
+        assert_eq!(desc.stages, clean.stages, "dead ops leaked into the FU census");
+        assert_eq!(
+            desc.datapath_depth, clean.datapath_depth,
+            "dead ops stretched the reported critical path"
+        );
     }
 
     #[test]

@@ -476,6 +476,15 @@ pub fn figure8_resources() -> (FpgaUsage, (f64, f64, f64, f64)) {
 /// Before the `exp` op existed the softmax had to be staged on the host
 /// between two interpreted GEMM stages (see `tests/golden_diff.rs`
 /// history); this closes that ROADMAP item.
+///
+/// The kernel is written the way a naive frontend emits it: every flat
+/// `[heads, seq, head_dim]` index is recomputed from scratch inside the
+/// innermost loop that consumes it (constants included). Cleaning that
+/// up is the mid-end's job — `ir::passes` hoists the invariant address
+/// arithmetic and dedups the recomputed rows, which is exactly what
+/// `BENCH_interp.json`'s `attention_dynop_reduction` gate measures. The
+/// computed *values* are identical either way, so optimized and
+/// unoptimized runs stay bit-equal.
 pub fn ir_causal_attention(heads: i64, seq: i64, head_dim: i64) -> Func {
     let n = (heads * seq * head_dim) as usize;
     let mut b = FuncBuilder::new("attention_ir");
@@ -486,12 +495,7 @@ pub fn ir_causal_attention(heads: i64, seq: i64, head_dim: i64) -> Func {
     let srow = b.global("srow", DType::F32, seq as usize, CacheHint::Warm);
     let scale = 1.0 / (head_dim as f64).sqrt();
     b.for_range(0, heads, 1, |b, h| {
-        let td = b.const_i(seq * head_dim);
-        let hbase = b.mul(h, td);
         b.for_range(0, seq, 1, |b, i| {
-            let dd = b.const_i(head_dim);
-            let irow = b.mul(i, dd);
-            let qrow = b.add(hbase, irow);
             let one = b.const_i(1);
             let vis = b.add(i, one); // causal window: j in 0..=i
             let lb = b.const_i(0);
@@ -499,16 +503,22 @@ pub fn ir_causal_attention(heads: i64, seq: i64, head_dim: i64) -> Func {
             // Pass 1: scaled scores into srow, running max carried.
             let neg = b.const_f(-1e30);
             let m = b.for_loop(lb, vis, step, &[neg], |b, j, carried| {
-                let dd2 = b.const_i(head_dim);
-                let jrow = b.mul(j, dd2);
-                let krow = b.add(hbase, jrow);
                 let zero_f = b.const_f(0.0);
                 let lbd = b.const_i(0);
                 let ubd = b.const_i(head_dim);
                 let stepd = b.const_i(1);
                 let dot = b.for_loop(lbd, ubd, stepd, &[zero_f], |b, d, acc| {
+                    // q[h, i, d]: the full row base is rebuilt per lane.
+                    let td = b.const_i(seq * head_dim);
+                    let hbase = b.mul(h, td);
+                    let dd = b.const_i(head_dim);
+                    let irow = b.mul(i, dd);
+                    let qrow = b.add(hbase, irow);
                     let qi = b.add(qrow, d);
                     let qv = b.load(q, qi);
+                    // k[h, j, d]: likewise.
+                    let jrow = b.mul(j, dd);
+                    let krow = b.add(hbase, jrow);
                     let ki = b.add(krow, d);
                     let kv = b.load(k, ki);
                     let p = b.mul(qv, kv);
@@ -537,18 +547,23 @@ pub fn ir_causal_attention(heads: i64, seq: i64, head_dim: i64) -> Func {
                 let zero_f3 = b.const_f(0.0);
                 let acc = b.for_loop(lb3, vis, step3, &[zero_f3], |b, j, carried| {
                     let e = b.load(srow, j);
+                    // v[h, j, d], row base again rebuilt from scratch.
+                    let td3 = b.const_i(seq * head_dim);
+                    let hbase3 = b.mul(h, td3);
                     let dd3 = b.const_i(head_dim);
                     let jrow = b.mul(j, dd3);
-                    let vrow = b.add(hbase, jrow);
+                    let vrow = b.add(hbase3, jrow);
                     let vi = b.add(vrow, d);
                     let vv = b.load(v, vi);
                     let p = b.mul(e, vv);
                     vec![b.add(carried[0], p)]
                 });
                 let out = b.div(acc[0], den[0]);
+                let td4 = b.const_i(seq * head_dim);
+                let hbase4 = b.mul(h, td4);
                 let dd4 = b.const_i(head_dim);
                 let ibase = b.mul(i, dd4);
-                let orow = b.add(hbase, ibase);
+                let orow = b.add(hbase4, ibase);
                 let oi = b.add(orow, d);
                 b.store(o, oi, out);
             });

@@ -82,6 +82,39 @@ fn compile_vmadot_reports_match() {
 }
 
 #[test]
+fn compile_opt_level_2_succeeds_and_opt_level_0_is_identity() {
+    let out = aquas(&["compile", "vmadot", "--opt-level", "2"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("kernel: vmadot"), "got: {text}");
+    assert!(text.contains("isax"), "no intrinsic in optimized lowered program: {text}");
+    // -O0 must be byte-identical to the default compile output.
+    let plain = aquas(&["compile", "vmadot"]);
+    let o0 = aquas(&["compile", "vmadot", "--opt-level", "0"]);
+    assert!(o0.status.success(), "stderr: {}", String::from_utf8_lossy(&o0.stderr));
+    assert_eq!(plain.stdout, o0.stdout, "--opt-level 0 changed the compile output");
+}
+
+#[test]
+fn compile_rejects_bad_opt_level() {
+    let out = aquas(&["compile", "vmadot", "--opt-level", "3"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("opt level"), "stderr: {err}");
+}
+
+#[test]
+fn opt_demo_shows_pipeline_and_agrees() {
+    let out = aquas(&["opt", "--demo"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pipeline:"), "no pipeline stats line: {text}");
+    assert!(text.contains("dynamic ops"), "no dynamic-op delta line: {text}");
+    assert!(text.contains("identical"), "demo run did not verify equivalence: {text}");
+    assert!(!text.contains("DIVERGED"), "demo run diverged: {text}");
+}
+
+#[test]
 fn compile_unknown_kernel_fails() {
     let out = aquas(&["compile", "nonexistent_kernel"]);
     assert_eq!(out.status.code(), Some(1));

@@ -370,6 +370,49 @@ fn diff_attention_tolerance_equal() {
 }
 
 // ---------------------------------------------------------------------------
+// Mid-end: the pass pipeline on every kernel at manifest shapes
+// ---------------------------------------------------------------------------
+
+/// Every AOT kernel, run through the full `ir::passes` pipeline, must
+/// leave a bit-identical final memory image — on both engines (via
+/// `run_both` on each side). This is the golden-path counterpart of the
+/// fuzz sweep in `tests/vm_diff.rs`.
+#[test]
+fn optimized_kernels_stay_bit_identical_on_both_engines() {
+    use aquas::ir::passes::{optimize, OptLevel};
+    for (name, f) in irk::aot_cases() {
+        let (opt, _) =
+            optimize(&f, OptLevel::O2).unwrap_or_else(|e| panic!("{name}: pipeline failed: {e}"));
+        let m_un = run_both(&f, |m| irk::seed_memory(&f, m, 0x0457));
+        let m_op = run_both(&opt, |m| irk::seed_memory(&opt, m, 0x0457));
+        irk::memories_equal(&f, &m_un, &m_op)
+            .unwrap_or_else(|e| panic!("{name}: optimized memory image diverges: {e}"));
+    }
+}
+
+/// The two index-math-heavy kernels must get strictly cheaper — at least
+/// the 20% dynamic-op floor the bench `--check` gate enforces.
+#[test]
+fn pipeline_cuts_attention_and_gf2mm_dynamic_ops() {
+    use aquas::ir::passes::{optimize, OptLevel};
+    for (name, f) in irk::aot_cases() {
+        if name != "attention" && name != "gf2mm" {
+            continue;
+        }
+        let (opt, _) = optimize(&f, OptLevel::O2).unwrap();
+        let d0 = irk::dynamic_ops(&f, 0x0457).unwrap();
+        let d1 = irk::dynamic_ops(&opt, 0x0457).unwrap();
+        assert!(d1 < d0, "{name}: dynamic ops did not decrease ({d0} -> {d1})");
+        let reduction = 1.0 - d1 as f64 / d0 as f64;
+        assert!(
+            reduction >= 0.20,
+            "{name}: dynamic-op reduction {:.1}% is below the 20% floor ({d0} -> {d1})",
+            reduction * 100.0
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Sweep: every manifest entry is accounted for (fail loudly if a future
 // entry lands without a cross-check).
 // ---------------------------------------------------------------------------

@@ -13,9 +13,15 @@
 //! - error paths (both engines must fail identically, including stats
 //!   counted up to the failure point);
 //! - the traced-mode contract (a live trace sink routes through the
-//!   tree-walker and produces the same access stream).
+//!   tree-walker and produces the same access stream);
+//! - the mid-end (`ir::passes`): every pass alone and the full pipeline,
+//!   applied to every fuzz seed, must keep the program observationally
+//!   identical (outputs, memory image, irf, error strings) on *both*
+//!   engines — the machine-checked "semantics-preserving" claim.
 
-use aquas::bench_harness::interp::{check_equivalent, random_program, seed_memory};
+use aquas::bench_harness::interp::{
+    check_equivalent, check_opt_equivalent, random_program, seed_memory,
+};
 use aquas::interface::cache::CacheHint;
 use aquas::interface::model::InterfaceId;
 use aquas::interface::TransactionKind;
@@ -63,6 +69,48 @@ fn fuzz_programs_exercise_the_op_mix() {
     assert!(copies > 10, "copies: {copies}");
     assert!(irf > 10, "irf ops: {irf}");
     assert!(exps > 3, "exp ops: {exps}");
+}
+
+// ---------------------------------------------------------------------------
+// The mid-end sweep: every pass, every seed, both engines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_each_pass_alone_is_semantics_preserving_on_150_seeds() {
+    use aquas::ir::passes::{run_pass, Pass};
+    for seed in 0..150u64 {
+        let f = random_program(seed);
+        for pass in Pass::ALL {
+            let mut p = f.clone();
+            run_pass(&mut p, pass).unwrap_or_else(|e| {
+                panic!("seed {seed}: {} produced invalid IR: {e}", pass.name())
+            });
+            check_opt_equivalent(&f, &p, seed).unwrap_or_else(|e| {
+                panic!(
+                    "seed {seed}, pass {}: {e}\nprogram:\n{}",
+                    pass.name(),
+                    aquas::ir::printer::print_func(&f)
+                )
+            });
+        }
+    }
+}
+
+#[test]
+fn fuzz_full_pipeline_is_semantics_preserving_on_150_seeds() {
+    use aquas::ir::passes::{optimize, OptLevel};
+    for seed in 0..150u64 {
+        let f = random_program(seed);
+        let (opt, _) = optimize(&f, OptLevel::O2)
+            .unwrap_or_else(|e| panic!("seed {seed}: pipeline produced invalid IR: {e}"));
+        check_opt_equivalent(&f, &opt, seed).unwrap_or_else(|e| {
+            panic!(
+                "seed {seed}: {e}\nprogram:\n{}\noptimized:\n{}",
+                aquas::ir::printer::print_func(&f),
+                aquas::ir::printer::print_func(&opt)
+            )
+        });
+    }
 }
 
 // ---------------------------------------------------------------------------
