@@ -17,13 +17,16 @@
 //!    engines;
 //! 3. the JSON report (`--out <path>`, default `BENCH_interp.json`) and
 //!    the CI gate (`--check`): fails on ANY divergence (kernels, fuzz
-//!    seeds, or optimized variants of either), a geo-mean speedup below
-//!    5x, or a mid-end dynamic-op reduction below 20% on `attention` /
-//!    `gf2mm`.
+//!    seeds, optimized variants, fuel-metering sweeps, or the hostile-
+//!    input no-panic smoke — every metric ending `_agree` must be 1),
+//!    a geo-mean speedup below 5x, or a mid-end dynamic-op reduction
+//!    below 20% on `attention` / `gf2mm`.
 //!
 //! `-- --test` is the CI smoke mode (fewer reps / seeds).
 
-use aquas::bench_harness::interp::{check_equivalent, check_opt_equivalent, random_program};
+use aquas::bench_harness::interp::{
+    check_equivalent, check_fuel_equivalent, check_opt_equivalent, random_program,
+};
 use aquas::ir::passes::{optimize, OptLevel};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
@@ -45,10 +48,14 @@ fn main() {
     let n_seeds: u64 = if quick { 32 } else { 128 };
     let mut failures: Vec<String> = Vec::new();
     let mut opt_failures: Vec<String> = Vec::new();
+    let mut fuel_failures: Vec<String> = Vec::new();
     for seed in 0..n_seeds {
         let f = random_program(seed);
         if let Err(e) = check_equivalent(&f, seed) {
             failures.push(e);
+        }
+        if let Err(e) = check_fuel_equivalent(&f, seed) {
+            fuel_failures.push(e);
         }
         match optimize(&f, OptLevel::O2) {
             Ok((opt, _)) => {
@@ -61,9 +68,10 @@ fn main() {
     }
     println!(
         "fuzz: {n_seeds} seeded random programs through both engines, {} divergence(s); \
-         optimized variants, {} divergence(s)",
+         optimized variants, {} divergence(s); fuel sweeps, {} divergence(s)",
         failures.len(),
-        opt_failures.len()
+        opt_failures.len(),
+        fuel_failures.len()
     );
     for e in &failures {
         eprintln!("FUZZ DIVERGENCE: {e}");
@@ -71,10 +79,14 @@ fn main() {
     for e in &opt_failures {
         eprintln!("OPT FUZZ DIVERGENCE: {e}");
     }
+    for e in &fuel_failures {
+        eprintln!("FUEL FUZZ DIVERGENCE: {e}");
+    }
     report.metric("fuzz_seeds", n_seeds as f64);
     report.metric("fuzz_agree", if failures.is_empty() { 1.0 } else { 0.0 });
     report.metric("opt_fuzz_seeds", n_seeds as f64);
     report.metric("opt_fuzz_agree", if opt_failures.is_empty() { 1.0 } else { 0.0 });
+    report.metric("fuel_fuzz_agree", if fuel_failures.is_empty() { 1.0 } else { 0.0 });
 
     println!("\n{}", report.render());
 

@@ -24,7 +24,12 @@
 //!   identically;
 //! - [`check_opt_equivalent`] and [`dynamic_ops`], the mid-end
 //!   (`ir::passes`) observational-equivalence check and the dynamic
-//!   op-count metric the `--check` optimization gates ride on.
+//!   op-count metric the `--check` optimization gates ride on;
+//! - [`check_fuel_equivalent`], the fuel-metering determinism check
+//!   (unlimited fuel bitwise-identical; budget exhaustion stops both
+//!   engines at the identical op), and [`no_panic_smoke`], the
+//!   hostile-input gate — both feed `_agree` metrics that the bench's
+//!   `--check` mode fails on.
 
 use std::time::Instant;
 
@@ -33,7 +38,7 @@ use crate::interface::model::InterfaceId;
 use crate::interface::TransactionKind;
 use crate::ir::builder::FuncBuilder;
 use crate::ir::func::BufferId;
-use crate::ir::interp::{self, ExecStats, Memory, Val};
+use crate::ir::interp::{self, ExecStats, Fuel, Memory, Val};
 use crate::ir::ops::CmpPred;
 use crate::ir::passes::{self, OptLevel, Pass};
 use crate::ir::types::Type;
@@ -519,6 +524,172 @@ pub fn check_opt_equivalent(
     memories_equal(unopt, &m1, &m2)
 }
 
+/// Fuel determinism: both engines must bill execution identically.
+///
+/// Checks, for one function and seed:
+/// - unlimited fuel is bitwise identical to the unfueled run on both
+///   engines (verdict, memory image, stats) and both record the same
+///   total spend;
+/// - for every budget in `{0, 1, spent/2, spent-1, spent}` the walker
+///   and the VM agree exactly — same verdict (including the error
+///   string of a fuel abort), same partial [`ExecStats`], same final
+///   [`Fuel`] state, same memory image;
+/// - a budget of exactly `spent` succeeds bitwise-identical to the
+///   unfueled baseline, and any smaller budget aborts (when the
+///   baseline itself succeeds).
+pub fn check_fuel_equivalent(func: &Func, seed: u64) -> std::result::Result<(), String> {
+    let name = &func.name;
+    let args = default_args(func);
+    let mut base = Memory::for_func(func);
+    seed_memory(func, &mut base, seed);
+
+    let same_verdict = |what: &str,
+                        a: &crate::error::Result<Vec<Val>>,
+                        b: &crate::error::Result<Vec<Val>>|
+     -> std::result::Result<(), String> {
+        match (a, b) {
+            (Ok(x), Ok(y))
+                if x.len() == y.len()
+                    && x.iter().zip(y.iter()).all(|(p, q)| vals_equal(p, q)) =>
+            {
+                Ok(())
+            }
+            (Err(e1), Err(e2)) if e1.to_string() == e2.to_string() => Ok(()),
+            _ => Err(format!("{name}: {what}: verdicts diverge: {a:?} vs {b:?}")),
+        }
+    };
+
+    // Unfueled walker baseline.
+    let mut m_ref = base.clone();
+    let mut s_ref = ExecStats::default();
+    let r_ref = interp::run_with_stats(func, &args, &mut m_ref, &mut s_ref);
+
+    // Unlimited fuel on both engines: bitwise identical to the baseline.
+    let mut spent_per_engine = Vec::new();
+    for (engine, is_vm) in [("walker", false), ("vm", true)] {
+        let mut m = base.clone();
+        let mut s = ExecStats::default();
+        let mut fuel = Fuel::unlimited();
+        let r = if is_vm {
+            vm::run_fueled(func, &args, &mut m, &mut s, &mut fuel)
+        } else {
+            interp::run_fueled(func, &args, &mut m, &mut s, &mut fuel)
+        };
+        same_verdict(&format!("{engine} unlimited-fuel"), &r_ref, &r)?;
+        if s != s_ref {
+            return Err(format!(
+                "{name}: {engine} unlimited-fuel stats diverge: {s:?} vs {s_ref:?}"
+            ));
+        }
+        memories_equal(func, &m_ref, &m)
+            .map_err(|e| format!("{e} ({engine} unlimited fuel)"))?;
+        spent_per_engine.push(fuel.spent());
+    }
+    let spent = spent_per_engine[0];
+    if spent_per_engine[1] != spent {
+        return Err(format!(
+            "{name}: engines bill different fuel: walker {spent} vs vm {}",
+            spent_per_engine[1]
+        ));
+    }
+
+    // Budget sweep: both engines must stop at the identical op with
+    // identical partial state, and exactly-enough fuel must succeed.
+    for budget in [0, 1, spent / 2, spent.saturating_sub(1), spent] {
+        let mut mw = base.clone();
+        let mut sw = ExecStats::default();
+        let mut fw = Fuel::new(budget);
+        let rw = interp::run_fueled(func, &args, &mut mw, &mut sw, &mut fw);
+
+        let mut mv = base.clone();
+        let mut sv = ExecStats::default();
+        let mut fv = Fuel::new(budget);
+        let rv = vm::run_fueled(func, &args, &mut mv, &mut sv, &mut fv);
+
+        same_verdict(&format!("budget {budget}"), &rw, &rv)?;
+        if sw != sv {
+            return Err(format!(
+                "{name}: budget {budget}: partial stats diverge: {sw:?} vs {sv:?}"
+            ));
+        }
+        if fw != fv {
+            return Err(format!(
+                "{name}: budget {budget}: fuel state diverges: {fw:?} vs {fv:?}"
+            ));
+        }
+        memories_equal(func, &mw, &mv)
+            .map_err(|e| format!("{e} (budget {budget})"))?;
+        if r_ref.is_ok() {
+            if budget >= spent {
+                same_verdict(&format!("exact budget {budget}"), &r_ref, &rw)?;
+                if sw != s_ref {
+                    return Err(format!(
+                        "{name}: exact budget {budget}: stats diverge from baseline"
+                    ));
+                }
+                memories_equal(func, &m_ref, &mw)
+                    .map_err(|e| format!("{e} (exact budget {budget})"))?;
+            } else {
+                let msg = match &rw {
+                    Err(e) => e.to_string(),
+                    Ok(v) => {
+                        return Err(format!(
+                            "{name}: budget {budget} < spent {spent} but run succeeded: {v:?}"
+                        ))
+                    }
+                };
+                if !msg.contains("fuel exhausted") {
+                    return Err(format!(
+                        "{name}: budget {budget}: expected a fuel abort, got `{msg}`"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Quick adversarial no-panic smoke for the bench gate: hostile strings
+/// through every parser and seeded random programs through verify →
+/// optimize → both engines, all under `catch_unwind`. Returns `false`
+/// if anything panicked (the full harness is `tests/no_panic.rs`).
+pub fn no_panic_smoke(cases: u64) -> bool {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let garbage = |rng: &mut Rng| -> String {
+        let atoms = [
+            "(", ")", "?", "?x", "f", "add", "const:0", "{", "}", "[", "]", ":",
+            ",", "\"", "\\", "=", "iters", "1e309", "-", "nul", "\u{0}", " ",
+        ];
+        (0..rng.range(0, 12)).map(|_| *rng.choose(&atoms)).collect()
+    };
+    for seed in 0..cases {
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed ^ 0x0BAD_CAFE);
+            let s = garbage(&mut rng);
+            let _ = crate::egraph::Pattern::try_parse(&s);
+            let _ = crate::util::json::Json::parse(&s);
+            let _ = crate::compiler::CompileBudget::parse(&s);
+            let f = random_program(seed);
+            let _ = crate::ir::verifier::verify(&f);
+            if let Ok((opt, _)) = passes::optimize(&f, OptLevel::O2) {
+                let args = default_args(&opt);
+                let mut m = Memory::for_func(&opt);
+                seed_memory(&opt, &mut m, seed);
+                let _ = interp::run(&opt, &args, &mut m);
+                if let Ok(c) = vm::compile(&opt) {
+                    let _ = c.run(&args, &mut m);
+                }
+            }
+        }))
+        .is_ok();
+        if !ok {
+            eprintln!("no-panic smoke: seed {seed} panicked");
+            return false;
+        }
+    }
+    true
+}
+
 /// Dynamic op count of one seeded execution: arithmetic + loads + stores
 /// + branches + transfers (the work the mid-end can actually remove;
 /// consts, casts and yields are free in both engines).
@@ -895,6 +1066,7 @@ pub fn report(quick: bool) -> Report {
     let mut speedups = Vec::new();
     let mut all_agree = true;
     let mut opt_all_agree = true;
+    let mut fuel_all_agree = true;
     for (name, func) in aot_cases() {
         let agree = match check_equivalent(&func, name_seed(name)) {
             Ok(()) => true,
@@ -904,6 +1076,18 @@ pub fn report(quick: bool) -> Report {
             }
         };
         all_agree &= agree;
+
+        // Fuel gate: metering must not perturb semantics (unlimited fuel
+        // bitwise-identical) and must exhaust identically on both engines.
+        let fuel_agree = match check_fuel_equivalent(&func, name_seed(name) ^ 0xF0E1) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("FUEL DIVERGENCE: {e}");
+                false
+            }
+        };
+        fuel_all_agree &= fuel_agree;
+        r.metric(&format!("{name}_fuel_agree"), if fuel_agree { 1.0 } else { 0.0 });
 
         let t0 = Instant::now();
         let compiled = vm::compile(&func).expect("AOT kernel compiles to bytecode");
@@ -965,6 +1149,10 @@ pub fn report(quick: bool) -> Report {
     r.metric("geomean_speedup_vs_legacy", geomean(&speedups));
     r.metric("all_agree", if all_agree { 1.0 } else { 0.0 });
     r.metric("opt_all_agree", if opt_all_agree { 1.0 } else { 0.0 });
+    r.metric("fuel_all_agree", if fuel_all_agree { 1.0 } else { 0.0 });
+    // Hostile-input smoke: parsers and engines must error, never abort.
+    let smoke = no_panic_smoke(if quick { 20 } else { 60 });
+    r.metric("no_panic_agree", if smoke { 1.0 } else { 0.0 });
     r
 }
 

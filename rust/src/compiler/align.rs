@@ -192,6 +192,7 @@ pub fn param_like_irf(builder: &mut crate::ir::FuncBuilder) -> Value {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::interface::cache::CacheHint;

@@ -88,7 +88,9 @@ impl<'a> Ctx<'a> {
     fn named(&mut self, args: std::fmt::Arguments<'_>, children: Vec<ClassId>) -> ClassId {
         use std::fmt::Write;
         self.scratch.clear();
-        self.scratch.write_fmt(args).expect("symbol format");
+        // Writing into a String cannot fail; swallow the Result to stay
+        // panic-free under the module-wide unwrap/expect deny.
+        let _ = self.scratch.write_fmt(args);
         let sym = self.g.sym(&self.scratch);
         self.g.add(ENode { sym, children })
     }
@@ -259,6 +261,7 @@ impl<'a> Ctx<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::interface::cache::CacheHint;

@@ -445,6 +445,7 @@ impl<'f> Rebuilder<'f> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::interface::cache::CacheHint;

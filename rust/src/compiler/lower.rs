@@ -43,6 +43,7 @@ pub fn replace_loop_with_intrinsic(func: &Func, target: OpRef, name: &str) -> Re
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compiler::matcher::top_loops;

@@ -104,7 +104,9 @@ pub fn match_isax(
     name: &str,
     opts: &CompileOptions,
 ) -> Result<MatchRound> {
-    let mut stats = CompileStats::default();
+    // Vacuously complete until a saturation run actually hits a budget
+    // (covers the early returns where nothing saturates at all).
+    let mut stats = CompileStats { saturation_complete: true, ..Default::default() };
     let mut g = EGraph::new();
     let sw_map = encode_func(&mut g, software);
     let isax_map = encode_func(&mut g, isax_aligned);
@@ -129,9 +131,9 @@ pub fn match_isax(
     tag_components(&mut g, isax_aligned, &isax_map, name);
 
     let runner = Runner {
-        iter_limit: opts.iter_limit,
-        node_limit: opts.node_limit,
-        ..Default::default()
+        iter_limit: opts.budget.iter_limit,
+        node_limit: opts.budget.node_limit,
+        match_limit: opts.budget.match_limit,
     };
     let rules = internal_rules();
 
@@ -169,10 +171,11 @@ pub fn match_isax(
         None
     };
 
-    for round in 0..=opts.external_budget {
+    for round in 0..=opts.budget.external_budget {
         // Interleave: match first (canonical programs need zero rewrites),
         // then saturate one iteration at a time, re-checking after each.
         let mut report = crate::egraph::RunReport::default();
+        let mut saturated = false;
         loop {
             if let Some((matched, _)) = try_match(&g, &variants, &isax_classes) {
                 // Tag the matched class with the ISAX marker (§5.4).
@@ -189,23 +192,33 @@ pub fn match_isax(
                 stats.internal_rewrites += report.applied;
                 stats.iterations += report.iterations;
                 stats.saturated_enodes = g.node_count();
+                stats.node_budget_hit |= report.node_limit_hit;
+                stats.match_budget_hit |= report.match_limit_hit;
+                // A found match means the budget sufficed for this run.
+                stats.saturation_complete = true;
                 stats.matched.push(name.to_string());
                 return Ok(MatchRound { matched_loop: Some(matched), stats });
             }
-            if report.iterations >= opts.iter_limit || report.node_limit_hit {
+            if report.iterations >= opts.budget.iter_limit || report.node_limit_hit {
                 break;
             }
             report.iterations += 1;
             let changed = runner.run_one(&mut g, &rules, &mut report);
             if !changed {
+                saturated = true;
                 break;
             }
         }
         stats.internal_rewrites += report.applied;
         stats.iterations += report.iterations;
         stats.saturated_enodes = g.node_count();
+        stats.node_budget_hit |= report.node_limit_hit;
+        stats.match_budget_hit |= report.match_limit_hit;
+        // Complete iff this round's saturation reached a true fixpoint
+        // rather than an iteration/node budget.
+        stats.saturation_complete = saturated;
 
-        if round == opts.external_budget {
+        if round == opts.budget.external_budget {
             break;
         }
 
@@ -315,6 +328,7 @@ fn tag_components(g: &mut EGraph, isax: &Func, map: &EncodeMap, name: &str) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::interface::cache::CacheHint;

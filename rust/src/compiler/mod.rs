@@ -25,6 +25,11 @@
 //! 5. **Lowering** ([`lower`]): tagged loops are replaced by `isax.<name>`
 //!    intrinsics; the rest of the program is untouched.
 
+// Panic-free audit (robustness): the compiler must reject hostile input
+// with `Error`, never abort. The deny propagates to every submodule;
+// test code opts back out per-module.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod align;
 pub mod encode;
 pub mod loop_passes;
@@ -33,7 +38,7 @@ pub mod matcher;
 pub mod rules;
 
 use crate::egraph::{EGraph, Runner};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::ir::Func;
 
 /// An ISAX available for offloading: its name plus the *functional-level*
@@ -44,7 +49,8 @@ pub struct IsaxDef {
     pub func: Func,
 }
 
-/// Compilation statistics (Table 3).
+/// Compilation statistics (Table 3), plus the budget outcome flags of
+/// the robustness contract: exhaustion is *observable*, never an error.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CompileStats {
     pub internal_rewrites: usize,
@@ -53,6 +59,28 @@ pub struct CompileStats {
     pub saturated_enodes: usize,
     pub iterations: usize,
     pub matched: Vec<String>,
+    /// Every saturation run either found its match or reached a true
+    /// fixpoint — no iteration/node/match budget cut it short.
+    pub saturation_complete: bool,
+    /// Some saturation run stopped at the e-graph node budget.
+    pub node_budget_hit: bool,
+    /// Some rule filled its per-iteration match budget at least once.
+    pub match_budget_hit: bool,
+    /// Mid-end pipeline rounds actually executed (0 when `opt_level < 2`).
+    pub pass_rounds_used: usize,
+    /// The mid-end stopped at its round budget before proving a fixpoint.
+    pub pass_budget_hit: bool,
+}
+
+impl CompileStats {
+    /// Any budget cut the pipeline short (the `aquas compile` /
+    /// `aquas opt` "budget exhausted" line).
+    pub fn budget_exhausted(&self) -> bool {
+        !self.saturation_complete
+            || self.node_budget_hit
+            || self.match_budget_hit
+            || self.pass_budget_hit
+    }
 }
 
 /// Result of compiling one software function against an ISAX library.
@@ -63,34 +91,96 @@ pub struct CompileResult {
     pub stats: CompileStats,
 }
 
-/// Compiler configuration.
-#[derive(Debug, Clone)]
-pub struct CompileOptions {
+/// Resource budgets for one compile. Exhausting any of these is **not an
+/// error**: saturation stops where it stands, extraction and the mid-end
+/// still run, and the result is verified, runnable IR — the outcome is
+/// recorded in [`CompileStats`] instead of failing the compile.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompileBudget {
     /// Saturation iteration limit per round.
     pub iter_limit: usize,
     /// E-graph node budget (§5.3: "suppressing e-graph blowup").
     pub node_limit: usize,
+    /// Matches applied per rule per iteration (anti-flood backstop).
+    pub match_limit: usize,
     /// Maximum external (loop-pass) rewrites to attempt per ISAX.
     pub external_budget: usize,
+    /// Mid-end pipeline fixpoint round cap.
+    pub pass_rounds: usize,
+}
+
+impl Default for CompileBudget {
+    fn default() -> Self {
+        Self {
+            iter_limit: 12,
+            node_limit: 100_000,
+            match_limit: 10_000,
+            external_budget: 6,
+            pass_rounds: crate::ir::passes::MAX_ROUNDS,
+        }
+    }
+}
+
+impl CompileBudget {
+    /// Parse a `key=value,key=value` budget spec (the `--budget` CLI
+    /// flag), e.g. `iters=4,nodes=20000,matches=500,external=2,rounds=8`.
+    /// Unknown keys and malformed values are diagnostic errors; omitted
+    /// keys keep their defaults. Never panics.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut b = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((key, val)) = part.split_once('=') else {
+                return Err(Error::Compiler(format!(
+                    "budget spec `{part}`: expected key=value"
+                )));
+            };
+            let (key, val) = (key.trim(), val.trim());
+            let bad = |what: &str| Error::Compiler(format!("budget spec {key}={val}: {what}"));
+            let n: usize = val.parse().map_err(|_| bad("not a non-negative integer"))?;
+            match key {
+                "iters" => b.iter_limit = n,
+                "nodes" => b.node_limit = n,
+                "matches" => {
+                    if n == 0 {
+                        return Err(bad("must be at least 1"));
+                    }
+                    b.match_limit = n;
+                }
+                "external" => b.external_budget = n,
+                "rounds" => b.pass_rounds = n,
+                _ => {
+                    return Err(Error::Compiler(format!(
+                        "budget spec: unknown key `{key}` \
+                         (expected iters|nodes|matches|external|rounds)"
+                    )))
+                }
+            }
+        }
+        Ok(b)
+    }
+}
+
+/// Compiler configuration.
+#[derive(Debug, Clone, Default)]
+pub struct CompileOptions {
+    /// Resource budgets (saturation, matching, mid-end rounds).
+    pub budget: CompileBudget,
     /// Mid-end effort applied to the lowered program after matching:
     /// `0` leaves the extracted IR untouched, `2` runs the full
     /// `ir::passes` pipeline (SCCP/CSE/LICM/sink/DCE) to a fixpoint.
     pub opt_level: u8,
 }
 
-impl Default for CompileOptions {
-    fn default() -> Self {
-        Self { iter_limit: 12, node_limit: 100_000, external_budget: 6, opt_level: 0 }
-    }
-}
-
 /// Compile: offload every matching loop of `software` onto the ISAXs.
+/// Budget exhaustion (see [`CompileBudget`]) never fails this function:
+/// a starved compile still returns verified, runnable IR, with the
+/// truncation recorded in [`CompileStats`].
 pub fn compile(
     software: &Func,
     isaxes: &[IsaxDef],
     opts: &CompileOptions,
 ) -> Result<CompileResult> {
-    let mut stats = CompileStats::default();
+    let mut stats = CompileStats { saturation_complete: true, ..Default::default() };
     let mut current = align::canonicalize_software(software);
 
     for isax in isaxes {
@@ -99,6 +189,9 @@ pub fn compile(
         stats.internal_rewrites += round.stats.internal_rewrites;
         stats.external_rewrites += round.stats.external_rewrites;
         stats.iterations += round.stats.iterations;
+        stats.saturation_complete &= round.stats.saturation_complete;
+        stats.node_budget_hit |= round.stats.node_budget_hit;
+        stats.match_budget_hit |= round.stats.match_budget_hit;
         if stats.initial_enodes == 0 {
             stats.initial_enodes = round.stats.initial_enodes;
         }
@@ -112,8 +205,14 @@ pub fn compile(
     // pipeline when requested. Matching already happened, so this only
     // cleans the residual software portions around the intrinsics.
     if opts.opt_level >= 2 {
-        let (optimized, _) = crate::ir::passes::optimize(&current, crate::ir::passes::OptLevel::O2)?;
+        let (optimized, pstats) = crate::ir::passes::optimize_with_budget(
+            &current,
+            crate::ir::passes::OptLevel::O2,
+            opts.budget.pass_rounds,
+        )?;
         current = optimized;
+        stats.pass_rounds_used = pstats.rounds;
+        stats.pass_budget_hit = pstats.budget_hit;
     }
     Ok(CompileResult { func: current, stats })
 }
@@ -123,9 +222,92 @@ pub fn compile(
 pub fn saturate_func(func: &Func, opts: &CompileOptions) -> (EGraph, encode::EncodeMap) {
     let mut g = EGraph::new();
     let map = encode::encode_func(&mut g, func);
-    let runner =
-        Runner { iter_limit: opts.iter_limit, node_limit: opts.node_limit, ..Default::default() };
+    let runner = Runner {
+        iter_limit: opts.budget.iter_limit,
+        node_limit: opts.budget.node_limit,
+        match_limit: opts.budget.match_limit,
+    };
     let rs = rules::internal_rules();
     runner.run(&mut g, &rs);
     (g, map)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_spec_parses_and_rejects_malformed_input() {
+        let b = CompileBudget::parse("iters=4, nodes=20000 ,matches=500,external=2,rounds=8")
+            .unwrap();
+        assert_eq!(b.iter_limit, 4);
+        assert_eq!(b.node_limit, 20_000);
+        assert_eq!(b.match_limit, 500);
+        assert_eq!(b.external_budget, 2);
+        assert_eq!(b.pass_rounds, 8);
+        // Empty spec and stray commas keep the defaults.
+        assert_eq!(CompileBudget::parse("").unwrap(), CompileBudget::default());
+        assert_eq!(CompileBudget::parse(" , ,").unwrap(), CompileBudget::default());
+        // (input, expected fragment in the diagnostic)
+        let table = [
+            ("iters", "expected key=value"),
+            ("iters=", "not a non-negative integer"),
+            ("iters=abc", "not a non-negative integer"),
+            ("iters=-1", "not a non-negative integer"),
+            ("matches=0", "must be at least 1"),
+            ("warp=9", "unknown key"),
+        ];
+        for (spec, want) in table {
+            let err = CompileBudget::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(want), "{spec:?}: got {err:?}, want {want:?}");
+        }
+    }
+
+    #[test]
+    fn starved_budget_still_compiles_and_reports_exhaustion() {
+        use crate::interface::cache::CacheHint;
+        use crate::ir::builder::FuncBuilder;
+        use crate::runtime::DType;
+        // Software spelled with a shift; the ISAX multiplies. Matching
+        // needs internal rewrites, which a zero-iteration budget forbids.
+        let mk = |name: &str, shl: bool| {
+            let mut b = FuncBuilder::new(name);
+            let x = b.global("x", DType::I32, 16, CacheHint::Unknown);
+            let y = b.global("y", DType::I32, 16, CacheHint::Unknown);
+            b.for_range(0, 16, 1, |b, iv| {
+                let v = b.load(x, iv);
+                let w = if shl {
+                    let two = b.const_i(2);
+                    b.shl(v, two)
+                } else {
+                    let four = b.const_i(4);
+                    b.mul(v, four)
+                };
+                b.store(y, iv, w);
+            });
+            b.finish(&[])
+        };
+        let software = mk("app", true);
+        let isaxes = [IsaxDef { name: "vscale".into(), func: mk("vscale", false) }];
+        let starved = CompileOptions {
+            budget: CompileBudget { iter_limit: 0, external_budget: 0, ..Default::default() },
+            opt_level: 2,
+        };
+        let r = compile(&software, &isaxes, &starved).unwrap();
+        // No match under starvation, but the output is verified IR that
+        // still runs — degradation, not failure.
+        assert!(r.stats.matched.is_empty());
+        assert!(!r.stats.saturation_complete);
+        assert!(r.stats.budget_exhausted());
+        crate::ir::verifier::verify(&r.func).unwrap();
+        let mut mem = crate::ir::interp::Memory::for_func(&r.func);
+        crate::ir::interp::run(&r.func, &[], &mut mem).unwrap();
+
+        // A default budget on the same pair matches and is complete.
+        let r = compile(&software, &isaxes, &CompileOptions::default()).unwrap();
+        assert_eq!(r.stats.matched, vec!["vscale".to_string()]);
+        assert!(r.stats.saturation_complete);
+        assert!(!r.stats.budget_exhausted());
+    }
 }

@@ -162,6 +162,7 @@ pub fn affine_cost(sym: &str, kids: &[f64]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::egraph::{extract_best, EGraph, Runner};

@@ -108,6 +108,13 @@ pub struct CoordinatorConfig {
     /// TTFT service-level objective (simulated ms) used by
     /// [`SchedulePolicy::Fair`] deadlines.
     pub slo_ttft_ms: f64,
+    /// Per-request decode fuel ceiling: simulated ISAX cycles allowed per
+    /// token of the request's generation budget (`max_new_tokens`). A
+    /// sequence whose accumulated `sim_isax_cycles` exceeds
+    /// `ceiling * max_new_tokens` is retired early and counted as shed —
+    /// a runaway kernel becomes a shed request, not a hung SoC. `None`
+    /// (the default) disables the check and is bitwise-invisible.
+    pub decode_fuel_per_token: Option<f64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -118,6 +125,7 @@ impl Default for CoordinatorConfig {
             llm: LlmConfig::default(),
             kv: PagedKvConfig::default(),
             slo_ttft_ms: 2000.0,
+            decode_fuel_per_token: None,
         }
     }
 }
@@ -338,8 +346,9 @@ impl<'rt> Coordinator<'rt> {
         self.preemptions
     }
 
-    /// Waiting requests shed by the graceful-degradation ladder (always
-    /// 0 unless the SoC layer armed the ladder via a fault plan).
+    /// Requests shed: by the graceful-degradation ladder (only when the
+    /// SoC layer armed it via a fault plan) or by the per-request decode
+    /// fuel ceiling ([`CoordinatorConfig::decode_fuel_per_token`]).
     pub fn shed_requests(&self) -> u64 {
         self.shed
     }
@@ -1005,8 +1014,18 @@ impl<'rt> Coordinator<'rt> {
             act.last_token_ms = now;
             act.sim_isax_cycles += share;
             act.sim_base_cycles += self.base_model.token_cycles(&self.cfg.llm, act.len);
+            // Fuel ceiling: a sequence whose simulated decode spend blows
+            // past its per-token allowance is cut off and counted as shed
+            // (PR 7 degradation ladder semantics) — the already-generated
+            // prefix is still delivered through normal retirement.
+            let over_fuel = self.cfg.decode_fuel_per_token.is_some_and(|per_tok| {
+                act.sim_isax_cycles > per_tok * act.req.max_new_tokens as f64
+            });
             if act.generated.len() >= act.req.max_new_tokens || act.len >= max_seq {
                 retired.push(*id);
+            } else if over_fuel {
+                retired.push(*id);
+                self.shed += 1;
             }
         }
         for id in retired {

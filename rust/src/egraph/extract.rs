@@ -4,6 +4,10 @@
 //! (penalize non-affine ops, prefer ISAX markers) and by the
 //! extract-to-run-MLIR-pass path of §5.2.
 
+// Panic-free audit (robustness): extraction must degrade (return `None`)
+// on unextractable classes, never abort. Test code is exempt.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::HashMap;
 
 use crate::egraph::graph::{ClassId, EGraph, ENode};
@@ -105,6 +109,7 @@ pub fn weighted_cost<'a>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::egraph::rewrite::{Rewrite, Runner};

@@ -25,6 +25,10 @@
 //!   possible, so matching holds no `&mut` borrow and allocates nothing
 //!   per candidate node.
 
+// Panic-free audit (robustness): internal invariants use `unreachable!`,
+// never `unwrap`/`expect` on values user input could influence.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
@@ -186,7 +190,7 @@ impl EGraph {
         for &ch in &node.children {
             self.classes[ch.0 as usize]
                 .as_mut()
-                .expect("canonical child class is live")
+                .unwrap_or_else(|| unreachable!("canonical child class is live"))
                 .parents
                 .push((node.clone(), id));
         }
@@ -217,11 +221,12 @@ impl EGraph {
         }
         let keep = self.uf.union(ra, rb);
         let drop = if keep == ra { rb } else { ra };
-        let dropped =
-            self.classes[drop.0 as usize].take().expect("canonical class is live");
+        let dropped = self.classes[drop.0 as usize]
+            .take()
+            .unwrap_or_else(|| unreachable!("canonical class is live"));
         let kept = self.classes[keep.0 as usize]
             .as_mut()
-            .expect("canonical class is live");
+            .unwrap_or_else(|| unreachable!("canonical class is live"));
         kept.nodes.extend(dropped.nodes);
         kept.parents.extend(dropped.parents);
         self.live_classes -= 1;
@@ -254,7 +259,7 @@ impl EGraph {
         let parents = {
             let cls = self.classes[id.0 as usize]
                 .as_mut()
-                .expect("repair target is live");
+                .unwrap_or_else(|| unreachable!("repair target is live"));
             std::mem::take(&mut cls.parents)
         };
         if parents.is_empty() {
@@ -295,7 +300,7 @@ impl EGraph {
             self.memo.insert(pnode.clone(), pclass);
             self.classes[id.0 as usize]
                 .as_mut()
-                .expect("repair target is live")
+                .unwrap_or_else(|| unreachable!("repair target is live"))
                 .parents
                 .push((pnode, pclass));
         }
@@ -378,6 +383,7 @@ impl EGraph {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

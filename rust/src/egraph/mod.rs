@@ -18,6 +18,10 @@
 //! [`rewrite`] (pattern language + compiled matcher + saturation engine
 //! with iteration/node limits), [`extract`] (cost-based extraction).
 
+// Panic-free audit (robustness): see the per-module denies in the
+// submodules; this module itself holds only re-exports.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod extract;
 pub mod graph;
 pub mod rewrite;

@@ -16,9 +16,14 @@
 //! all rules to saturation under iteration and node-count limits — the
 //! paper's antidote to e-graph blowup.
 
+// Panic-free audit (robustness): malformed patterns must surface as
+// `Error`, never abort the process. Test code is exempt.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::HashMap;
 
 use crate::egraph::graph::{ClassId, EGraph, ENode, SymId};
+use crate::error::{Error, Result};
 
 /// A pattern: variable or symbol application.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -31,11 +36,26 @@ pub enum Pattern {
 
 impl Pattern {
     /// Parse a tiny s-expression: `(mul ?x (const:4))`, `?x`, `iv:0`.
+    /// Panics on malformed text — for the compile-time rule tables in
+    /// [`crate::compiler::rules`], where a bad pattern is a programming
+    /// error. Anything user-controllable goes through [`Self::try_parse`].
     pub fn parse(text: &str) -> Pattern {
+        match Self::try_parse(text) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible parse: malformed text (empty input, unbalanced parens,
+    /// a bare `?`, pathological nesting) is a diagnostic [`Error::Egraph`],
+    /// never a panic.
+    pub fn try_parse(text: &str) -> Result<Pattern> {
         let tokens = tokenize(text);
-        let (p, rest) = parse_tokens(&tokens);
-        assert!(rest.is_empty(), "trailing tokens in pattern {text:?}");
-        p
+        let (p, rest) = try_parse_tokens(&tokens, text, 0)?;
+        if !rest.is_empty() {
+            return Err(Error::Egraph(format!("trailing tokens in pattern {text:?}")));
+        }
+        Ok(p)
     }
 
     /// Variables bound by this pattern.
@@ -65,24 +85,58 @@ fn tokenize(text: &str) -> Vec<String> {
         .collect()
 }
 
-fn parse_tokens(tokens: &[String]) -> (Pattern, &[String]) {
+/// Nesting bound for [`Pattern::try_parse`]: the recursive-descent parser
+/// recurses per `(`, so hostile input must not be able to blow the stack
+/// (a stack overflow aborts the process and escapes `catch_unwind`).
+const MAX_PATTERN_DEPTH: usize = 256;
+
+fn try_parse_tokens<'t>(
+    tokens: &'t [String],
+    text: &str,
+    depth: usize,
+) -> Result<(Pattern, &'t [String])> {
+    if depth > MAX_PATTERN_DEPTH {
+        return Err(Error::Egraph(format!(
+            "pattern nested deeper than {MAX_PATTERN_DEPTH}: {text:?}"
+        )));
+    }
     match tokens.first().map(String::as_str) {
         Some("(") => {
-            let head = tokens[1].clone();
+            let head = match tokens.get(1).map(String::as_str) {
+                Some("(") | Some(")") | None => {
+                    return Err(Error::Egraph(format!(
+                        "expected symbol after `(` in pattern {text:?}"
+                    )))
+                }
+                Some(h) => h.to_string(),
+            };
             let mut rest = &tokens[2..];
             let mut kids = Vec::new();
-            while rest.first().map(String::as_str) != Some(")") {
-                let (p, r) = parse_tokens(rest);
-                kids.push(p);
-                rest = r;
+            loop {
+                match rest.first().map(String::as_str) {
+                    Some(")") => break,
+                    Some(_) => {
+                        let (p, r) = try_parse_tokens(rest, text, depth + 1)?;
+                        kids.push(p);
+                        rest = r;
+                    }
+                    None => {
+                        return Err(Error::Egraph(format!(
+                            "unbalanced parens in pattern {text:?}"
+                        )))
+                    }
+                }
             }
-            (Pattern::App(head, kids), &rest[1..])
+            Ok((Pattern::App(head, kids), &rest[1..]))
         }
         Some(tok) if tok.starts_with('?') => {
-            (Pattern::Var(tok[1..].to_string()), &tokens[1..])
+            if tok.len() == 1 {
+                return Err(Error::Egraph(format!("bare `?` variable in pattern {text:?}")));
+            }
+            Ok((Pattern::Var(tok[1..].to_string()), &tokens[1..]))
         }
-        Some(tok) => (Pattern::App(tok.to_string(), vec![]), &tokens[1..]),
-        None => panic!("empty pattern"),
+        Some(tok) => Ok((Pattern::App(tok.to_string(), vec![]), &tokens[1..])),
+        None => Err(Error::Egraph(format!("empty pattern {text:?}"))),
     }
 }
 
@@ -324,7 +378,9 @@ impl CompiledTemplate {
             };
             vals.push(v);
         }
-        *vals.last().expect("non-empty template")
+        // `steps` is non-empty by construction (`compile` always walks at
+        // least the root), so `last()` cannot miss.
+        vals.last().copied().unwrap_or_else(|| unreachable!("non-empty template"))
     }
 }
 
@@ -408,6 +464,10 @@ pub struct RunReport {
     pub per_rule: Vec<(String, usize)>,
     pub saturated: bool,
     pub node_limit_hit: bool,
+    /// Some rule's search filled its per-iteration match budget
+    /// ([`Runner::match_limit`]) at least once: the rule set may have
+    /// more matches than were applied.
+    pub match_limit_hit: bool,
 }
 
 /// The saturation engine.
@@ -461,6 +521,9 @@ impl Runner {
                 continue;
             }
             let n_regs = rule.prog.frame_len();
+            if frames.len() >= self.match_limit * n_regs {
+                report.match_limit_hit = true;
+            }
             // Intern template symbols once per rule per iteration, not per
             // applied match.
             let tsyms: Option<Vec<SymId>> = match &rule.action {
@@ -472,11 +535,12 @@ impl Runner {
             let mut rule_changed = false;
             for frame in frames.chunks(n_regs) {
                 let c = frame[0];
-                let replacement = match &rule.action {
-                    Action::Template(t) => {
-                        Some(t.apply(g, tsyms.as_ref().expect("template syms"), frame))
-                    }
-                    Action::Dynamic(f) => {
+                let replacement = match (&rule.action, &tsyms) {
+                    (Action::Template(t), Some(ts)) => Some(t.apply(g, ts, frame)),
+                    // Unreachable pairing (tsyms is Some exactly for
+                    // templates); skipping is the panic-free fallback.
+                    (Action::Template(_), None) => None,
+                    (Action::Dynamic(f), _) => {
                         let binds = rule.bindings(g, frame);
                         f(g, &binds)
                     }
@@ -507,8 +571,54 @@ impl Runner {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn malformed_patterns_error_instead_of_panicking() {
+        // (input, expected fragment in the diagnostic)
+        let table = [
+            ("", "empty pattern"),
+            ("   ", "empty pattern"),
+            ("(", "expected symbol after `(`"),
+            ("()", "expected symbol after `(`"),
+            ("((", "expected symbol after `(`"),
+            ("(mul ?x", "unbalanced parens"),
+            ("(mul ?x ?y) extra", "trailing tokens"),
+            ("(mul ?x ?y))", "trailing tokens"),
+            ("?", "bare `?`"),
+            ("(add ? ?y)", "bare `?`"),
+        ];
+        for (text, want) in table {
+            let err = Pattern::try_parse(text).unwrap_err().to_string();
+            assert!(err.contains(want), "{text:?}: got {err:?}, want {want:?}");
+        }
+        // Pathological nesting errors out instead of blowing the stack.
+        let deep = "(f ".repeat(10_000) + "x" + &")".repeat(10_000);
+        let err = Pattern::try_parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nested deeper"), "{err}");
+        // Well-formed input still round-trips through the fallible path.
+        assert_eq!(Pattern::try_parse("(mul ?x const:4)").unwrap(), Pattern::parse("(mul ?x const:4)"));
+    }
+
+    #[test]
+    fn match_limit_hit_is_reported() {
+        let mut g = EGraph::new();
+        for i in 0..20 {
+            let x = g.add_named(&format!("x{i}"), vec![]);
+            g.add_named("f", vec![x]);
+        }
+        let rules = vec![Rewrite::simple("wrap", "(f ?x)", "(g ?x)")];
+        let capped = Runner { match_limit: 5, ..Default::default() };
+        let report = capped.run(&mut g, &rules);
+        assert!(report.match_limit_hit);
+        let mut g2 = EGraph::new();
+        let x = g2.add_named("x", vec![]);
+        g2.add_named("f", vec![x]);
+        let report = Runner::default().run(&mut g2, &rules);
+        assert!(!report.match_limit_hit);
+    }
 
     #[test]
     fn parse_roundtrip() {

@@ -35,6 +35,18 @@ pub enum Error {
     /// Artifact manifest problems.
     Manifest(String),
 
+    /// Execution fuel exhausted: the program was stopped deterministically
+    /// after `spent` charged fuel units, at the `at_op`-th billable event.
+    /// Both IR engines (tree-walker and bytecode VM) raise this at the
+    /// *identical* event for the same program and budget.
+    Fuel {
+        /// Fuel units charged before the budget ran out.
+        spent: u64,
+        /// Ordinal of the billable event that could not be afforded
+        /// (equal to the count of successfully charged events).
+        at_op: u64,
+    },
+
     /// I/O failure (file system access).
     Io(std::io::Error),
 }
@@ -51,6 +63,9 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Fuel { spent, at_op } => {
+                write!(f, "fuel exhausted: {spent} units spent, stopped at op {at_op}")
+            }
             Error::Io(e) => write!(f, "{e}"),
         }
     }

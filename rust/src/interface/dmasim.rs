@@ -600,6 +600,19 @@ impl IssueClock {
     pub fn makespan(&self) -> u64 {
         self.chans.iter().map(|c| c.b_prev.max(0) as u64).max().unwrap_or(0)
     }
+
+    /// Beat count a transaction of `size` bytes would occupy on `itfc`,
+    /// without advancing the clock. Fuel metering bills issued copies by
+    /// this count *before* calling [`IssueClock::issue`]; unknown
+    /// interface ids price as 0 so the subsequent `issue` raises the same
+    /// hard error it always did (at the identical fuel spend in both IR
+    /// engines). Zero-size issues are no-ops and price as 0.
+    pub fn txn_beats(&self, itfc: InterfaceId, size: usize) -> u64 {
+        match self.itfcs.interfaces.get(itfc.0) {
+            Some(m) if size > 0 => beats_of(m, size).max(0) as u64,
+            _ => 0,
+        }
+    }
 }
 
 #[cfg(test)]

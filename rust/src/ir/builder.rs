@@ -4,6 +4,13 @@
 //! closures that build the nested body. All workload programs
 //! (`crate::workloads`) and ISAX descriptions are written against this.
 
+// Panic-free audit (robustness): emission is split into `emit1` (always
+// produces a value) / `emit0` (never does), so no site unwraps an Option
+// that is Some by construction. Arity misuse of the *builder API itself*
+// (mismatched yields, unclosed regions) still asserts — that is a bug in
+// the calling Rust code, not hostile input.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::interface::cache::CacheHint;
 use crate::interface::model::InterfaceId;
 use crate::interface::TransactionKind;
@@ -80,31 +87,45 @@ impl FuncBuilder {
 
     // ----- op emission helpers -------------------------------------------
 
-    fn emit(
-        &mut self,
-        kind: OpKind,
-        operands: Vec<Value>,
-        result_ty: Option<Type>,
-    ) -> Option<Value> {
-        let results = result_ty.map(|ty| vec![self.func.new_value(ty)]).unwrap_or_default();
-        let out = results.first().copied();
-        let op = Op::new(kind, operands, results);
+    /// The open region ops append to. The stack is non-empty by
+    /// construction (`new` seeds it; pops pair with pushes), so the
+    /// fallback re-opening a region is unreachable in practice — it
+    /// exists to keep emission total under the unwrap/expect deny.
+    fn top(&mut self) -> &mut Region {
+        if self.stack.is_empty() {
+            self.stack.push(Region::default());
+        }
+        let last = self.stack.len() - 1;
+        &mut self.stack[last]
+    }
+
+    /// Emit an op that produces exactly one value of type `ty`.
+    fn emit1(&mut self, kind: OpKind, operands: Vec<Value>, ty: Type) -> Value {
+        let out = self.func.new_value(ty);
+        let op = Op::new(kind, operands, vec![out]);
         let opref = self.func.add_op(op);
-        self.stack.last_mut().expect("no open region").ops.push(opref);
+        self.top().ops.push(opref);
         out
     }
 
+    /// Emit an op that produces no values.
+    fn emit0(&mut self, kind: OpKind, operands: Vec<Value>) {
+        let op = Op::new(kind, operands, vec![]);
+        let opref = self.func.add_op(op);
+        self.top().ops.push(opref);
+    }
+
     pub fn const_i(&mut self, v: i64) -> Value {
-        self.emit(OpKind::ConstI(v), vec![], Some(Type::Int)).unwrap()
+        self.emit1(OpKind::ConstI(v), vec![], Type::Int)
     }
 
     pub fn const_f(&mut self, v: f64) -> Value {
-        self.emit(OpKind::ConstF(v), vec![], Some(Type::Float)).unwrap()
+        self.emit1(OpKind::ConstF(v), vec![], Type::Float)
     }
 
     fn binop(&mut self, kind: OpKind, a: Value, b: Value) -> Value {
         let ty = self.func.value_type(a);
-        self.emit(kind, vec![a, b], Some(ty)).unwrap()
+        self.emit1(kind, vec![a, b], ty)
     }
 
     pub fn add(&mut self, a: Value, b: Value) -> Value {
@@ -146,36 +167,36 @@ impl FuncBuilder {
 
     pub fn neg(&mut self, a: Value) -> Value {
         let ty = self.func.value_type(a);
-        self.emit(OpKind::Neg, vec![a], Some(ty)).unwrap()
+        self.emit1(OpKind::Neg, vec![a], ty)
     }
 
     pub fn sqrt(&mut self, a: Value) -> Value {
-        self.emit(OpKind::Sqrt, vec![a], Some(Type::Float)).unwrap()
+        self.emit1(OpKind::Sqrt, vec![a], Type::Float)
     }
 
     pub fn exp(&mut self, a: Value) -> Value {
-        self.emit(OpKind::Exp, vec![a], Some(Type::Float)).unwrap()
+        self.emit1(OpKind::Exp, vec![a], Type::Float)
     }
 
     pub fn powi(&mut self, a: Value, e: u32) -> Value {
-        self.emit(OpKind::Powi(e), vec![a], Some(Type::Float)).unwrap()
+        self.emit1(OpKind::Powi(e), vec![a], Type::Float)
     }
 
     pub fn to_float(&mut self, a: Value) -> Value {
-        self.emit(OpKind::ToFloat, vec![a], Some(Type::Float)).unwrap()
+        self.emit1(OpKind::ToFloat, vec![a], Type::Float)
     }
 
     pub fn to_int(&mut self, a: Value) -> Value {
-        self.emit(OpKind::ToInt, vec![a], Some(Type::Int)).unwrap()
+        self.emit1(OpKind::ToInt, vec![a], Type::Int)
     }
 
     pub fn cmp(&mut self, pred: CmpPred, a: Value, b: Value) -> Value {
-        self.emit(OpKind::Cmp(pred), vec![a, b], Some(Type::Int)).unwrap()
+        self.emit1(OpKind::Cmp(pred), vec![a, b], Type::Int)
     }
 
     pub fn select(&mut self, cond: Value, a: Value, b: Value) -> Value {
         let ty = self.func.value_type(a);
-        self.emit(OpKind::Select, vec![cond, a, b], Some(ty)).unwrap()
+        self.emit1(OpKind::Select, vec![cond, a, b], ty)
     }
 
     // ----- memory ----------------------------------------------------------
@@ -189,11 +210,11 @@ impl FuncBuilder {
 
     pub fn load(&mut self, buf: BufferId, index: Value) -> Value {
         let ty = self.elem_ty(buf);
-        self.emit(OpKind::Load(buf), vec![index], Some(ty)).unwrap()
+        self.emit1(OpKind::Load(buf), vec![index], ty)
     }
 
     pub fn store(&mut self, buf: BufferId, index: Value, value: Value) {
-        self.emit(OpKind::Store(buf), vec![index, value], None);
+        self.emit0(OpKind::Store(buf), vec![index, value]);
     }
 
     pub fn transfer(
@@ -204,29 +225,29 @@ impl FuncBuilder {
         src_off: Value,
         size: usize,
     ) {
-        self.emit(OpKind::Transfer { dst, src, size }, vec![dst_off, src_off], None);
+        self.emit0(OpKind::Transfer { dst, src, size }, vec![dst_off, src_off]);
     }
 
     pub fn fetch(&mut self, buf: BufferId, index: Value) -> Value {
         let ty = self.elem_ty(buf);
-        self.emit(OpKind::Fetch(buf), vec![index], Some(ty)).unwrap()
+        self.emit1(OpKind::Fetch(buf), vec![index], ty)
     }
 
     pub fn read_smem(&mut self, buf: BufferId, index: Value) -> Value {
         let ty = self.elem_ty(buf);
-        self.emit(OpKind::ReadSmem(buf), vec![index], Some(ty)).unwrap()
+        self.emit1(OpKind::ReadSmem(buf), vec![index], ty)
     }
 
     pub fn write_smem(&mut self, buf: BufferId, index: Value, value: Value) {
-        self.emit(OpKind::WriteSmem(buf), vec![index, value], None);
+        self.emit0(OpKind::WriteSmem(buf), vec![index, value]);
     }
 
     pub fn read_irf(&mut self, reg: u8) -> Value {
-        self.emit(OpKind::ReadIrf(reg), vec![], Some(Type::Int)).unwrap()
+        self.emit1(OpKind::ReadIrf(reg), vec![], Type::Int)
     }
 
     pub fn write_irf(&mut self, reg: u8, value: Value) {
-        self.emit(OpKind::WriteIrf(reg), vec![value], None);
+        self.emit0(OpKind::WriteIrf(reg), vec![value]);
     }
 
     pub fn copy(
@@ -239,7 +260,7 @@ impl FuncBuilder {
         size: usize,
         kind: TransactionKind,
     ) {
-        self.emit(OpKind::Copy { itfc, dst, src, size, kind }, vec![dst_off, src_off], None);
+        self.emit0(OpKind::Copy { itfc, dst, src, size, kind }, vec![dst_off, src_off]);
     }
 
     pub fn intrinsic(
@@ -248,11 +269,12 @@ impl FuncBuilder {
         operands: Vec<Value>,
         has_result: bool,
     ) -> Option<Value> {
-        self.emit(
-            OpKind::Intrinsic(name.into()),
-            operands,
-            has_result.then_some(Type::Int),
-        )
+        if has_result {
+            Some(self.emit1(OpKind::Intrinsic(name.into()), operands, Type::Int))
+        } else {
+            self.emit0(OpKind::Intrinsic(name.into()), operands);
+            None
+        }
     }
 
     // ----- control flow ------------------------------------------------------
@@ -285,9 +307,9 @@ impl FuncBuilder {
 
         let yields = body(self, iv, &carried);
         assert_eq!(yields.len(), init.len(), "for: yield arity != iter_args arity");
-        self.emit(OpKind::Yield, yields, None);
+        self.emit0(OpKind::Yield, yields);
 
-        let region = self.stack.pop().expect("region stack underflow");
+        let region = self.stack.pop().unwrap_or_default();
         let results: Vec<Value> = init
             .iter()
             .map(|&v| {
@@ -300,7 +322,7 @@ impl FuncBuilder {
         let mut op = Op::new(OpKind::For, operands, results.clone());
         op.regions.push(region);
         let opref = self.func.add_op(op);
-        self.stack.last_mut().expect("no open region").ops.push(opref);
+        self.top().ops.push(opref);
         results
     }
 
@@ -327,14 +349,14 @@ impl FuncBuilder {
     {
         self.stack.push(Region::default());
         let tvals = then(self);
-        self.emit(OpKind::Yield, tvals.clone(), None);
-        let then_region = self.stack.pop().unwrap();
+        self.emit0(OpKind::Yield, tvals.clone());
+        let then_region = self.stack.pop().unwrap_or_default();
 
         self.stack.push(Region::default());
         let evals = els(self);
         assert_eq!(tvals.len(), evals.len(), "if: arm yield arity mismatch");
-        self.emit(OpKind::Yield, evals, None);
-        let else_region = self.stack.pop().unwrap();
+        self.emit0(OpKind::Yield, evals);
+        let else_region = self.stack.pop().unwrap_or_default();
 
         let results: Vec<Value> = tvals
             .iter()
@@ -347,15 +369,15 @@ impl FuncBuilder {
         op.regions.push(then_region);
         op.regions.push(else_region);
         let opref = self.func.add_op(op);
-        self.stack.last_mut().expect("no open region").ops.push(opref);
+        self.top().ops.push(opref);
         results
     }
 
     /// Finish with `return values` and produce the function.
     pub fn finish(mut self, values: &[Value]) -> Func {
-        self.emit(OpKind::Return, values.to_vec(), None);
+        self.emit0(OpKind::Return, values.to_vec());
         assert_eq!(self.stack.len(), 1, "unclosed regions at finish()");
-        self.func.entry = self.stack.pop().unwrap();
+        self.func.entry = self.stack.pop().unwrap_or_default();
         self.func
     }
 
@@ -366,6 +388,7 @@ impl FuncBuilder {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

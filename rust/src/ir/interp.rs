@@ -259,6 +259,75 @@ pub struct MemAccess {
     pub is_store: bool,
 }
 
+/// Deterministic execution fuel, shared by the tree-walker and the
+/// bytecode VM ([`crate::ir::vm`]).
+///
+/// Fuel is charged **per billable event**, at exactly the sites where
+/// [`ExecStats`] counters increment (one unit per arith op / load /
+/// store / transfer / branch / loop iteration / intrinsic call, `e`
+/// units for `powi(e)`), plus one unit each for `read_irf`/`write_irf`
+/// and `copy_wait`, plus the simulated §4.1 DMA beat count on every
+/// `copy_issue` (via [`IssueClock::txn_beats`]). Consts, casts
+/// (`to_float`/`to_int`), yields and returns are free — the VM executes
+/// them differently (consts preload, stores emit coercion casts), so
+/// billing them would break cross-engine determinism.
+///
+/// Charging is **pre-execution**: when the next event cannot be
+/// afforded, [`Error::Fuel`] is raised *before* the op runs — no memory
+/// mutation, no stats increment. Both engines therefore stop at the
+/// identical event with identical partial stats and identical memory
+/// images. An unlimited budget ([`Fuel::unlimited`]) never trips the
+/// check, making the fueled path bitwise identical to [`run`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fuel {
+    budget: u64,
+    spent: u64,
+    events: u64,
+}
+
+impl Fuel {
+    /// A budget of `budget` fuel units.
+    pub fn new(budget: u64) -> Self {
+        Self { budget, spent: 0, events: 0 }
+    }
+
+    /// A budget that never exhausts (`u64::MAX` units).
+    pub fn unlimited() -> Self {
+        Self::new(u64::MAX)
+    }
+
+    /// Fuel units charged so far.
+    pub fn spent(&self) -> u64 {
+        self.spent
+    }
+
+    /// Billable events charged so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Remaining budget.
+    pub fn remaining(&self) -> u64 {
+        self.budget - self.spent
+    }
+
+    /// Charge one billable event of `cost` units; zero-cost events are
+    /// free (not billed, not counted). Errors with [`Error::Fuel`] when
+    /// the event cannot be afforded, charging nothing.
+    #[inline]
+    pub fn charge(&mut self, cost: u64) -> Result<()> {
+        if cost == 0 {
+            return Ok(());
+        }
+        if cost > self.budget - self.spent {
+            return Err(Error::Fuel { spent: self.spent, at_op: self.events });
+        }
+        self.spent += cost;
+        self.events += 1;
+        Ok(())
+    }
+}
+
 /// Interpret `func` with scalar `args` against `mem`.
 /// Returns the function's `return` values.
 pub fn run(func: &Func, args: &[Val], mem: &mut Memory) -> Result<Vec<Val>> {
@@ -284,7 +353,8 @@ pub fn run_traced(
     stats: &mut ExecStats,
     trace: &mut Option<Vec<MemAccess>>,
 ) -> Result<Vec<Val>> {
-    run_traced_from(func, args, mem, stats, trace, None)
+    let mut fuel = Fuel::unlimited();
+    run_traced_from(func, args, mem, stats, trace, None, &mut fuel)
 }
 
 /// Interpret with DMA issue ops priced against a *specific*
@@ -299,11 +369,38 @@ pub fn run_with_itfcs(
     stats: &mut ExecStats,
     itfcs: &InterfaceSet,
 ) -> Result<Vec<Val>> {
-    run_traced_from(func, args, mem, stats, &mut None, Some(IssueClock::new(itfcs.clone())))
+    let mut fuel = Fuel::unlimited();
+    run_traced_from(
+        func,
+        args,
+        mem,
+        stats,
+        &mut None,
+        Some(IssueClock::new(itfcs.clone())),
+        &mut fuel,
+    )
+}
+
+/// Interpret under a [`Fuel`] budget: every billable event is charged
+/// before it executes, and exhaustion aborts with [`Error::Fuel`] at a
+/// deterministic point — the same point, partial [`ExecStats`] and
+/// memory image the bytecode VM's
+/// [`run_fueled`](crate::ir::vm::CompiledFunc::run_fueled) produces.
+/// With [`Fuel::unlimited`] this is bitwise identical to
+/// [`run_with_stats`]. The caller's `fuel` records the spend either way.
+pub fn run_fueled(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    fuel: &mut Fuel,
+) -> Result<Vec<Val>> {
+    run_traced_from(func, args, mem, stats, &mut None, None, fuel)
 }
 
 /// Shared interpreter entry: `dma0` pre-binds the issue clock (`None`
 /// lazily builds the Rocket-default clock on first `copy_issue`).
+#[allow(clippy::too_many_arguments)]
 fn run_traced_from(
     func: &Func,
     args: &[Val],
@@ -311,6 +408,7 @@ fn run_traced_from(
     stats: &mut ExecStats,
     trace: &mut Option<Vec<MemAccess>>,
     dma0: Option<IssueClock>,
+    fuel: &mut Fuel,
 ) -> Result<Vec<Val>> {
     if args.len() != func.params.len() {
         return Err(Error::Ir(format!(
@@ -328,7 +426,9 @@ fn run_traced_from(
     // without issue ops never pay for it — unless a caller bound one).
     let mut pending: HashMap<u32, PendingCopy> = HashMap::new();
     let mut dma: Option<IssueClock> = dma0;
-    let out = exec_region(func, &func.entry, &mut env, mem, stats, &mut pending, &mut dma, trace)?;
+    let out = exec_region(
+        func, &func.entry, &mut env, mem, stats, &mut pending, &mut dma, trace, fuel,
+    )?;
     Ok(out.unwrap_or_default())
 }
 
@@ -352,10 +452,11 @@ fn exec_region(
     pending: &mut HashMap<u32, PendingCopy>,
     dma: &mut Option<IssueClock>,
     trace: &mut Option<Vec<MemAccess>>,
+    fuel: &mut Fuel,
 ) -> Result<Option<Vec<Val>>> {
     for &opref in &region.ops {
         let op = func.op(opref);
-        if let Some(vals) = exec_op(func, op, env, mem, stats, pending, dma, trace)? {
+        if let Some(vals) = exec_op(func, op, env, mem, stats, pending, dma, trace, fuel)? {
             return Ok(Some(vals));
         }
     }
@@ -372,6 +473,7 @@ fn exec_op(
     pending: &mut HashMap<u32, PendingCopy>,
     dma: &mut Option<IssueClock>,
     trace: &mut Option<Vec<MemAccess>>,
+    fuel: &mut Fuel,
 ) -> Result<Option<Vec<Val>>> {
     let get = |env: &HashMap<Value, Val>, v: Value| -> Result<Val> {
         env.get(&v).copied().ok_or_else(|| Error::Ir(format!("undefined value {v}")))
@@ -386,6 +488,7 @@ fn exec_op(
         OpKind::ConstI(c) => set1!(Val::I(*c)),
         OpKind::ConstF(c) => set1!(Val::F(*c)),
         OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Min | OpKind::Max => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             let a = get(env, op.operands[0])?;
             let b = get(env, op.operands[1])?;
@@ -397,6 +500,7 @@ fn exec_op(
             set1!(r)
         }
         OpKind::Rem | OpKind::Shl | OpKind::Shr | OpKind::And | OpKind::Or | OpKind::Xor => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             let x = get(env, op.operands[0])?.as_i()?;
             let y = get(env, op.operands[1])?.as_i()?;
@@ -405,7 +509,8 @@ fn exec_op(
                     if y == 0 {
                         return Err(Error::Ir("remainder by zero".into()));
                     }
-                    x % y
+                    // Wrapping: `i64::MIN % -1` must not overflow-panic.
+                    x.wrapping_rem(y)
                 }
                 OpKind::Shl => x.wrapping_shl(y as u32),
                 OpKind::Shr => x.wrapping_shr(y as u32),
@@ -417,6 +522,7 @@ fn exec_op(
             set1!(Val::I(r))
         }
         OpKind::Neg => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             let r = match get(env, op.operands[0])? {
                 // Wrapping, like every other int op: `-i64::MIN` must not
@@ -428,20 +534,24 @@ fn exec_op(
             set1!(r)
         }
         OpKind::Sqrt => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             set1!(Val::F(get(env, op.operands[0])?.as_f()?.sqrt()))
         }
         OpKind::Exp => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             set1!(Val::F(get(env, op.operands[0])?.as_f()?.exp()))
         }
         OpKind::Powi(e) => {
+            fuel.charge(*e as u64)?;
             stats.arith_ops += *e as u64;
             set1!(Val::F(get(env, op.operands[0])?.as_f()?.powi(*e as i32)))
         }
         OpKind::ToFloat => set1!(Val::F(get(env, op.operands[0])?.as_i()? as f64)),
         OpKind::ToInt => set1!(Val::I(get(env, op.operands[0])?.as_f()? as i64)),
         OpKind::Cmp(pred) => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             let a = get(env, op.operands[0])?;
             let b = get(env, op.operands[1])?;
@@ -462,12 +572,14 @@ fn exec_op(
             set1!(Val::I(r as i64))
         }
         OpKind::Select => {
+            fuel.charge(1)?;
             stats.arith_ops += 1;
             let c = get(env, op.operands[0])?.as_i()?;
             let r = if c != 0 { get(env, op.operands[1])? } else { get(env, op.operands[2])? };
             set1!(r)
         }
         OpKind::Load(b) | OpKind::Fetch(b) | OpKind::ReadSmem(b) => {
+            fuel.charge(1)?;
             stats.loads += 1;
             let idx = get(env, op.operands[0])?.as_i()?;
             if let Some(t) = trace.as_mut() {
@@ -476,6 +588,7 @@ fn exec_op(
             set1!(mem.get(*b, idx, func.buffer(*b).len)?)
         }
         OpKind::LoadItfc { buf, .. } => {
+            fuel.charge(1)?;
             stats.loads += 1;
             let idx = get(env, op.operands[0])?.as_i()?;
             if let Some(t) = trace.as_mut() {
@@ -484,6 +597,7 @@ fn exec_op(
             set1!(mem.get(*buf, idx, func.buffer(*buf).len)?)
         }
         OpKind::Store(b) | OpKind::WriteSmem(b) => {
+            fuel.charge(1)?;
             stats.stores += 1;
             let idx = get(env, op.operands[0])?.as_i()?;
             if let Some(t) = trace.as_mut() {
@@ -493,6 +607,7 @@ fn exec_op(
             mem.set(*b, idx, func.buffer(*b).len, v)?;
         }
         OpKind::StoreItfc { buf, .. } => {
+            fuel.charge(1)?;
             stats.stores += 1;
             let idx = get(env, op.operands[0])?.as_i()?;
             if let Some(t) = trace.as_mut() {
@@ -501,11 +616,16 @@ fn exec_op(
             let v = get(env, op.operands[1])?;
             mem.set(*buf, idx, func.buffer(*buf).len, v)?;
         }
-        OpKind::ReadIrf(r) => set1!(Val::I(mem.irf[*r as usize])),
+        OpKind::ReadIrf(r) => {
+            fuel.charge(1)?;
+            set1!(Val::I(mem.irf[*r as usize]))
+        }
         OpKind::WriteIrf(r) => {
+            fuel.charge(1)?;
             mem.irf[*r as usize] = get(env, op.operands[0])?.as_i()?;
         }
         OpKind::Transfer { dst, src, size } | OpKind::Copy { dst, src, size, .. } => {
+            fuel.charge(1)?;
             stats.transfers += 1;
             stats.transfer_bytes += *size as u64;
             let dst_off = get(env, op.operands[0])?.as_i()?;
@@ -522,11 +642,14 @@ fn exec_op(
             )?;
         }
         OpKind::CopyIssue { dst, src, size, tag, itfc, kind, .. } => {
-            stats.transfers += 1;
-            stats.transfer_bytes += *size as u64;
             // Timing only: charge the simulated §4.1 completion cycle of
             // this transaction; data still moves at the matching wait.
+            // Fuel prices the issue itself plus its bus occupancy (beats),
+            // so a fuel budget bounds simulated DMA work, not just op count.
             let clk = dma.get_or_insert_with(IssueClock::rocket_default);
+            fuel.charge(1 + clk.txn_beats(*itfc, *size))?;
+            stats.transfers += 1;
+            stats.transfer_bytes += *size as u64;
             let done = clk.issue(*itfc, *kind, *size)?;
             stats.dma_cycles = stats.dma_cycles.max(done);
             let dst_off = get(env, op.operands[0])?.as_i()?;
@@ -537,6 +660,7 @@ fn exec_op(
             );
         }
         OpKind::CopyWait { tag } => {
+            fuel.charge(1)?;
             let p = pending
                 .remove(tag)
                 .ok_or_else(|| Error::Ir(format!("copy_wait: unknown tag {tag}")))?;
@@ -567,13 +691,14 @@ fn exec_op(
                 .collect::<Result<_>>()?;
             let mut i = lb;
             while i < ub {
+                fuel.charge(1)?;
                 stats.loop_iterations += 1;
                 stats.branches += 1;
                 env.insert(iv, Val::I(i));
                 for (&cv, &val) in carried.iter().zip(&vals) {
                     env.insert(cv, val);
                 }
-                match exec_region(func, region, env, mem, stats, pending, dma, trace)? {
+                match exec_region(func, region, env, mem, stats, pending, dma, trace, fuel)? {
                     Some(y) => vals = y,
                     None => return Err(Error::Ir("for body missing yield".into())),
                 }
@@ -584,10 +709,11 @@ fn exec_op(
             }
         }
         OpKind::If => {
+            fuel.charge(1)?;
             stats.branches += 1;
             let c = get(env, op.operands[0])?.as_i()?;
             let region = if c != 0 { &op.regions[0] } else { &op.regions[1] };
-            match exec_region(func, region, env, mem, stats, pending, dma, trace)? {
+            match exec_region(func, region, env, mem, stats, pending, dma, trace, fuel)? {
                 Some(vals) => {
                     for (&res, &val) in op.results.iter().zip(&vals) {
                         env.insert(res, val);
@@ -602,6 +728,7 @@ fn exec_op(
             return Ok(Some(vals));
         }
         OpKind::Intrinsic(name) => {
+            fuel.charge(1)?;
             stats.intrinsic_calls += 1;
             return Err(Error::Ir(format!(
                 "intrinsic `{name}` reached the reference interpreter; lower it or \
@@ -652,7 +779,9 @@ fn int_bin(kind: &OpKind, x: i64, y: i64) -> Result<i64> {
             if y == 0 {
                 return Err(Error::Ir("division by zero".into()));
             }
-            x / y
+            // Wrapping: `i64::MIN / -1` must not overflow-panic on
+            // hostile input (it stays i64::MIN, same as the VM).
+            x.wrapping_div(y)
         }
         OpKind::Min => x.min(y),
         OpKind::Max => x.max(y),

@@ -106,6 +106,9 @@ pub struct PipelineStats {
     pub sunk: usize,
     /// Dead ops removed.
     pub removed: usize,
+    /// The round budget ran out before a fixpoint was proven: the IR is
+    /// valid and verified, but another round might still find rewrites.
+    pub budget_hit: bool,
 }
 
 impl PipelineStats {
@@ -119,16 +122,23 @@ impl std::fmt::Display for PipelineStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "rounds={} folded={} deduped={} hoisted={} sunk={} removed={}",
-            self.rounds, self.folded, self.deduped, self.hoisted, self.sunk, self.removed
+            "rounds={} folded={} deduped={} hoisted={} sunk={} removed={} budget_hit={}",
+            self.rounds,
+            self.folded,
+            self.deduped,
+            self.hoisted,
+            self.sunk,
+            self.removed,
+            self.budget_hit
         )
     }
 }
 
-/// Pipeline rounds are capped as a backstop; the pipeline converges long
+/// Default pipeline round cap — a backstop; the pipeline converges long
 /// before this on real programs (each pass's rewrite count is a
-/// monotonically decreasing measure).
-const MAX_ROUNDS: usize = 32;
+/// monotonically decreasing measure). [`optimize_with_budget`] accepts a
+/// caller-chosen cap (`compiler::CompileBudget::pass_rounds`).
+pub const MAX_ROUNDS: usize = 32;
 
 /// Run a single pass in isolation (fresh analysis cache) and verify the
 /// result. Returns the pass's change count.
@@ -153,13 +163,27 @@ fn run_pass_with(f: &mut Func, pass: Pass, an: &mut Analyses) -> Result<usize> {
 /// the pipeline did. The input is not modified. Every pass run is
 /// followed by a verifier check, so an `Ok` result is always valid IR.
 pub fn optimize(f: &Func, level: OptLevel) -> Result<(Func, PipelineStats)> {
+    optimize_with_budget(f, level, MAX_ROUNDS)
+}
+
+/// [`optimize`] under a caller-chosen round budget. Running out of
+/// rounds is not an error: the pipeline stops where it stands, the
+/// result is still verified IR, and `budget_hit` records that a fixpoint
+/// was not proven. `max_rounds == 0` returns the input untouched (with
+/// `budget_hit` set at O2, since nothing was proven converged).
+pub fn optimize_with_budget(
+    f: &Func,
+    level: OptLevel,
+    max_rounds: usize,
+) -> Result<(Func, PipelineStats)> {
     let mut out = f.clone();
     let mut stats = PipelineStats::default();
     if level == OptLevel::O0 {
         return Ok((out, stats));
     }
     let mut an = Analyses::new();
-    for round in 1..=MAX_ROUNDS {
+    let mut converged = false;
+    for round in 1..=max_rounds {
         stats.rounds = round;
         let mut changed = 0;
         for pass in Pass::ALL {
@@ -174,9 +198,11 @@ pub fn optimize(f: &Func, level: OptLevel) -> Result<(Func, PipelineStats)> {
             }
         }
         if changed == 0 {
+            converged = true;
             break;
         }
     }
+    stats.budget_hit = !converged;
     Ok((out, stats))
 }
 
@@ -234,6 +260,25 @@ mod tests {
         let (opt2, stats2) = optimize(&opt, OptLevel::O2).unwrap();
         assert_eq!(stats2.total(), 0, "second run not a fixpoint: {stats2}");
         assert_eq!(opt2, opt, "fixpoint run still mutated the function");
+    }
+
+    #[test]
+    fn round_budget_degrades_gracefully() {
+        let f = rich_func();
+        // One round is not enough for the rich func's fixpoint proof:
+        // the budget flag is set, but the IR is still valid and verified.
+        let (opt, stats) = optimize_with_budget(&f, OptLevel::O2, 1).unwrap();
+        assert_eq!(stats.rounds, 1);
+        assert!(stats.budget_hit, "{stats}");
+        crate::ir::verifier::verify(&opt).unwrap();
+        // Zero rounds: input passes through untouched, budget flagged.
+        let (same, z) = optimize_with_budget(&f, OptLevel::O2, 0).unwrap();
+        assert_eq!(same, f);
+        assert_eq!(z.rounds, 0);
+        assert!(z.budget_hit);
+        // The unbudgeted entry point proves its fixpoint.
+        let (_, full) = optimize(&f, OptLevel::O2).unwrap();
+        assert!(!full.budget_hit, "{full}");
     }
 
     #[test]

@@ -39,6 +39,10 @@
 //! Traced execution (cache-model traces) stays on the tree-walker: the
 //! VM's [`run_traced`] delegates whenever a live trace sink is passed.
 
+// Panic-free audit (robustness): malformed IR must surface as `Error`,
+// never abort the process. Test code is exempt (see the tests module).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
@@ -46,7 +50,7 @@ use crate::interface::dmasim::IssueClock;
 use crate::interface::latency::TransactionKind;
 use crate::interface::model::{InterfaceId, InterfaceSet};
 use crate::ir::func::{BufferId, Func, Region};
-use crate::ir::interp::{checked_copy, ExecStats, MemAccess, Memory, Val};
+use crate::ir::interp::{checked_copy, ExecStats, Fuel, MemAccess, Memory, Val};
 use crate::ir::ops::{CmpPred, OpKind};
 use crate::ir::types::Type;
 use crate::runtime::DType;
@@ -225,6 +229,20 @@ pub fn run_with_stats(
     stats: &mut ExecStats,
 ) -> Result<Vec<Val>> {
     compile(func)?.run_with_stats(args, mem, stats)
+}
+
+/// Compile + execute under a [`Fuel`] budget — the VM counterpart of
+/// [`crate::ir::interp::run_fueled`], exhausting at the identical event
+/// with identical partial stats and memory image. Compilation itself is
+/// not metered (it is bounded by the function size, not by execution).
+pub fn run_fueled(
+    func: &Func,
+    args: &[Val],
+    mem: &mut Memory,
+    stats: &mut ExecStats,
+    fuel: &mut Fuel,
+) -> Result<Vec<Val>> {
+    compile(func)?.run_fueled(args, mem, stats, fuel)
 }
 
 /// Compile + execute with DMA issues priced against a *specific*
@@ -751,6 +769,26 @@ impl CompiledFunc {
         mem: &mut Memory,
         stats: &mut ExecStats,
     ) -> Result<Vec<Val>> {
+        let mut fuel = Fuel::unlimited();
+        self.run_fueled(args, mem, stats, &mut fuel)
+    }
+
+    /// Execute under a [`Fuel`] budget. Charges mirror the tree-walker's
+    /// event-for-event ([`crate::ir::interp::run_fueled`]): arithmetic,
+    /// memory, transfer and control events cost 1 (`powi` costs its
+    /// exponent; `copy_issue` adds its DMA beat count), while pure VM
+    /// machinery — const preloads, moves, coercion casts, jumps, the
+    /// step check — is free, so both engines exhaust at the identical
+    /// event with identical partial stats and memory. With
+    /// [`Fuel::unlimited`] the budget check never fires and this is
+    /// bitwise identical to [`run_with_stats`](Self::run_with_stats).
+    pub fn run_fueled(
+        &self,
+        args: &[Val],
+        mem: &mut Memory,
+        stats: &mut ExecStats,
+        fuel: &mut Fuel,
+    ) -> Result<Vec<Val>> {
         if args.len() != self.params.len() {
             return Err(Error::Ir(format!(
                 "expected {} args, got {}",
@@ -792,6 +830,7 @@ impl CompiledFunc {
         loop {
             match &self.insns[pc] {
                 Insn::BinI { op, d, a, b } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     let x = ri[*a as usize];
                     let y = ri[*b as usize];
@@ -803,13 +842,15 @@ impl CompiledFunc {
                             if y == 0 {
                                 return Err(Error::Ir("division by zero".into()));
                             }
-                            x / y
+                            // Wrapping, mirroring the tree-walker:
+                            // `i64::MIN / -1` must not overflow-panic.
+                            x.wrapping_div(y)
                         }
                         IBin::Rem => {
                             if y == 0 {
                                 return Err(Error::Ir("remainder by zero".into()));
                             }
-                            x % y
+                            x.wrapping_rem(y)
                         }
                         IBin::Shl => x.wrapping_shl(y as u32),
                         IBin::Shr => x.wrapping_shr(y as u32),
@@ -821,6 +862,7 @@ impl CompiledFunc {
                     };
                 }
                 Insn::BinF { op, d, a, b } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     let x = rf[*a as usize];
                     let y = rf[*b as usize];
@@ -834,11 +876,13 @@ impl CompiledFunc {
                     };
                 }
                 Insn::CmpI { pred, d, a, b } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     let ord = ri[*a as usize].cmp(&ri[*b as usize]);
                     ri[*d as usize] = cmp_result(*pred, ord) as i64;
                 }
                 Insn::CmpF { pred, d, a, b } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     let ord = rf[*a as usize]
                         .partial_cmp(&rf[*b as usize])
@@ -846,33 +890,40 @@ impl CompiledFunc {
                     ri[*d as usize] = cmp_result(*pred, ord) as i64;
                 }
                 Insn::SelI { d, c, a, b } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     ri[*d as usize] =
                         if ri[*c as usize] != 0 { ri[*a as usize] } else { ri[*b as usize] };
                 }
                 Insn::SelF { d, c, a, b } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     rf[*d as usize] =
                         if ri[*c as usize] != 0 { rf[*a as usize] } else { rf[*b as usize] };
                 }
                 Insn::NegI { d, a } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     // Wrapping, mirroring the tree-walker (`-i64::MIN`).
                     ri[*d as usize] = ri[*a as usize].wrapping_neg();
                 }
                 Insn::NegF { d, a } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     rf[*d as usize] = -rf[*a as usize];
                 }
                 Insn::Sqrt { d, a } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     rf[*d as usize] = rf[*a as usize].sqrt();
                 }
                 Insn::Exp { d, a } => {
+                    fuel.charge(1)?;
                     stats.arith_ops += 1;
                     rf[*d as usize] = rf[*a as usize].exp();
                 }
                 Insn::Powi { d, a, e } => {
+                    fuel.charge(*e as u64)?;
                     stats.arith_ops += *e as u64;
                     rf[*d as usize] = rf[*a as usize].powi(*e as i32);
                 }
@@ -889,6 +940,7 @@ impl CompiledFunc {
                     rf[*d as usize] = rf[*a as usize];
                 }
                 Insn::LoadF { d, idx, buf, len } => {
+                    fuel.charge(1)?;
                     stats.loads += 1;
                     let i = ri[*idx as usize];
                     if i < 0 || i as u64 >= *len as u64 {
@@ -900,6 +952,7 @@ impl CompiledFunc {
                     };
                 }
                 Insn::LoadI { d, idx, buf, len } => {
+                    fuel.charge(1)?;
                     stats.loads += 1;
                     let i = ri[*idx as usize];
                     if i < 0 || i as u64 >= *len as u64 {
@@ -911,6 +964,7 @@ impl CompiledFunc {
                     };
                 }
                 Insn::StoreF { idx, val, buf, len } => {
+                    fuel.charge(1)?;
                     stats.stores += 1;
                     let i = ri[*idx as usize];
                     if i < 0 || i as u64 >= *len as u64 {
@@ -923,6 +977,7 @@ impl CompiledFunc {
                     }
                 }
                 Insn::StoreI { idx, val, buf, len } => {
+                    fuel.charge(1)?;
                     stats.stores += 1;
                     let i = ri[*idx as usize];
                     if i < 0 || i as u64 >= *len as u64 {
@@ -935,12 +990,15 @@ impl CompiledFunc {
                     }
                 }
                 Insn::ReadIrf { d, r } => {
+                    fuel.charge(1)?;
                     ri[*d as usize] = mem.irf[*r as usize];
                 }
                 Insn::WriteIrf { a, r } => {
+                    fuel.charge(1)?;
                     mem.irf[*r as usize] = ri[*a as usize];
                 }
                 Insn::Copy { dst, src, d_off, s_off, size, dlen, slen } => {
+                    fuel.charge(1)?;
                     stats.transfers += 1;
                     stats.transfer_bytes += *size as u64;
                     let doff = ri[*d_off as usize];
@@ -957,9 +1015,12 @@ impl CompiledFunc {
                     )?;
                 }
                 Insn::Issue { dst, src, d_off, s_off, size, dlen, slen, tag, itfc, kind } => {
+                    let clk = dma.get_or_insert_with(IssueClock::rocket_default);
+                    fuel.charge(
+                        1 + clk.txn_beats(InterfaceId(*itfc as usize), *size as usize),
+                    )?;
                     stats.transfers += 1;
                     stats.transfer_bytes += *size as u64;
-                    let clk = dma.get_or_insert_with(IssueClock::rocket_default);
                     let done = clk.issue(InterfaceId(*itfc as usize), *kind, *size as usize)?;
                     stats.dma_cycles = stats.dma_cycles.max(done);
                     pending.insert(
@@ -976,6 +1037,7 @@ impl CompiledFunc {
                     );
                 }
                 Insn::Wait { tag } => {
+                    fuel.charge(1)?;
                     let p = pending
                         .remove(tag)
                         .ok_or_else(|| Error::Ir(format!("copy_wait: unknown tag {tag}")))?;
@@ -998,6 +1060,7 @@ impl CompiledFunc {
                 }
                 Insn::ForHead { iv, ub, exit } => {
                     if ri[*iv as usize] < ri[*ub as usize] {
+                        fuel.charge(1)?;
                         stats.loop_iterations += 1;
                         stats.branches += 1;
                     } else {
@@ -1014,6 +1077,7 @@ impl CompiledFunc {
                     continue;
                 }
                 Insn::Branch { c, else_pc } => {
+                    fuel.charge(1)?;
                     stats.branches += 1;
                     if ri[*c as usize] == 0 {
                         pc = *else_pc as usize;
@@ -1021,6 +1085,7 @@ impl CompiledFunc {
                     }
                 }
                 Insn::Intrinsic { name } => {
+                    fuel.charge(1)?;
                     stats.intrinsic_calls += 1;
                     return Err(Error::Ir(format!(
                         "intrinsic `{}` reached the reference interpreter; lower it or \
@@ -1056,6 +1121,7 @@ fn cmp_result(pred: CmpPred, ord: std::cmp::Ordering) -> bool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::interface::cache::CacheHint;
@@ -1271,6 +1337,60 @@ mod tests {
         let e1 = interp::run(&f, &[], &mut m1).unwrap_err().to_string();
         let e2 = compile(&f).unwrap().run(&[], &mut m2).unwrap_err().to_string();
         assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn fuel_exhausts_identically_on_both_engines() {
+        let mut b = FuncBuilder::new("sum");
+        let buf = b.global("x", DType::I32, 8, CacheHint::Unknown);
+        let zero = b.const_i(0);
+        let lb = b.const_i(0);
+        let ub = b.const_i(8);
+        let one = b.const_i(1);
+        let sums = b.for_loop(lb, ub, one, &[zero], |b, iv, carried| {
+            let x = b.load(buf, iv);
+            vec![b.add(carried[0], x)]
+        });
+        let f = b.finish(&sums);
+        let data = [1, 2, 3, 4, 5, 6, 7, 8];
+
+        // Unlimited fuel: bitwise identical to the unfueled run, and it
+        // records the program's exact spend.
+        let mut mem = Memory::for_func(&f);
+        mem.write_i32(BufferId(0), &data);
+        let mut stats = ExecStats::default();
+        let mut fuel = Fuel::unlimited();
+        let out = run_fueled(&f, &[], &mut mem, &mut stats, &mut fuel).unwrap();
+        assert_eq!(out, vec![Val::I(36)]);
+        let spent = fuel.spent();
+        assert!(spent > 0);
+
+        // Exact fuel succeeds; every smaller budget aborts both engines
+        // at the identical event with identical partial stats and memory.
+        for budget in [0, 1, spent / 2, spent - 1, spent] {
+            let run_one = |engine_vm: bool| {
+                let mut m = Memory::for_func(&f);
+                m.write_i32(BufferId(0), &data);
+                let mut st = ExecStats::default();
+                let mut fu = Fuel::new(budget);
+                let r = if engine_vm {
+                    run_fueled(&f, &[], &mut m, &mut st, &mut fu)
+                } else {
+                    interp::run_fueled(&f, &[], &mut m, &mut st, &mut fu)
+                };
+                (r.map_err(|e| e.to_string()), st, fu, m.read_i32(BufferId(0)))
+            };
+            let (rv, sv, fv, mv) = run_one(true);
+            let (rw, sw, fw, mw) = run_one(false);
+            assert_eq!(rv, rw, "budget {budget}: results diverge");
+            assert_eq!(sv, sw, "budget {budget}: partial stats diverge");
+            assert_eq!(fv, fw, "budget {budget}: fuel state diverges");
+            assert_eq!(mv, mw, "budget {budget}: memory diverges");
+            assert_eq!(rv.is_ok(), budget >= spent);
+            if budget < spent {
+                assert!(rv.unwrap_err().contains("fuel exhausted"));
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,10 @@ COMMANDS:
                               --opt-level 0|2   run the mid-end pass
                               pipeline (SCCP/CSE/LICM/sink/DCE) on the
                               lowered program (default 0)
+                              --budget SPEC     cap compile-side work,
+                              e.g. iters=4,nodes=20000,matches=1000,
+                              external=2,rounds=8 — exhaustion degrades
+                              the match, never fails the compile
     opt --demo                show the mid-end pass pipeline on a demo
                               function: IR before/after, per-pass rewrite
                               counts, and the dynamic-op-count delta
@@ -137,7 +141,9 @@ fn all_kernels() -> Vec<aquas::workloads::Kernel> {
 
 fn cmd_compile(args: &[String]) -> aquas::Result<()> {
     let name = args.first().ok_or_else(|| {
-        aquas::Error::Compiler("usage: aquas compile <kernel> [--variant] [--opt-level 0|2]".into())
+        aquas::Error::Compiler(
+            "usage: aquas compile <kernel> [--variant] [--opt-level 0|2] [--budget SPEC]".into(),
+        )
     })?;
     let use_variant = args.iter().any(|a| a == "--variant");
     let opt_level = match args.windows(2).find(|w| w[0] == "--opt-level") {
@@ -162,7 +168,11 @@ fn cmd_compile(args: &[String]) -> aquas::Result<()> {
     } else {
         k.software.clone()
     };
-    let opts = aquas::compiler::CompileOptions { opt_level, ..Default::default() };
+    let budget = match args.windows(2).find(|w| w[0] == "--budget") {
+        None => aquas::compiler::CompileBudget::default(),
+        Some(w) => aquas::compiler::CompileBudget::parse(&w[1])?,
+    };
+    let opts = aquas::compiler::CompileOptions { opt_level, budget };
     let r = aquas::compiler::compile(&func, &[k.isax.clone()], &opts)?;
     println!("kernel: {}", k.name);
     println!("matched: {:?}", r.stats.matched);
@@ -174,6 +184,25 @@ fn cmd_compile(args: &[String]) -> aquas::Result<()> {
         "e-nodes: {} initial / {} saturated",
         r.stats.initial_enodes, r.stats.saturated_enodes
     );
+    // Surface the saturation outcome that used to be silently dropped:
+    // a starved budget degrades the match and says so, instead of
+    // pretending the e-graph ran to a fixpoint.
+    println!(
+        "saturation: {} (node budget {}, match budget {})",
+        if r.stats.saturation_complete { "complete" } else { "stopped by budget" },
+        if r.stats.node_budget_hit { "hit" } else { "ok" },
+        if r.stats.match_budget_hit { "hit" } else { "ok" },
+    );
+    if opt_level >= 2 {
+        println!(
+            "mid-end: {} fixpoint rounds{}",
+            r.stats.pass_rounds_used,
+            if r.stats.pass_budget_hit { " (round budget hit)" } else { "" },
+        );
+    }
+    if r.stats.budget_exhausted() {
+        println!("budget exhausted: compile degraded gracefully (IR below is still verified)");
+    }
     println!("\nlowered program:\n{}", aquas::ir::printer::print_func(&r.func));
     Ok(())
 }

@@ -1,6 +1,16 @@
 //! Minimal JSON: enough to read `artifacts/manifest.json` and to emit
 //! benchmark/metrics reports. Supports the full JSON grammar except
 //! `\u` surrogate pairs beyond the BMP (not needed for our data).
+//!
+//! Robustness contract: `Json::parse` never panics on any input — every
+//! malformed document yields an `Error::Manifest` with the byte offset
+//! where parsing stopped, and nesting is capped (the recursive-descent
+//! parser must not let `[[[[…` overflow the stack, which would abort the
+//! process rather than unwind).
+
+// Panic-free audit (robustness): manifests and specs come from disk and
+// the CLI; a corrupt file must become a diagnostic, never an abort.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -21,7 +31,7 @@ pub enum Json {
 impl Json {
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -201,9 +211,16 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Deepest container nesting accepted. Stack overflow aborts the process
+/// (it cannot be caught by `catch_unwind`), so hostile `[[[[…` input must
+/// be rejected with an error well before the recursion gets dangerous.
+const MAX_JSON_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, checked against [`MAX_JSON_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -323,12 +340,22 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("invalid number"))
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_JSON_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_JSON_DEPTH}")));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -337,7 +364,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => return Err(self.err("expected `,` or `]`")),
             }
         }
@@ -345,10 +375,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -362,7 +394,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => return Err(self.err("expected `,` or `}`")),
             }
         }
@@ -370,8 +405,61 @@ impl<'a> Parser<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    /// Malformed-input table (mirrors `FaultPlan::parse`'s): every row
+    /// must produce a diagnostic `Error` — with a byte offset — never a
+    /// panic.
+    #[test]
+    fn malformed_documents_error_with_byte_offsets() {
+        let cases: &[(&str, &str)] = &[
+            ("", "unexpected character"),
+            ("   ", "unexpected character"),
+            ("{", "expected `\"`"),
+            ("[1, 2", "expected `,` or `]`"),
+            ("{\"a\" 1}", "expected `:`"),
+            ("{\"a\": 1,}", "expected `\"`"),
+            ("\"unterminated", "unterminated string"),
+            ("\"bad \\x escape\"", "bad escape"),
+            ("\"bad \\u12", "bad \\u"),
+            ("nul", "expected `null`"),
+            ("tru3", "expected `true`"),
+            ("1.2.3", "invalid number"),
+            ("-", "invalid number"),
+            ("{} extra", "trailing characters"),
+            ("[1] [2]", "trailing characters"),
+        ];
+        for (input, want) in cases {
+            let err = Json::parse(input).unwrap_err().to_string();
+            assert!(
+                err.contains(want),
+                "input {input:?}: error {err:?} missing {want:?}"
+            );
+            assert!(
+                err.contains("at byte"),
+                "input {input:?}: error {err:?} lacks a byte offset"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_nesting_errors_instead_of_overflowing() {
+        // Way past MAX_JSON_DEPTH: must error, not blow the stack (a
+        // stack overflow aborts and would escape catch_unwind).
+        let deep_arr = "[".repeat(100_000);
+        let err = Json::parse(&deep_arr).unwrap_err().to_string();
+        assert!(err.contains("nesting deeper than"), "got: {err}");
+
+        let deep_obj = "{\"k\":".repeat(100_000);
+        let err = Json::parse(&deep_obj).unwrap_err().to_string();
+        assert!(err.contains("nesting deeper than"), "got: {err}");
+
+        // At or below the cap still parses.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+    }
 
     #[test]
     fn roundtrip_object() {

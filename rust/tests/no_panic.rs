@@ -1,0 +1,303 @@
+//! Adversarial no-panic harness (robustness tier).
+//!
+//! The contract under test: **no input — hostile, malformed, or merely
+//! unlucky — may abort the process.** Every front door (pattern parser,
+//! JSON parser, budget/fault spec parsers, IR verifier, compiler,
+//! both execution engines) must either succeed or return a diagnostic
+//! `Error`; panicking is a bug even when the input is garbage.
+//!
+//! Every case runs under `catch_unwind`, so a regression reports *which*
+//! seeded input aborted instead of killing the test binary. Well over
+//! 200 distinct seeded inputs are exercised across the five fronts:
+//!
+//! 1. 80 seeded random programs through verify → optimize → both engines;
+//! 2. 60 seeded *corrupted* programs (ghost operands, truncated
+//!    operand/result lists, arity-breaking kind swaps) through the
+//!    verifier — which must reject them with `Err`, never abort — and,
+//!    when a mutation happens to stay valid, through both engines;
+//! 3. 48 garbage pattern strings (plus pathological nesting) through
+//!    `Pattern::try_parse`;
+//! 4. 48 garbage / truncated / byte-flipped JSON documents (plus
+//!    100k-deep nesting) through `Json::parse`;
+//! 5. 40 garbage budget / fault specs through `CompileBudget::parse`
+//!    and `FaultPlan::parse`, and every Table-2 kernel compiled under
+//!    starved budgets (exhaustion degrades, never fails or panics).
+//!
+//! Corruption deliberately mutates **existing** ops via `op_mut` and
+//! never inserts out-of-range `OpRef`s into regions: a bogus `OpRef` is
+//! an arena-indexing bug by construction (`Func::op` would panic before
+//! the verifier could see it), not a reachable user input.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use aquas::bench_harness::interp::{default_args, random_program, seed_memory};
+use aquas::compiler::{self, CompileBudget, CompileOptions};
+use aquas::coordinator::FaultPlan;
+use aquas::egraph::Pattern;
+use aquas::ir::interp::{self, Memory};
+use aquas::ir::passes::{optimize, OptLevel};
+use aquas::ir::{verifier, vm, Func, OpKind, OpRef, Value};
+use aquas::util::json::Json;
+use aquas::workloads;
+
+/// Tiny deterministic PRNG (xorshift64*) so every hostile input is
+/// reproducible from its seed alone.
+fn rng(seed: u64) -> impl FnMut() -> u64 {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+}
+
+/// Run `f` under `catch_unwind`; on panic, fail the test naming the case.
+fn must_not_panic<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| e.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic payload>".to_string());
+            panic!("PANIC on {label}: {msg}");
+        }
+    }
+}
+
+/// Execute a (verified) program through both engines. Runtime `Error`s
+/// are fine — out-of-bounds, div-by-zero and friends are diagnostics,
+/// not aborts — but both calls must return.
+fn run_both(f: &Func, seed: u64) {
+    let args = default_args(f);
+    let mut mem = Memory::for_func(f);
+    seed_memory(f, &mut mem, seed);
+    let _ = interp::run(f, &args, &mut mem);
+    let mut mem = Memory::for_func(f);
+    seed_memory(f, &mut mem, seed);
+    let _ = vm::run(f, &args, &mut mem);
+}
+
+// ---------------------------------------------------------------------
+// Front 1: well-formed random programs (80 seeds).
+// ---------------------------------------------------------------------
+
+#[test]
+fn random_programs_never_panic() {
+    for seed in 0..80u64 {
+        must_not_panic(&format!("random program seed {seed}"), || {
+            let f = random_program(seed);
+            assert!(
+                verifier::verify(&f).is_ok(),
+                "seed {seed}: generator emitted an unverifiable program"
+            );
+            run_both(&f, seed);
+            // The full mid-end over the same program, then both engines
+            // again on the optimized form.
+            if let Ok((opt, _)) = optimize(&f, OptLevel::O2) {
+                run_both(&opt, seed);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Front 2: corrupted programs (60 seeds). The verifier is the gate: it
+// must *reject* (or, if the mutation is benign, accept) every mutant
+// without aborting, and anything it accepts must also execute safely.
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupted_programs_are_rejected_not_aborted() {
+    let mut rejected = 0usize;
+    for seed in 0..60u64 {
+        let mut next = rng(seed);
+        let mut f = random_program(seed % 24);
+        let n_ops = f.num_ops();
+        if n_ops == 0 {
+            continue;
+        }
+        let target = OpRef((next() % n_ops as u64) as u32);
+        let mutation = next() % 4;
+        match mutation {
+            // Ghost operand: a Value id no op defines. The verifier's
+            // scope check must catch it before any type lookup.
+            0 => {
+                let ghost = Value(1_000_000 + (next() % 1_000) as u32);
+                let op = f.op_mut(target);
+                if op.operands.is_empty() {
+                    op.operands.push(ghost);
+                } else {
+                    let i = (next() as usize) % op.operands.len();
+                    op.operands[i] = ghost;
+                }
+            }
+            // Truncated operand list: arity violation.
+            1 => {
+                let op = f.op_mut(target);
+                let keep = if op.operands.is_empty() {
+                    0
+                } else {
+                    (next() as usize) % op.operands.len()
+                };
+                op.operands.truncate(keep);
+            }
+            // Truncated result list.
+            2 => {
+                f.op_mut(target).results.truncate(0);
+            }
+            // Arity-breaking kind swap (keeps regions/operands as-is).
+            _ => {
+                let op = f.op_mut(target);
+                op.kind = match next() % 3 {
+                    0 => OpKind::Select,
+                    1 => OpKind::Neg,
+                    _ => OpKind::Add,
+                };
+            }
+        }
+        must_not_panic(&format!("corrupted program seed {seed} mutation {mutation}"), || {
+            match verifier::verify(&f) {
+                Ok(()) => run_both(&f, seed),
+                Err(_) => rejected += 1,
+            }
+        });
+    }
+    // The corruption must actually bite — if (almost) every mutant still
+    // verifies, the mutations are too tame to test the gate.
+    assert!(rejected >= 12, "only {rejected}/60 mutants rejected; corruption too weak");
+}
+
+// ---------------------------------------------------------------------
+// Front 3: hostile pattern text (48 cases + pathological nesting).
+// ---------------------------------------------------------------------
+
+#[test]
+fn garbage_patterns_never_panic() {
+    const ATOMS: &[&str] = &[
+        "(", ")", "?", "?x", "?x?y", "f", "add", "mul", "const:0", "const:", ":",
+        "\u{0}", " ", "\t", "((", "))", "?)", "-1e309", "\\", "\"",
+    ];
+    for seed in 0..48u64 {
+        let mut next = rng(seed ^ 0x9A77);
+        let len = 1 + (next() % 24) as usize;
+        let mut text = String::new();
+        for _ in 0..len {
+            text.push_str(ATOMS[(next() as usize) % ATOMS.len()]);
+        }
+        must_not_panic(&format!("pattern seed {seed}: {text:?}"), || {
+            let _ = Pattern::try_parse(&text);
+        });
+    }
+    // Recursion bomb: must hit the depth cap, not the stack guard.
+    must_not_panic("pattern nesting bomb", || {
+        let bomb = "(f ".repeat(10_000);
+        assert!(Pattern::try_parse(&bomb).is_err());
+    });
+}
+
+// ---------------------------------------------------------------------
+// Front 4: hostile JSON (48 cases + nesting bombs).
+// ---------------------------------------------------------------------
+
+#[test]
+fn garbage_json_never_panics() {
+    const ATOMS: &[&str] = &[
+        "{", "}", "[", "]", ":", ",", "\"", "\\", "\\u12", "null", "nul", "true",
+        "tru3", "-", "1e309", "1.2.3", "\u{0}", " ", "\"k\"", "0",
+    ];
+    let valid = r#"{"name":"k","shape":[4,4],"args":{"n":4,"scale":1.5},"ok":true}"#;
+    for seed in 0..48u64 {
+        let label;
+        let text = if seed % 2 == 0 {
+            // Random atom soup.
+            let mut next = rng(seed ^ 0x15_0A);
+            let len = 1 + (next() % 24) as usize;
+            let mut t = String::new();
+            for _ in 0..len {
+                t.push_str(ATOMS[(next() as usize) % ATOMS.len()]);
+            }
+            label = format!("json soup seed {seed}: {t:?}");
+            t
+        } else {
+            // Byte-flip / truncate a valid document.
+            let mut next = rng(seed ^ 0xF11F);
+            let mut bytes = valid.as_bytes().to_vec();
+            if next() % 2 == 0 {
+                let i = (next() as usize) % bytes.len();
+                bytes[i] ^= (1 + next() % 255) as u8;
+            } else {
+                bytes.truncate((next() as usize) % bytes.len());
+            }
+            label = format!("json mutation seed {seed}");
+            String::from_utf8_lossy(&bytes).into_owned()
+        };
+        must_not_panic(&label, || {
+            let _ = Json::parse(&text);
+        });
+    }
+    // Nesting bombs: the depth cap must fire before the stack does.
+    for bomb in [
+        "[".repeat(100_000),
+        "{\"k\":".repeat(100_000),
+        format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000)),
+    ] {
+        must_not_panic("json nesting bomb", || {
+            assert!(Json::parse(&bomb).is_err());
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Front 5: garbage specs + starved compiles.
+// ---------------------------------------------------------------------
+
+#[test]
+fn garbage_specs_never_panic() {
+    const ATOMS: &[&str] = &[
+        "iters", "nodes", "matches", "external", "rounds", "coredown", "corestall",
+        "dmaerr", "surge", "seed", "=", "@", "..", ",", "-1", "1e309", "nan", "x",
+        "0x10", "", " ",
+    ];
+    for seed in 0..40u64 {
+        let mut next = rng(seed ^ 0x5bec);
+        let len = 1 + (next() % 12) as usize;
+        let mut text = String::new();
+        for _ in 0..len {
+            text.push_str(ATOMS[(next() as usize) % ATOMS.len()]);
+        }
+        must_not_panic(&format!("spec seed {seed}: {text:?}"), || {
+            let _ = CompileBudget::parse(&text);
+            let _ = FaultPlan::parse(&text);
+        });
+    }
+}
+
+#[test]
+fn starved_compiles_degrade_without_panicking() {
+    // Budget exhaustion is observable, never fatal: every Table-2 kernel
+    // under three increasingly starved budgets must still produce
+    // verified IR (and must never abort).
+    let budgets = [
+        CompileBudget { iter_limit: 0, external_budget: 0, pass_rounds: 0, ..Default::default() },
+        CompileBudget { iter_limit: 1, node_limit: 64, match_limit: 4, ..Default::default() },
+        CompileBudget { iter_limit: 2, node_limit: 512, match_limit: 32, external_budget: 1, pass_rounds: 1 },
+    ];
+    for kernel in workloads::table2_kernels() {
+        let isaxes = [kernel.isax];
+        for (bi, budget) in budgets.iter().enumerate() {
+            let opts = CompileOptions { budget: budget.clone(), opt_level: 2 };
+            must_not_panic(&format!("starved compile {} budget {bi}", kernel.name), || {
+                let r = compiler::compile(&kernel.software, &isaxes, &opts)
+                    .unwrap_or_else(|e| panic!("{}: starved compile errored: {e}", kernel.name));
+                assert!(
+                    verifier::verify(&r.func).is_ok(),
+                    "{}: starved compile produced unverifiable IR",
+                    kernel.name
+                );
+            });
+        }
+    }
+}

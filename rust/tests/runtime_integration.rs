@@ -223,6 +223,53 @@ fn coordinator_respects_max_active() {
 }
 
 #[test]
+fn decode_fuel_ceiling_sheds_runaway_requests() {
+    // A tiny per-token fuel allowance: every decode tick blows past it,
+    // so each request is cut off after its first decoded token and
+    // counted as shed — but still retires cleanly with its prefix.
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        &rt,
+        CoordinatorConfig { decode_fuel_per_token: Some(1e-9), ..Default::default() },
+    );
+    coord.submit(vec![1, 2, 3, 4], 8).unwrap();
+    coord.submit(vec![9, 8, 7], 8).unwrap();
+    let metrics = coord.run_to_completion().unwrap();
+    assert_eq!(metrics.len(), 2, "shed requests still deliver their prefix");
+    assert_eq!(coord.shed_requests(), 2, "both runaway sequences counted as shed");
+    for m in &metrics {
+        assert!(
+            m.generated.len() < 8,
+            "request {} ran to its full budget despite the fuel ceiling",
+            m.id
+        );
+        assert!(!m.generated.is_empty(), "prefill token must survive the cut");
+    }
+    assert!(coord.kv_stats().leak_free(), "early retirement leaked KV blocks");
+}
+
+#[test]
+fn decode_fuel_none_is_bitwise_invisible() {
+    let run = |fuel: Option<f64>| {
+        let rt = runtime();
+        let mut c = Coordinator::new(
+            &rt,
+            CoordinatorConfig { decode_fuel_per_token: fuel, ..Default::default() },
+        );
+        c.submit(vec![5, 6, 7, 8], 6).unwrap();
+        let m = c.run_to_completion().unwrap();
+        (m[0].generated.clone(), m[0].sim_isax_cycles, c.shed_requests())
+    };
+    let (g_off, cyc_off, shed_off) = run(None);
+    // A generous ceiling never fires either and must match exactly.
+    let (g_on, cyc_on, shed_on) = run(Some(f64::INFINITY));
+    assert_eq!(g_off, g_on);
+    assert_eq!(cyc_off.to_bits(), cyc_on.to_bits());
+    assert_eq!(shed_off, 0);
+    assert_eq!(shed_on, 0);
+}
+
+#[test]
 fn attention_artifact_matches_serving_numerics() {
     // The standalone attention artifact (the L1 kernel's golden model)
     // must agree with a direct softmax(QK^T)V on the host.

@@ -20,7 +20,8 @@
 //!   engines — the machine-checked "semantics-preserving" claim.
 
 use aquas::bench_harness::interp::{
-    check_equivalent, check_opt_equivalent, random_program, seed_memory,
+    check_equivalent, check_fuel_equivalent, check_opt_equivalent, random_program,
+    seed_memory,
 };
 use aquas::interface::cache::CacheHint;
 use aquas::interface::model::InterfaceId;
@@ -41,6 +42,25 @@ fn fuzz_vm_equals_tree_walker_on_150_seeds() {
     for seed in 0..150u64 {
         let f = random_program(seed);
         check_equivalent(&f, seed).unwrap_or_else(|e| {
+            panic!(
+                "seed {seed}: {e}\nprogram:\n{}",
+                aquas::ir::printer::print_func(&f)
+            )
+        });
+    }
+}
+
+#[test]
+fn fuzz_fuel_determinism_on_150_seeds() {
+    // For every seeded program and every budget in {0, 1, spent/2,
+    // spent-1, spent}: the walker and the VM must agree exactly — same
+    // verdict (including the fuel-abort error), same partial ExecStats,
+    // same final Fuel state, same memory image — and exactly-enough fuel
+    // must reproduce the unfueled run bitwise. (`check_fuel_equivalent`
+    // also proves unlimited fuel is bitwise-invisible on both engines.)
+    for seed in 0..150u64 {
+        let f = random_program(seed);
+        check_fuel_equivalent(&f, seed).unwrap_or_else(|e| {
             panic!(
                 "seed {seed}: {e}\nprogram:\n{}",
                 aquas::ir::printer::print_func(&f)
