@@ -5,6 +5,7 @@
 //! EXPERIMENTS.md all draw from one source of truth.
 
 pub mod dma;
+pub mod dse;
 pub mod egraph;
 pub mod fir7;
 pub mod interp;

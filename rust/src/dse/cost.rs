@@ -1,0 +1,283 @@
+//! The DSE cost oracle: every candidate is priced by the *existing*
+//! pipeline — there is no second timing or area model anywhere.
+//!
+//! Per workload family, one candidate evaluation is:
+//!
+//! 1. [`specialize_isax`] — apply the point's ISAX-side knobs
+//!    (scratchpad banking, FU-mix unroll) and run the budgeted PR-8
+//!    mid-end (`ir::passes::optimize_with_budget`) — the "mid-end
+//!    inside the DSE loop" headroom item;
+//! 2. [`crate::synthesis::synthesize`] under the point's interface set
+//!    (elision → selection → scheduling);
+//! 3. [`crate::synthesis::hwgen::generate`] — the FU/SRAM/engine census
+//!    whose [`crate::area::AreaModel`] pricing *is* the area objective;
+//! 4. [`crate::synthesis::scheduling::simulate_schedule`] — the
+//!    event-driven dmasim replay of the synthesized transaction
+//!    schedule *is* the memory-cycle objective, plus the
+//!    [`IsaxEngine`] compute/overhead terms for the datapath.
+//!
+//! The e-graph front-end runs once per software-backed family
+//! ([`prove_offload`]): loop↔ISAX matching happens at the functional
+//! level, so it is invariant across the hardware axes this search
+//! sweeps; re-proving it per point would re-run an identical
+//! saturation. `tests/dse.rs` pins the oracle differentially against
+//! `simulate_schedule` and the hwgen census.
+
+use crate::area::AreaModel;
+use crate::compiler::{
+    compile, loop_passes, matcher, CompileBudget, CompileOptions, IsaxDef,
+};
+use crate::cores::IsaxEngine;
+use crate::error::{Error, Result};
+use crate::ir::func::BufferKind;
+use crate::ir::passes::{optimize_with_budget, OptLevel};
+use crate::ir::Func;
+use crate::synthesis::{hwgen, scheduling, synthesize, SynthOptions};
+use crate::workloads::{llm, pcp, pqc};
+
+use super::space::DesignPoint;
+
+/// One jointly-searched workload family: the ISAX description plus
+/// (when the family has one) the software program the e-graph
+/// front-end offloads onto it.
+pub struct DseWorkload {
+    /// Family name (`gf2mm` / `attention` / `pqc` / `pcp`).
+    pub name: &'static str,
+    /// Base ISAX description; design-point knobs are applied to a clone.
+    pub isax: Func,
+    /// Software counterpart for the e-graph offload proof, if any
+    /// (the attention tile is ISAX-only).
+    pub software: Option<Func>,
+    /// Synthesis knobs inherited from the family's case study.
+    pub synth_opts: SynthOptions,
+}
+
+/// The four families evaluated jointly (§6 case studies): the PQC
+/// GF(2) matrix multiply, the attention tile, the PQC bit unpack, and
+/// the point-cloud distance kernel. Fixed, deterministic order.
+pub fn workloads() -> Result<Vec<DseWorkload>> {
+    let pqc_ks = pqc::kernels();
+    let pcp_ks = pcp::kernels();
+    let pick = |ks: &[crate::workloads::Kernel], name: &str| -> Result<(Func, Func, SynthOptions)> {
+        let k = ks
+            .iter()
+            .find(|k| k.name == name)
+            .ok_or_else(|| Error::Synthesis(format!("explore: workload kernel `{name}` missing")))?;
+        Ok((k.isax.func.clone(), k.software.clone(), k.synth_opts.clone()))
+    };
+    let (gf2mm_isax, gf2mm_sw, gf2mm_opts) = pick(&pqc_ks, "mgf2mm")?;
+    let (pqc_isax, pqc_sw, pqc_opts) = pick(&pqc_ks, "vdecomp")?;
+    let (pcp_isax, pcp_sw, pcp_opts) = pick(&pcp_ks, "vdist3.vv")?;
+    Ok(vec![
+        DseWorkload {
+            name: "gf2mm",
+            isax: gf2mm_isax,
+            software: Some(gf2mm_sw),
+            synth_opts: gf2mm_opts,
+        },
+        DseWorkload {
+            name: "attention",
+            isax: llm::isax_attention_tile(8, 4),
+            software: None,
+            synth_opts: SynthOptions::default(),
+        },
+        DseWorkload { name: "pqc", isax: pqc_isax, software: Some(pqc_sw), synth_opts: pqc_opts },
+        DseWorkload { name: "pcp", isax: pcp_isax, software: Some(pcp_sw), synth_opts: pcp_opts },
+    ])
+}
+
+/// Apply a design point's ISAX-side knobs — re-bank every scratchpad,
+/// unroll the top compute loop by the FU-mix factor — then run the
+/// budgeted mid-end. Returns verified IR. An unroll factor that does
+/// not divide the top loop's static trip count is a diagnostic error;
+/// the search records such points as infeasible and keeps going.
+pub fn specialize_isax(isax: &Func, point: &DesignPoint, pass_rounds: usize) -> Result<Func> {
+    let mut f = isax.clone();
+    for b in &mut f.buffers {
+        if let BufferKind::Scratchpad { .. } = b.kind {
+            b.kind = BufferKind::Scratchpad { banks: point.banks };
+        }
+    }
+    if point.unroll > 1 {
+        if let Some(&top) = matcher::top_loops(&f).first() {
+            f = loop_passes::apply(&f, top, loop_passes::LoopPass::Unroll(point.unroll))?;
+        }
+    }
+    let (opt, _stats) = optimize_with_budget(&f, OptLevel::O2, pass_rounds)?;
+    Ok(opt)
+}
+
+/// Per-family cost breakdown at one design point.
+#[derive(Debug, Clone)]
+pub struct WorkloadCost {
+    /// Family name.
+    pub name: &'static str,
+    /// Makespan of the dmasim replay of the synthesized transaction
+    /// schedule — the memory component, priced by the event-driven
+    /// simulator, exactly (`scheduling::simulate_schedule`).
+    pub sim_mem_cycles: u64,
+    /// Port-conflict cycles the replay observed (diagnostics).
+    pub conflict_cycles: u64,
+    /// Compute-loop cycles from the [`IsaxEngine`] II model over the
+    /// generated pipeline (banking stalls included).
+    pub compute_cycles: u64,
+    /// Fixed pipeline overhead (dispatch + writeback + stage gaps).
+    pub overhead: u64,
+    /// Standalone area of this family's generated unit
+    /// (`AreaModel::isax_area` over the hwgen census).
+    pub isax_area_mm2: f64,
+}
+
+impl WorkloadCost {
+    /// Total cycles this family contributes to the joint objective.
+    pub fn cycles(&self) -> u64 {
+        self.sim_mem_cycles + self.compute_cycles + self.overhead
+    }
+}
+
+/// Joint cost of one candidate point: cycles summed across the four
+/// families, area of one SoC hosting all four generated units.
+#[derive(Debug, Clone)]
+pub struct PointCost {
+    /// The candidate configuration.
+    pub point: DesignPoint,
+    /// Σ per-family cycles — the latency objective.
+    pub cycles: u64,
+    /// Rocket plus all four units (`AreaModel::rocket_with_isaxes`) —
+    /// the area objective.
+    pub area_mm2: f64,
+    /// Post-ISAX clock estimate for the same SoC.
+    pub freq_mhz: f64,
+    /// Per-family breakdown, in `workloads()` order.
+    pub per_workload: Vec<WorkloadCost>,
+}
+
+/// Evaluate one candidate through the real pipeline (see module docs).
+/// Deterministic: a pure function of the point, workload set and
+/// budget. Infeasible points (e.g. a non-dividing unroll factor)
+/// return a diagnostic error naming the point and family.
+pub fn evaluate_point(
+    ws: &[DseWorkload],
+    point: &DesignPoint,
+    budget: &CompileBudget,
+) -> Result<PointCost> {
+    let itfcs = point.interfaces();
+    let model = AreaModel::default();
+    let mut per = Vec::with_capacity(ws.len());
+    let mut descs = Vec::with_capacity(ws.len());
+    for w in ws {
+        let fail = |stage: &str, e: Error| {
+            Error::Synthesis(format!("point {} / {} ({stage}): {e}", point.key(), w.name))
+        };
+        let spec = specialize_isax(&w.isax, point, budget.pass_rounds)
+            .map_err(|e| fail("specialize", e))?;
+        let synth = synthesize(&spec, &itfcs, &w.synth_opts).map_err(|e| fail("synthesize", e))?;
+        let desc = hwgen::generate(&synth, &itfcs);
+        let engine = IsaxEngine::from_synthesis(&synth, &desc, &itfcs);
+        let sim = scheduling::simulate_schedule(&synth.schedule, &itfcs)
+            .map_err(|e| fail("replay", e))?;
+        per.push(WorkloadCost {
+            name: w.name,
+            sim_mem_cycles: sim.makespan,
+            conflict_cycles: sim.conflict_cycles,
+            compute_cycles: engine.compute_cycles,
+            overhead: engine.overhead,
+            isax_area_mm2: model.isax_area(&desc),
+        });
+        descs.push(desc);
+    }
+    let refs: Vec<&hwgen::PipelineDesc> = descs.iter().collect();
+    let soc = model.rocket_with_isaxes(&refs);
+    let cycles = per.iter().map(WorkloadCost::cycles).sum();
+    Ok(PointCost {
+        point: *point,
+        cycles,
+        area_mm2: soc.area_mm2,
+        freq_mhz: soc.freq_mhz,
+        per_workload: per,
+    })
+}
+
+/// Run the e-graph offload proof once per software-backed family: the
+/// compiler must actually offload at least one loop onto the family's
+/// ISAX under `budget`. Returns `(family, offloaded loop count)` pairs.
+pub fn prove_offload(
+    ws: &[DseWorkload],
+    budget: &CompileBudget,
+) -> Result<Vec<(&'static str, usize)>> {
+    let mut proofs = Vec::new();
+    for w in ws {
+        if let Some(sw) = &w.software {
+            let isax = IsaxDef { name: w.name.to_string(), func: w.isax.clone() };
+            let opts = CompileOptions { budget: budget.clone(), opt_level: 0 };
+            let res = compile(sw, &[isax], &opts)
+                .map_err(|e| Error::Compiler(format!("explore: offload proof for `{}`: {e}", w.name)))?;
+            if res.stats.matched.is_empty() {
+                return Err(Error::Compiler(format!(
+                    "explore: e-graph failed to offload `{}` onto its ISAX",
+                    w.name
+                )));
+            }
+            proofs.push((w.name, res.stats.matched.len()));
+        }
+    }
+    Ok(proofs)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn banks_knob_reaches_the_census_and_unroll_grows_the_datapath() {
+        let ws = workloads().unwrap();
+        let gf2mm = &ws[0];
+        let base = DesignPoint::handpicked_default();
+        let rebanked = DesignPoint { banks: 4, ..base };
+        let b = specialize_isax(&gf2mm.isax, &base, 4).unwrap();
+        let r = specialize_isax(&gf2mm.isax, &rebanked, 4).unwrap();
+        let count_banks = |f: &Func| -> Vec<usize> {
+            f.buffers
+                .iter()
+                .filter_map(|d| match d.kind {
+                    BufferKind::Scratchpad { banks } => Some(banks),
+                    BufferKind::Global => None,
+                })
+                .collect()
+        };
+        assert!(count_banks(&b).iter().all(|&k| k == 2));
+        assert!(count_banks(&r).iter().all(|&k| k == 4));
+
+        let unrolled = DesignPoint { unroll: 2, ..base };
+        let itfcs = base.interfaces();
+        let synth_b = synthesize(&b, &itfcs, &gf2mm.synth_opts).unwrap();
+        let u = specialize_isax(&gf2mm.isax, &unrolled, 4).unwrap();
+        let synth_u = synthesize(&u, &itfcs, &gf2mm.synth_opts).unwrap();
+        let fu = |s: &crate::synthesis::SynthResult| {
+            hwgen::generate(s, &itfcs)
+                .stages
+                .iter()
+                .map(|st| st.fus.total())
+                .sum::<usize>()
+        };
+        assert!(
+            fu(&synth_u) > fu(&synth_b),
+            "unroll must duplicate datapath FUs: {} vs {}",
+            fu(&synth_u),
+            fu(&synth_b)
+        );
+    }
+
+    #[test]
+    fn non_dividing_unroll_is_a_diagnostic_error() {
+        let ws = workloads().unwrap();
+        let attention = ws.iter().find(|w| w.name == "attention").unwrap();
+        // The attention tile's top loop has 8 static trips; 16 cannot
+        // divide it.
+        let p = DesignPoint { unroll: 16, ..DesignPoint::handpicked_default() };
+        let e = specialize_isax(&attention.isax, &p, 4);
+        assert!(e.is_err(), "unroll(16) over 8 trips must be rejected");
+    }
+}

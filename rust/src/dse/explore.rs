@@ -1,0 +1,199 @@
+//! The deterministic search driver: candidate enumeration (exhaustive
+//! for small spaces, seeded sampling beyond `sample_limit`), §6.1
+//! baseline injection, per-point evaluation through the real pipeline,
+//! optional area-budget filtering, and frontier assembly.
+//!
+//! Determinism story: enumeration order is a pure function of the axis
+//! lists; sampling is a seeded xoshiro shuffle followed by a canonical
+//! re-sort; the cost oracle is a pure function of (point, workloads,
+//! budget); and the frontier uses a total order for ties. Two runs with
+//! the same space/seed/budget therefore produce bitwise-identical
+//! results — [`ExploreResult::fingerprint`] makes that checkable, and
+//! `BENCH_dse.json`'s `frontier_deterministic` gate enforces it in CI.
+
+use crate::compiler::CompileBudget;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::cost::{evaluate_point, prove_offload, workloads, PointCost};
+use super::pareto::{frontier, weakly_dominates};
+use super::space::{DesignPoint, DesignSpace};
+
+/// Search configuration. Build one with [`Explorer::demo`] /
+/// [`Explorer::full`] and adjust fields before calling [`Explorer::run`].
+#[derive(Debug, Clone)]
+pub struct Explorer {
+    /// The axes to sweep.
+    pub space: DesignSpace,
+    /// Seed for the sampling shuffle when the space exceeds
+    /// `sample_limit`. Irrelevant (but recorded) for exhaustive runs.
+    pub seed: u64,
+    /// Maximum number of candidates to evaluate; larger spaces are
+    /// sampled deterministically from this seed.
+    pub sample_limit: usize,
+    /// Compile-side budget: bounds the per-family e-graph offload proof
+    /// and the per-point mid-end rounds, so no candidate can hang the
+    /// search.
+    pub budget: CompileBudget,
+    /// Optional SoC area cap in mm²: points above it are excluded from
+    /// the frontier (they stay in `evaluated` for inspection). Growing
+    /// this cap can only grow the candidate pool, so the best-cycles
+    /// point never worsens — the monotonicity property `tests/dse.rs`
+    /// pins.
+    pub area_budget_mm2: Option<f64>,
+}
+
+impl Explorer {
+    /// Tier-1-affordable configuration: exhaustive over the 48-point
+    /// demo space.
+    pub fn demo() -> Self {
+        Self {
+            space: DesignSpace::demo(),
+            seed: 0xA0A5,
+            sample_limit: 64,
+            budget: CompileBudget::default(),
+            area_budget_mm2: None,
+        }
+    }
+
+    /// The default CLI configuration: a seeded 64-point sample of the
+    /// 540-point full space.
+    pub fn full() -> Self {
+        Self { space: DesignSpace::full(), ..Self::demo() }
+    }
+
+    /// Run the search end to end. Both hand-picked §6.1 configurations
+    /// always ride along as candidates, so the frontier structurally
+    /// weakly-dominates them (the `--check` gate still verifies it).
+    /// Infeasible candidates (diagnostic errors from the oracle) are
+    /// recorded and skipped, never fatal; a failure to evaluate a
+    /// hand-picked baseline *is* fatal, since every gate compares
+    /// against them.
+    pub fn run(&self) -> Result<ExploreResult> {
+        self.space.validate()?;
+        let ws = workloads()?;
+        let offload_proof = prove_offload(&ws, &self.budget)?;
+
+        let mut pts = self.space.points();
+        let sampled = pts.len() > self.sample_limit;
+        if sampled {
+            let mut rng = Rng::new(self.seed);
+            rng.shuffle(&mut pts);
+            pts.truncate(self.sample_limit);
+            pts.sort(); // canonical order after the seeded draw
+        }
+        let handpicked = DesignPoint::handpicked();
+        for b in &handpicked {
+            if !pts.contains(b) {
+                pts.push(*b);
+            }
+        }
+
+        let mut evaluated = Vec::new();
+        let mut infeasible = Vec::new();
+        for p in &pts {
+            match evaluate_point(&ws, p, &self.budget) {
+                Ok(c) => evaluated.push(c),
+                Err(e) => infeasible.push((p.key(), e.to_string())),
+            }
+        }
+
+        let baselines: Vec<PointCost> = handpicked
+            .iter()
+            .filter_map(|b| evaluated.iter().find(|c| c.point == *b).cloned())
+            .collect();
+        if baselines.len() != handpicked.len() {
+            return Err(Error::Synthesis(
+                "explore: a hand-picked §6.1 baseline failed to evaluate".into(),
+            ));
+        }
+
+        let pool: Vec<PointCost> = evaluated
+            .iter()
+            .filter(|c| self.area_budget_mm2.map_or(true, |cap| c.area_mm2 <= cap))
+            .cloned()
+            .collect();
+        let front = frontier(&pool);
+
+        Ok(ExploreResult {
+            space_size: self.space.size(),
+            sampled,
+            seed: self.seed,
+            evaluated,
+            infeasible,
+            frontier: front,
+            baselines,
+            offload_proof,
+        })
+    }
+}
+
+/// Everything one search run produced.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    /// Cells in the requested cartesian space.
+    pub space_size: usize,
+    /// Whether the space exceeded `sample_limit` and was sampled.
+    pub sampled: bool,
+    /// The seed the run used (recorded for replay).
+    pub seed: u64,
+    /// Every feasible candidate's cost, in canonical candidate order.
+    pub evaluated: Vec<PointCost>,
+    /// `(point key, reason)` for every infeasible candidate.
+    pub infeasible: Vec<(String, String)>,
+    /// The cycles-vs-area Pareto frontier (within the area budget).
+    pub frontier: Vec<PointCost>,
+    /// The hand-picked §6.1 configurations' costs, in canonical order.
+    pub baselines: Vec<PointCost>,
+    /// `(family, offloaded loop count)` from the e-graph proof.
+    pub offload_proof: Vec<(&'static str, usize)>,
+}
+
+impl ExploreResult {
+    /// No frontier member dominates (even weakly) another.
+    pub fn frontier_mutually_nondominated(&self) -> bool {
+        for (i, a) in self.frontier.iter().enumerate() {
+            for (j, b) in self.frontier.iter().enumerate() {
+                if i != j && weakly_dominates(a, b) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Every hand-picked §6.1 configuration is weakly dominated by some
+    /// frontier member (i.e. the search found nothing worse than, and
+    /// generally something better than, the hand tuning).
+    pub fn frontier_covers_baselines(&self) -> bool {
+        self.baselines
+            .iter()
+            .all(|b| self.frontier.iter().any(|f| weakly_dominates(f, b)))
+    }
+
+    /// Best (minimum) cycles over the evaluated pool within an area
+    /// cap; `None` if nothing fits.
+    pub fn best_cycles_within(&self, cap: Option<f64>) -> Option<u64> {
+        self.evaluated
+            .iter()
+            .filter(|c| cap.map_or(true, |a| c.area_mm2 <= a))
+            .map(|c| c.cycles)
+            .min()
+    }
+
+    /// The frontier's fastest point.
+    pub fn best_cycles_point(&self) -> Option<&PointCost> {
+        self.frontier.iter().min_by_key(|c| c.cycles)
+    }
+
+    /// Bitwise-stable digest of the frontier: point key, exact cycles,
+    /// and the raw IEEE-754 bits of the area. Two runs are "the same"
+    /// iff these strings are equal.
+    pub fn fingerprint(&self) -> String {
+        self.frontier
+            .iter()
+            .map(|c| format!("{}#{}#{:016x}", c.point.key(), c.cycles, c.area_mm2.to_bits()))
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}

@@ -1,0 +1,42 @@
+//! Automated ASIP design-space exploration (`aquas explore`).
+//!
+//! The paper hand-picks its ASIP configuration (§6.1: a 64-bit burst-8
+//! system bus, dual-banked scratchpads) and §6.3 tries one wide-bus
+//! variant by hand. This module closes ROADMAP item 5 by searching that
+//! space automatically — interface width × burst length × in-flight
+//! window × SRAM banks × FU mix — evaluated **jointly** over four
+//! workload families (gf2mm, attention, pqc, pcp), in the spirit of the
+//! multi-application ASIP studies in PAPERS.md: a configuration tuned
+//! for one kernel is rarely best for the suite.
+//!
+//! The layering:
+//!
+//! - [`space`] — axes, the `--space` spec parser (diagnostic errors,
+//!   never panics), and deterministic enumeration;
+//! - [`cost`] — the cost oracle: each candidate runs through the *real*
+//!   pipeline (budgeted mid-end → synthesis → hwgen census → dmasim
+//!   schedule replay); no second timing or area model anywhere;
+//! - [`pareto`] — dominance and the deterministic frontier;
+//! - [`explore`] — the search driver: sampling, §6.1 baseline
+//!   injection, area-budget filtering, result assembly.
+//!
+//! Three properties are CI-gated (`BENCH_dse.json`) and property-tested
+//! (`tests/dse.rs`): the frontier is bitwise deterministic for a given
+//! seed/space, mutually non-dominated, and weakly dominates every
+//! hand-picked §6.1 configuration.
+
+#![warn(missing_docs)]
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod cost;
+pub mod explore;
+pub mod pareto;
+pub mod space;
+
+pub use cost::{
+    evaluate_point, prove_offload, specialize_isax, workloads, DseWorkload, PointCost,
+    WorkloadCost,
+};
+pub use explore::{ExploreResult, Explorer};
+pub use pareto::{dominates, frontier, weakly_dominates};
+pub use space::{DesignPoint, DesignSpace};

@@ -1,0 +1,80 @@
+//! Deterministic Pareto machinery over the (cycles, area) objectives.
+//!
+//! Cycles is an exact `u64` (dmasim replay + engine model); area is the
+//! `f64` the census pricing produces. Both are pure functions of the
+//! candidate, so all comparisons here — including the `total_cmp` tie
+//! ordering — are bitwise reproducible run to run.
+
+use super::cost::PointCost;
+
+/// Strict Pareto dominance: `a` is no worse on both objectives and
+/// strictly better on at least one.
+pub fn dominates(a: &PointCost, b: &PointCost) -> bool {
+    weakly_dominates(a, b) && (a.cycles < b.cycles || a.area_mm2 < b.area_mm2)
+}
+
+/// Weak dominance: `a` is no worse than `b` on both objectives.
+pub fn weakly_dominates(a: &PointCost, b: &PointCost) -> bool {
+    a.cycles <= b.cycles && a.area_mm2 <= b.area_mm2
+}
+
+/// The non-dominated subset of `points`, in (cycles asc, area asc, key)
+/// order. Cost ties keep a single representative — the first by key —
+/// so the frontier is both mutually non-dominated *and* duplicate-free:
+/// for any two members, neither weakly dominates the other.
+pub fn frontier(points: &[PointCost]) -> Vec<PointCost> {
+    let mut sorted: Vec<&PointCost> = points.iter().collect();
+    sorted.sort_by(|x, y| {
+        x.cycles
+            .cmp(&y.cycles)
+            .then(x.area_mm2.total_cmp(&y.area_mm2))
+            .then_with(|| x.point.key().cmp(&y.point.key()))
+    });
+    let mut out: Vec<PointCost> = Vec::new();
+    for p in sorted {
+        if !out.iter().any(|q| weakly_dominates(q, p)) {
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::dse::space::DesignPoint;
+
+    fn pc(cycles: u64, area: f64, width: usize) -> PointCost {
+        PointCost {
+            point: DesignPoint { width, ..DesignPoint::handpicked_default() },
+            cycles,
+            area_mm2: area,
+            freq_mhz: 200.0,
+            per_workload: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn frontier_drops_dominated_and_duplicate_points() {
+        let pts = vec![
+            pc(100, 5.0, 4),
+            pc(100, 5.0, 8),  // duplicate cost: one representative kept
+            pc(90, 6.0, 16),  // frontier (faster, bigger)
+            pc(120, 7.0, 32), // dominated by everything above
+            pc(150, 4.0, 64), // frontier (slowest, smallest)
+        ];
+        let f = frontier(&pts);
+        let cycles: Vec<u64> = f.iter().map(|p| p.cycles).collect();
+        assert_eq!(cycles, vec![90, 100, 150]);
+        for a in &f {
+            for b in &f {
+                if a.point != b.point {
+                    assert!(!weakly_dominates(a, b) || !weakly_dominates(b, a));
+                    assert!(!dominates(a, b), "{} dominates {}", a.point.key(), b.point.key());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Explore-space specification: the swept axes, the `--space` spec
+//! parser, validation, and deterministic candidate enumeration.
+//!
+//! A [`DesignSpace`] is the cartesian product of five axes — system-bus
+//! width × burst length × in-flight window × scratchpad banks × FU-mix
+//! unroll — and a [`DesignPoint`] is one cell of that product. The
+//! parser follows the repo's spec-string convention (`key=value` pairs
+//! separated by commas, cf. `CompileBudget::parse` / `TraceSpec`):
+//! values within one axis are separated by `|`, and `lo..hi` expands to
+//! the ×2 geometric ladder from `lo` up to `hi` inclusive. Every
+//! malformed input — unknown axis, zero value, empty axis, inverted or
+//! absurd range, non-integer — is a diagnostic [`Error`], never a panic
+//! (exercised by `tests/no_panic.rs`).
+
+use crate::error::{Error, Result};
+use crate::interface::model::{InterfaceSet, MemInterface};
+
+/// Cap on bus width and burst length (bytes / beats). Wider than any
+/// §4.1 interface the paper considers; beyond it a spec is rejected as
+/// an absurd bound rather than silently swept.
+pub const WIDTH_CAP: usize = 64;
+/// Cap on the in-flight window, scratchpad banks and unroll factor.
+pub const KNOB_CAP: usize = 16;
+
+fn space_err(msg: String) -> Error {
+    Error::Synthesis(format!("explore space: {msg}"))
+}
+
+/// One candidate ASIP configuration — a cell of the jointly-searched
+/// space (§6.1 hand-picks two of these; `aquas explore` searches them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DesignPoint {
+    /// System-bus width in bytes per beat (`W_k`).
+    pub width: usize,
+    /// Maximum beats per bus transaction (`M_k`).
+    pub burst: usize,
+    /// Maximum in-flight bus transactions (`I_k`).
+    pub in_flight: usize,
+    /// Banking factor applied to every ISAX scratchpad (feeds both the
+    /// hwgen SRAM census and the compute-II bank-conflict model).
+    pub banks: usize,
+    /// FU-mix knob: unroll factor applied to each ISAX's top compute
+    /// loop before synthesis. `1` leaves the datapath as written; larger
+    /// factors duplicate body FUs (more area) and cut trip counts.
+    pub unroll: u64,
+}
+
+impl DesignPoint {
+    /// The hand-picked §6.1 configuration: Rocket's 64-bit burst-8 bus
+    /// with two in-flight transactions, dual-banked scratchpads, no
+    /// extra unrolling (`InterfaceSet::rocket_default`).
+    pub fn handpicked_default() -> Self {
+        Self { width: 8, burst: 8, in_flight: 2, banks: 2, unroll: 1 }
+    }
+
+    /// The hand-picked §6.3 variant: the same ASIP on a 128-bit system
+    /// bus (`InterfaceSet::rocket_wide_bus`).
+    pub fn handpicked_wide_bus() -> Self {
+        Self { width: 16, ..Self::handpicked_default() }
+    }
+
+    /// Both hand-picked configurations, in canonical order.
+    pub fn handpicked() -> Vec<Self> {
+        vec![Self::handpicked_default(), Self::handpicked_wide_bus()]
+    }
+
+    /// Stable display key (report rows, fingerprints, error messages).
+    pub fn key(&self) -> String {
+        format!(
+            "w{}.b{}.i{}.k{}.u{}",
+            self.width, self.burst, self.in_flight, self.banks, self.unroll
+        )
+    }
+
+    /// The candidate interface set: the fixed RoCC-style core port plus
+    /// this point's system bus. Latencies (`L_k`, `E_k`) and the cache
+    /// line stay at their §6.1 values — the search sweeps the
+    /// microarchitectural shape, not the physical memory technology.
+    pub fn interfaces(&self) -> InterfaceSet {
+        let bus = MemInterface {
+            width: self.width,
+            max_beats: self.burst,
+            in_flight: self.in_flight,
+            ..MemInterface::system_bus()
+        };
+        InterfaceSet::new(vec![MemInterface::cpu_port(), bus])
+    }
+}
+
+/// The cartesian explore space: one sorted, deduplicated value list per
+/// axis. Construct via [`DesignSpace::demo`], [`DesignSpace::full`] or
+/// [`DesignSpace::parse`]; [`DesignSpace::validate`] re-checks any
+/// hand-assembled instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DesignSpace {
+    /// Bus-width candidates in bytes per beat (powers of two).
+    pub widths: Vec<usize>,
+    /// Burst-length candidates in beats (powers of two).
+    pub bursts: Vec<usize>,
+    /// In-flight window candidates.
+    pub in_flights: Vec<usize>,
+    /// Scratchpad banking candidates.
+    pub banks: Vec<usize>,
+    /// FU-mix unroll candidates.
+    pub unrolls: Vec<u64>,
+}
+
+impl DesignSpace {
+    /// The trimmed, tier-1-affordable space (48 points) used by
+    /// `--demo`, the bench smoke mode and the property tests. Contains
+    /// both hand-picked §6.1 configurations.
+    pub fn demo() -> Self {
+        Self {
+            widths: vec![4, 8, 16],
+            bursts: vec![1, 8],
+            in_flights: vec![1, 2],
+            banks: vec![1, 2],
+            unrolls: vec![1, 2],
+        }
+    }
+
+    /// The default CLI space (540 points; sampled down by the
+    /// explorer's `sample_limit`).
+    pub fn full() -> Self {
+        Self {
+            widths: vec![4, 8, 16, 32],
+            bursts: vec![1, 2, 4, 8, 16],
+            in_flights: vec![1, 2, 4],
+            banks: vec![1, 2, 4],
+            unrolls: vec![1, 2, 4],
+        }
+    }
+
+    /// Parse a `--space` spec, overriding axes of [`DesignSpace::full`].
+    /// Example: `width=4|8|16,burst=1..8,inflight=1|2,banks=1|2|4,unroll=1|2`.
+    /// `lo..hi` is the ×2 ladder from `lo` to `hi` inclusive. Every
+    /// malformed input is a diagnostic error; never panics.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut s = Self::full();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, val)) = part.split_once('=') else {
+                return Err(space_err(format!("`{part}`: expected axis=values")));
+            };
+            let (key, val) = (key.trim(), val.trim());
+            let vals = parse_axis_values(key, val)?;
+            match key {
+                "width" => s.widths = vals.iter().map(|&v| v as usize).collect(),
+                "burst" => s.bursts = vals.iter().map(|&v| v as usize).collect(),
+                "inflight" => s.in_flights = vals.iter().map(|&v| v as usize).collect(),
+                "banks" => s.banks = vals.iter().map(|&v| v as usize).collect(),
+                "unroll" => s.unrolls = vals,
+                other => {
+                    return Err(space_err(format!(
+                        "unknown axis `{other}` \
+                         (expected width|burst|inflight|banks|unroll)"
+                    )))
+                }
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Check every axis: non-empty, no zeros, within caps, powers of
+    /// two where §4.1 requires it (width, burst).
+    pub fn validate(&self) -> Result<()> {
+        check_axis("width", &to_u64(&self.widths), WIDTH_CAP as u64, true)?;
+        check_axis("burst", &to_u64(&self.bursts), WIDTH_CAP as u64, true)?;
+        check_axis("inflight", &to_u64(&self.in_flights), KNOB_CAP as u64, false)?;
+        check_axis("banks", &to_u64(&self.banks), KNOB_CAP as u64, false)?;
+        check_axis("unroll", &self.unrolls, KNOB_CAP as u64, false)?;
+        Ok(())
+    }
+
+    /// Number of cells in the cartesian product.
+    pub fn size(&self) -> usize {
+        self.widths
+            .len()
+            .saturating_mul(self.bursts.len())
+            .saturating_mul(self.in_flights.len())
+            .saturating_mul(self.banks.len())
+            .saturating_mul(self.unrolls.len())
+    }
+
+    /// All candidate points in canonical (axis-nested) order. The order
+    /// is a pure function of the axis lists, so enumeration — and with
+    /// it the whole search — is deterministic.
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(self.size());
+        for &width in &self.widths {
+            for &burst in &self.bursts {
+                for &in_flight in &self.in_flights {
+                    for &banks in &self.banks {
+                        for &unroll in &self.unrolls {
+                            out.push(DesignPoint { width, burst, in_flight, banks, unroll });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn to_u64(vals: &[usize]) -> Vec<u64> {
+    vals.iter().map(|&v| v as u64).collect()
+}
+
+fn check_axis(name: &str, vals: &[u64], cap: u64, pow2: bool) -> Result<()> {
+    if vals.is_empty() {
+        return Err(space_err(format!("axis `{name}` has no values (zero-sized axis)")));
+    }
+    for &v in vals {
+        if v == 0 {
+            return Err(space_err(format!("axis `{name}`: 0 is not a valid value")));
+        }
+        if v > cap {
+            return Err(space_err(format!(
+                "axis `{name}`: {v} exceeds the cap of {cap} (absurd bound)"
+            )));
+        }
+        if pow2 && !v.is_power_of_two() {
+            return Err(space_err(format!("axis `{name}`: {v} is not a power of two")));
+        }
+    }
+    Ok(())
+}
+
+/// Parse one axis value list: `|`-separated integers and/or `lo..hi`
+/// ×2 ladders. Sorted and deduplicated on return.
+fn parse_axis_values(key: &str, val: &str) -> Result<Vec<u64>> {
+    if val.is_empty() {
+        return Err(space_err(format!("axis `{key}` has no values (zero-sized axis)")));
+    }
+    let mut out = Vec::new();
+    for item in val.split('|').map(str::trim) {
+        if item.is_empty() {
+            return Err(space_err(format!("axis `{key}`: empty value in `{val}`")));
+        }
+        if let Some((lo, hi)) = item.split_once("..") {
+            let (lo, hi) = (lo.trim(), hi.trim());
+            let lo: u64 = lo
+                .parse()
+                .map_err(|_| space_err(format!("axis `{key}`: range start `{lo}` is not a positive integer")))?;
+            let hi: u64 = hi
+                .parse()
+                .map_err(|_| space_err(format!("axis `{key}`: range end `{hi}` is not a positive integer")))?;
+            if lo == 0 {
+                return Err(space_err(format!("axis `{key}`: range must start at 1, not 0")));
+            }
+            if hi < lo {
+                return Err(space_err(format!("axis `{key}`: empty range {lo}..{hi}")));
+            }
+            if hi > KNOB_CAP.max(WIDTH_CAP) as u64 {
+                return Err(space_err(format!(
+                    "axis `{key}`: range end {hi} is an absurd bound (cap {})",
+                    KNOB_CAP.max(WIDTH_CAP)
+                )));
+            }
+            let mut v = lo;
+            while v <= hi {
+                out.push(v);
+                v *= 2;
+            }
+        } else {
+            let n: u64 = item
+                .parse()
+                .map_err(|_| space_err(format!("axis `{key}`: `{item}` is not a positive integer")))?;
+            out.push(n);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn handpicked_points_match_the_checked_in_interface_sets() {
+        let d = DesignPoint::handpicked_default().interfaces();
+        let r = InterfaceSet::rocket_default();
+        for (id, itfc) in d.iter() {
+            let other = r.get(id);
+            assert_eq!(itfc.width, other.width);
+            assert_eq!(itfc.max_beats, other.max_beats);
+            assert_eq!(itfc.in_flight, other.in_flight);
+            assert_eq!(itfc.read_lead, other.read_lead);
+            assert_eq!(itfc.write_cost, other.write_cost);
+        }
+        let w = DesignPoint::handpicked_wide_bus().interfaces();
+        let rw = InterfaceSet::rocket_wide_bus();
+        for (id, itfc) in w.iter() {
+            let other = rw.get(id);
+            assert_eq!(itfc.width, other.width);
+            assert_eq!(itfc.max_beats, other.max_beats);
+            assert_eq!(itfc.in_flight, other.in_flight);
+        }
+    }
+
+    #[test]
+    fn parse_overrides_ranges_and_sorts() {
+        let s = DesignSpace::parse("width=16|4|8,burst=1..8,unroll=2").unwrap();
+        assert_eq!(s.widths, vec![4, 8, 16]);
+        assert_eq!(s.bursts, vec![1, 2, 4, 8]);
+        assert_eq!(s.unrolls, vec![2]);
+        // Untouched axes keep the full() defaults.
+        assert_eq!(s.in_flights, DesignSpace::full().in_flights);
+    }
+
+    #[test]
+    fn hostile_specs_are_diagnostic_errors() {
+        for spec in [
+            "width=0",
+            "width=",
+            "width=7",
+            "width=128",
+            "burst=8..1",
+            "burst=0..4",
+            "burst=1..9999999",
+            "banks=abc",
+            "banks=-2",
+            "unroll=1|0",
+            "inflight=99",
+            "frobnicate=4",
+            "width",
+            "width=4|",
+        ] {
+            let e = DesignSpace::parse(spec).expect_err(spec).to_string();
+            assert!(e.contains("explore space"), "{spec}: {e}");
+        }
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_and_sized() {
+        let s = DesignSpace::demo();
+        assert_eq!(s.points().len(), s.size());
+        assert_eq!(s.points(), s.points());
+        assert_eq!(s.size(), 48);
+    }
+}

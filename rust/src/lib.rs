@@ -79,6 +79,7 @@ pub mod bench_harness;
 pub mod compiler;
 pub mod coordinator;
 pub mod cores;
+pub mod dse;
 pub mod egraph;
 pub mod error;
 pub mod interface;

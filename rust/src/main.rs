@@ -39,7 +39,25 @@ COMMANDS:
                               counts, and the dynamic-op-count delta
     bench <what>              regenerate a table/figure:
                               table2 | table3 | fig2 | fig3 | fig6 | fig7 | fig8 | all
-                              (engine microbenches: egraph | serve | interp | dma)
+                              (engine microbenches: egraph | serve | interp | dma | dse)
+    explore [OPTIONS]         automated ASIP design-space exploration:
+                              search bus width x burst x in-flight x
+                              SRAM banks x FU-mix unroll jointly over
+                              gf2mm/attention/pqc/pcp and print the
+                              cycles-vs-area Pareto frontier (always
+                              includes the hand-picked Sec 6.1 configs)
+                              --demo         exhaustive trimmed space
+                              --space SPEC   axis override, e.g.
+                                             width=4|8|16,burst=1..8,
+                                             inflight=1|2,banks=1|2,
+                                             unroll=1|2
+                              --seed N       sampling seed (default 41125)
+                              --limit N      max candidates before seeded
+                                             sampling kicks in (default 64)
+                              --budget SPEC  compile-side budget (same
+                                             keys as compile --budget)
+                              --area-budget MM2  cap the frontier's SoC
+                                             area in mm2
     serve [OPTIONS]           run the paged-KV continuous-batching LLM
                               serving engine over the AOT artifacts:
                               --policy decode-first|prefill-first|fair
@@ -82,6 +100,7 @@ fn run(args: &[String]) -> aquas::Result<()> {
         Some("synth") => cmd_synth(&args[1..]),
         Some("compile") => cmd_compile(&args[1..]),
         Some("opt") => cmd_opt(&args[1..]),
+        Some("explore") => cmd_explore(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("ir-levels") => {
@@ -266,6 +285,110 @@ fn cmd_opt(args: &[String]) -> aquas::Result<()> {
     Ok(())
 }
 
+fn cmd_explore(args: &[String]) -> aquas::Result<()> {
+    use aquas::compiler::CompileBudget;
+    use aquas::dse::{DesignSpace, Explorer};
+
+    let flag = |name: &str| {
+        args.windows(2).find(|w| w[0] == name).map(|w| w[1].clone())
+    };
+    let mut ex = if args.iter().any(|a| a == "--demo") { Explorer::demo() } else { Explorer::full() };
+    if let Some(spec) = flag("--space") {
+        ex.space = DesignSpace::parse(&spec)?;
+    }
+    if let Some(s) = flag("--seed") {
+        ex.seed = s
+            .parse()
+            .map_err(|_| aquas::Error::Synthesis(format!("explore: seed `{s}` is not an integer")))?;
+    }
+    if let Some(s) = flag("--limit") {
+        let n: usize = s
+            .parse()
+            .map_err(|_| aquas::Error::Synthesis(format!("explore: limit `{s}` is not an integer")))?;
+        if n == 0 {
+            return Err(aquas::Error::Synthesis("explore: limit must be at least 1".into()));
+        }
+        ex.sample_limit = n;
+    }
+    if let Some(s) = flag("--budget") {
+        ex.budget = CompileBudget::parse(&s)?;
+    }
+    if let Some(s) = flag("--area-budget") {
+        let a: f64 = s.parse().map_err(|_| {
+            aquas::Error::Synthesis(format!("explore: area budget `{s}` is not a number"))
+        })?;
+        if !a.is_finite() || a <= 0.0 {
+            return Err(aquas::Error::Synthesis(format!(
+                "explore: area budget {a} mm2 is not a positive finite number"
+            )));
+        }
+        ex.area_budget_mm2 = Some(a);
+    }
+
+    let r = ex.run()?;
+    println!(
+        "== aquas explore: {} candidates ({}{} of {} cells), {} infeasible ==",
+        r.evaluated.len(),
+        if r.sampled { "seeded sample" } else { "exhaustive" },
+        if r.sampled { format!(" seed={}", r.seed) } else { String::new() },
+        r.space_size,
+        r.infeasible.len(),
+    );
+    for (family, n) in &r.offload_proof {
+        println!("e-graph offload proof: {family}: {n} loop(s) offloaded");
+    }
+
+    let mut rep = bh::Report::new(
+        "cycles x area Pareto frontier (gf2mm + attention + pqc + pcp, joint)",
+        vec!["config", "cycles", "area mm2", "freq MHz", "kind"],
+    );
+    for c in &r.frontier {
+        rep.row(vec![
+            c.point.key(),
+            c.cycles.to_string(),
+            format!("{:.4}", c.area_mm2),
+            format!("{:.1}", c.freq_mhz),
+            "frontier".into(),
+        ]);
+    }
+    for c in &r.baselines {
+        let kind = if r.frontier.iter().any(|f| f.point == c.point) {
+            "hand-picked (on frontier)"
+        } else {
+            "hand-picked"
+        };
+        rep.row(vec![
+            c.point.key(),
+            c.cycles.to_string(),
+            format!("{:.4}", c.area_mm2),
+            format!("{:.1}", c.freq_mhz),
+            kind.into(),
+        ]);
+    }
+    println!("{}", rep.render());
+
+    for (key, reason) in r.infeasible.iter().take(4) {
+        println!("infeasible: {key}: {reason}");
+    }
+    println!(
+        "frontier: {} point(s); mutually non-dominated: {}; covers hand-picked Sec 6.1 configs: {}",
+        r.frontier.len(),
+        if r.frontier_mutually_nondominated() { "yes" } else { "NO" },
+        if r.frontier_covers_baselines() { "yes" } else { "NO" },
+    );
+    if let (Some(best), Some(default)) = (r.best_cycles_point(), r.baselines.first()) {
+        println!(
+            "best point {}: {} cycles / {:.4} mm2 ({:.2}x the hand-picked default's cycles at {:+.1}% area)",
+            best.point.key(),
+            best.cycles,
+            best.area_mm2,
+            default.cycles as f64 / best.cycles as f64,
+            100.0 * (best.area_mm2 - default.area_mm2) / default.area_mm2,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &[String]) -> aquas::Result<()> {
     let what = args.first().map(String::as_str).unwrap_or("all");
     let run_one = |name: &str| {
@@ -281,6 +404,7 @@ fn cmd_bench(args: &[String]) -> aquas::Result<()> {
             "serve" => println!("{}", bh::serve::report(false).render()),
             "interp" => println!("{}", bh::interp::report(false).render()),
             "dma" => println!("{}", bh::dma::report(false).render()),
+            "dse" => println!("{}", bh::dse::report(false).render()),
             other => eprintln!("unknown bench `{other}`"),
         };
     };

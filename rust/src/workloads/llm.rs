@@ -572,6 +572,77 @@ pub fn ir_causal_attention(heads: i64, seq: i64, head_dim: i64) -> Func {
     b.finish(&[])
 }
 
+/// One attention tile as a *synthesizable* ISAX description: the
+/// unnormalized scores-times-values kernel for a `seq × head_dim` Q/K/V
+/// tile, with the tiles staged into dual-banked scratchpads over the
+/// interface model and the result staged back out.
+///
+/// [`ir_causal_attention`] is the interpreter-facing kernel: it works on
+/// global buffers only, so it has no staging transfers and nothing for
+/// the §4.3 flow to schedule. This variant is the memory-path view of
+/// the same workload — the double-buffered weight/KV tile stream the
+/// Figure-8 unit consumes — and exists so the design-space explorer
+/// ([`crate::dse`]) can price an attention family through the identical
+/// synthesize → hwgen → dmasim pipeline as the PQC/PCP kernels. The
+/// softmax normalization stays on the host between tiles (the pre-`exp`
+/// staging split described in [`ir_causal_attention`]'s docs), keeping
+/// the offloaded datapath mul/add-only.
+pub fn isax_attention_tile(seq: i64, head_dim: i64) -> Func {
+    let n = (seq * head_dim) as usize;
+    let scale = 1.0 / (head_dim as f64).sqrt();
+    let mut b = FuncBuilder::new("attn_tile");
+    let q = b.global("q", DType::F32, n, CacheHint::Warm);
+    let k = b.global("k", DType::F32, n, CacheHint::Warm);
+    let v = b.global("v", DType::F32, n, CacheHint::Warm);
+    let o = b.global("o", DType::F32, n, CacheHint::Warm);
+    let s_q = b.scratchpad("s_q", DType::F32, n, 2);
+    let s_k = b.scratchpad("s_k", DType::F32, n, 2);
+    let s_v = b.scratchpad("s_v", DType::F32, n, 2);
+    let s_o = b.scratchpad("s_o", DType::F32, n, 2);
+    let zero = b.const_i(0);
+    b.transfer(s_q, zero, q, zero, n * 4);
+    b.transfer(s_k, zero, k, zero, n * 4);
+    b.transfer(s_v, zero, v, zero, n * 4);
+    b.for_range(0, seq, 1, |b, i| {
+        b.for_range(0, seq, 1, |b, j| {
+            // score = scale · Σ_d q[i,d]·k[j,d]
+            let zf = b.const_f(0.0);
+            let lb = b.const_i(0);
+            let ub = b.const_i(head_dim);
+            let st = b.const_i(1);
+            let dot = b.for_loop(lb, ub, st, &[zf], |b, d, acc| {
+                let dd = b.const_i(head_dim);
+                let irow = b.mul(i, dd);
+                let qi = b.add(irow, d);
+                let qv = b.read_smem(s_q, qi);
+                let jrow = b.mul(j, dd);
+                let ki = b.add(jrow, d);
+                let kv = b.read_smem(s_k, ki);
+                let p = b.mul(qv, kv);
+                vec![b.add(acc[0], p)]
+            });
+            let sc = b.const_f(scale);
+            let w = b.mul(dot[0], sc);
+            // o[i,·] += score · v[j,·]
+            b.for_range(0, head_dim, 1, |b, d| {
+                let dd = b.const_i(head_dim);
+                let jrow = b.mul(j, dd);
+                let vi = b.add(jrow, d);
+                let vv = b.read_smem(s_v, vi);
+                let wv = b.mul(w, vv);
+                let irow = b.mul(i, dd);
+                let oi = b.add(irow, d);
+                let ov = b.read_smem(s_o, oi);
+                let nv = b.add(ov, wv);
+                b.write_smem(s_o, oi, nv);
+            });
+        });
+    });
+    let zero2 = b.const_i(0);
+    b.transfer(o, zero2, s_o, zero2, n * 4);
+    b.finish(&[])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -714,6 +785,20 @@ mod tests {
         for x in m3.read_f32(o) {
             assert!((x - 0.5).abs() < 1e-5, "softmax rows must normalize: {x}");
         }
+    }
+
+    #[test]
+    fn attention_tile_isax_verifies_and_synthesizes() {
+        use crate::ir::verifier;
+        use crate::synthesis::{synthesize, SynthOptions};
+        let f = isax_attention_tile(8, 4);
+        verifier::verify(&f).expect("attention tile verifies");
+        let itfcs = InterfaceSet::rocket_default();
+        let synth = synthesize(&f, &itfcs, &SynthOptions::default()).expect("attention tile synth");
+        assert!(
+            !synth.schedule.items.is_empty(),
+            "staging transfers must reach the transaction schedule"
+        );
     }
 
     #[test]

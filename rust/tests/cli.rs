@@ -234,6 +234,53 @@ fn serve_faults_forces_the_soc_path_on_one_core() {
 }
 
 #[test]
+fn explore_demo_prints_frontier() {
+    // A trimmed 4-point sub-space keeps the debug-build smoke fast while
+    // exercising the full search path (oracle, baselines, frontier).
+    let out = aquas(&[
+        "explore", "--demo", "--space", "width=4|8,burst=1|8,inflight=2,banks=2,unroll=1",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("aquas explore"), "no summary header: {text}");
+    assert!(text.contains("Pareto frontier"), "no frontier table: {text}");
+    assert!(text.contains("mutually non-dominated: yes"), "property line missing: {text}");
+    assert!(
+        text.contains("covers hand-picked Sec 6.1 configs: yes"),
+        "coverage line missing: {text}"
+    );
+    assert!(text.contains("e-graph offload proof"), "no offload proof lines: {text}");
+    assert!(text.contains("best point"), "no best-point line: {text}");
+}
+
+#[test]
+fn explore_replay_is_deterministic() {
+    let args = [
+        "explore", "--demo", "--space", "width=4|8,burst=8,inflight=1|2,banks=2,unroll=1",
+        "--seed", "7",
+    ];
+    let a = aquas(&args);
+    let b = aquas(&args);
+    assert!(a.status.success(), "stderr: {}", String::from_utf8_lossy(&a.stderr));
+    assert_eq!(a.stdout, b.stdout, "explore replay diverged between runs");
+}
+
+#[test]
+fn explore_rejects_bad_space_spec() {
+    let out = aquas(&["explore", "--demo", "--space", "width=0"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("explore space"), "stderr: {err}");
+    // Unknown axis and malformed seed are equally diagnostic.
+    let out = aquas(&["explore", "--demo", "--space", "frobnicate=4"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("explore space"));
+    let out = aquas(&["explore", "--demo", "--seed", "banana"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("seed"));
+}
+
+#[test]
 fn serve_rejects_bad_fault_spec() {
     // Missing `@` in a coredown event: a diagnostic parse error before
     // anything runs, never a panic or a silent default.

@@ -21,7 +21,10 @@
 //!    100k-deep nesting) through `Json::parse`;
 //! 5. 40 garbage budget / fault specs through `CompileBudget::parse`
 //!    and `FaultPlan::parse`, and every Table-2 kernel compiled under
-//!    starved budgets (exhaustion degrades, never fails or panics).
+//!    starved budgets (exhaustion degrades, never fails or panics);
+//! 6. 40 garbage explore-space specs (plus a fixed hostile list) through
+//!    `DesignSpace::parse`, and a legal-but-extreme `Explorer::run`
+//!    whose only candidate is infeasible — recorded, never fatal.
 //!
 //! Corruption deliberately mutates **existing** ops via `op_mut` and
 //! never inserts out-of-range `OpRef`s into regions: a bogus `OpRef` is
@@ -33,6 +36,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use aquas::bench_harness::interp::{default_args, random_program, seed_memory};
 use aquas::compiler::{self, CompileBudget, CompileOptions};
 use aquas::coordinator::FaultPlan;
+use aquas::dse::{DesignSpace, Explorer};
 use aquas::egraph::Pattern;
 use aquas::ir::interp::{self, Memory};
 use aquas::ir::passes::{optimize, OptLevel};
@@ -273,6 +277,68 @@ fn garbage_specs_never_panic() {
             let _ = FaultPlan::parse(&text);
         });
     }
+}
+
+// ---------------------------------------------------------------------
+// Front 6: hostile explore-space specs + an extreme-but-legal search.
+// ---------------------------------------------------------------------
+
+#[test]
+fn garbage_explore_specs_never_panic() {
+    // Fixed hostile cases: each must come back as a diagnostic error
+    // carrying the `explore space` prefix, never a panic.
+    for spec in [
+        "width=0",
+        "width=",
+        "width=18446744073709551616",
+        "burst=8..1",
+        "burst=1..99999999999",
+        "banks=�",
+        "unroll=1|0|",
+        "inflight=1e3",
+        "frobnicate=4",
+        "=",
+        "width==4",
+        "width=4..",
+        "width=..8",
+    ] {
+        must_not_panic(&format!("explore spec {spec:?}"), || {
+            let e = DesignSpace::parse(spec).expect_err(spec).to_string();
+            assert!(e.contains("explore space"), "{spec}: {e}");
+        });
+    }
+    // Seeded atom soup: parse must return (Ok or Err), never abort.
+    const ATOMS: &[&str] = &[
+        "width", "burst", "inflight", "banks", "unroll", "=", "|", "..", ",",
+        "0", "1", "8", "64", "999", "-4", "x", "", " ", "\u{0}", "1e309",
+    ];
+    for seed in 0..40u64 {
+        let mut next = rng(seed ^ 0xD5E5);
+        let len = 1 + (next() % 16) as usize;
+        let mut text = String::new();
+        for _ in 0..len {
+            text.push_str(ATOMS[(next() as usize) % ATOMS.len()]);
+        }
+        must_not_panic(&format!("explore spec seed {seed}: {text:?}"), || {
+            let _ = DesignSpace::parse(&text);
+        });
+    }
+}
+
+#[test]
+fn extreme_explore_run_records_infeasible_without_panicking() {
+    // Every axis pinned at its cap. unroll=16 cannot divide the attention
+    // tile's 8 static trips, so the sole candidate is infeasible — the
+    // run must record it diagnostically and still return Ok (the §6.1
+    // baselines ride along and keep the frontier non-empty).
+    must_not_panic("extreme explore run", || {
+        let mut ex = Explorer::demo();
+        ex.space = DesignSpace::parse("width=64,burst=64,inflight=16,banks=16,unroll=16")
+            .unwrap_or_else(|e| panic!("cap-edge spec must parse: {e}"));
+        let r = ex.run().unwrap_or_else(|e| panic!("extreme run errored: {e}"));
+        assert_eq!(r.infeasible.len(), 1, "the cap-edge point must be infeasible");
+        assert!(!r.frontier.is_empty(), "baselines must keep the frontier alive");
+    });
 }
 
 #[test]
